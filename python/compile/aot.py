@@ -1,0 +1,205 @@
+"""AOT pipeline: lower every L2 graph and L1 kernel to HLO text + manifest.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the rust ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs, under ``--out`` (default ``../artifacts``):
+
+  manifest.json                    artifact index + layer tables
+  <model>.train_step.hlo.txt       (params…, x, y, lr) -> (loss, params…)
+  <model>.grad_step.hlo.txt        (params…, x, y)     -> (loss, grads…)
+  <model>.eval_step.hlo.txt        (params…, x, y)     -> (loss_sum, correct)
+  kernel.project.<l>x<m>x<k>.hlo.txt       (M, G) -> (A, E)
+  kernel.reconstruct.<l>x<m>x<k>.hlo.txt   (M, A) -> (Ghat,)
+  kernel.sketch.<l>x<m>x<s>.hlo.txt        (E, Ω) -> (Y,)
+
+Python runs ONCE at build time (``make artifacts``); the rust binary then
+loads these files via PJRT and never calls back into python.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import layers as L
+from . import model as M
+from .kernels.projection import project
+from .kernels.rangefinder import sketch
+from .kernels.reconstruct import reconstruct
+
+# Models lowered by default. The transformer is the e2e driver's model;
+# vision models feed the comparison experiments.
+DEFAULT_MODELS = ["lenet5", "resnetlite", "alexnetlite", "tinytransformer"]
+
+# Compression-kernel shapes: every distinct (l, m) of resnetlite's
+# compressed layers at the paper's k=32, plus a small shape used by tests.
+def kernel_shapes():
+    shapes = set()
+    for layer in L.resnetlite():
+        if layer.compressible and layer.size >= 32 * 32:
+            l = layer.fan_in
+            m = layer.size // l
+            shapes.add((l, m, 32))
+    shapes.add((96, 48, 8))  # test shape (python + rust integration tests)
+    return sorted(shapes)
+
+
+def to_hlo_text(fn, args) -> str:
+    # keep_unused=True: the calling convention is positional and fixed
+    # (Rust supplies every declared input), so jit must not prune arguments
+    # a particular model ignores (e.g. the transformer's label tensor).
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(out_dir: str, name: str, text: str) -> dict:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+    return {"file": name, "sha256_16": digest, "bytes": len(text)}
+
+
+def lower_model(out_dir: str, name: str) -> dict:
+    spec = L.MODELS[name]
+    table = spec["layers"]()
+    batch, eval_batch = spec["batch"], spec["eval_batch"]
+    pspecs = M.param_specs(name)
+    x, y = M.example_batch(name, batch)
+    xe, ye = M.example_batch(name, eval_batch)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+
+    entry = {
+        "layers": [
+            {"name": l.name, "shape": list(l.shape), "role": l.role}
+            for l in table
+        ],
+        "input_shape": list(spec["input_shape"]),
+        "classes": spec["classes"],
+        "batch": batch,
+        "eval_batch": eval_batch,
+        "total_params": sum(l.size for l in table),
+    }
+    print(f"  lowering {name}.train_step ...", flush=True)
+    entry["train_step"] = write(
+        out_dir,
+        f"{name}.train_step.hlo.txt",
+        to_hlo_text(M.make_train_step(name), (*pspecs, x, y, lr)),
+    )
+    print(f"  lowering {name}.grad_step ...", flush=True)
+    entry["grad_step"] = write(
+        out_dir,
+        f"{name}.grad_step.hlo.txt",
+        to_hlo_text(M.make_grad_step(name), (*pspecs, x, y)),
+    )
+    print(f"  lowering {name}.eval_step ...", flush=True)
+    entry["eval_step"] = write(
+        out_dir,
+        f"{name}.eval_step.hlo.txt",
+        to_hlo_text(M.make_eval_step(name), (*pspecs, xe, ye)),
+    )
+    return entry
+
+
+def lower_kernels(out_dir: str) -> dict:
+    kernels = {}
+    for (l, m, k) in kernel_shapes():
+        mm_spec = jax.ShapeDtypeStruct((l, k), jnp.float32)
+        g_spec = jax.ShapeDtypeStruct((l, m), jnp.float32)
+        a_spec = jax.ShapeDtypeStruct((k, m), jnp.float32)
+        tag = f"{l}x{m}x{k}"
+        print(f"  lowering kernel.project.{tag} ...", flush=True)
+        kernels[f"project.{tag}"] = {
+            **write(
+                out_dir,
+                f"kernel.project.{tag}.hlo.txt",
+                to_hlo_text(lambda mm, gg: project(mm, gg), (mm_spec, g_spec)),
+            ),
+            "kind": "project",
+            "l": l,
+            "m": m,
+            "k": k,
+        }
+        kernels[f"reconstruct.{tag}"] = {
+            **write(
+                out_dir,
+                f"kernel.reconstruct.{tag}.hlo.txt",
+                to_hlo_text(lambda mm, aa: (reconstruct(mm, aa),), (mm_spec, a_spec)),
+            ),
+            "kind": "reconstruct",
+            "l": l,
+            "m": m,
+            "k": k,
+        }
+        # Sketch kernel for the rSVD range finder at s = k + 6 oversampling.
+        s = k + 6
+        e_spec = jax.ShapeDtypeStruct((l, m), jnp.float32)
+        o_spec = jax.ShapeDtypeStruct((m, s), jnp.float32)
+        kernels[f"sketch.{l}x{m}x{s}"] = {
+            **write(
+                out_dir,
+                f"kernel.sketch.{l}x{m}x{s}.hlo.txt",
+                to_hlo_text(lambda ee, oo: (sketch(ee, oo),), (e_spec, o_spec)),
+            ),
+            "kind": "sketch",
+            "l": l,
+            "m": m,
+            "s": s,
+        }
+    return kernels
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--models",
+        default=",".join(DEFAULT_MODELS),
+        help="comma-separated subset of models to lower",
+    )
+    ap.add_argument(
+        "--skip-kernels", action="store_true", help="skip compression kernels"
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"version": 1, "models": {}, "kernels": {}}
+    for name in [m for m in args.models.split(",") if m]:
+        if name not in L.MODELS:
+            print(f"unknown model '{name}'", file=sys.stderr)
+            return 2
+        print(f"model {name}:", flush=True)
+        manifest["models"][name] = lower_model(args.out, name)
+    if not args.skip_kernels:
+        print("kernels:", flush=True)
+        manifest["kernels"] = lower_kernels(args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    total = sum(
+        e.get("bytes", 0)
+        for section in (manifest["models"], manifest["kernels"])
+        for entry in section.values()
+        for e in (
+            [entry] if "file" in entry else
+            [v for v in entry.values() if isinstance(v, dict) and "file" in v]
+        )
+    )
+    print(f"wrote manifest + artifacts ({total/1e6:.1f} MB of HLO text) to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

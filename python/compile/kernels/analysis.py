@@ -1,0 +1,102 @@
+"""L1 performance model: VMEM footprint + MXU-utilization estimates.
+
+Pallas interpret=True gives CPU-numpy timings that say nothing about TPU
+performance, so the kernel structure is evaluated analytically
+(DESIGN.md §Hardware-Adaptation): for each compressed layer geometry we
+report the chosen block shape, its VMEM residency, and an MXU-utilization
+estimate from the matmul tiling (how full the 128×128 systolic array's
+contraction/output tiles are).
+
+Run:  python -m compile.kernels.analysis
+Output is the table recorded in EXPERIMENTS.md §Perf (L1).
+"""
+
+from dataclasses import dataclass
+
+from ..layers import MODELS
+from .projection import pick_block_cols
+
+VMEM_BYTES = 16 * 2**20  # v4/v5e-class core budget
+MXU = 128  # systolic array edge
+
+
+@dataclass
+class KernelEstimate:
+    """Analytic kernel profile for one layer geometry."""
+
+    name: str
+    l: int
+    m: int
+    k: int
+    bm: int
+    vmem_bytes: int
+    mxu_util: float
+    flops: int
+
+    def row(self) -> str:
+        return (
+            f"{self.name:<24} l={self.l:<5} m={self.m:<4} k={self.k:<3} "
+            f"bm={self.bm:<4} VMEM={self.vmem_bytes/2**20:6.2f} MiB "
+            f"MXU~{self.mxu_util*100:5.1f}%  {self.flops/1e6:8.2f} MFLOP"
+        )
+
+
+def _tile_eff(dim: int, tile: int = MXU) -> float:
+    """Fraction of the last tile that is real work (padding waste model)."""
+    import math
+
+    tiles = math.ceil(dim / tile)
+    return dim / (tiles * tile)
+
+
+def estimate_projection(name: str, l: int, m: int, k: int) -> KernelEstimate:
+    """Fused A = MᵀG ; E = G − MA with M resident, G streamed in bm blocks.
+
+    MXU utilization estimate: the two dot_generals contract over l (large,
+    fully tiled) and produce (k × bm) and (l × bm) outputs; utilization is
+    dominated by how well k and bm fill the 128-wide output tiles.
+    """
+    bm = pick_block_cols(l, k, m)
+    vmem = 4 * (l * k + 2 * l * bm + k * bm)
+    # dot1: (k×l)·(l×bm) — output tile k×bm; dot2: (l×k)·(k×bm) — contraction k.
+    util_dot1 = _tile_eff(k) * _tile_eff(bm) * _tile_eff(l)
+    util_dot2 = _tile_eff(l) * _tile_eff(bm) * _tile_eff(k)
+    flops = 2 * l * k * m * 2  # both matmuls
+    return KernelEstimate(
+        name, l, m, k, bm, vmem, (util_dot1 + util_dot2) / 2, flops
+    )
+
+
+def layer_geometries():
+    out = []
+    for model in ("lenet5", "resnetlite", "alexnetlite"):
+        k = {"lenet5": 8, "resnetlite": 32, "alexnetlite": 48}[model]
+        for layer in MODELS[model]["layers"]():
+            if not layer.compressible:
+                continue
+            l = layer.fan_in
+            m = layer.size // l
+            kk = min(k, l, m)
+            # same worth-it rule as rust compress::gradestc::layer_geoms
+            if kk == 0 or kk * m + kk * l // 4 >= l * m:
+                continue
+            out.append((f"{model}/{layer.name}", l, m, kk))
+    return out
+
+
+def main() -> None:
+    print("L1 kernel estimates (projection kernel; see module docstring)\n")
+    worst_vmem = 0
+    for (name, l, m, k) in layer_geometries():
+        est = estimate_projection(name, l, m, k)
+        worst_vmem = max(worst_vmem, est.vmem_bytes)
+        print(est.row())
+    print(
+        f"\nworst-case VMEM residency: {worst_vmem/2**20:.2f} MiB "
+        f"(budget {VMEM_BYTES/2**20:.0f} MiB) -> "
+        f"{'OK' if worst_vmem <= VMEM_BYTES else 'OVER BUDGET'}"
+    )
+
+
+if __name__ == "__main__":
+    main()

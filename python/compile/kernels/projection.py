@@ -1,0 +1,93 @@
+"""Pallas kernel: fused compression projection  A = MᵀG ; E = G − MA.
+
+This is GradESTC's per-round hot spot (paper §III-C: O(2klm) of the total
+cost). The kernel fuses both products over one residency of the gradient
+block, with the basis matrix ``M`` pinned in VMEM across the whole grid —
+the TPU analogue of the paper's "keep the basis on-device" design
+(DESIGN.md §Hardware-Adaptation).
+
+Blocking scheme (per grid step j over column blocks of G):
+
+    M  (l × k)   — VMEM-resident, same block every step (index_map → 0)
+    G  (l × bm)  — streamed block j
+    A  (k × bm)  — written block j
+    E  (l × bm)  — written block j
+
+VMEM footprint ≈ 4·(l·k + 2·l·bm + k·bm) bytes; ``analysis.py`` checks the
+chosen ``bm`` keeps this under the 16 MB budget for every layer shape we
+compress. MXU work is the two matmuls (l×k)·(k·bm) and its transpose —
+k ≥ 32 keeps the systolic array's contraction dimension busy.
+
+Must run with ``interpret=True`` on CPU: compiled mode emits a Mosaic
+custom-call only TPU plugins execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _project_kernel(m_ref, g_ref, a_ref, e_ref):
+    m = m_ref[...]
+    g = g_ref[...]
+    # A = MᵀG: contract over l. Keep f32 accumulation explicit.
+    a = jax.lax.dot_general(
+        m, g, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    a_ref[...] = a
+    # E = G − M A.
+    e_ref[...] = g - jax.lax.dot_general(
+        m, a, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def pick_block_cols(l: int, k: int, mm: int, vmem_budget: int = 14 * 2**20) -> int:
+    """Largest column block bm (multiple of 8, ≤ mm) within the VMEM budget."""
+    bm = mm
+    while bm > 8:
+        footprint = 4 * (l * k + 2 * l * bm + k * bm)
+        if footprint <= vmem_budget and mm % bm == 0:
+            break
+        bm -= 1
+    # Fall back to any divisor of mm.
+    while mm % bm != 0:
+        bm -= 1
+    return max(bm, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def project(m, g, interpret: bool = True):
+    """Fused (A, E) = (MᵀG, G − M·MᵀG) via Pallas.
+
+    Args:
+      m: ``l x k`` basis (orthonormal columns).
+      g: ``l x mm`` segmented gradient.
+      interpret: must stay True on CPU backends.
+
+    Returns:
+      (a, e) with shapes ``k x mm`` / ``l x mm``.
+    """
+    l, k = m.shape
+    l2, mm = g.shape
+    assert l == l2, f"M rows {l} != G rows {l2}"
+    bm = pick_block_cols(l, k, mm)
+    grid = (mm // bm,)
+    return pl.pallas_call(
+        _project_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((l, k), lambda j: (0, 0)),  # M resident
+            pl.BlockSpec((l, bm), lambda j: (0, j)),  # stream G blocks
+        ],
+        out_specs=[
+            pl.BlockSpec((k, bm), lambda j: (0, j)),
+            pl.BlockSpec((l, bm), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, mm), jnp.float32),
+            jax.ShapeDtypeStruct((l, mm), jnp.float32),
+        ],
+        interpret=interpret,
+    )(m, g)

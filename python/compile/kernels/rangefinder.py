@@ -1,0 +1,106 @@
+"""Pallas kernels for the randomized-SVD range finder (Halko et al. 2011).
+
+Two matmul-shaped stages dominate the rSVD of the fitting error E
+(paper §III-B(c)):
+
+  * ``sketch``:    Y = E·Ω      (l×mm)·(mm×s) — sample the range of E
+  * ``project_b``: B = Qᵀ·E     (l×s)ᵀ·(l×mm) — compress into the sketch
+
+The tiny QR of Y and the SVD of B are O(l·s²)/O(s²·mm) control-flow-heavy
+steps that stay on the coordinator (rust ``linalg``). Grid layout mirrors
+projection.py: the small operand (Ω or Q) is VMEM-resident, E streams
+through in blocks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_inner_block(mm: int, limit: int = 512) -> int:
+    bm = min(mm, limit)
+    while mm % bm != 0:
+        bm -= 1
+    return max(bm, 1)
+
+
+def _sketch_kernel(e_ref, omega_ref, y_ref):
+    # Grid over contraction blocks of E's columns; the output block is the
+    # whole (l, s) sketch at every step, so accumulate in place.
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    y_ref[...] += jax.lax.dot_general(
+        e_ref[...], omega_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sketch(e, omega, interpret: bool = True):
+    """Y = E·Ω via Pallas with accumulation over contraction blocks.
+
+    Args:
+      e: ``l x mm`` fitting error.
+      omega: ``mm x s`` Gaussian test matrix.
+
+    Returns:
+      ``l x s`` range sketch.
+    """
+    l, mm = e.shape
+    mm2, s = omega.shape
+    assert mm == mm2
+    bm = _pick_inner_block(mm)
+    grid = (mm // bm,)
+    return pl.pallas_call(
+        _sketch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((l, bm), lambda j: (0, j)),
+            pl.BlockSpec((bm, s), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((l, s), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, s), jnp.float32),
+        interpret=interpret,
+    )(e, omega)
+
+
+def _project_b_kernel(q_ref, e_ref, b_ref):
+    b_ref[...] = jax.lax.dot_general(
+        q_ref[...], e_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def project_b(q, e, interpret: bool = True):
+    """B = Qᵀ·E via Pallas (Q resident, E streamed).
+
+    Args:
+      q: ``l x s`` orthonormal range basis.
+      e: ``l x mm`` fitting error.
+
+    Returns:
+      ``s x mm``.
+    """
+    l, s = q.shape
+    l2, mm = e.shape
+    assert l == l2
+    bm = _pick_inner_block(mm, 256)
+    grid = (mm // bm,)
+    return pl.pallas_call(
+        _project_b_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((l, s), lambda j: (0, 0)),
+            pl.BlockSpec((l, bm), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((s, bm), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((s, mm), jnp.float32),
+        interpret=interpret,
+    )(q, e)

@@ -1,0 +1,51 @@
+"""Pallas kernel: decompression  Ĝ = M·A  (paper Alg. 2).
+
+Server-side hot path: after updating its basis copy, the decompressor
+rebuilds the dense gradient from the uplinked coefficients. Same blocking
+as the projection kernel — M resident in VMEM, A/Ĝ streamed in column
+blocks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .projection import pick_block_cols
+
+
+def _reconstruct_kernel(m_ref, a_ref, g_ref):
+    g_ref[...] = jax.lax.dot_general(
+        m_ref[...], a_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def reconstruct(m, a, interpret: bool = True):
+    """Ĝ = M·A via Pallas.
+
+    Args:
+      m: ``l x k`` basis.
+      a: ``k x mm`` coefficients.
+
+    Returns:
+      ``l x mm`` reconstructed gradient matrix.
+    """
+    l, k = m.shape
+    k2, mm = a.shape
+    assert k == k2, f"M cols {k} != A rows {k2}"
+    bm = pick_block_cols(l, k, mm)
+    grid = (mm // bm,)
+    return pl.pallas_call(
+        _reconstruct_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((l, k), lambda j: (0, 0)),
+            pl.BlockSpec((k, bm), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((l, bm), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((l, mm), jnp.float32),
+        interpret=interpret,
+    )(m, a)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must agree with its oracle to float tolerance across a hypothesis-driven
+sweep of shapes (``python/tests/test_kernel.py``), and the Rust linalg
+substrate is cross-checked against the same semantics through the HLO
+artifacts (``rust/tests/xla_runtime.rs``).
+"""
+
+import jax.numpy as jnp
+
+
+def project_ref(m, g):
+    """Compression projection (paper Eq. 4 & 6).
+
+    Args:
+      m: basis matrix, ``l x k``, orthonormal columns.
+      g: segmented gradient matrix, ``l x mm``.
+
+    Returns:
+      (a, e): combination coefficients ``k x mm`` (Eq. 4, A = M^T G) and
+      fitting error ``l x mm`` (Eq. 6, E = G - M A).
+    """
+    a = m.T @ g
+    e = g - m @ a
+    return a, e
+
+
+def reconstruct_ref(m, a):
+    """Decompression (paper Alg. 2 line 2): G_hat = M A."""
+    return m @ a
+
+
+def sketch_ref(e, omega):
+    """Randomized-SVD range sketch: Y = E Ω (Halko alg. 4.4 step 1)."""
+    return e @ omega
+
+
+def project_b_ref(q, e):
+    """Randomized-SVD small projection: B = Qᵀ E (Halko alg. 5.1 step 2)."""
+    return q.T @ e
+
+
+def contribution_ref(a_full):
+    """Basis contribution scores (paper Eq. 11): squared row norms."""
+    return jnp.sum(a_full * a_full, axis=1)

@@ -1,0 +1,166 @@
+"""Canonical layer tables — python mirror of ``rust/src/model/meta.rs``.
+
+The Rust side is the source of truth; this module re-declares the same
+architectures so the JAX models (L2) and the AOT manifest agree with the
+coordinator layer-by-layer. ``rust/tests/artifacts.rs`` diffs the manifest
+against the Rust tables, so any drift fails CI.
+
+Shapes use JAX conventions: conv kernels HWIO ``[kh, kw, cin, cout]``,
+dense kernels ``[in, out]``.
+"""
+
+from dataclasses import dataclass
+from typing import List
+
+CONV = "conv"
+DENSE = "dense"
+BIAS = "bias"
+EMBED = "embed"
+NORM = "norm"
+
+
+@dataclass(frozen=True)
+class Layer:
+    """One trainable tensor."""
+
+    name: str
+    shape: tuple
+    role: str
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def compressible(self) -> bool:
+        return self.role in (CONV, DENSE)
+
+    @property
+    def fan_in(self) -> int:
+        """Segment length l: fan-in (see rust LayerMeta::segment_len)."""
+        if self.role == CONV:
+            return self.shape[0] * self.shape[1] * self.shape[2]
+        if self.role in (DENSE, EMBED):
+            return self.shape[0]
+        return self.size
+
+
+def _conv(name: str, kh: int, kw: int, cin: int, cout: int) -> List[Layer]:
+    return [
+        Layer(f"{name}.kernel", (kh, kw, cin, cout), CONV),
+        Layer(f"{name}.bias", (cout,), BIAS),
+    ]
+
+
+def _dense(name: str, din: int, dout: int) -> List[Layer]:
+    return [
+        Layer(f"{name}.kernel", (din, dout), DENSE),
+        Layer(f"{name}.bias", (dout,), BIAS),
+    ]
+
+
+def lenet5() -> List[Layer]:
+    layers: List[Layer] = []
+    layers += _conv("conv1", 5, 5, 1, 6)
+    layers += _conv("conv2", 5, 5, 6, 16)
+    layers += _dense("fc1", 256, 120)
+    layers += _dense("fc2", 120, 84)
+    layers += _dense("classifier", 84, 10)
+    return layers
+
+
+def resnetlite() -> List[Layer]:
+    layers: List[Layer] = []
+    layers += _conv("conv_in", 3, 3, 3, 32)
+    for b in range(2):
+        layers += _conv(f"stage1.block{b}.conv1", 3, 3, 32, 32)
+        layers += _conv(f"stage1.block{b}.conv2", 3, 3, 32, 32)
+    layers += _conv("down1", 3, 3, 32, 64)
+    for b in range(2):
+        layers += _conv(f"stage2.block{b}.conv1", 3, 3, 64, 64)
+        layers += _conv(f"stage2.block{b}.conv2", 3, 3, 64, 64)
+    layers += _conv("down2", 3, 3, 64, 128)
+    for b in range(2):
+        layers += _conv(f"stage3.block{b}.conv1", 3, 3, 128, 128)
+        layers += _conv(f"stage3.block{b}.conv2", 3, 3, 128, 128)
+    layers += _dense("classifier", 128, 10)
+    return layers
+
+
+def alexnetlite() -> List[Layer]:
+    layers: List[Layer] = []
+    layers += _conv("conv1", 3, 3, 3, 32)
+    layers += _conv("conv2", 3, 3, 32, 64)
+    layers += _conv("conv3", 3, 3, 64, 128)
+    layers += _conv("conv4", 3, 3, 128, 128)
+    layers += _conv("conv5", 3, 3, 128, 128)
+    layers += _dense("fc1", 2048, 512)
+    layers += _dense("fc2", 512, 256)
+    layers += _dense("classifier", 256, 100)
+    return layers
+
+
+# TinyTransformer geometry (mirrors rust).
+TT_VOCAB, TT_D, TT_LAYERS, TT_FF, TT_SEQ = 256, 128, 4, 512, 64
+
+
+def tinytransformer() -> List[Layer]:
+    v, d, n, ff, seq = TT_VOCAB, TT_D, TT_LAYERS, TT_FF, TT_SEQ
+    layers: List[Layer] = [
+        Layer("embed.table", (v, d), EMBED),
+        Layer("pos.table", (seq, d), EMBED),
+    ]
+    for i in range(n):
+        for nm in ("wq", "wk", "wv", "wo"):
+            layers += _dense(f"layer{i}.attn.{nm}", d, d)
+        layers += [
+            Layer(f"layer{i}.ln1.scale", (d,), NORM),
+            Layer(f"layer{i}.ln1.bias", (d,), NORM),
+        ]
+        layers += _dense(f"layer{i}.ff.w1", d, ff)
+        layers += _dense(f"layer{i}.ff.w2", ff, d)
+        layers += [
+            Layer(f"layer{i}.ln2.scale", (d,), NORM),
+            Layer(f"layer{i}.ln2.bias", (d,), NORM),
+        ]
+    layers += [
+        Layer("ln_f.scale", (d,), NORM),
+        Layer("ln_f.bias", (d,), NORM),
+    ]
+    layers += _dense("lm_head", d, TT_VOCAB)
+    return layers
+
+
+MODELS = {
+    "lenet5": {
+        "layers": lenet5,
+        "input_shape": (28, 28, 1),
+        "classes": 10,
+        "batch": 32,
+        "eval_batch": 64,
+    },
+    "resnetlite": {
+        "layers": resnetlite,
+        "input_shape": (32, 32, 3),
+        "classes": 10,
+        "batch": 32,
+        "eval_batch": 64,
+    },
+    "alexnetlite": {
+        "layers": alexnetlite,
+        "input_shape": (32, 32, 3),
+        "classes": 100,
+        "batch": 32,
+        "eval_batch": 64,
+    },
+    "tinytransformer": {
+        "layers": tinytransformer,
+        "input_shape": (TT_SEQ,),
+        "classes": TT_VOCAB,
+        "batch": 16,
+        "eval_batch": 32,
+    },
+}

@@ -1,0 +1,298 @@
+"""L2: JAX model zoo — forward/backward for every architecture in
+``layers.py``, with fused SGD train steps and evaluation steps that
+``aot.py`` lowers to HLO text for the Rust coordinator.
+
+Parameters are *flat lists* of arrays in layer-table order (the artifact
+calling convention: Rust passes one literal per tensor, in order). Data
+layout is NHWC; conv kernels HWIO; dense kernels ``[in, out]`` applied as
+``x @ W + b``; images flatten NHWC row-major before dense layers — the
+Rust native trainer (``rust/src/nn``) implements identical semantics and
+is cross-checked against these graphs through the artifacts.
+"""
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .pcg import Pcg64
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization (mirrors rust ParamStore::init)
+# --------------------------------------------------------------------------
+
+def init_params(model: str, seed: int) -> List[jnp.ndarray]:
+    """He-uniform kernels / zero biases / unit scales, from forked PCG64
+    streams per tensor — bit-identical to ``ParamStore::init`` in Rust for
+    conv/dense/bias/norm tensors."""
+    table = L.MODELS[model]["layers"]()
+    root = Pcg64(seed, 0)
+    params = []
+    for i, layer in enumerate(table):
+        r = root.fork(i)
+        n = layer.size
+        if layer.role in (L.CONV, L.DENSE):
+            bound = (6.0 / layer.fan_in) ** 0.5
+            # Fixup-style near-zero init for residual-branch output convs
+            # (no batch norm in these models) — mirrors rust ParamStore::init.
+            if "block" in layer.name and layer.name.endswith("conv2.kernel"):
+                bound *= 0.1
+            vals = [(r.f32() * 2.0 - 1.0) * bound for _ in range(n)]
+            arr = jnp.asarray(vals, dtype=jnp.float32).reshape(layer.shape)
+        elif layer.role == L.BIAS:
+            arr = jnp.zeros(layer.shape, jnp.float32)
+        elif layer.role == L.NORM:
+            fill = 1.0 if layer.name.endswith("scale") else 0.0
+            arr = jnp.full(layer.shape, fill, jnp.float32)
+        else:  # embedding: python-side only (rust inits its own), scaled N(0,1)
+            import math
+
+            vals = []
+            while len(vals) < n:
+                u1 = max(r.f64(), 1e-300)
+                u2 = r.f64()
+                vals.append(
+                    0.02 * ((-2.0 * math.log(u1)) ** 0.5) * math.cos(2 * math.pi * u2)
+                )
+            arr = jnp.asarray(vals[:n], dtype=jnp.float32).reshape(layer.shape)
+        params.append(arr)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def _conv2d(x, w, b, stride=1, padding="SAME"):
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def _avgpool2(x):
+    y = lax.reduce_window(
+        x, 0.0, lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+    return y / 4.0
+
+
+def _softmax_xent(logits, labels):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return logz - gold
+
+
+# --------------------------------------------------------------------------
+# Forward passes (params: flat list in layer-table order)
+# --------------------------------------------------------------------------
+
+def lenet5_logits(params, x):
+    """LeNet-5 (valid convs + avg pools), input ``[B, 28, 28, 1]``."""
+    (c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b, cw, cb) = params
+    h = jax.nn.relu(_conv2d(x, c1w, c1b, padding="VALID"))  # 24x24x6
+    h = _avgpool2(h)  # 12x12x6
+    h = jax.nn.relu(_conv2d(h, c2w, c2b, padding="VALID"))  # 8x8x16
+    h = _avgpool2(h)  # 4x4x16
+    h = h.reshape(h.shape[0], -1)  # 256, NHWC row-major
+    h = jax.nn.relu(h @ f1w + f1b)
+    h = jax.nn.relu(h @ f2w + f2b)
+    return h @ cw + cb
+
+
+def resnetlite_logits(params, x):
+    """Residual CNN, input ``[B, 32, 32, 3]`` (see rust meta.rs)."""
+    p = list(params)
+
+    def take():
+        return p.pop(0), p.pop(0)
+
+    w, b = take()
+    h = jax.nn.relu(_conv2d(x, w, b))  # 32x32x32
+
+    def block(h):
+        w1, b1 = take()
+        w2, b2 = take()
+        y = jax.nn.relu(_conv2d(h, w1, b1))
+        y = _conv2d(y, w2, b2)
+        return jax.nn.relu(h + y)
+
+    h = block(block(h))  # stage1
+    w, b = take()
+    h = jax.nn.relu(_conv2d(h, w, b, stride=2))  # down1: 16x16x64
+    h = block(block(h))  # stage2
+    w, b = take()
+    h = jax.nn.relu(_conv2d(h, w, b, stride=2))  # down2: 8x8x128
+    h = block(block(h))  # stage3
+    h = jnp.mean(h, axis=(1, 2))  # global avg pool -> [B, 128]
+    cw, cb = take()
+    assert not p
+    return h @ cw + cb
+
+
+def alexnetlite_logits(params, x):
+    """Conv stack + wide fc1, input ``[B, 32, 32, 3]``."""
+    (c1w, c1b, c2w, c2b, c3w, c3b, c4w, c4b, c5w, c5b,
+     f1w, f1b, f2w, f2b, cw, cb) = params
+    h = jax.nn.relu(_conv2d(x, c1w, c1b))
+    h = _avgpool2(h)  # 16x16x32
+    h = jax.nn.relu(_conv2d(h, c2w, c2b))
+    h = _avgpool2(h)  # 8x8x64
+    h = jax.nn.relu(_conv2d(h, c3w, c3b))
+    h = jax.nn.relu(_conv2d(h, c4w, c4b))
+    h = jax.nn.relu(_conv2d(h, c5w, c5b))
+    h = _avgpool2(h)  # 4x4x128
+    h = h.reshape(h.shape[0], -1)  # 2048
+    h = jax.nn.relu(h @ f1w + f1b)
+    h = jax.nn.relu(h @ f2w + f2b)
+    return h @ cw + cb
+
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def tinytransformer_logits(params, tokens):
+    """Decoder-only LM; ``tokens: [B, seq] int32``; returns ``[B, seq, V]``."""
+    d, nlayers, nheads = L.TT_D, L.TT_LAYERS, 4
+    p = list(params)
+    embed = p.pop(0)
+    pos = p.pop(0)
+    bsz, seq = tokens.shape
+    h = embed[tokens] + pos[None, :seq, :]
+    mask = jnp.tril(jnp.ones((seq, seq), jnp.float32))
+    for _ in range(nlayers):
+        wq, bq, wk, bk, wv, bv, wo, bo = (p.pop(0) for _ in range(8))
+        ln1s, ln1b = p.pop(0), p.pop(0)
+        w1, b1, w2, b2 = (p.pop(0) for _ in range(4))
+        ln2s, ln2b = p.pop(0), p.pop(0)
+
+        hn = _layernorm(h, ln1s, ln1b)
+        q = (hn @ wq + bq).reshape(bsz, seq, nheads, d // nheads)
+        k = (hn @ wk + bk).reshape(bsz, seq, nheads, d // nheads)
+        v = (hn @ wv + bv).reshape(bsz, seq, nheads, d // nheads)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (d // nheads) ** 0.5
+        att = jnp.where(mask[None, None, :, :] > 0, att, -1e9)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(bsz, seq, d)
+        h = h + ctx @ wo + bo
+
+        hn = _layernorm(h, ln2s, ln2b)
+        h = h + jax.nn.relu(hn @ w1 + b1) @ w2 + b2
+    lns, lnb = p.pop(0), p.pop(0)
+    h = _layernorm(h, lns, lnb)
+    wl, bl = p.pop(0), p.pop(0)
+    assert not p
+    return h @ wl + bl
+
+
+LOGITS = {
+    "lenet5": lenet5_logits,
+    "resnetlite": resnetlite_logits,
+    "alexnetlite": alexnetlite_logits,
+    "tinytransformer": tinytransformer_logits,
+}
+
+
+# --------------------------------------------------------------------------
+# Train / eval steps (the artifact entry points)
+# --------------------------------------------------------------------------
+
+def loss_fn(model: str, params, x, y):
+    """Mean loss over the batch."""
+    if model == "tinytransformer":
+        logits = LOGITS[model](params, x)[:, :-1, :]
+        targets = x[:, 1:]
+        flat = logits.reshape(-1, logits.shape[-1])
+        return jnp.mean(_softmax_xent(flat, targets.reshape(-1)))
+    logits = LOGITS[model](params, x)
+    return jnp.mean(_softmax_xent(logits, y))
+
+
+def make_train_step(model: str):
+    """(params..., x, y, lr) -> (loss, new_params...): one SGD minibatch."""
+
+    def step(*args):
+        nparams = len(L.MODELS[model]["layers"]())
+        params = list(args[:nparams])
+        x, y, lr = args[nparams], args[nparams + 1], args[nparams + 2]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(model, ps, x, y)
+        )(params)
+        new_params = [p - lr * g for p, g in zip(params, grads)]
+        return (loss, *new_params)
+
+    return step
+
+
+def make_grad_step(model: str):
+    """(params..., x, y) -> (loss, grads...): raw minibatch gradients.
+
+    Used by the Fig.-1 instrumentation and by compression backends that
+    need the gradient rather than the updated weights."""
+
+    def step(*args):
+        nparams = len(L.MODELS[model]["layers"]())
+        params = list(args[:nparams])
+        x, y = args[nparams], args[nparams + 1]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(model, ps, x, y)
+        )(params)
+        return (loss, *grads)
+
+    return step
+
+
+def make_eval_step(model: str):
+    """(params..., x, y) -> (loss_sum, correct): batch evaluation."""
+
+    def step(*args):
+        nparams = len(L.MODELS[model]["layers"]())
+        params = list(args[:nparams])
+        x, y = args[nparams], args[nparams + 1]
+        if model == "tinytransformer":
+            logits = LOGITS[model](params, x)[:, :-1, :]
+            targets = x[:, 1:]
+            flat = logits.reshape(-1, logits.shape[-1])
+            flat_t = targets.reshape(-1)
+            losses = _softmax_xent(flat, flat_t)
+            correct = jnp.sum(
+                (jnp.argmax(flat, axis=-1) == flat_t).astype(jnp.float32)
+            )
+            return jnp.sum(losses), correct
+        logits = LOGITS[model](params, x)
+        losses = _softmax_xent(logits, y)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return jnp.sum(losses), correct
+
+    return step
+
+
+def example_batch(model: str, batch: int):
+    """ShapeDtypeStructs for (x, y) with the model's input geometry."""
+    spec = L.MODELS[model]
+    if model == "tinytransformer":
+        x = jax.ShapeDtypeStruct((batch, L.TT_SEQ), jnp.int32)
+        y = jax.ShapeDtypeStruct((batch,), jnp.int32)  # unused but uniform
+    else:
+        h, w, c = spec["input_shape"]
+        x = jax.ShapeDtypeStruct((batch, h, w, c), jnp.float32)
+        y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return x, y
+
+
+def param_specs(model: str):
+    """ShapeDtypeStructs for the flat parameter list."""
+    return [
+        jax.ShapeDtypeStruct(layer.shape, jnp.float32)
+        for layer in L.MODELS[model]["layers"]()
+    ]

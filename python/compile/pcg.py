@@ -1,0 +1,50 @@
+"""PCG64-DXSM mirror of ``rust/src/util/rng.rs``.
+
+Only the integer core is mirrored (``next_u64``, ``f32``, ``fork``): the
+cross-language contract is bit-exact raw streams, which keeps Rust-side
+parameter initialization reproducible from python tests without trusting
+transcendental-function rounding. Verified by
+``python/tests/test_pcg.py`` against vectors captured from the Rust
+implementation.
+"""
+
+MASK64 = (1 << 64) - 1
+MASK128 = (1 << 128) - 1
+PCG_MULT = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645
+INC_XOR = 0x5851_F42D_4C95_7F2D_1405_7B7E_F767_814F
+DXSM_MULT = 0xDA94_2042_E4DD_58B5
+GOLDEN = 0x9E37_79B9_7F4A_7C15
+
+
+class Pcg64:
+    """PCG64-DXSM, bit-compatible with the Rust implementation."""
+
+    def __init__(self, seed: int, stream: int = 0):
+        self.inc = ((((stream & MASK64) << 1) | 1) ^ INC_XOR) & MASK128
+        state = 0
+        state = (state * PCG_MULT + self.inc) & MASK128
+        state = (state + (seed & MASK64)) & MASK128
+        state = (state * PCG_MULT + self.inc) & MASK128
+        self.state = state
+
+    def fork(self, tag: int) -> "Pcg64":
+        s = ((self.state >> 64) ^ (self.state & MASK64)) & MASK64
+        seed = ((s + GOLDEN) & MASK64) * ((tag | 1) & MASK64) & MASK64
+        return Pcg64(seed, tag)
+
+    def next_u64(self) -> int:
+        hi = (self.state >> 64) & MASK64
+        lo = (self.state & MASK64) | 1
+        hi ^= hi >> 32
+        hi = (hi * DXSM_MULT) & MASK64
+        hi ^= hi >> 48
+        hi = (hi * lo) & MASK64
+        self.state = (self.state * PCG_MULT + self.inc) & MASK128
+        return hi
+
+    def f32(self) -> float:
+        """Uniform f32 in [0,1) — exact dyadic rational, no rounding risk."""
+        return (self.next_u64() >> 40) * (1.0 / 16777216.0)
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / 9007199254740992.0)

@@ -1,0 +1,106 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; numerical agreement is asserted with
+``assert_allclose``. These are the kernels the Rust coordinator executes
+through the AOT artifacts, so this is the root of the correctness chain.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.projection import pick_block_cols, project
+from compile.kernels.rangefinder import project_b, sketch
+from compile.kernels.reconstruct import reconstruct
+
+
+def _ortho(rng, l, k):
+    q, _ = np.linalg.qr(rng.standard_normal((l, k)))
+    return q.astype(np.float32)
+
+
+dims = st.sampled_from([8, 12, 16, 24, 32, 48, 96, 128])
+small = st.sampled_from([2, 3, 4, 6, 8])
+
+
+@settings(max_examples=25, deadline=None)
+@given(l=dims, mm=dims, k=small, seed=st.integers(0, 2**31 - 1))
+def test_project_matches_ref(l, mm, k, seed):
+    if k > min(l, mm):
+        return
+    rng = np.random.default_rng(seed)
+    m = _ortho(rng, l, k)
+    g = rng.standard_normal((l, mm)).astype(np.float32)
+    a, e = project(m, g)
+    a_ref, e_ref = ref.project_ref(jnp.asarray(m), jnp.asarray(g))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(a_ref), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(e), np.asarray(e_ref), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(l=dims, mm=dims, k=small, seed=st.integers(0, 2**31 - 1))
+def test_reconstruct_matches_ref(l, mm, k, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.standard_normal((l, k)).astype(np.float32)
+    a = rng.standard_normal((k, mm)).astype(np.float32)
+    got = reconstruct(m, a)
+    want = ref.reconstruct_ref(jnp.asarray(m), jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(l=dims, mm=dims, s=small, seed=st.integers(0, 2**31 - 1))
+def test_sketch_matches_ref(l, mm, s, seed):
+    rng = np.random.default_rng(seed)
+    e = rng.standard_normal((l, mm)).astype(np.float32)
+    omega = rng.standard_normal((mm, s)).astype(np.float32)
+    got = sketch(e, omega)
+    want = ref.sketch_ref(jnp.asarray(e), jnp.asarray(omega))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(l=dims, mm=dims, s=small, seed=st.integers(0, 2**31 - 1))
+def test_project_b_matches_ref(l, mm, s, seed):
+    rng = np.random.default_rng(seed)
+    q = _ortho(rng, l, min(s, l))
+    e = rng.standard_normal((l, mm)).astype(np.float32)
+    got = project_b(q, e)
+    want = ref.project_b_ref(jnp.asarray(q), jnp.asarray(e))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_projection_identities():
+    """Structural identities the paper relies on: MᵀE = 0 and Ĝ + E = G."""
+    rng = np.random.default_rng(0)
+    m = _ortho(rng, 96, 8)
+    g = rng.standard_normal((96, 48)).astype(np.float32)
+    a, e = project(m, g)
+    # Eq. 7: the error is orthogonal to the basis.
+    np.testing.assert_allclose(m.T @ np.asarray(e), 0.0, atol=1e-4)
+    # Decomposition exactness: M·A + E = G.
+    np.testing.assert_allclose(
+        np.asarray(reconstruct(m, np.asarray(a))) + np.asarray(e), g, atol=1e-4
+    )
+
+
+def test_pick_block_cols_divides_and_fits():
+    for l, k, mm in [(1152, 32, 512), (96, 8, 48), (2048, 48, 512)]:
+        bm = pick_block_cols(l, k, mm)
+        assert mm % bm == 0
+        assert 4 * (l * k + 2 * l * bm + k * bm) <= 14 * 2**20 or bm == 1
+
+
+def test_paper_layer_shapes():
+    """Run the projection kernel at the real ResNetLite layer geometry
+    (l=1152 — the same l the paper uses for ResNet18 layer3)."""
+    rng = np.random.default_rng(1)
+    l, mm, k = 1152, 128, 32
+    m = _ortho(rng, l, k)
+    g = rng.standard_normal((l, mm)).astype(np.float32)
+    a, e = project(m, g)
+    a_ref, e_ref = ref.project_ref(jnp.asarray(m), jnp.asarray(g))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(a_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(e), np.asarray(e_ref), rtol=1e-4, atol=1e-4)

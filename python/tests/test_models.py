@@ -1,0 +1,115 @@
+"""L2 correctness: model shapes, loss behaviour, SGD-step semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers as L
+from compile import model as M
+
+VISION = ["lenet5", "resnetlite", "alexnetlite"]
+
+
+def _batch(name, b, rng):
+    spec = L.MODELS[name]
+    if name == "tinytransformer":
+        x = rng.integers(0, L.TT_VOCAB, (b, L.TT_SEQ)).astype(np.int32)
+        y = np.zeros(b, np.int32)
+    else:
+        h, w, c = spec["input_shape"]
+        x = rng.standard_normal((b, h, w, c)).astype(np.float32)
+        y = rng.integers(0, spec["classes"], b).astype(np.int32)
+    return x, y
+
+
+@pytest.mark.parametrize("name", list(L.MODELS))
+def test_layer_tables_consistent(name):
+    table = L.MODELS[name]["layers"]()
+    names = [l.name for l in table]
+    assert len(names) == len(set(names)), "duplicate layer names"
+    for l in table:
+        if l.compressible:
+            assert l.size % l.fan_in == 0, f"{l.name}: fan_in does not divide size"
+
+
+@pytest.mark.parametrize("name", list(L.MODELS))
+def test_logits_shape(name):
+    params = M.init_params(name, 0)
+    rng = np.random.default_rng(0)
+    x, _ = _batch(name, 2, rng)
+    logits = M.LOGITS[name](params, jnp.asarray(x))
+    if name == "tinytransformer":
+        assert logits.shape == (2, L.TT_SEQ, L.TT_VOCAB)
+    else:
+        assert logits.shape == (2, L.MODELS[name]["classes"])
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", VISION)
+def test_initial_loss_near_uniform(name):
+    """Softmax CE at init should be near ln(classes) — catches init blowups."""
+    params = M.init_params(name, 1)
+    rng = np.random.default_rng(1)
+    x, y = _batch(name, 8, rng)
+    loss = float(M.loss_fn(name, params, jnp.asarray(x), jnp.asarray(y)))
+    import math
+
+    expect = math.log(L.MODELS[name]["classes"])
+    assert loss < 6 * expect, f"{name}: initial loss {loss} vs ln(C) {expect}"
+
+
+@pytest.mark.parametrize("name", ["lenet5", "tinytransformer"])
+def test_train_step_decreases_loss(name):
+    params = M.init_params(name, 2)
+    rng = np.random.default_rng(2)
+    x, y = _batch(name, L.MODELS[name]["batch"], rng)
+    step = jax.jit(M.make_train_step(name))
+    lr = jnp.float32(0.05)
+    out = step(*params, x, y, lr)
+    loss0 = float(out[0])
+    params = list(out[1:])
+    for _ in range(5):
+        out = step(*params, x, y, lr)
+        params = list(out[1:])
+    loss1 = float(out[0])
+    assert loss1 < loss0, f"{name}: {loss0} -> {loss1}"
+
+
+def test_train_step_is_sgd():
+    """new_params must equal params - lr * grads exactly."""
+    name = "lenet5"
+    params = M.init_params(name, 3)
+    rng = np.random.default_rng(3)
+    x, y = _batch(name, 32, rng)
+    lr = jnp.float32(0.1)
+    tout = jax.jit(M.make_train_step(name))(*params, x, y, lr)
+    gout = jax.jit(M.make_grad_step(name))(*params, x, y)
+    assert abs(float(tout[0]) - float(gout[0])) < 1e-6
+    for p, np_, g in zip(params, tout[1:], gout[1:]):
+        np.testing.assert_allclose(
+            np.asarray(np_), np.asarray(p) - 0.1 * np.asarray(g), rtol=1e-5, atol=1e-6
+        )
+
+
+def test_eval_step_counts():
+    name = "lenet5"
+    params = M.init_params(name, 4)
+    rng = np.random.default_rng(4)
+    x, y = _batch(name, 64, rng)
+    loss_sum, correct = jax.jit(M.make_eval_step(name))(*params, x, y)
+    assert 0 <= float(correct) <= 64
+    # Mean loss from sum must match loss_fn.
+    mean = float(M.loss_fn(name, params, jnp.asarray(x), jnp.asarray(y)))
+    assert abs(float(loss_sum) / 64 - mean) < 1e-4
+
+
+def test_grad_step_unused_labels_for_transformer():
+    """The transformer ignores y; grads must not depend on it."""
+    name = "tinytransformer"
+    params = M.init_params(name, 5)
+    rng = np.random.default_rng(5)
+    x, _ = _batch(name, 4, rng)
+    g1 = jax.jit(M.make_grad_step(name))(*params, x, np.zeros(4, np.int32))
+    g2 = jax.jit(M.make_grad_step(name))(*params, x, np.ones(4, np.int32))
+    np.testing.assert_allclose(np.asarray(g1[1]), np.asarray(g2[1]))

@@ -1,0 +1,61 @@
+//! Compressor throughput benches — one per method in paper Table III,
+//! at the real ResNetLite update geometry. These are the per-client,
+//! per-round costs the paper's §III-C complexity analysis describes.
+
+use gradestc::compress::build_pair;
+use gradestc::config::{CompressorKind, GradEstcParams, ModelKind};
+use gradestc::model::meta::layer_table;
+use gradestc::util::bench::Bencher;
+use gradestc::util::rng::Pcg64;
+
+fn main() {
+    let meta = layer_table(ModelKind::ResNetLite);
+    let mut rng = Pcg64::seeded(1);
+    let update: Vec<Vec<f32>> =
+        meta.layers.iter().map(|l| rng.normal_vec(l.size())).collect();
+    let raw_bytes: u64 = update.iter().map(|t| 4 * t.len() as u64).sum();
+
+    let methods: Vec<(&str, CompressorKind)> = vec![
+        ("fedavg", CompressorKind::None),
+        ("topk10", CompressorKind::TopK { frac: 0.1 }),
+        ("fedpaq8", CompressorKind::FedPaq { bits: 8 }),
+        ("signsgd", CompressorKind::SignSgd),
+        ("svdfed_k32", CompressorKind::SvdFed { k: 32, gamma: 0.5 }),
+        ("fedqclip8", CompressorKind::FedQClip { bits: 8, clip: 2.5 }),
+        (
+            "gradestc_k32",
+            CompressorKind::GradEstc(GradEstcParams { k: 32, ..Default::default() }),
+        ),
+        (
+            "gradestc_k32_fixedd",
+            CompressorKind::GradEstc(GradEstcParams {
+                k: 32,
+                fixed_d: true,
+                ..Default::default()
+            }),
+        ),
+    ];
+
+    let mut b = Bencher::new("compress-resnetlite");
+    println!("update size: {:.2} MB raw\n", raw_bytes as f64 / 1e6);
+    for (name, kind) in methods {
+        let (mut c, _) = build_pair(&kind, &meta, 7);
+        // Warm the stateful compressors past their init round so the bench
+        // measures steady state (the paper's per-round regime).
+        let (p0, _) = c.compress(&update);
+        let steady = {
+            let (p, _) = c.compress(&update);
+            p.iter().map(|x| x.wire_bytes()).sum::<u64>()
+        };
+        b.bench_with_throughput(
+            &format!("{name} (steady {:.3} MB, init {:.3} MB)",
+                steady as f64 / 1e6,
+                p0.iter().map(|x| x.wire_bytes()).sum::<u64>() as f64 / 1e6),
+            Some((raw_bytes as f64, "B")),
+            || {
+                let (p, _) = c.compress(&update);
+                std::hint::black_box(p);
+            },
+        );
+    }
+}

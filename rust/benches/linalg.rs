@@ -1,0 +1,64 @@
+//! Micro-benchmarks for the dense linear-algebra substrate — the
+//! compression hot path's building blocks (§Perf L3).
+//!
+//! Run with `cargo bench --bench linalg`; set `GRADESTC_BENCH_FAST=1` for
+//! a quick pass.
+
+use gradestc::linalg::{
+    householder_qr, matmul, matmul_at_b, randomized_svd, thin_svd, Mat, RsvdOptions,
+};
+use gradestc::util::bench::Bencher;
+use gradestc::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::new("linalg");
+    let mut rng = Pcg64::seeded(1);
+
+    // Layer geometries from the paper's §V-B setups.
+    let geoms = [
+        ("lenet-fc1", 256usize, 120usize, 8usize),
+        ("resnet-stage2", 576, 64, 32),
+        ("resnet-stage3", 1152, 128, 32),
+        ("alexnet-fc1", 2048, 512, 48),
+    ];
+
+    for &(name, l, m, k) in &geoms {
+        let basis = Mat::randn(l, k, &mut rng);
+        let g = Mat::randn(l, m, &mut rng);
+        let a = Mat::randn(k, m, &mut rng);
+        let flops_proj = (2 * l * k * m) as f64;
+        b.bench_with_throughput(
+            &format!("project_{name}_{l}x{m}x{k}"),
+            Some((2.0 * flops_proj, "FLOP")),
+            || {
+                let acoef = matmul_at_b(&basis, &g);
+                let e = g.sub(&matmul(&basis, &acoef));
+                std::hint::black_box(e);
+            },
+        );
+        b.bench_with_throughput(
+            &format!("reconstruct_{name}_{l}x{m}x{k}"),
+            Some((flops_proj, "FLOP")),
+            || {
+                std::hint::black_box(matmul(&basis, &a));
+            },
+        );
+    }
+
+    // Randomized SVD at the error-matrix geometry (d ≈ 8 typical).
+    for &(name, l, m, d) in
+        &[("resnet-stage3", 1152usize, 128usize, 8usize), ("alexnet-fc1", 2048, 512, 8)]
+    {
+        let e = Mat::randn(l, m, &mut rng);
+        let mut seed = Pcg64::seeded(2);
+        b.bench(&format!("rsvd_d8_{name}_{l}x{m}"), || {
+            std::hint::black_box(randomized_svd(&e, d, RsvdOptions::default(), &mut seed));
+        });
+    }
+
+    // QR + small SVD (rSVD internals).
+    let tall = Mat::randn(1152, 14, &mut rng);
+    b.bench("qr_1152x14", || std::hint::black_box(householder_qr(&tall)));
+    let sketch = Mat::randn(14, 128, &mut rng);
+    b.bench("thin_svd_14x128", || std::hint::black_box(thin_svd(&sketch, 8)));
+}

@@ -1,0 +1,88 @@
+//! End-to-end round latency: one full FL round (local training via the
+//! XLA artifacts when present, compression, decompression, aggregation,
+//! evaluation skipped) per model — the §Perf L3 headline number.
+//!
+//! Run with `cargo bench --bench round_latency` after `make artifacts`.
+
+use gradestc::config::{
+    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
+};
+use gradestc::coordinator::Simulation;
+use gradestc::util::bench::Bencher;
+use std::time::Duration;
+
+fn cfg(model: ModelKind, dataset: DatasetKind, comp: CompressorKind, xla: bool) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "bench-round".into(),
+        dataset,
+        model,
+        distribution: DataDistribution::Iid,
+        num_clients: 4,
+        participation: 1.0,
+        rounds: 1_000_000, // stepped manually
+        local_epochs: 1,
+        batch_size: if matches!(model, ModelKind::TinyTransformer) { 16 } else { 32 },
+        lr: 0.03,
+        samples_per_client: 32, // one batch per client: isolates step latency
+        test_samples: 64,
+        eval_every: usize::MAX,
+        threshold_frac: 0.95,
+        compressor: comp,
+        seed: 7,
+        use_xla: xla,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn main() {
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    let mut b = Bencher::new("round").budget(
+        Duration::from_millis(200),
+        Duration::from_millis(3000),
+        5,
+    );
+    let cases = [
+        ("lenet5-gradestc", ModelKind::LeNet5, DatasetKind::SynthMnist),
+        ("resnetlite-gradestc", ModelKind::ResNetLite, DatasetKind::SynthCifar10),
+    ];
+    for (name, model, dataset) in cases {
+        for (backend, xla) in [("xla", true), ("native", false)] {
+            if xla && !have_artifacts {
+                eprintln!("skipping {name}/{backend}: no artifacts");
+                continue;
+            }
+            let comp = CompressorKind::GradEstc(GradEstcParams {
+                k: if matches!(model, ModelKind::LeNet5) { 8 } else { 32 },
+                ..Default::default()
+            });
+            let mut sim = Simulation::build(cfg(model, dataset, comp, xla)).unwrap();
+            let mut round = 0usize;
+            // one warm round to compile executables / init bases
+            sim.step(round).unwrap();
+            round += 1;
+            b.bench(&format!("{name}-{backend}"), || {
+                let rec = sim.step(round).unwrap();
+                round += 1;
+                std::hint::black_box(rec.train_loss);
+            });
+        }
+    }
+    // FedAvg baseline to isolate compression overhead.
+    if have_artifacts {
+        let mut sim = Simulation::build(cfg(
+            ModelKind::ResNetLite,
+            DatasetKind::SynthCifar10,
+            CompressorKind::None,
+            true,
+        ))
+        .unwrap();
+        let mut round = 0usize;
+        sim.step(round).unwrap();
+        round += 1;
+        b.bench("resnetlite-fedavg-xla", || {
+            let rec = sim.step(round).unwrap();
+            round += 1;
+            std::hint::black_box(rec.train_loss);
+        });
+    }
+}

@@ -1,0 +1,232 @@
+//! Wire payloads and their exact byte accounting.
+//!
+//! Every compressor emits one [`Payload`] per model tensor. `wire_bytes`
+//! is the exact size a binary serializer would put on the uplink — the
+//! number the paper's Table III totals are made of (paper Eq. 14 for
+//! GradESTC: `C = k·n/l + d_r·l + k` floats… we charge 4 bytes per f32,
+//! 4 per index, plus a fixed 8-byte frame header).
+
+/// Fixed per-payload frame header (type tag + length), bytes.
+pub const FRAME_HEADER: u64 = 8;
+
+/// One tensor's compressed update on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// Uncompressed f32 data.
+    Raw(Vec<f32>),
+    /// Sparse (index, value) pairs for a tensor of `len` entries.
+    Sparse {
+        /// Flat indices.
+        indices: Vec<u32>,
+        /// Values at those indices.
+        values: Vec<f32>,
+        /// Dense length.
+        len: usize,
+    },
+    /// Uniform quantization: `x ≈ lo + q·(hi-lo)/(2^bits-1)`.
+    Quantized {
+        /// Minimum of the quantization range.
+        lo: f32,
+        /// Maximum of the quantization range.
+        hi: f32,
+        /// Bit width (1..=16).
+        bits: u8,
+        /// Bit-packed codes.
+        packed: Vec<u8>,
+        /// Dense length.
+        len: usize,
+    },
+    /// 1-bit signs with a single scale (SignSGD with magnitude).
+    Signs {
+        /// Per-tensor scale (mean |x|).
+        scale: f32,
+        /// Bit-packed signs.
+        packed: Vec<u8>,
+        /// Dense length.
+        len: usize,
+    },
+    /// GradESTC uplink for one layer (paper Alg. 1 output): replacement
+    /// indices ℙ, replacement vectors 𝕄 (d_r × l, row-major), and the full
+    /// coefficient matrix A (k × m, row-major).
+    Basis {
+        /// Indices into the basis to overwrite (ℙ).
+        replace_idx: Vec<u32>,
+        /// New basis vectors, `replace_idx.len() × l` row-major (𝕄).
+        new_vectors: Vec<f32>,
+        /// Combination coefficients A, `k × m` row-major.
+        coeffs: Vec<f32>,
+        /// Segment length `l`.
+        l: usize,
+        /// Basis size `k`.
+        k: usize,
+        /// Columns `m`.
+        m: usize,
+    },
+    /// SVDFed uplink: coefficients against the shared server basis, plus an
+    /// optional basis refresh (k × l row-major) when the fit degraded.
+    SvdCoeffs {
+        /// Coefficients A, `k × m` row-major.
+        coeffs: Vec<f32>,
+        /// Replacement basis if this round triggered a re-fit.
+        refit_basis: Option<Vec<f32>>,
+        /// Segment length `l`.
+        l: usize,
+        /// Basis size `k`.
+        k: usize,
+        /// Columns `m`.
+        m: usize,
+    },
+}
+
+impl Payload {
+    /// Exact uplink size in bytes.
+    pub fn wire_bytes(&self) -> u64 {
+        FRAME_HEADER
+            + match self {
+                Payload::Raw(v) => 4 * v.len() as u64,
+                Payload::Sparse { indices, values, .. } => {
+                    4 * indices.len() as u64 + 4 * values.len() as u64 + 4
+                }
+                Payload::Quantized { packed, .. } => packed.len() as u64 + 4 + 4 + 1 + 4,
+                Payload::Signs { packed, .. } => packed.len() as u64 + 4 + 4,
+                Payload::Basis { replace_idx, new_vectors, coeffs, .. } => {
+                    4 * replace_idx.len() as u64
+                        + 4 * new_vectors.len() as u64
+                        + 4 * coeffs.len() as u64
+                        + 12 // l,k,m
+                }
+                Payload::SvdCoeffs { coeffs, refit_basis, .. } => {
+                    4 * coeffs.len() as u64
+                        + refit_basis.as_ref().map(|b| 4 * b.len() as u64 + 1).unwrap_or(1)
+                        + 12
+                }
+            }
+    }
+}
+
+/// Pass-through compressor (FedAvg baseline): every tensor goes raw.
+pub struct RawCompressor {
+    ntensors: usize,
+}
+
+impl RawCompressor {
+    /// Build for a model.
+    pub fn new(meta: &crate::model::meta::ModelMeta) -> Self {
+        RawCompressor { ntensors: meta.layers.len() }
+    }
+}
+
+impl super::Compressor for RawCompressor {
+    fn compress(&mut self, update: &[Vec<f32>]) -> (Vec<Payload>, super::CompressStats) {
+        assert_eq!(update.len(), self.ntensors);
+        (
+            update.iter().map(|t| Payload::Raw(t.clone())).collect(),
+            super::CompressStats::default(),
+        )
+    }
+}
+
+/// Pass-through decompressor.
+pub struct RawDecompressor;
+
+impl super::Decompressor for RawDecompressor {
+    fn decompress(&mut self, payloads: &[Payload]) -> Vec<Vec<f32>> {
+        payloads
+            .iter()
+            .map(|p| match p {
+                Payload::Raw(v) => v.clone(),
+                other => panic!("RawDecompressor got {other:?}"),
+            })
+            .collect()
+    }
+}
+
+/// Pack `bits`-wide codes into bytes (LSB-first within each byte).
+pub fn pack_bits(codes: &[u32], bits: u8) -> Vec<u8> {
+    assert!((1..=16).contains(&bits));
+    let total_bits = codes.len() * bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!(bits == 32 as u8 || c < (1u32 << bits));
+        for b in 0..bits as usize {
+            if (c >> b) & 1 == 1 {
+                out[bitpos >> 3] |= 1 << (bitpos & 7);
+            }
+            bitpos += 1;
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_bits`].
+pub fn unpack_bits(packed: &[u8], bits: u8, n: usize) -> Vec<u32> {
+    assert!((1..=16).contains(&bits));
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let mut c = 0u32;
+        for b in 0..bits as usize {
+            if (packed[bitpos >> 3] >> (bitpos & 7)) & 1 == 1 {
+                c |= 1 << b;
+            }
+            bitpos += 1;
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_wire_bytes() {
+        let p = Payload::Raw(vec![0.0; 100]);
+        assert_eq!(p.wire_bytes(), FRAME_HEADER + 400);
+    }
+
+    #[test]
+    fn basis_wire_bytes_matches_eq14() {
+        // Paper Eq. 14: C = k·m (A) + d_r·l (new vectors) + d_r (indices),
+        // in elements; we charge 4 bytes each + header.
+        let (l, k, m, dr) = (64usize, 8usize, 32usize, 3usize);
+        let p = Payload::Basis {
+            replace_idx: vec![0; dr],
+            new_vectors: vec![0.0; dr * l],
+            coeffs: vec![0.0; k * m],
+            l,
+            k,
+            m,
+        };
+        let expect = FRAME_HEADER + 4 * (dr + dr * l + k * m) as u64 + 12;
+        assert_eq!(p.wire_bytes(), expect);
+    }
+
+    #[test]
+    fn pack_roundtrip_all_widths() {
+        for bits in [1u8, 2, 3, 4, 7, 8, 12, 16] {
+            let max = (1u32 << bits) - 1;
+            let codes: Vec<u32> =
+                (0..257u64).map(|i| ((i * 2654435761) % (max as u64 + 1)) as u32).collect();
+            let packed = pack_bits(&codes, bits);
+            assert_eq!(unpack_bits(&packed, bits, codes.len()), codes);
+            assert_eq!(packed.len(), (codes.len() * bits as usize).div_ceil(8));
+        }
+    }
+
+    #[test]
+    fn raw_pair_roundtrip() {
+        use crate::compress::{Compressor, Decompressor};
+        use crate::config::ModelKind;
+        use crate::model::meta::layer_table;
+        let meta = layer_table(ModelKind::LeNet5);
+        let mut c = RawCompressor::new(&meta);
+        let update: Vec<Vec<f32>> =
+            meta.layers.iter().map(|l| vec![0.5; l.size()]).collect();
+        let (payloads, _) = c.compress(&update);
+        let mut d = RawDecompressor;
+        assert_eq!(d.decompress(&payloads), update);
+    }
+}

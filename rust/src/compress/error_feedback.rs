@@ -1,0 +1,157 @@
+//! Error feedback wrapper (paper §VI future work, implemented as an
+//! extension).
+//!
+//! Keeps the compression residual `e = u − decompress(compress(u))` on the
+//! client and adds it to the next round's update before compressing, so
+//! systematically-dropped components are eventually transmitted (Stich et
+//! al. 2018; Seide et al. 2014).
+//!
+//! The wrapper needs a local decompressor twin to know what the server
+//! will reconstruct; for GradESTC that twin shares the client's basis
+//! state implicitly (the client can reconstruct `Ĝ = M·A` itself), so the
+//! wrapper runs a mirrored [`GradEstcServer`].
+
+use super::codec::Payload;
+use super::gradestc::{GradEstcClient, GradEstcServer};
+use super::{CompressStats, Compressor, Decompressor};
+
+/// Error-feedback wrapper around [`GradEstcClient`].
+pub struct EfWrapper {
+    inner: GradEstcClient,
+    mirror: GradEstcServer,
+    residual: Option<Vec<Vec<f32>>>,
+}
+
+impl EfWrapper {
+    /// Wrap a client compressor; the mirror decompressor is constructed
+    /// from the same model/parameters so its state stays in lockstep with
+    /// the real server's.
+    pub fn new(
+        inner: GradEstcClient,
+        meta: &crate::model::meta::ModelMeta,
+        params: crate::config::GradEstcParams,
+    ) -> Self {
+        let mirror = GradEstcServer::new(meta, params);
+        EfWrapper { inner, mirror, residual: None }
+    }
+}
+
+impl Compressor for EfWrapper {
+    fn compress(&mut self, update: &[Vec<f32>]) -> (Vec<Payload>, CompressStats) {
+        // u' = u + residual
+        let corrected: Vec<Vec<f32>> = match &self.residual {
+            None => update.to_vec(),
+            Some(res) => update
+                .iter()
+                .zip(res)
+                .map(|(u, r)| u.iter().zip(r).map(|(a, b)| a + b).collect())
+                .collect(),
+        };
+        let (payloads, stats) = self.inner.compress(&corrected);
+        // Residual = corrected − reconstruction.
+        let rec = self.mirror.decompress(&payloads);
+        let residual = corrected
+            .iter()
+            .zip(&rec)
+            .map(|(u, r)| u.iter().zip(r).map(|(a, b)| a - b).collect())
+            .collect();
+        self.residual = Some(residual);
+        (payloads, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GradEstcParams, ModelKind};
+    use crate::model::meta::layer_table;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn residual_tracked_and_bounded() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let p = GradEstcParams { k: 8, error_feedback: true, ..Default::default() };
+        let client = GradEstcClient::new(&meta, p.clone(), 3);
+        let mut ef = EfWrapper::new(client, &meta, p.clone());
+        let mut server = GradEstcServer::new(&meta, p);
+        let mut rng = Pcg64::seeded(1);
+        let mut prev_norm = f64::INFINITY;
+        for round in 0..6 {
+            let update: Vec<Vec<f32>> = meta
+                .layers
+                .iter()
+                .map(|l| {
+                    let mut v = rng.normal_vec(l.size());
+                    v.iter_mut().for_each(|x| *x *= 0.01);
+                    v
+                })
+                .collect();
+            let (payloads, _) = ef.compress(&update);
+            let _ = server.decompress(&payloads);
+            let res_norm: f64 = ef
+                .residual
+                .as_ref()
+                .unwrap()
+                .iter()
+                .flat_map(|t| t.iter())
+                .map(|&x| (x as f64) * (x as f64))
+                .sum::<f64>()
+                .sqrt();
+            assert!(res_norm.is_finite());
+            if round >= 4 {
+                // residual must not blow up round over round
+                assert!(res_norm < 10.0 * prev_norm.max(1e-9), "residual diverging");
+            }
+            prev_norm = res_norm;
+        }
+    }
+
+    #[test]
+    fn ef_transmits_what_plain_drops() {
+        // A constant update orthogonal to the learned basis is dropped by
+        // plain GradESTC each round; EF accumulates it so the *sum* of
+        // reconstructions approaches the sum of updates.
+        let meta = layer_table(ModelKind::LeNet5);
+        let p = GradEstcParams { k: 4, error_feedback: true, ..Default::default() };
+        let mut ef =
+            EfWrapper::new(GradEstcClient::new(&meta, p.clone(), 5), &meta, p.clone());
+        let mut server = GradEstcServer::new(&meta, p);
+        let mut rng = Pcg64::seeded(2);
+        let update: Vec<Vec<f32>> =
+            meta.layers.iter().map(|l| rng.normal_vec(l.size())).collect();
+        let ct = ef.inner.compressed_tensors()[0];
+        let mut sum_rec_t = vec![0.0f64; update[ct].len()];
+        // Cumulative relative error must shrink ~1/T: the residual stays
+        // bounded while the transmitted total grows, so EF eventually
+        // delivers everything plain GradESTC would keep dropping.
+        let err_at = |sum: &[f64], t: usize| -> f64 {
+            let truth: Vec<f64> =
+                update[ct].iter().map(|&x| x as f64 * t as f64).collect();
+            let num: f64 = sum
+                .iter()
+                .zip(&truth)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            let den: f64 = truth.iter().map(|x| x * x).sum::<f64>().sqrt();
+            num / den
+        };
+        let mut err_early = f64::NAN;
+        let rounds = 40;
+        for t in 1..=rounds {
+            let (payloads, _) = ef.compress(&update);
+            let rec = server.decompress(&payloads);
+            for (s, &v) in sum_rec_t.iter_mut().zip(&rec[ct]) {
+                *s += v as f64;
+            }
+            if t == 8 {
+                err_early = err_at(&sum_rec_t, t);
+            }
+        }
+        let err_late = err_at(&sum_rec_t, rounds);
+        assert!(
+            err_late < 0.6 * err_early,
+            "cumulative error not shrinking: early {err_early} late {err_late}"
+        );
+    }
+}

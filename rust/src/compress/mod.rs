@@ -1,0 +1,101 @@
+//! Gradient compression framework: the paper's GradESTC plus every
+//! baseline it is evaluated against.
+//!
+//! A [`Compressor`] turns a client's per-layer update into a compact
+//! [`Payload`]; the server-side [`Decompressor`] reconstructs it. Payload
+//! byte sizes are *exact wire sizes* (what a real serializer would emit),
+//! charged to the communication ledger by the coordinator.
+//!
+//! Implementations:
+//! * [`gradestc`] — the paper's method (Algorithms 1 & 2).
+//! * [`topk`] — magnitude sparsification (Stich et al.).
+//! * [`quant`] — FedPAQ stochastic uniform quantization + FedQClip clipped
+//!   variant + SignSGD.
+//! * [`svdfed`] — shared global basis via SVD with error-triggered refresh.
+//! * [`error_feedback`] — local residual accumulation wrapper (paper's
+//!   future-work extension).
+
+pub mod codec;
+pub mod error_feedback;
+pub mod gradestc;
+pub mod quant;
+pub mod svdfed;
+pub mod topk;
+
+pub use codec::Payload;
+pub use error_feedback::EfWrapper;
+pub use gradestc::{GradEstcClient, GradEstcServer};
+
+use crate::model::meta::ModelMeta;
+
+/// Per-round, per-client compression statistics surfaced to the recorder.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompressStats {
+    /// rSVD candidate count consumed this round (Σd proxy, paper Tab. IV).
+    pub sum_d: u64,
+    /// Basis vectors actually replaced this round (GradESTC only).
+    pub replaced: u64,
+}
+
+/// Client-side compressor over a full model update (all tensors, in layer
+/// order; non-compressed tensors pass through as raw f32).
+pub trait Compressor: Send {
+    /// Compress one round's update. `update[i]` is tensor `i`'s flat data.
+    fn compress(&mut self, update: &[Vec<f32>]) -> (Vec<Payload>, CompressStats);
+}
+
+/// Server-side decompressor paired with one client's compressor.
+pub trait Decompressor: Send {
+    /// Reconstruct tensor-aligned flat updates from payloads.
+    fn decompress(&mut self, payloads: &[Payload]) -> Vec<Vec<f32>>;
+}
+
+/// Build the (compressor, decompressor) pair for a config.
+pub fn build_pair(
+    kind: &crate::config::CompressorKind,
+    meta: &ModelMeta,
+    seed: u64,
+) -> (Box<dyn Compressor>, Box<dyn Decompressor>) {
+    use crate::config::CompressorKind as K;
+    match kind {
+        K::None => {
+            let c = codec::RawCompressor::new(meta);
+            let d = codec::RawDecompressor;
+            (Box::new(c), Box::new(d))
+        }
+        K::TopK { frac } => {
+            let c = topk::TopKCompressor::new(meta, *frac);
+            let d = topk::TopKDecompressor::new(meta);
+            (Box::new(c), Box::new(d))
+        }
+        K::FedPaq { bits } => {
+            let c = quant::QuantCompressor::new(meta, *bits, None, seed);
+            let d = quant::QuantDecompressor::new(meta);
+            (Box::new(c), Box::new(d))
+        }
+        K::FedQClip { bits, clip } => {
+            let c = quant::QuantCompressor::new(meta, *bits, Some(*clip as f32), seed);
+            let d = quant::QuantDecompressor::new(meta);
+            (Box::new(c), Box::new(d))
+        }
+        K::SignSgd => {
+            let c = quant::SignCompressor::new(meta);
+            let d = quant::SignDecompressor::new(meta);
+            (Box::new(c), Box::new(d))
+        }
+        K::SvdFed { k, gamma } => {
+            let c = svdfed::SvdFedCompressor::new(meta, *k, *gamma, seed);
+            let d = svdfed::SvdFedDecompressor::new(meta);
+            (Box::new(c), Box::new(d))
+        }
+        K::GradEstc(p) => {
+            let c = GradEstcClient::new(meta, p.clone(), seed);
+            let d = GradEstcServer::new(meta, p.clone());
+            if p.error_feedback {
+                (Box::new(EfWrapper::new(c, meta, p.clone())), Box::new(d))
+            } else {
+                (Box::new(c), Box::new(d))
+            }
+        }
+    }
+}

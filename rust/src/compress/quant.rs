@@ -1,0 +1,323 @@
+//! Quantization baselines.
+//!
+//! * FedPAQ (Reisizadeh et al. 2020): stochastic uniform quantization of
+//!   each compressible tensor to `bits` bits over its [min, max] range.
+//! * FedQClip (Qu et al. 2025): clip the tensor to `clip · rms` first,
+//!   bounding the quantization range against heavy-tailed updates, then
+//!   quantize.
+//! * SignSGD (Bernstein et al. 2018): 1-bit signs scaled by mean |x|.
+//!
+//! Stochastic rounding keeps the quantizer unbiased:
+//! `E[Q(x)] = x` — the property the FedPAQ convergence proof needs; tested
+//! below.
+
+use super::codec::{pack_bits, unpack_bits, Payload};
+use super::{CompressStats, Compressor, Decompressor};
+use crate::model::meta::ModelMeta;
+use crate::util::rng::Pcg64;
+
+/// Tensors below this stay raw (range metadata would outweigh savings).
+const MIN_QUANT: usize = 64;
+
+/// FedPAQ / FedQClip client.
+pub struct QuantCompressor {
+    bits: u8,
+    clip: Option<f32>,
+    compressible: Vec<bool>,
+    rng: Pcg64,
+}
+
+impl QuantCompressor {
+    /// `clip = None` → FedPAQ; `clip = Some(c)` → FedQClip with range
+    /// clipped to `c · rms(x)`.
+    pub fn new(meta: &ModelMeta, bits: u8, clip: Option<f32>, seed: u64) -> Self {
+        assert!((1..=16).contains(&bits), "bits must be 1..=16");
+        QuantCompressor {
+            bits,
+            clip,
+            compressible: meta
+                .layers
+                .iter()
+                .map(|l| l.compressible() && l.size() >= MIN_QUANT)
+                .collect(),
+            rng: Pcg64::new(seed, 0x9A77),
+        }
+    }
+
+    fn quantize(&mut self, t: &[f32]) -> Payload {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        // Optional clipping bound (FedQClip).
+        let bound = self.clip.map(|c| {
+            let rms = (t.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+                / t.len().max(1) as f64)
+                .sqrt() as f32;
+            c * rms
+        });
+        let clipped: Vec<f32> = match bound {
+            Some(b) if b > 0.0 => t.iter().map(|&x| x.clamp(-b, b)).collect(),
+            _ => t.to_vec(),
+        };
+        for &x in &clipped {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        if !lo.is_finite() || !hi.is_finite() {
+            lo = 0.0;
+            hi = f32::EPSILON;
+        } else if hi <= lo {
+            // Constant tensor: keep lo so code 0 reconstructs the value.
+            hi = lo + f32::EPSILON.max(lo.abs() * 1e-6);
+        }
+        let levels = (1u32 << self.bits) - 1;
+        let scale = (hi - lo) / levels as f32;
+        let codes: Vec<u32> = clipped
+            .iter()
+            .map(|&x| {
+                let pos = (x - lo) / scale; // in [0, levels]
+                let floor = pos.floor();
+                let frac = pos - floor;
+                // stochastic rounding: up with prob = frac
+                let up = (self.rng.f32() < frac) as u32;
+                ((floor as u32) + up).min(levels)
+            })
+            .collect();
+        Payload::Quantized { lo, hi, bits: self.bits, packed: pack_bits(&codes, self.bits), len: t.len() }
+    }
+}
+
+impl Compressor for QuantCompressor {
+    fn compress(&mut self, update: &[Vec<f32>]) -> (Vec<Payload>, CompressStats) {
+        let compressible = self.compressible.clone();
+        let payloads = update
+            .iter()
+            .zip(&compressible)
+            .map(|(t, &c)| if c { self.quantize(t) } else { Payload::Raw(t.clone()) })
+            .collect();
+        (payloads, CompressStats::default())
+    }
+}
+
+/// FedPAQ / FedQClip server.
+pub struct QuantDecompressor {
+    sizes: Vec<usize>,
+}
+
+impl QuantDecompressor {
+    /// Build for a model.
+    pub fn new(meta: &ModelMeta) -> Self {
+        QuantDecompressor { sizes: meta.layers.iter().map(|l| l.size()).collect() }
+    }
+}
+
+impl Decompressor for QuantDecompressor {
+    fn decompress(&mut self, payloads: &[Payload]) -> Vec<Vec<f32>> {
+        payloads
+            .iter()
+            .zip(&self.sizes)
+            .map(|(p, &n)| match p {
+                Payload::Raw(v) => v.clone(),
+                Payload::Quantized { lo, hi, bits, packed, len } => {
+                    assert_eq!(*len, n);
+                    let levels = (1u32 << bits) - 1;
+                    let scale = (hi - lo) / levels as f32;
+                    unpack_bits(packed, *bits, n)
+                        .into_iter()
+                        .map(|c| lo + c as f32 * scale)
+                        .collect()
+                }
+                other => panic!("QuantDecompressor got {other:?}"),
+            })
+            .collect()
+    }
+}
+
+/// SignSGD client: sign bits + mean-|x| scale.
+pub struct SignCompressor {
+    compressible: Vec<bool>,
+}
+
+impl SignCompressor {
+    /// Build for a model.
+    pub fn new(meta: &ModelMeta) -> Self {
+        SignCompressor {
+            compressible: meta
+                .layers
+                .iter()
+                .map(|l| l.compressible() && l.size() >= MIN_QUANT)
+                .collect(),
+        }
+    }
+}
+
+impl Compressor for SignCompressor {
+    fn compress(&mut self, update: &[Vec<f32>]) -> (Vec<Payload>, CompressStats) {
+        let payloads = update
+            .iter()
+            .zip(&self.compressible)
+            .map(|(t, &c)| {
+                if !c {
+                    return Payload::Raw(t.clone());
+                }
+                let scale = t.iter().map(|&x| x.abs() as f64).sum::<f64>() as f32
+                    / t.len().max(1) as f32;
+                let codes: Vec<u32> = t.iter().map(|&x| (x >= 0.0) as u32).collect();
+                Payload::Signs { scale, packed: pack_bits(&codes, 1), len: t.len() }
+            })
+            .collect();
+        (payloads, CompressStats::default())
+    }
+}
+
+/// SignSGD server.
+pub struct SignDecompressor {
+    sizes: Vec<usize>,
+}
+
+impl SignDecompressor {
+    /// Build for a model.
+    pub fn new(meta: &ModelMeta) -> Self {
+        SignDecompressor { sizes: meta.layers.iter().map(|l| l.size()).collect() }
+    }
+}
+
+impl Decompressor for SignDecompressor {
+    fn decompress(&mut self, payloads: &[Payload]) -> Vec<Vec<f32>> {
+        payloads
+            .iter()
+            .zip(&self.sizes)
+            .map(|(p, &n)| match p {
+                Payload::Raw(v) => v.clone(),
+                Payload::Signs { scale, packed, len } => {
+                    assert_eq!(*len, n);
+                    unpack_bits(packed, 1, n)
+                        .into_iter()
+                        .map(|b| if b == 1 { *scale } else { -*scale })
+                        .collect()
+                }
+                other => panic!("SignDecompressor got {other:?}"),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelKind;
+    use crate::model::meta::layer_table;
+
+    fn lenet_update(seed: u64) -> (ModelMeta, Vec<Vec<f32>>) {
+        let meta = layer_table(ModelKind::LeNet5);
+        let mut rng = Pcg64::seeded(seed);
+        let update = meta.layers.iter().map(|l| rng.normal_vec(l.size())).collect();
+        (meta, update)
+    }
+
+    use crate::model::meta::ModelMeta;
+
+    #[test]
+    fn quant_error_bounded_by_step() {
+        let (meta, update) = lenet_update(1);
+        let mut c = QuantCompressor::new(&meta, 8, None, 7);
+        let (payloads, _) = c.compress(&update);
+        let mut d = QuantDecompressor::new(&meta);
+        let rec = d.decompress(&payloads);
+        for ((orig, r), layer) in update.iter().zip(&rec).zip(&meta.layers) {
+            if !(layer.compressible() && layer.size() >= MIN_QUANT) {
+                continue;
+            }
+            let lo = orig.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = orig.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let step = (hi - lo) / 255.0;
+            for (o, v) in orig.iter().zip(r) {
+                assert!((o - v).abs() <= step + 1e-6, "{}: |{o}-{v}| > {step}", layer.name);
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_rounding_unbiased() {
+        // Quantize the same constant vector many times: the mean must
+        // converge to the true value (unbiasedness).
+        let meta = layer_table(ModelKind::LeNet5);
+        let i = meta.index_of("fc1.kernel").unwrap();
+        let n = meta.layers[i].size();
+        let truth = 0.3337f32;
+        let mut update: Vec<Vec<f32>> =
+            meta.layers.iter().map(|l| vec![0.0; l.size()]).collect();
+        // Give the tensor a range so lo/hi aren't degenerate.
+        update[i] = (0..n).map(|j| if j < 2 { (j as f32) - 0.5 } else { truth }).collect();
+        let mut c = QuantCompressor::new(&meta, 4, None, 3);
+        let mut d = QuantDecompressor::new(&meta);
+        let mut acc = 0.0f64;
+        let trials = 60;
+        for _ in 0..trials {
+            let (p, _) = c.compress(&update);
+            let rec = d.decompress(&p);
+            acc += rec[i][10] as f64;
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - truth as f64).abs() < 0.02, "mean {mean} vs {truth}");
+    }
+
+    #[test]
+    fn clip_bounds_range() {
+        let (meta, mut update) = lenet_update(2);
+        // Inject an outlier.
+        let i = meta.index_of("fc1.kernel").unwrap();
+        update[i][0] = 1000.0;
+        let mut c = QuantCompressor::new(&meta, 8, Some(2.5), 9);
+        let (payloads, _) = c.compress(&update);
+        if let Payload::Quantized { lo, hi, .. } = &payloads[i] {
+            assert!(*hi < 100.0, "clip failed: hi={hi}");
+            assert!(*lo > -100.0);
+        } else {
+            panic!("expected quantized payload");
+        }
+    }
+
+    #[test]
+    fn sign_roundtrip() {
+        let (meta, update) = lenet_update(3);
+        let mut c = SignCompressor::new(&meta);
+        let (payloads, _) = c.compress(&update);
+        let mut d = SignDecompressor::new(&meta);
+        let rec = d.decompress(&payloads);
+        let i = meta.index_of("fc1.kernel").unwrap();
+        for (o, v) in update[i].iter().zip(&rec[i]) {
+            assert_eq!(o.signum(), v.signum());
+        }
+        // 1 bit per entry → payload ≈ n/8 bytes
+        assert!(payloads[i].wire_bytes() < (update[i].len() / 8 + 64) as u64);
+    }
+
+    #[test]
+    fn fedpaq_8bit_compression_ratio() {
+        // ~4x smaller than raw (paper: 8-bit ≈ 1/4 of 32-bit).
+        let (meta, update) = lenet_update(4);
+        let mut c = QuantCompressor::new(&meta, 8, None, 5);
+        let (payloads, _) = c.compress(&update);
+        let raw: u64 = update.iter().map(|t| 4 * t.len() as u64).sum();
+        let wire: u64 = payloads.iter().map(|p| p.wire_bytes()).sum();
+        assert!(
+            (wire as f64) < 0.30 * raw as f64,
+            "wire {wire} raw {raw}"
+        );
+    }
+
+    #[test]
+    fn constant_tensor_quantizes_safely() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let update: Vec<Vec<f32>> =
+            meta.layers.iter().map(|l| vec![0.5; l.size()]).collect();
+        let mut c = QuantCompressor::new(&meta, 8, None, 1);
+        let (p, _) = c.compress(&update);
+        let mut d = QuantDecompressor::new(&meta);
+        let rec = d.decompress(&p);
+        let i = meta.index_of("fc1.kernel").unwrap();
+        for v in &rec[i] {
+            assert!((v - 0.5).abs() < 1e-3);
+        }
+    }
+}

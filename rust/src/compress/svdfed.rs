@@ -1,0 +1,241 @@
+//! SVDFed-style baseline (Wang et al., INFOCOM 2023).
+//!
+//! SVDFed captures a *shared* low-rank gradient representation via SVD:
+//! a basis is fit once from warm-up gradients, clients then uplink only
+//! combination coefficients, and the basis is re-fit (full re-transmission)
+//! when the fitting quality degrades past a threshold — the γ knob.
+//!
+//! Faithful deviation (documented in DESIGN.md §5): the original fits one
+//! basis server-side from all clients' round-1 gradients; this
+//! implementation fits per-client bases from each client's own round-1
+//! gradient. That is the *stronger* variant (a personalized basis fits at
+//! least as well as a shared one), so the baseline is not handicapped;
+//! what it preserves is SVDFed's defining behaviour — a static basis
+//! between expensive refreshes — whose staleness under drift is exactly
+//! what GradESTC's incremental updates fix.
+
+use super::codec::Payload;
+use super::{CompressStats, Compressor, Decompressor};
+use crate::config::GradEstcParams;
+use crate::linalg::{matmul, matmul_at_b, randomized_svd, Mat, RsvdOptions};
+use crate::model::meta::ModelMeta;
+use crate::util::rng::Pcg64;
+
+// Reuse GradESTC's geometry helpers: same segmentation, same layer picks.
+use super::gradestc::geometry::{from_g, layer_geoms, to_g, LayerGeom};
+
+struct LayerState {
+    geom: LayerGeom,
+    basis: Option<Mat>,
+}
+
+/// Client-side SVDFed compressor.
+pub struct SvdFedCompressor {
+    layers: Vec<LayerState>,
+    ntensors: usize,
+    /// Relative fitting error that triggers a basis re-fit.
+    gamma: f64,
+    rng: Pcg64,
+}
+
+impl SvdFedCompressor {
+    /// `k` = basis rank; `gamma` = relative-error refresh threshold.
+    pub fn new(meta: &ModelMeta, k: usize, gamma: f64, seed: u64) -> Self {
+        let params = GradEstcParams { k, ..Default::default() };
+        SvdFedCompressor {
+            layers: layer_geoms(meta, &params)
+                .into_iter()
+                .map(|geom| LayerState { geom, basis: None })
+                .collect(),
+            ntensors: meta.layers.len(),
+            gamma,
+            rng: Pcg64::new(seed, 0x57DF),
+        }
+    }
+
+    fn fit_basis(g: &Mat, k: usize, rng: &mut Pcg64) -> Mat {
+        let svd = randomized_svd(g, k, RsvdOptions::default(), rng);
+        let mut basis = Mat::zeros(g.rows(), k);
+        for j in 0..svd.s.len() {
+            basis.set_col(j, &svd.u.col(j));
+        }
+        basis
+    }
+}
+
+impl Compressor for SvdFedCompressor {
+    fn compress(&mut self, update: &[Vec<f32>]) -> (Vec<Payload>, CompressStats) {
+        assert_eq!(update.len(), self.ntensors);
+        let mut stats = CompressStats::default();
+        let mut payloads: Vec<Payload> =
+            update.iter().map(|t| Payload::Raw(t.clone())).collect();
+        for state in &mut self.layers {
+            let geom = state.geom;
+            let g = to_g(&geom, &update[geom.tensor]);
+            let (l, k, m) = (geom.l, geom.k, geom.m);
+
+            let mut refit_basis = None;
+            let needs_fit = match &state.basis {
+                None => true,
+                Some(basis) => {
+                    // Relative fitting error against the static basis.
+                    let a = matmul_at_b(basis, &g);
+                    let e = g.sub(&matmul(basis, &a));
+                    let rel = e.fro_norm() as f64 / (g.fro_norm() as f64).max(1e-20);
+                    rel > self.gamma
+                }
+            };
+            if needs_fit {
+                let basis = Self::fit_basis(&g, k, &mut self.rng);
+                refit_basis = Some(basis.as_slice().to_vec());
+                state.basis = Some(basis);
+                stats.sum_d += k as u64;
+                stats.replaced += k as u64;
+            }
+            let basis = state.basis.as_ref().unwrap();
+            let a = matmul_at_b(basis, &g);
+            payloads[geom.tensor] = Payload::SvdCoeffs {
+                coeffs: a.as_slice().to_vec(),
+                refit_basis,
+                l,
+                k,
+                m,
+            };
+        }
+        (payloads, stats)
+    }
+}
+
+/// Server-side SVDFed decompressor.
+pub struct SvdFedDecompressor {
+    layers: Vec<LayerState>,
+}
+
+impl SvdFedDecompressor {
+    /// Build for a model (same geometry as the compressor at any k — the
+    /// payload carries its own dims, geometry only selects tensors).
+    pub fn new(meta: &ModelMeta) -> Self {
+        let params = GradEstcParams::default();
+        SvdFedDecompressor {
+            layers: layer_geoms(meta, &params)
+                .into_iter()
+                .map(|geom| LayerState { geom, basis: None })
+                .collect(),
+        }
+    }
+}
+
+impl Decompressor for SvdFedDecompressor {
+    fn decompress(&mut self, payloads: &[Payload]) -> Vec<Vec<f32>> {
+        let mut out: Vec<Vec<f32>> = payloads
+            .iter()
+            .map(|p| match p {
+                Payload::Raw(v) => v.clone(),
+                _ => Vec::new(),
+            })
+            .collect();
+        for state in &mut self.layers {
+            let geom = state.geom;
+            let Payload::SvdCoeffs { coeffs, refit_basis, l, k, m } =
+                &payloads[geom.tensor]
+            else {
+                panic!("SvdFedDecompressor: expected SvdCoeffs for {}", geom.tensor)
+            };
+            if let Some(b) = refit_basis {
+                state.basis = Some(Mat::from_vec(*l, *k, b.clone()));
+            }
+            let basis = state
+                .basis
+                .as_ref()
+                .expect("coefficients received before any basis");
+            let a = Mat::from_vec(*k, *m, coeffs.clone());
+            let ghat = matmul(basis, &a);
+            // geom was built at default k; override with the payload's dims.
+            let geom = LayerGeom { l: *l, m: *m, k: *k, ..geom };
+            out[geom.tensor] = from_g(&geom, &ghat);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelKind;
+    use crate::model::meta::layer_table;
+
+    fn low_rank_update(meta: &ModelMeta, rng: &mut Pcg64, drift: f32) -> Vec<Vec<f32>> {
+        meta.layers
+            .iter()
+            .map(|layer| {
+                let l = layer.segment_len();
+                let m = layer.segment_cols();
+                let r = 4.min(l).min(m).max(1);
+                let u = Mat::randn(l, r, rng);
+                let mut v = Mat::randn(r, m, rng);
+                for x in v.as_mut_slice() {
+                    *x *= 1.0 + drift;
+                }
+                matmul(&u, &v).into_vec()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn first_round_sends_basis_then_coeffs_only() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let mut rng = Pcg64::seeded(1);
+        let mut c = SvdFedCompressor::new(&meta, 8, 0.95, 3);
+        let u1 = low_rank_update(&meta, &mut rng, 0.0);
+        let (p1, _) = c.compress(&u1);
+        let has_refit = p1.iter().any(|p| {
+            matches!(p, Payload::SvdCoeffs { refit_basis: Some(_), .. })
+        });
+        assert!(has_refit, "round 1 must carry the basis");
+        // Round 2 on an update in the SAME column space: no refit.
+        let (p2, _) = c.compress(&u1);
+        for p in &p2 {
+            if let Payload::SvdCoeffs { refit_basis, .. } = p {
+                assert!(refit_basis.is_none(), "same-space update refit");
+            }
+        }
+    }
+
+    #[test]
+    fn drifted_update_triggers_refit() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let mut rng = Pcg64::seeded(2);
+        let mut c = SvdFedCompressor::new(&meta, 8, 0.30, 3);
+        let u1 = low_rank_update(&meta, &mut rng, 0.0);
+        let _ = c.compress(&u1);
+        // Entirely new column space → large fitting error → refit.
+        let u2 = low_rank_update(&meta, &mut rng, 0.0);
+        let (p2, stats) = c.compress(&u2);
+        assert!(stats.replaced > 0);
+        assert!(p2
+            .iter()
+            .any(|p| matches!(p, Payload::SvdCoeffs { refit_basis: Some(_), .. })));
+    }
+
+    #[test]
+    fn roundtrip_reconstruction() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let mut rng = Pcg64::seeded(3);
+        let mut c = SvdFedCompressor::new(&meta, 8, 0.9, 5);
+        let mut d = SvdFedDecompressor::new(&meta);
+        let u = low_rank_update(&meta, &mut rng, 0.0);
+        let (p, _) = c.compress(&u);
+        let rec = d.decompress(&p);
+        // Low-rank (4) update with k=8 basis must reconstruct well.
+        for (i, (orig, r)) in u.iter().zip(&rec).enumerate() {
+            if matches!(p[i], Payload::SvdCoeffs { .. }) {
+                let num: f64 =
+                    orig.iter().zip(r).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+                let den: f64 = orig.iter().map(|&x| (x as f64).powi(2)).sum();
+                assert!((num / den).sqrt() < 0.05, "tensor {i}");
+            } else {
+                assert_eq!(orig, r);
+            }
+        }
+    }
+}

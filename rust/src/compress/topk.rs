@@ -1,0 +1,187 @@
+//! Top-k magnitude sparsification baseline (Stich et al. 2018).
+//!
+//! Keeps the largest-|x| `frac` fraction of each compressible tensor's
+//! entries (at least 1), sends (index, value) pairs; small tensors
+//! (biases, norms) pass through raw, mirroring how the paper applies every
+//! compressor only to the parameter-dominant weight tensors.
+
+use super::codec::Payload;
+use super::{CompressStats, Compressor, Decompressor};
+use crate::model::meta::ModelMeta;
+
+/// Minimum tensor size worth sparsifying (below this, raw is cheaper).
+const MIN_SPARSE: usize = 256;
+
+/// Client side.
+pub struct TopKCompressor {
+    frac: f64,
+    compressible: Vec<bool>,
+}
+
+impl TopKCompressor {
+    /// `frac` = kept fraction of entries (paper: 0.10 / 0.20).
+    pub fn new(meta: &ModelMeta, frac: f64) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0, "topk frac must be in (0,1]");
+        TopKCompressor {
+            frac,
+            compressible: meta
+                .layers
+                .iter()
+                .map(|l| l.compressible() && l.size() >= MIN_SPARSE)
+                .collect(),
+        }
+    }
+}
+
+/// Select the `keep` largest-magnitude entries; returns sorted indices.
+fn top_indices(data: &[f32], keep: usize) -> Vec<u32> {
+    let keep = keep.clamp(1, data.len());
+    // Partial selection via select_nth on an index permutation.
+    let mut idx: Vec<u32> = (0..data.len() as u32).collect();
+    let kth = keep - 1;
+    idx.select_nth_unstable_by(kth, |&a, &b| {
+        data[b as usize]
+            .abs()
+            .partial_cmp(&data[a as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut top: Vec<u32> = idx[..keep].to_vec();
+    top.sort_unstable();
+    top
+}
+
+impl Compressor for TopKCompressor {
+    fn compress(&mut self, update: &[Vec<f32>]) -> (Vec<Payload>, CompressStats) {
+        let payloads = update
+            .iter()
+            .zip(&self.compressible)
+            .map(|(t, &comp)| {
+                if !comp {
+                    return Payload::Raw(t.clone());
+                }
+                let keep = ((t.len() as f64 * self.frac).round() as usize).max(1);
+                let indices = top_indices(t, keep);
+                let values = indices.iter().map(|&i| t[i as usize]).collect();
+                Payload::Sparse { indices, values, len: t.len() }
+            })
+            .collect();
+        (payloads, CompressStats::default())
+    }
+}
+
+/// Server side.
+pub struct TopKDecompressor {
+    sizes: Vec<usize>,
+}
+
+impl TopKDecompressor {
+    /// Build for a model.
+    pub fn new(meta: &ModelMeta) -> Self {
+        TopKDecompressor { sizes: meta.layers.iter().map(|l| l.size()).collect() }
+    }
+}
+
+impl Decompressor for TopKDecompressor {
+    fn decompress(&mut self, payloads: &[Payload]) -> Vec<Vec<f32>> {
+        payloads
+            .iter()
+            .zip(&self.sizes)
+            .map(|(p, &n)| match p {
+                Payload::Raw(v) => v.clone(),
+                Payload::Sparse { indices, values, len } => {
+                    assert_eq!(*len, n);
+                    let mut out = vec![0.0f32; n];
+                    for (&i, &v) in indices.iter().zip(values) {
+                        out[i as usize] = v;
+                    }
+                    out
+                }
+                other => panic!("TopKDecompressor got {other:?}"),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelKind;
+    use crate::model::meta::layer_table;
+    use crate::util::prop::{check, VecF32};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn keeps_largest_entries() {
+        let data = vec![0.1, -5.0, 0.2, 3.0, -0.05];
+        let idx = top_indices(&data, 2);
+        assert_eq!(idx, vec![1, 3]);
+    }
+
+    #[test]
+    fn roundtrip_preserves_topk_zeroes_rest() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let mut rng = Pcg64::seeded(1);
+        let update: Vec<Vec<f32>> =
+            meta.layers.iter().map(|l| rng.normal_vec(l.size())).collect();
+        let mut c = TopKCompressor::new(&meta, 0.1);
+        let (payloads, _) = c.compress(&update);
+        let mut d = TopKDecompressor::new(&meta);
+        let rec = d.decompress(&payloads);
+        for ((orig, r), layer) in update.iter().zip(&rec).zip(&meta.layers) {
+            if layer.compressible() && layer.size() >= MIN_SPARSE {
+                let nonzero = r.iter().filter(|&&x| x != 0.0).count();
+                let expect = ((layer.size() as f64) * 0.1).round() as usize;
+                assert!((nonzero as i64 - expect as i64).abs() <= 1, "{}", layer.name);
+                // kept values match the original
+                for (o, v) in orig.iter().zip(r) {
+                    assert!(*v == 0.0 || v == o);
+                }
+            } else {
+                assert_eq!(orig, r);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_payload_smaller_than_raw() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let mut rng = Pcg64::seeded(2);
+        let update: Vec<Vec<f32>> =
+            meta.layers.iter().map(|l| rng.normal_vec(l.size())).collect();
+        let raw_bytes: u64 = update.iter().map(|t| 4 * t.len() as u64).sum();
+        let mut c = TopKCompressor::new(&meta, 0.1);
+        let (payloads, _) = c.compress(&update);
+        let wire: u64 = payloads.iter().map(|p| p.wire_bytes()).sum();
+        assert!(wire < raw_bytes / 2, "wire {wire} raw {raw_bytes}");
+    }
+
+    #[test]
+    fn property_reconstruction_error_bounded_by_dropped_mass() {
+        // ||x - topk(x)||² must equal the sum of squares of dropped entries
+        // (exactly, as top-k keeps originals).
+        let gen = VecF32 { min_len: 300, max_len: 600, scale: 2.0 };
+        check("topk_error_identity", 42, 30, &gen, |v| {
+            let keep = (v.len() / 10).max(1);
+            let idx = top_indices(v, keep);
+            let kept: std::collections::HashSet<u32> = idx.into_iter().collect();
+            let dropped_sq: f64 = v
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !kept.contains(&(*i as u32)))
+                .map(|(_, &x)| (x as f64) * (x as f64))
+                .sum();
+            let max_kept_sq = v
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| kept.contains(&(*i as u32)))
+                .map(|(_, &x)| (x as f64) * (x as f64))
+                .fold(f64::INFINITY, f64::min);
+            // every dropped entry ≤ every kept entry in magnitude
+            v.iter()
+                .enumerate()
+                .filter(|(i, _)| !kept.contains(&(*i as u32)))
+                .all(|(_, &x)| (x as f64) * (x as f64) <= max_kept_sq + 1e-12)
+                && dropped_sq.is_finite()
+        });
+    }
+}

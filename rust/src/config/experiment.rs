@@ -1,0 +1,508 @@
+//! Typed experiment configuration + named presets.
+//!
+//! One [`ExperimentConfig`] fully determines a simulated FL run: dataset,
+//! model, client population, data distribution, compressor, and evaluation
+//! schedule. Configs round-trip through [`Json`] so experiment scripts and
+//! results stay self-describing.
+
+use super::json::Json;
+
+/// Which synthetic dataset family to train on (DESIGN.md §2.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// 28×28×1, 10 classes — stands in for MNIST.
+    SynthMnist,
+    /// 32×32×3, 10 classes — stands in for CIFAR-10.
+    SynthCifar10,
+    /// 32×32×3, 100 classes — stands in for CIFAR-100.
+    SynthCifar100,
+    /// Synthetic token corpus for the transformer end-to-end example.
+    TinyCorpus,
+}
+
+/// Model architecture (defined in `python/compile/model.py`; layer metadata
+/// mirrored in `rust/src/model/meta.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Faithful LeNet-5 (paper Table II row 1).
+    LeNet5,
+    /// Residual CNN scaled for CPU (stands in for ResNet18).
+    ResNetLite,
+    /// Conv+FC stack with AlexNet's parameter skew (stands in for AlexNet).
+    AlexNetLite,
+    /// Decoder-only transformer LM for the e2e driver.
+    TinyTransformer,
+}
+
+/// Client data distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DataDistribution {
+    /// Uniform random split.
+    Iid,
+    /// Dirichlet(α) label-skew split (Hsu et al.); α=0.5 / 0.1 in the paper.
+    Dirichlet(f64),
+}
+
+/// GradESTC hyperparameters (paper §III).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GradEstcParams {
+    /// Number of retained basis vectors `k`. When a per-layer table is not
+    /// given, every compressed layer uses this k.
+    pub k: usize,
+    /// Dynamic-d slope α (paper: 1.3).
+    pub alpha: f64,
+    /// Dynamic-d intercept β (paper: 1).
+    pub beta: f64,
+    /// Fraction of model parameters that must live in compressed layers
+    /// (layers are picked largest-first until the fraction is covered;
+    /// paper compresses layers covering 92–99% of parameters).
+    pub coverage: f64,
+    /// Ablation switch: never update the basis after init (GradESTC-first).
+    pub freeze_after_init: bool,
+    /// Ablation switch: replace the full basis every round (GradESTC-all).
+    pub replace_all: bool,
+    /// Ablation switch: disable dynamic d, keep d = k (GradESTC-k).
+    pub fixed_d: bool,
+    /// Extension (paper future work): local error-feedback accumulation.
+    pub error_feedback: bool,
+}
+
+impl Default for GradEstcParams {
+    fn default() -> Self {
+        GradEstcParams {
+            k: 32,
+            alpha: 1.3,
+            beta: 1.0,
+            coverage: 0.9,
+            freeze_after_init: false,
+            replace_all: false,
+            fixed_d: false,
+            error_feedback: false,
+        }
+    }
+}
+
+/// Which uplink compressor the clients run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CompressorKind {
+    /// Uncompressed FedAvg baseline.
+    None,
+    /// Magnitude Top-k sparsification; `frac` = fraction of entries kept.
+    TopK {
+        /// Kept fraction of entries (paper uses k=10% / 20%).
+        frac: f64,
+    },
+    /// FedPAQ-style stochastic uniform quantization to `bits` bits.
+    FedPaq {
+        /// Quantization bit width (paper: 8).
+        bits: u8,
+    },
+    /// 1-bit SignSGD with per-tensor scale.
+    SignSgd,
+    /// SVDFed-style shared global basis with error-triggered refresh.
+    SvdFed {
+        /// Basis rank per layer.
+        k: usize,
+        /// Relative-error threshold triggering a basis re-fit (plays the
+        /// role of the paper's γ).
+        gamma: f64,
+    },
+    /// FedQClip-style clipped quantization.
+    FedQClip {
+        /// Quantization bit width.
+        bits: u8,
+        /// Clip multiplier on the update RMS norm.
+        clip: f64,
+    },
+    /// The paper's method.
+    GradEstc(GradEstcParams),
+}
+
+impl CompressorKind {
+    /// Short stable name for logs/CSV.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressorKind::None => "fedavg",
+            CompressorKind::TopK { .. } => "topk",
+            CompressorKind::FedPaq { .. } => "fedpaq",
+            CompressorKind::SignSgd => "signsgd",
+            CompressorKind::SvdFed { .. } => "svdfed",
+            CompressorKind::FedQClip { .. } => "fedqclip",
+            CompressorKind::GradEstc(p) => {
+                if p.freeze_after_init {
+                    "gradestc-first"
+                } else if p.replace_all {
+                    "gradestc-all"
+                } else if p.fixed_d {
+                    "gradestc-k"
+                } else {
+                    "gradestc"
+                }
+            }
+        }
+    }
+}
+
+/// Complete specification of one simulated FL experiment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    /// Experiment id used in result paths.
+    pub name: String,
+    /// Dataset family.
+    pub dataset: DatasetKind,
+    /// Model architecture.
+    pub model: ModelKind,
+    /// Client data split.
+    pub distribution: DataDistribution,
+    /// Total number of clients (paper: 10 / 50).
+    pub num_clients: usize,
+    /// Fraction of clients sampled per round (paper: 1.0 / 0.2).
+    pub participation: f64,
+    /// Global rounds.
+    pub rounds: usize,
+    /// Local epochs per round (paper: 1 / 3 / 5 / 7).
+    pub local_epochs: usize,
+    /// Minibatch size.
+    pub batch_size: usize,
+    /// SGD learning rate (paper: 0.01).
+    pub lr: f32,
+    /// Training samples per client.
+    pub samples_per_client: usize,
+    /// Held-out test samples (server-side evaluation).
+    pub test_samples: usize,
+    /// Evaluate every this many rounds.
+    pub eval_every: usize,
+    /// Accuracy threshold for the "uplink at threshold" metric, as a
+    /// fraction of the run's best accuracy (paper uses a fixed near-
+    /// convergence level; 0.95·best is the scaled analog and is also
+    /// reported at explicit levels by the harness).
+    pub threshold_frac: f64,
+    /// Uplink compressor under test.
+    pub compressor: CompressorKind,
+    /// RNG seed for the entire run.
+    pub seed: u64,
+    /// Execute local training through XLA artifacts (requires
+    /// `make artifacts`); otherwise the native Rust trainer is used.
+    pub use_xla: bool,
+    /// Artifacts directory (manifest + HLO text).
+    pub artifacts_dir: String,
+}
+
+impl ExperimentConfig {
+    /// Small, fast preset used by `examples/quickstart.rs` and tests.
+    pub fn preset_quickstart() -> Self {
+        ExperimentConfig {
+            name: "quickstart".into(),
+            dataset: DatasetKind::SynthMnist,
+            model: ModelKind::LeNet5,
+            distribution: DataDistribution::Iid,
+            num_clients: 4,
+            participation: 1.0,
+            rounds: 8,
+            local_epochs: 1,
+            batch_size: 32,
+            lr: 0.05,
+            samples_per_client: 128,
+            test_samples: 256,
+            eval_every: 1,
+            threshold_frac: 0.95,
+            compressor: CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+            seed: 7,
+            use_xla: false,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    /// Paper Table III cell: `dataset × distribution × method`, scaled.
+    pub fn preset_table3(
+        dataset: DatasetKind,
+        distribution: DataDistribution,
+        compressor: CompressorKind,
+        rounds: usize,
+        seed: u64,
+    ) -> Self {
+        let (model, samples, batch) = match dataset {
+            DatasetKind::SynthMnist => (ModelKind::LeNet5, 512, 32),
+            DatasetKind::SynthCifar10 => (ModelKind::ResNetLite, 384, 32),
+            DatasetKind::SynthCifar100 => (ModelKind::AlexNetLite, 384, 32),
+            DatasetKind::TinyCorpus => (ModelKind::TinyTransformer, 256, 16),
+        };
+        let dist_tag = match distribution {
+            DataDistribution::Iid => "iid".to_string(),
+            DataDistribution::Dirichlet(a) => format!("dir{a}"),
+        };
+        ExperimentConfig {
+            name: format!("table3-{:?}-{}-{}", dataset, dist_tag, compressor.name()),
+            dataset,
+            model,
+            distribution,
+            num_clients: 10,
+            participation: 1.0,
+            rounds,
+            local_epochs: 1,
+            batch_size: batch,
+            lr: 0.03,
+            samples_per_client: samples,
+            test_samples: 512,
+            eval_every: 1,
+            threshold_frac: 0.95,
+            compressor,
+            seed,
+            use_xla: false,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        let dist = match self.distribution {
+            DataDistribution::Iid => Json::str("iid"),
+            DataDistribution::Dirichlet(a) => {
+                Json::obj(vec![("dirichlet", Json::num(a))])
+            }
+        };
+        let comp = match &self.compressor {
+            CompressorKind::None => Json::str("fedavg"),
+            CompressorKind::TopK { frac } => {
+                Json::obj(vec![("topk", Json::obj(vec![("frac", Json::num(*frac))]))])
+            }
+            CompressorKind::FedPaq { bits } => {
+                Json::obj(vec![("fedpaq", Json::obj(vec![("bits", Json::num(*bits as f64))]))])
+            }
+            CompressorKind::SignSgd => Json::str("signsgd"),
+            CompressorKind::SvdFed { k, gamma } => Json::obj(vec![(
+                "svdfed",
+                Json::obj(vec![("k", Json::num(*k as f64)), ("gamma", Json::num(*gamma))]),
+            )]),
+            CompressorKind::FedQClip { bits, clip } => Json::obj(vec![(
+                "fedqclip",
+                Json::obj(vec![("bits", Json::num(*bits as f64)), ("clip", Json::num(*clip))]),
+            )]),
+            CompressorKind::GradEstc(p) => Json::obj(vec![(
+                "gradestc",
+                Json::obj(vec![
+                    ("k", Json::num(p.k as f64)),
+                    ("alpha", Json::num(p.alpha)),
+                    ("beta", Json::num(p.beta)),
+                    ("coverage", Json::num(p.coverage)),
+                    ("freeze_after_init", Json::Bool(p.freeze_after_init)),
+                    ("replace_all", Json::Bool(p.replace_all)),
+                    ("fixed_d", Json::Bool(p.fixed_d)),
+                    ("error_feedback", Json::Bool(p.error_feedback)),
+                ]),
+            )]),
+        };
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("dataset", Json::str(dataset_name(self.dataset))),
+            ("model", Json::str(model_name(self.model))),
+            ("distribution", dist),
+            ("num_clients", Json::num(self.num_clients as f64)),
+            ("participation", Json::num(self.participation)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("local_epochs", Json::num(self.local_epochs as f64)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("lr", Json::num(self.lr as f64)),
+            ("samples_per_client", Json::num(self.samples_per_client as f64)),
+            ("test_samples", Json::num(self.test_samples as f64)),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("threshold_frac", Json::num(self.threshold_frac)),
+            ("compressor", comp),
+            ("seed", Json::num(self.seed as f64)),
+            ("use_xla", Json::Bool(self.use_xla)),
+            ("artifacts_dir", Json::str(&self.artifacts_dir)),
+        ])
+    }
+
+    /// Parse from JSON (inverse of [`ExperimentConfig::to_json`]).
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let dataset = parse_dataset(j.req("dataset")?.as_str().ok_or("dataset must be str")?)?;
+        let model = parse_model(j.req("model")?.as_str().ok_or("model must be str")?)?;
+        let distribution = match j.req("distribution")? {
+            Json::Str(s) if s == "iid" => DataDistribution::Iid,
+            v => {
+                let a = v
+                    .get("dirichlet")
+                    .and_then(|x| x.as_f64())
+                    .ok_or("bad distribution")?;
+                DataDistribution::Dirichlet(a)
+            }
+        };
+        let compressor = parse_compressor(j.req("compressor")?)?;
+        Ok(ExperimentConfig {
+            name: j.req("name")?.as_str().ok_or("name")?.to_string(),
+            dataset,
+            model,
+            distribution,
+            num_clients: j.req("num_clients")?.as_usize().ok_or("num_clients")?,
+            participation: j.req("participation")?.as_f64().ok_or("participation")?,
+            rounds: j.req("rounds")?.as_usize().ok_or("rounds")?,
+            local_epochs: j.req("local_epochs")?.as_usize().ok_or("local_epochs")?,
+            batch_size: j.req("batch_size")?.as_usize().ok_or("batch_size")?,
+            lr: j.req("lr")?.as_f64().ok_or("lr")? as f32,
+            samples_per_client: j.req("samples_per_client")?.as_usize().ok_or("spc")?,
+            test_samples: j.req("test_samples")?.as_usize().ok_or("test_samples")?,
+            eval_every: j.req("eval_every")?.as_usize().ok_or("eval_every")?,
+            threshold_frac: j.req("threshold_frac")?.as_f64().ok_or("threshold_frac")?,
+            compressor,
+            seed: j.req("seed")?.as_f64().ok_or("seed")? as u64,
+            use_xla: j.req("use_xla")?.as_bool().ok_or("use_xla")?,
+            artifacts_dir: j.req("artifacts_dir")?.as_str().ok_or("artifacts_dir")?.to_string(),
+        })
+    }
+}
+
+/// Stable dataset name for configs/paths.
+pub fn dataset_name(d: DatasetKind) -> &'static str {
+    match d {
+        DatasetKind::SynthMnist => "synth-mnist",
+        DatasetKind::SynthCifar10 => "synth-cifar10",
+        DatasetKind::SynthCifar100 => "synth-cifar100",
+        DatasetKind::TinyCorpus => "tiny-corpus",
+    }
+}
+
+/// Stable model name for configs/paths (must match `python/compile/model.py`).
+pub fn model_name(m: ModelKind) -> &'static str {
+    match m {
+        ModelKind::LeNet5 => "lenet5",
+        ModelKind::ResNetLite => "resnetlite",
+        ModelKind::AlexNetLite => "alexnetlite",
+        ModelKind::TinyTransformer => "tinytransformer",
+    }
+}
+
+fn parse_dataset(s: &str) -> Result<DatasetKind, String> {
+    Ok(match s {
+        "synth-mnist" => DatasetKind::SynthMnist,
+        "synth-cifar10" => DatasetKind::SynthCifar10,
+        "synth-cifar100" => DatasetKind::SynthCifar100,
+        "tiny-corpus" => DatasetKind::TinyCorpus,
+        _ => return Err(format!("unknown dataset '{s}'")),
+    })
+}
+
+fn parse_model(s: &str) -> Result<ModelKind, String> {
+    Ok(match s {
+        "lenet5" => ModelKind::LeNet5,
+        "resnetlite" => ModelKind::ResNetLite,
+        "alexnetlite" => ModelKind::AlexNetLite,
+        "tinytransformer" => ModelKind::TinyTransformer,
+        _ => return Err(format!("unknown model '{s}'")),
+    })
+}
+
+fn parse_compressor(j: &Json) -> Result<CompressorKind, String> {
+    match j {
+        Json::Str(s) if s == "fedavg" => Ok(CompressorKind::None),
+        Json::Str(s) if s == "signsgd" => Ok(CompressorKind::SignSgd),
+        Json::Obj(_) => {
+            if let Some(t) = j.get("topk") {
+                Ok(CompressorKind::TopK { frac: t.req("frac")?.as_f64().ok_or("frac")? })
+            } else if let Some(t) = j.get("fedpaq") {
+                Ok(CompressorKind::FedPaq {
+                    bits: t.req("bits")?.as_usize().ok_or("bits")? as u8,
+                })
+            } else if let Some(t) = j.get("svdfed") {
+                Ok(CompressorKind::SvdFed {
+                    k: t.req("k")?.as_usize().ok_or("k")?,
+                    gamma: t.req("gamma")?.as_f64().ok_or("gamma")?,
+                })
+            } else if let Some(t) = j.get("fedqclip") {
+                Ok(CompressorKind::FedQClip {
+                    bits: t.req("bits")?.as_usize().ok_or("bits")? as u8,
+                    clip: t.req("clip")?.as_f64().ok_or("clip")?,
+                })
+            } else if let Some(t) = j.get("gradestc") {
+                Ok(CompressorKind::GradEstc(GradEstcParams {
+                    k: t.req("k")?.as_usize().ok_or("k")?,
+                    alpha: t.req("alpha")?.as_f64().ok_or("alpha")?,
+                    beta: t.req("beta")?.as_f64().ok_or("beta")?,
+                    coverage: t.req("coverage")?.as_f64().ok_or("coverage")?,
+                    freeze_after_init: t.req("freeze_after_init")?.as_bool().ok_or("fai")?,
+                    replace_all: t.req("replace_all")?.as_bool().ok_or("ra")?,
+                    fixed_d: t.req("fixed_d")?.as_bool().ok_or("fd")?,
+                    error_feedback: t.req("error_feedback")?.as_bool().ok_or("ef")?,
+                }))
+            } else {
+                Err("unknown compressor object".into())
+            }
+        }
+        _ => Err("bad compressor".into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_all_compressors() {
+        let comps = vec![
+            CompressorKind::None,
+            CompressorKind::TopK { frac: 0.1 },
+            CompressorKind::FedPaq { bits: 8 },
+            CompressorKind::SignSgd,
+            CompressorKind::SvdFed { k: 16, gamma: 0.3 },
+            CompressorKind::FedQClip { bits: 8, clip: 2.0 },
+            CompressorKind::GradEstc(GradEstcParams::default()),
+        ];
+        for c in comps {
+            let mut cfg = ExperimentConfig::preset_quickstart();
+            cfg.compressor = c;
+            let j = cfg.to_json();
+            let back = ExperimentConfig::from_json(&j).unwrap();
+            assert_eq!(cfg, back);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_distributions() {
+        for d in [DataDistribution::Iid, DataDistribution::Dirichlet(0.1)] {
+            let mut cfg = ExperimentConfig::preset_quickstart();
+            cfg.distribution = d;
+            let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(cfg, back);
+        }
+    }
+
+    #[test]
+    fn table3_preset_matches_paper_shape() {
+        let cfg = ExperimentConfig::preset_table3(
+            DatasetKind::SynthCifar10,
+            DataDistribution::Dirichlet(0.5),
+            CompressorKind::None,
+            30,
+            1,
+        );
+        assert_eq!(cfg.num_clients, 10); // paper §V-A: 10 clients
+        assert_eq!(cfg.participation, 1.0); // all participate
+        assert_eq!(cfg.local_epochs, 1); // one local epoch
+        assert_eq!(cfg.model, ModelKind::ResNetLite);
+    }
+
+    #[test]
+    fn compressor_names_stable() {
+        assert_eq!(CompressorKind::None.name(), "fedavg");
+        let mut p = GradEstcParams::default();
+        assert_eq!(CompressorKind::GradEstc(p.clone()).name(), "gradestc");
+        p.fixed_d = true;
+        assert_eq!(CompressorKind::GradEstc(p.clone()).name(), "gradestc-k");
+        p.fixed_d = false;
+        p.replace_all = true;
+        assert_eq!(CompressorKind::GradEstc(p.clone()).name(), "gradestc-all");
+        p.replace_all = false;
+        p.freeze_after_init = true;
+        assert_eq!(CompressorKind::GradEstc(p).name(), "gradestc-first");
+    }
+
+    #[test]
+    fn bad_json_rejected() {
+        assert!(ExperimentConfig::from_json(&Json::parse("{}").unwrap()).is_err());
+        let mut j = ExperimentConfig::preset_quickstart().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("dataset".into(), Json::str("nope"));
+        }
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+}

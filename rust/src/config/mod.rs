@@ -1,0 +1,16 @@
+//! Configuration system.
+//!
+//! * [`json`] — a strict JSON parser/serializer (offline stand-in for
+//!   `serde_json`) used for experiment configs, artifact manifests and
+//!   result files.
+//! * [`experiment`] — the typed experiment configuration schema plus named
+//!   presets mirroring every experiment in the paper (Table II/III setups,
+//!   Fig. 7/8/9 variants, Table IV ablations).
+
+pub mod experiment;
+pub mod json;
+
+pub use experiment::{
+    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
+};
+pub use json::Json;

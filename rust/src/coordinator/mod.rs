@@ -1,0 +1,323 @@
+//! FL coordinator: the Layer-3 runtime that drives federated training.
+//!
+//! One [`Simulation`] owns the global model, the synthetic federated
+//! dataset, one (compressor, decompressor) pair per client, a [`Trainer`]
+//! backend (XLA artifacts or the native reference), and the communication
+//! ledger. `run()` executes the FedAvg round loop of paper §V:
+//!
+//! ```text
+//! for round r:
+//!   sample participants                    (participation fraction)
+//!   broadcast global params  → downlink charge
+//!   per client: local SGD (E epochs) → update Δᵢ → compress → uplink charge
+//!   server: decompress Δ̂ᵢ → weighted FedAvg aggregate → apply
+//!   evaluate on held-out data, record round
+//! ```
+
+pub mod sampling;
+pub mod trainer;
+
+pub use sampling::ParticipationSampler;
+pub use trainer::{NativeOrXla, Trainer, XlaTrainer};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::compress::{build_pair, Compressor, Decompressor};
+use crate::config::{DatasetKind, ExperimentConfig, ModelKind};
+use crate::data::corpus::CorpusGenerator;
+use crate::data::synth::{Dataset, SynthGenerator, SynthSpec};
+use crate::data::{partition_indices, Partition};
+use crate::metrics::{CommLedger, NetworkModel, RoundRecord, RunRecorder, RunReport};
+use crate::model::meta::{layer_table, ModelMeta};
+use crate::model::params::ParamStore;
+use crate::util::rng::Pcg64;
+
+/// One simulated client.
+pub struct Client {
+    /// Client id.
+    pub id: usize,
+    /// This client's private shard.
+    pub data: Dataset,
+    compressor: Box<dyn Compressor>,
+    rng: Pcg64,
+}
+
+/// Server-side per-client decompression state.
+struct ServerSide {
+    decompressor: Box<dyn Decompressor>,
+}
+
+/// A fully-built federated simulation.
+pub struct Simulation {
+    /// The configuration this simulation was built from.
+    pub cfg: ExperimentConfig,
+    /// Architecture metadata.
+    pub meta: ModelMeta,
+    /// Global model parameters.
+    pub global: ParamStore,
+    /// Clients in id order.
+    pub clients: Vec<Client>,
+    server_sides: Vec<ServerSide>,
+    /// Held-out evaluation data.
+    pub test_data: Dataset,
+    trainer: NativeOrXla,
+    sampler: ParticipationSampler,
+    ledger: CommLedger,
+    network: NetworkModel,
+    /// Per-round records.
+    pub recorder: RunRecorder,
+    /// Optional per-round callback hook (gradient probes, logging).
+    round_hook: Option<Box<dyn FnMut(usize, &Simulation2Hook)>>,
+}
+
+/// Read-only view passed to round hooks.
+pub struct Simulation2Hook<'a> {
+    /// Round's decompressed updates per participant `(client_id, tensors)`.
+    pub updates: &'a [(usize, Vec<Vec<f32>>)],
+    /// Model metadata.
+    pub meta: &'a ModelMeta,
+}
+
+/// Build the federated dataset for a config: per-client shards + test set.
+pub fn build_datasets(
+    cfg: &ExperimentConfig,
+    rng: &mut Pcg64,
+) -> (Vec<Dataset>, Dataset) {
+    match cfg.dataset {
+        DatasetKind::TinyCorpus => {
+            // Token sequences: features hold the tokens as f32 (the trainer
+            // casts to i32); labels unused.
+            let gen = CorpusGenerator::new(256, 4, cfg.seed ^ 0xC0);
+            let seq = 64;
+            let shards = (0..cfg.num_clients)
+                .map(|c| {
+                    let mut r = rng.fork(1000 + c as u64);
+                    let corpus = gen.generate(cfg.samples_per_client, seq, &mut r);
+                    Dataset {
+                        x: corpus.tokens.iter().map(|&t| t as f32).collect(),
+                        y: vec![0; corpus.len()],
+                        features: seq,
+                        classes: 256,
+                    }
+                })
+                .collect();
+            let mut r = rng.fork(999);
+            let test_corpus = gen.generate(cfg.test_samples, seq, &mut r);
+            let test = Dataset {
+                x: test_corpus.tokens.iter().map(|&t| t as f32).collect(),
+                y: vec![0; test_corpus.len()],
+                features: seq,
+                classes: 256,
+            };
+            (shards, test)
+        }
+        kind => {
+            let spec = SynthSpec::for_kind(kind);
+            let gen = SynthGenerator::new(spec, cfg.seed ^ 0xDA7A);
+            let total = cfg.num_clients * cfg.samples_per_client;
+            let mut rdata = rng.fork(501);
+            let train = gen.generate(total, &mut rdata);
+            let part: Partition = partition_indices(
+                &train.y,
+                spec.classes,
+                cfg.num_clients,
+                cfg.distribution,
+                &mut rng.fork(502),
+            );
+            let shards = part
+                .assignments
+                .iter()
+                .map(|idx| train.subset(idx))
+                .collect();
+            let mut rtest = rng.fork(503);
+            let test = gen.generate(cfg.test_samples, &mut rtest);
+            (shards, test)
+        }
+    }
+}
+
+impl Simulation {
+    /// Build everything from a config. Fails if `use_xla` is set but the
+    /// artifacts are missing or don't cover the model.
+    pub fn build(cfg: ExperimentConfig) -> Result<Simulation> {
+        let meta = layer_table(cfg.model);
+        let mut root = Pcg64::new(cfg.seed, 0x51);
+
+        let (shards, test_data) = build_datasets(&cfg, &mut root);
+
+        let trainer = NativeOrXla::build(&cfg, &meta)
+            .with_context(|| "building trainer backend")?;
+
+        let mut clients = Vec::with_capacity(cfg.num_clients);
+        let mut server_sides = Vec::with_capacity(cfg.num_clients);
+        for (id, data) in shards.into_iter().enumerate() {
+            let (compressor, decompressor) =
+                build_pair(&cfg.compressor, &meta, cfg.seed ^ (id as u64) << 8);
+            clients.push(Client {
+                id,
+                data,
+                compressor,
+                rng: root.fork(7000 + id as u64),
+            });
+            server_sides.push(ServerSide { decompressor });
+        }
+
+        let global = ParamStore::init(&meta, &Pcg64::new(cfg.seed, 0x6000));
+        let sampler = ParticipationSampler::new(
+            cfg.num_clients,
+            cfg.participation,
+            root.fork(42),
+        );
+        Ok(Simulation {
+            cfg,
+            meta,
+            global,
+            clients,
+            server_sides,
+            test_data,
+            trainer,
+            sampler,
+            ledger: CommLedger::new(),
+            network: NetworkModel::edge_default(),
+            recorder: RunRecorder::new(),
+            round_hook: None,
+        })
+    }
+
+    /// Install a per-round hook (used by the Fig. 1 similarity probe).
+    pub fn set_round_hook(
+        &mut self,
+        hook: Box<dyn FnMut(usize, &Simulation2Hook)>,
+    ) {
+        self.round_hook = Some(hook);
+    }
+
+    /// Total uplink bytes charged so far.
+    pub fn total_uplink(&self) -> u64 {
+        self.ledger.total_uplink()
+    }
+
+    /// Execute one round; returns the round record.
+    pub fn step(&mut self, round: usize) -> Result<RoundRecord> {
+        let participants = self.sampler.sample(round);
+        let broadcast_bytes = 4 * self.global.numel() as u64;
+
+        let mut per_client_up: Vec<u64> = Vec::with_capacity(participants.len());
+        let mut updates: Vec<(usize, Vec<Vec<f32>>)> =
+            Vec::with_capacity(participants.len());
+        let mut weights: Vec<f64> = Vec::with_capacity(participants.len());
+        let mut loss_sum = 0.0f64;
+        let mut sum_d = 0u64;
+
+        for &cid in &participants {
+            self.ledger.charge_downlink(broadcast_bytes);
+            let client = &mut self.clients[cid];
+            // Local training from the broadcast global model.
+            let (new_params, mean_loss) = self.trainer.local_train(
+                &self.global,
+                &client.data,
+                self.cfg.local_epochs,
+                self.cfg.batch_size,
+                self.cfg.lr,
+                &mut client.rng,
+            )?;
+            loss_sum += mean_loss;
+            // Pseudo-gradient: Δ = new − global.
+            let delta = new_params.delta(&self.global);
+            let tensors: Vec<Vec<f32>> =
+                (0..delta.len()).map(|i| delta.tensor(i).to_vec()).collect();
+            let (payloads, stats) = client.compressor.compress(&tensors);
+            sum_d += stats.sum_d;
+            let up: u64 = payloads.iter().map(|p| p.wire_bytes()).sum();
+            self.ledger.charge_uplink(up);
+            per_client_up.push(up);
+            // Server-side reconstruction.
+            let rec = self.server_sides[cid].decompressor.decompress(&payloads);
+            updates.push((cid, rec));
+            weights.push(client.data.len() as f64);
+        }
+
+        if let Some(mut hook) = self.round_hook.take() {
+            hook(round, &Simulation2Hook { updates: &updates, meta: &self.meta });
+            self.round_hook = Some(hook);
+        }
+
+        // FedAvg aggregation, weighted by shard size.
+        let wtotal: f64 = weights.iter().sum();
+        let mut agg = ParamStore::zeros_like(&self.meta);
+        for ((_, upd), w) in updates.iter().zip(&weights) {
+            let scale = (w / wtotal) as f32;
+            for (i, t) in upd.iter().enumerate() {
+                let dst = agg.tensor_mut(i);
+                for (d, &v) in dst.iter_mut().zip(t) {
+                    *d += scale * v;
+                }
+            }
+        }
+        self.global.axpy(1.0, &agg);
+
+        // Evaluation.
+        let (test_loss, test_acc) = if round % self.cfg.eval_every == 0
+            || round + 1 == self.cfg.rounds
+        {
+            self.trainer.evaluate(&self.global, &self.test_data)?
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+
+        let (up, down) = self.ledger.end_round();
+        let record = RoundRecord {
+            round,
+            train_loss: loss_sum / participants.len().max(1) as f64,
+            test_accuracy: test_acc,
+            test_loss,
+            uplink_bytes: up,
+            downlink_bytes: down,
+            sim_time_s: self.network.round_time(&per_client_up, broadcast_bytes),
+            sum_d,
+        };
+        self.recorder.push(record.clone());
+        Ok(record)
+    }
+
+    /// Run all configured rounds and produce the summary report.
+    pub fn run(&mut self) -> Result<RunReport> {
+        self.run_with_progress(|_, _| {})
+    }
+
+    /// Like [`Simulation::run`] but invokes `progress(round, record)` after
+    /// each round (CLI progress lines).
+    pub fn run_with_progress(
+        &mut self,
+        mut progress: impl FnMut(usize, &RoundRecord),
+    ) -> Result<RunReport> {
+        for round in 0..self.cfg.rounds {
+            let rec = self.step(round)?;
+            progress(round, &rec);
+        }
+        let threshold = self.cfg.threshold_frac * self.recorder.best_accuracy();
+        Ok(self.recorder.report(threshold))
+    }
+}
+
+/// Verify a model kind is covered by the artifacts dir without building a
+/// full simulation (used by the CLI for friendly errors).
+pub fn check_artifacts(cfg: &ExperimentConfig) -> Result<()> {
+    if !cfg.use_xla {
+        return Ok(());
+    }
+    let rt = crate::runtime::Runtime::open(&cfg.artifacts_dir)?;
+    let name = crate::config::experiment::model_name(cfg.model);
+    if !rt.manifest().models.contains_key(name) {
+        return Err(anyhow!(
+            "artifacts at '{}' do not cover model '{name}' — run `make artifacts`",
+            cfg.artifacts_dir
+        ));
+    }
+    Ok(())
+}
+
+/// Convenience: model kinds whose datasets are vision-shaped.
+pub fn is_vision(model: ModelKind) -> bool {
+    !matches!(model, ModelKind::TinyTransformer)
+}

@@ -1,0 +1,74 @@
+//! Client participation sampling (paper §V-B: 10 clients full
+//! participation; Fig. 7: 50 clients at 20%).
+
+use crate::util::rng::Pcg64;
+
+/// Samples the participant set for each round.
+pub struct ParticipationSampler {
+    num_clients: usize,
+    fraction: f64,
+    rng: Pcg64,
+}
+
+impl ParticipationSampler {
+    /// `fraction` ∈ (0, 1]; at least one client always participates.
+    pub fn new(num_clients: usize, fraction: f64, rng: Pcg64) -> Self {
+        assert!(num_clients > 0);
+        assert!(fraction > 0.0 && fraction <= 1.0, "participation must be in (0,1]");
+        ParticipationSampler { num_clients, fraction, rng }
+    }
+
+    /// Participant ids for `round` (sorted, distinct).
+    pub fn sample(&mut self, _round: usize) -> Vec<usize> {
+        let k = ((self.num_clients as f64 * self.fraction).round() as usize)
+            .clamp(1, self.num_clients);
+        if k == self.num_clients {
+            return (0..self.num_clients).collect();
+        }
+        let mut ids = self.rng.sample_indices(self.num_clients, k);
+        ids.sort_unstable();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_participation_is_everyone() {
+        let mut s = ParticipationSampler::new(10, 1.0, Pcg64::seeded(1));
+        assert_eq!(s.sample(0), (0..10).collect::<Vec<_>>());
+        assert_eq!(s.sample(1), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn partial_participation_sizes() {
+        let mut s = ParticipationSampler::new(50, 0.2, Pcg64::seeded(2));
+        for r in 0..20 {
+            let ids = s.sample(r);
+            assert_eq!(ids.len(), 10);
+            assert!(ids.windows(2).all(|w| w[0] < w[1]));
+            assert!(ids.iter().all(|&i| i < 50));
+        }
+    }
+
+    #[test]
+    fn coverage_over_rounds() {
+        // Every client should participate eventually.
+        let mut s = ParticipationSampler::new(20, 0.25, Pcg64::seeded(3));
+        let mut seen = vec![false; 20];
+        for r in 0..60 {
+            for i in s.sample(r) {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "some client never sampled");
+    }
+
+    #[test]
+    fn at_least_one_participant() {
+        let mut s = ParticipationSampler::new(3, 0.01, Pcg64::seeded(4));
+        assert_eq!(s.sample(0).len(), 1);
+    }
+}

@@ -1,0 +1,351 @@
+//! Training backends.
+//!
+//! [`XlaTrainer`] executes the AOT-compiled L2 graphs (one PJRT call per
+//! minibatch: `(params…, x, y, lr) → (loss, params…)`), keeping python off
+//! the round loop. [`crate::nn::NativeTrainer`] is the from-scratch Rust
+//! reference implementation used when artifacts are unavailable and as an
+//! independent cross-check of the L2 graphs (both backends implement
+//! identical semantics; `rust/tests/xla_runtime.rs` compares them).
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{experiment::model_name, ExperimentConfig, ModelKind};
+use crate::data::synth::Dataset;
+use crate::model::meta::ModelMeta;
+use crate::model::params::ParamStore;
+use crate::nn::NativeTrainer;
+use crate::runtime::{HostTensor, ModelEntry, Runtime};
+use crate::util::rng::Pcg64;
+
+/// A training backend.
+///
+/// Not `Send`: the `xla` crate's PJRT handles are `Rc`-based, so a trainer
+/// lives on the coordinator thread (PJRT parallelizes *within* an execute
+/// call instead).
+pub trait Trainer {
+    /// Run `epochs` of local SGD from `start`; returns (new params,
+    /// mean minibatch loss).
+    fn local_train(
+        &self,
+        start: &ParamStore,
+        data: &Dataset,
+        epochs: usize,
+        batch: usize,
+        lr: f32,
+        rng: &mut Pcg64,
+    ) -> Result<(ParamStore, f64)>;
+
+    /// Evaluate on a dataset; returns (mean loss, accuracy).
+    fn evaluate(&self, params: &ParamStore, data: &Dataset) -> Result<(f64, f64)>;
+
+    /// One-batch raw gradients (for instrumentation like the Fig. 1 probe).
+    fn grads(
+        &self,
+        params: &ParamStore,
+        data: &Dataset,
+        batch: usize,
+        rng: &mut Pcg64,
+    ) -> Result<(Vec<Vec<f32>>, f64)>;
+}
+
+/// Assemble one minibatch from dataset rows into trainer inputs.
+///
+/// Indices may repeat (cycling pads shards smaller than a batch).
+pub fn make_batch(
+    kind: ModelKind,
+    meta: &ModelMeta,
+    data: &Dataset,
+    idx: &[usize],
+) -> (HostTensor, HostTensor) {
+    let b = idx.len();
+    if matches!(kind, ModelKind::TinyTransformer) {
+        let seq = data.features;
+        let mut toks = Vec::with_capacity(b * seq);
+        for &i in idx {
+            toks.extend(data.sample(i).iter().map(|&t| t as i32));
+        }
+        let y = vec![0i32; b];
+        (HostTensor::i32(toks, &[b, seq]), HostTensor::i32(y, &[b]))
+    } else {
+        let (h, w, c) = (
+            meta.input_shape[0],
+            meta.input_shape[1],
+            meta.input_shape[2],
+        );
+        let mut x = Vec::with_capacity(b * h * w * c);
+        let mut y = Vec::with_capacity(b);
+        for &i in idx {
+            x.extend_from_slice(data.sample(i));
+            y.push(data.y[i] as i32);
+        }
+        (HostTensor::f32(x, &[b, h, w, c]), HostTensor::i32(y, &[b]))
+    }
+}
+
+/// Batch index schedule for one epoch: shuffled, full batches only; shards
+/// smaller than one batch are cycled to fill a single batch.
+pub fn epoch_batches(n: usize, batch: usize, rng: &mut Pcg64) -> Vec<Vec<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    if n < batch {
+        let mut idx = Vec::with_capacity(batch);
+        while idx.len() < batch {
+            idx.push(idx.len() % n);
+        }
+        let mut shuffled: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut shuffled);
+        for v in idx.iter_mut() {
+            *v = shuffled[*v % n];
+        }
+        return vec![idx];
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    order.chunks_exact(batch).map(|c| c.to_vec()).collect()
+}
+
+/// XLA-artifact trainer.
+pub struct XlaTrainer {
+    runtime: Runtime,
+    entry: ModelEntry,
+    kind: ModelKind,
+    meta: ModelMeta,
+}
+
+impl XlaTrainer {
+    /// Open artifacts and bind the model's step executables.
+    pub fn new(artifacts_dir: &str, kind: ModelKind, meta: &ModelMeta) -> Result<Self> {
+        let runtime = Runtime::open(artifacts_dir)?;
+        let name = model_name(kind);
+        let entry = runtime
+            .manifest()
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in artifact manifest"))?
+            .clone();
+        // Contract check: the artifact layer table must match ours.
+        if entry.layers.len() != meta.layers.len() {
+            return Err(anyhow!(
+                "artifact layer table for '{name}' has {} tensors, expected {}",
+                entry.layers.len(),
+                meta.layers.len()
+            ));
+        }
+        for (a, b) in entry.layers.iter().zip(&meta.layers) {
+            if a.name != b.name || a.shape != b.shape {
+                return Err(anyhow!(
+                    "layer mismatch: artifact {}{:?} vs rust {}{:?}",
+                    a.name,
+                    a.shape,
+                    b.name,
+                    b.shape
+                ));
+            }
+        }
+        Ok(XlaTrainer { runtime, entry, kind, meta: meta.clone() })
+    }
+
+    /// The artifact's baked-in train batch size.
+    pub fn train_batch(&self) -> usize {
+        self.entry.batch
+    }
+
+    fn params_to_tensors(&self, params: &ParamStore) -> Vec<HostTensor> {
+        (0..params.len())
+            .map(|i| {
+                HostTensor::f32(params.tensor(i).to_vec(), &self.meta.layers[i].shape)
+            })
+            .collect()
+    }
+}
+
+impl Trainer for XlaTrainer {
+    fn local_train(
+        &self,
+        start: &ParamStore,
+        data: &Dataset,
+        epochs: usize,
+        batch: usize,
+        lr: f32,
+        rng: &mut Pcg64,
+    ) -> Result<(ParamStore, f64)> {
+        if batch != self.entry.batch {
+            return Err(anyhow!(
+                "config batch {batch} != artifact batch {} (shapes are baked at AOT time)",
+                self.entry.batch
+            ));
+        }
+        let exe = self.runtime.load(&self.entry.train_step.file)?;
+        let mut params = self.params_to_tensors(start);
+        let mut loss_sum = 0.0f64;
+        let mut steps = 0usize;
+        for _ in 0..epochs {
+            for idx in epoch_batches(data.len(), batch, rng) {
+                let (x, y) = make_batch(self.kind, &self.meta, data, &idx);
+                let mut inputs = params.clone();
+                inputs.push(x);
+                inputs.push(y);
+                inputs.push(HostTensor::scalar(lr));
+                let mut out = self
+                    .runtime
+                    .call_exe(&exe, &inputs)
+                    .context("train_step execution")?;
+                loss_sum += out[0].scalar_f32()? as f64;
+                params = out.split_off(1);
+                steps += 1;
+            }
+        }
+        let tensors: Vec<Vec<f32>> = params
+            .into_iter()
+            .map(|t| t.into_f32())
+            .collect::<Result<_>>()?;
+        Ok((
+            ParamStore::from_tensors(&self.meta, tensors),
+            loss_sum / steps.max(1) as f64,
+        ))
+    }
+
+    fn evaluate(&self, params: &ParamStore, data: &Dataset) -> Result<(f64, f64)> {
+        let exe = self.runtime.load(&self.entry.eval_step.file)?;
+        let eb = self.entry.eval_batch;
+        let ptensors = self.params_to_tensors(params);
+        let nbatches = data.len() / eb;
+        if nbatches == 0 {
+            return Err(anyhow!("test set smaller than eval batch {eb}"));
+        }
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        for bi in 0..nbatches {
+            let idx: Vec<usize> = (bi * eb..(bi + 1) * eb).collect();
+            let (x, y) = make_batch(self.kind, &self.meta, data, &idx);
+            let mut inputs = ptensors.clone();
+            inputs.push(x);
+            inputs.push(y);
+            let out = self.runtime.call_exe(&exe, &inputs)?;
+            loss_sum += out[0].scalar_f32()? as f64;
+            correct += out[1].scalar_f32()? as f64;
+        }
+        let denom = if matches!(self.kind, ModelKind::TinyTransformer) {
+            (nbatches * eb * (data.features - 1)) as f64
+        } else {
+            (nbatches * eb) as f64
+        };
+        Ok((loss_sum / denom, correct / denom))
+    }
+
+    fn grads(
+        &self,
+        params: &ParamStore,
+        data: &Dataset,
+        _batch: usize,
+        rng: &mut Pcg64,
+    ) -> Result<(Vec<Vec<f32>>, f64)> {
+        let exe = self.runtime.load(&self.entry.grad_step.file)?;
+        let batch = self.entry.batch;
+        let idx = epoch_batches(data.len(), batch, rng)
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("empty dataset"))?;
+        let (x, y) = make_batch(self.kind, &self.meta, data, &idx);
+        let mut inputs = self.params_to_tensors(params);
+        inputs.push(x);
+        inputs.push(y);
+        let mut out = self.runtime.call_exe(&exe, &inputs)?;
+        let loss = out[0].scalar_f32()? as f64;
+        let grads: Vec<Vec<f32>> = out
+            .split_off(1)
+            .into_iter()
+            .map(|t| t.into_f32())
+            .collect::<Result<_>>()?;
+        Ok((grads, loss))
+    }
+}
+
+/// Backend selector.
+pub enum NativeOrXla {
+    /// AOT artifacts through PJRT.
+    Xla(XlaTrainer),
+    /// From-scratch Rust implementation.
+    Native(NativeTrainer),
+}
+
+impl NativeOrXla {
+    /// Choose per config.
+    pub fn build(cfg: &ExperimentConfig, meta: &ModelMeta) -> Result<NativeOrXla> {
+        if cfg.use_xla {
+            Ok(NativeOrXla::Xla(XlaTrainer::new(&cfg.artifacts_dir, cfg.model, meta)?))
+        } else {
+            Ok(NativeOrXla::Native(NativeTrainer::new(cfg.model, meta)?))
+        }
+    }
+}
+
+impl Trainer for NativeOrXla {
+    fn local_train(
+        &self,
+        start: &ParamStore,
+        data: &Dataset,
+        epochs: usize,
+        batch: usize,
+        lr: f32,
+        rng: &mut Pcg64,
+    ) -> Result<(ParamStore, f64)> {
+        match self {
+            NativeOrXla::Xla(t) => t.local_train(start, data, epochs, batch, lr, rng),
+            NativeOrXla::Native(t) => t.local_train(start, data, epochs, batch, lr, rng),
+        }
+    }
+
+    fn evaluate(&self, params: &ParamStore, data: &Dataset) -> Result<(f64, f64)> {
+        match self {
+            NativeOrXla::Xla(t) => t.evaluate(params, data),
+            NativeOrXla::Native(t) => t.evaluate(params, data),
+        }
+    }
+
+    fn grads(
+        &self,
+        params: &ParamStore,
+        data: &Dataset,
+        batch: usize,
+        rng: &mut Pcg64,
+    ) -> Result<(Vec<Vec<f32>>, f64)> {
+        match self {
+            NativeOrXla::Xla(t) => t.grads(params, data, batch, rng),
+            NativeOrXla::Native(t) => t.grads(params, data, batch, rng),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_batches_cover_without_repeats() {
+        let mut rng = Pcg64::seeded(1);
+        let batches = epoch_batches(100, 32, &mut rng);
+        assert_eq!(batches.len(), 3); // 96 samples, remainder dropped
+        let mut all: Vec<usize> = batches.into_iter().flatten().collect();
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "duplicate index within epoch");
+    }
+
+    #[test]
+    fn small_shard_cycles_to_one_batch() {
+        let mut rng = Pcg64::seeded(2);
+        let batches = epoch_batches(5, 32, &mut rng);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].len(), 32);
+        assert!(batches[0].iter().all(|&i| i < 5));
+    }
+
+    #[test]
+    fn empty_shard_no_batches() {
+        let mut rng = Pcg64::seeded(3);
+        assert!(epoch_batches(0, 32, &mut rng).is_empty());
+    }
+}

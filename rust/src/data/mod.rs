@@ -1,0 +1,15 @@
+//! Data substrate: synthetic datasets and federated partitioning.
+//!
+//! Real MNIST/CIFAR are unavailable offline; [`synth`] generates
+//! class-conditional image data with the same shapes and a tunable
+//! difficulty (DESIGN.md §2.1 justifies why this preserves the paper's
+//! claims). [`partition`] implements the IID and Dirichlet(α) label-skew
+//! splits of §V-A. [`corpus`] generates the synthetic byte corpus for the
+//! transformer end-to-end example.
+
+pub mod corpus;
+pub mod partition;
+pub mod synth;
+
+pub use partition::{partition_indices, Partition};
+pub use synth::{Dataset, SynthSpec};

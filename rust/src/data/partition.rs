@@ -1,0 +1,208 @@
+//! Federated data partitioning (paper §V-A).
+//!
+//! * IID — a uniform random split.
+//! * Dirichlet(α) — label-skew non-IID (Hsu et al. 2019): for each class,
+//!   draw client proportions `p ~ Dir(α·1_C)` and deal that class's samples
+//!   accordingly. α = 0.5 / 0.1 are the paper's settings; smaller α means
+//!   more skew.
+
+use crate::config::DataDistribution;
+use crate::util::rng::Pcg64;
+
+/// Per-client sample indices into a shared dataset.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// `assignments[c]` = indices owned by client `c`.
+    pub assignments: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    /// Number of clients.
+    pub fn num_clients(&self) -> usize {
+        self.assignments.len()
+    }
+
+    /// Total assigned samples.
+    pub fn total(&self) -> usize {
+        self.assignments.iter().map(|a| a.len()).sum()
+    }
+}
+
+/// Split `labels` across `num_clients` according to `dist`.
+///
+/// Every sample is assigned to exactly one client. Clients are guaranteed a
+/// minimum of one sample each (re-dealing from the largest client if the
+/// Dirichlet draw starves someone — training code divides by client dataset
+/// size).
+pub fn partition_indices(
+    labels: &[u32],
+    num_classes: usize,
+    num_clients: usize,
+    dist: DataDistribution,
+    rng: &mut Pcg64,
+) -> Partition {
+    assert!(num_clients > 0);
+    assert!(labels.len() >= num_clients, "fewer samples than clients");
+    let mut assignments: Vec<Vec<usize>> = vec![Vec::new(); num_clients];
+
+    match dist {
+        DataDistribution::Iid => {
+            let mut idx: Vec<usize> = (0..labels.len()).collect();
+            rng.shuffle(&mut idx);
+            for (pos, i) in idx.into_iter().enumerate() {
+                assignments[pos % num_clients].push(i);
+            }
+        }
+        DataDistribution::Dirichlet(alpha) => {
+            assert!(alpha > 0.0, "Dirichlet alpha must be positive");
+            // Bucket sample indices per class.
+            let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); num_classes];
+            for (i, &y) in labels.iter().enumerate() {
+                by_class[y as usize].push(i);
+            }
+            for class_idx in by_class.iter_mut() {
+                if class_idx.is_empty() {
+                    continue;
+                }
+                rng.shuffle(class_idx);
+                let props = rng.dirichlet(alpha, num_clients);
+                // Largest-remainder apportionment of this class's samples.
+                let n = class_idx.len();
+                let mut counts: Vec<usize> =
+                    props.iter().map(|&p| (p * n as f64).floor() as usize).collect();
+                let mut rem: usize = n - counts.iter().sum::<usize>();
+                // Assign remainders to the clients with the largest
+                // fractional parts.
+                let mut fracs: Vec<(f64, usize)> = props
+                    .iter()
+                    .enumerate()
+                    .map(|(c, &p)| (p * n as f64 - (p * n as f64).floor(), c))
+                    .collect();
+                fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                for &(_, c) in fracs.iter().cycle().take(rem.min(n)) {
+                    counts[c] += 1;
+                    rem -= 1;
+                    if rem == 0 {
+                        break;
+                    }
+                }
+                let mut cursor = 0;
+                for (c, &cnt) in counts.iter().enumerate() {
+                    assignments[c].extend_from_slice(&class_idx[cursor..cursor + cnt]);
+                    cursor += cnt;
+                }
+            }
+        }
+    }
+
+    // Starvation repair: every client gets at least one sample.
+    loop {
+        let empty = assignments.iter().position(|a| a.is_empty());
+        let Some(e) = empty else { break };
+        let donor = (0..num_clients)
+            .max_by_key(|&c| assignments[c].len())
+            .expect("at least one client");
+        assert!(assignments[donor].len() > 1, "not enough samples to cover all clients");
+        let moved = assignments[donor].pop().unwrap();
+        assignments[e].push(moved);
+    }
+
+    Partition { assignments }
+}
+
+/// Label-distribution skew measure: mean total-variation distance between
+/// each client's label histogram and the global histogram. 0 = IID-like,
+/// →1 = fully disjoint. Used by tests and the fig7/fig8 harnesses to verify
+/// the partitioner actually produces the intended heterogeneity.
+pub fn label_skew(labels: &[u32], num_classes: usize, part: &Partition) -> f64 {
+    let mut global = vec![0.0f64; num_classes];
+    for &y in labels {
+        global[y as usize] += 1.0;
+    }
+    let n = labels.len() as f64;
+    global.iter_mut().for_each(|x| *x /= n);
+
+    let mut total = 0.0;
+    for a in &part.assignments {
+        if a.is_empty() {
+            continue;
+        }
+        let mut h = vec![0.0f64; num_classes];
+        for &i in a {
+            h[labels[i] as usize] += 1.0;
+        }
+        let m = a.len() as f64;
+        h.iter_mut().for_each(|x| *x /= m);
+        let tv: f64 =
+            h.iter().zip(&global).map(|(&p, &q)| (p - q).abs()).sum::<f64>() / 2.0;
+        total += tv;
+    }
+    total / part.assignments.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn labels(n: usize, classes: usize, rng: &mut Pcg64) -> Vec<u32> {
+        (0..n).map(|_| rng.index(classes) as u32).collect()
+    }
+
+    #[test]
+    fn covers_all_samples_exactly_once() {
+        let mut rng = Pcg64::seeded(1);
+        let y = labels(1000, 10, &mut rng);
+        for dist in [DataDistribution::Iid, DataDistribution::Dirichlet(0.5)] {
+            let p = partition_indices(&y, 10, 8, dist, &mut rng);
+            let mut all: Vec<usize> = p.assignments.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..1000).collect::<Vec<_>>(), "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn iid_is_balanced() {
+        let mut rng = Pcg64::seeded(2);
+        let y = labels(1000, 10, &mut rng);
+        let p = partition_indices(&y, 10, 8, DataDistribution::Iid, &mut rng);
+        for a in &p.assignments {
+            assert!((a.len() as i64 - 125).abs() <= 1);
+        }
+    }
+
+    #[test]
+    fn no_client_starves() {
+        let mut rng = Pcg64::seeded(3);
+        let y = labels(200, 10, &mut rng);
+        let p = partition_indices(&y, 10, 50, DataDistribution::Dirichlet(0.05), &mut rng);
+        assert!(p.assignments.iter().all(|a| !a.is_empty()));
+        assert_eq!(p.total(), 200);
+    }
+
+    #[test]
+    fn dirichlet_skew_ordering() {
+        // Smaller alpha must produce more label skew than larger alpha,
+        // and both more than IID — the paper's α=0.1 vs α=0.5 vs IID axis.
+        let mut rng = Pcg64::seeded(4);
+        let y = labels(5000, 10, &mut rng);
+        let p_iid = partition_indices(&y, 10, 10, DataDistribution::Iid, &mut rng);
+        let p_05 = partition_indices(&y, 10, 10, DataDistribution::Dirichlet(0.5), &mut rng);
+        let p_01 = partition_indices(&y, 10, 10, DataDistribution::Dirichlet(0.1), &mut rng);
+        let s_iid = label_skew(&y, 10, &p_iid);
+        let s_05 = label_skew(&y, 10, &p_05);
+        let s_01 = label_skew(&y, 10, &p_01);
+        assert!(s_iid < s_05, "iid {s_iid} vs dir0.5 {s_05}");
+        assert!(s_05 < s_01, "dir0.5 {s_05} vs dir0.1 {s_01}");
+        assert!(s_01 > 0.4, "alpha=0.1 should be strongly skewed, got {s_01}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut r1 = Pcg64::seeded(5);
+        let mut r2 = Pcg64::seeded(5);
+        let y = labels(300, 10, &mut Pcg64::seeded(9));
+        let a = partition_indices(&y, 10, 6, DataDistribution::Dirichlet(0.3), &mut r1);
+        let b = partition_indices(&y, 10, 6, DataDistribution::Dirichlet(0.3), &mut r2);
+        assert_eq!(a.assignments, b.assignments);
+    }
+}

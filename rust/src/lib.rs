@@ -1,0 +1,45 @@
+//! # GradESTC — communication-efficient federated learning
+//!
+//! A reproduction of *"Communication-Efficient Federated Learning by
+//! Exploiting Spatio-Temporal Correlations of Gradients"* (Zheng et al.,
+//! 2026) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the federated-learning coordinator: round
+//!   scheduling, client sampling, local-training orchestration, gradient
+//!   compression (GradESTC + baselines), aggregation, and exact
+//!   communication accounting.
+//! * **Layer 2** — JAX model definitions (`python/compile/model.py`) lowered
+//!   once to HLO text and executed from Rust via PJRT (see [`runtime`]).
+//! * **Layer 1** — Pallas kernels for the compression hot path
+//!   (`python/compile/kernels/`), lowered into the same artifacts.
+//!
+//! Python is build-time only; the round loop is pure Rust + XLA.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use gradestc::config::ExperimentConfig;
+//! use gradestc::coordinator::Simulation;
+//!
+//! let cfg = ExperimentConfig::preset_quickstart();
+//! let mut sim = Simulation::build(cfg).unwrap();
+//! let report = sim.run().unwrap();
+//! println!("best accuracy {:.2}%", report.best_accuracy * 100.0);
+//! ```
+//!
+//! See `examples/` for runnable end-to-end drivers and `DESIGN.md` for the
+//! full system inventory.
+
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod nn;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result alias (anyhow-backed).
+pub type Result<T> = anyhow::Result<T>;

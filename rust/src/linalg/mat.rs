@@ -1,0 +1,242 @@
+//! Row-major dense `f32` matrix.
+
+use crate::util::rng::Pcg64;
+
+/// Dense row-major matrix of `f32`.
+///
+/// Deliberately minimal: a shape-checked `Vec<f32>` with the accessors the
+/// rest of the crate needs. Heavy operations live in sibling modules
+/// ([`super::matmul`], [`super::qr`], [`super::svd`], [`super::rsvd`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "Mat::from_vec: {}x{} != {}", rows, cols, data.len());
+        Mat { rows, cols, data }
+    }
+
+    /// Matrix with i.i.d. standard normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Backing slice (row-major).
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable backing slice (row-major).
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the backing vector.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        debug_assert!(j < self.cols);
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Overwrite column `j`.
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        t[(j, i)] = self[(i, j)];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Squared L2 norm of row `i`.
+    pub fn row_norm_sq(&self, i: usize) -> f32 {
+        self.row(i).iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() as f32
+    }
+
+    /// `self - other`, shape-checked.
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place `self -= other`.
+    pub fn sub_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
+
+    /// Keep the first `k` columns.
+    pub fn take_cols(&self, k: usize) -> Mat {
+        assert!(k <= self.cols);
+        let mut out = Mat::zeros(self.rows, k);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[..k]);
+        }
+        out
+    }
+
+    /// Keep the first `k` rows.
+    pub fn take_rows(&self, k: usize) -> Mat {
+        assert!(k <= self.rows);
+        Mat::from_vec(k, self.cols, self.data[..k * self.cols].to_vec())
+    }
+
+    /// Max |entry| of `self - other` (for tests).
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols, "index ({i},{j}) out of {}x{}", self.rows, self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        let mut m = Mat::zeros(3, 4);
+        m[(2, 3)] = 7.5;
+        assert_eq!(m[(2, 3)], 7.5);
+        assert_eq!(m.row(2)[3], 7.5);
+        assert_eq!(m.col(3)[2], 7.5);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seeded(5);
+        let m = Mat::randn(17, 43, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn transpose_values() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = m.transpose();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t[(0, 1)], 4.0);
+        assert_eq!(t[(2, 0)], 3.0);
+    }
+
+    #[test]
+    fn fro_norm_known() {
+        let m = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn take_cols_rows() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let c = m.take_cols(2);
+        assert_eq!(c.as_slice(), &[1., 2., 4., 5.]);
+        let r = m.take_rows(1);
+        assert_eq!(r.as_slice(), &[1., 2., 3.]);
+    }
+
+    #[test]
+    fn sub_works() {
+        let a = Mat::from_vec(1, 3, vec![5., 5., 5.]);
+        let b = Mat::from_vec(1, 3, vec![1., 2., 3.]);
+        assert_eq!(a.sub(&b).as_slice(), &[4., 3., 2.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_checked() {
+        let _ = Mat::from_vec(2, 2, vec![1.0; 3]);
+    }
+}

@@ -1,0 +1,274 @@
+//! Cache-blocked, thread-parallel matrix multiplication.
+//!
+//! Three entry points cover every product the compressor needs without
+//! materializing transposes:
+//!
+//! * [`matmul`]       — `C = A·B`
+//! * [`matmul_at_b`]  — `C = Aᵀ·B`   (projection `A = MᵀG`)
+//! * [`matmul_a_bt`]  — `C = A·Bᵀ`   (Gram matrices for the small eigsolve)
+//!
+//! The inner kernel is an i-k-j loop over row panels with an unrolled
+//! 8-wide FMA body, parallelized over row blocks with scoped threads.
+
+use super::Mat;
+use crate::util::pool::default_workers;
+
+/// Rows-per-task granularity for the thread fan-out.
+const PAR_MIN_ROWS: usize = 16;
+/// Only parallelize when the total FLOP count is worth a thread wake-up.
+const PAR_MIN_FLOPS: usize = 1 << 22;
+
+#[inline]
+fn axpy(dst: &mut [f32], a: f32, x: &[f32]) {
+    // dst += a * x ; 8-wide unroll, tail handled scalar. The compiler
+    // auto-vectorizes this loop (verified via benches/linalg.rs).
+    let n = dst.len();
+    let chunks = n / 8;
+    let (dh, dt) = dst.split_at_mut(chunks * 8);
+    let (xh, xt) = x.split_at(chunks * 8);
+    for (d8, x8) in dh.chunks_exact_mut(8).zip(xh.chunks_exact(8)) {
+        d8[0] += a * x8[0];
+        d8[1] += a * x8[1];
+        d8[2] += a * x8[2];
+        d8[3] += a * x8[3];
+        d8[4] += a * x8[4];
+        d8[5] += a * x8[5];
+        d8[6] += a * x8[6];
+        d8[7] += a * x8[7];
+    }
+    for (d, &xv) in dt.iter_mut().zip(xt) {
+        *d += a * xv;
+    }
+}
+
+/// Compute one row-panel of `C = A·B`: rows `r0..r1`.
+fn mm_panel(a: &Mat, b: &Mat, r0: usize, r1: usize, c_panel: &mut [f32]) {
+    let n = b.cols();
+    for (pi, i) in (r0..r1).enumerate() {
+        let crow = &mut c_panel[pi * n..(pi + 1) * n];
+        let arow = a.row(i);
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik != 0.0 {
+                axpy(crow, aik, b.row(k));
+            }
+        }
+    }
+}
+
+fn parallel_rows(
+    m: usize,
+    flops: usize,
+    panel: impl Fn(usize, usize, &mut [f32]) + Sync,
+    cols: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * cols];
+    let workers = default_workers();
+    if workers <= 1 || m < 2 * PAR_MIN_ROWS || flops < PAR_MIN_FLOPS {
+        panel(0, m, &mut out);
+        return out;
+    }
+    // Split rows into contiguous panels; each thread fills its own disjoint
+    // slice of `out`.
+    let nchunks = workers.min(m / PAR_MIN_ROWS).max(1);
+    let chunk = m.div_ceil(nchunks);
+    let mut slices: Vec<(usize, usize, &mut [f32])> = Vec::new();
+    {
+        let mut rest: &mut [f32] = &mut out;
+        let mut r = 0;
+        while r < m {
+            let r1 = (r + chunk).min(m);
+            let (head, tail) = rest.split_at_mut((r1 - r) * cols);
+            slices.push((r, r1, head));
+            rest = tail;
+            r = r1;
+        }
+    }
+    let panel = &panel;
+    std::thread::scope(|scope| {
+        for (r0, r1, slice) in slices {
+            scope.spawn(move || panel(r0, r1, slice));
+        }
+    });
+    out
+}
+
+/// `C = A·B` (shapes `(m,k)·(k,n) -> (m,n)`).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "matmul: {}x{} · {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    let (m, n) = (a.rows(), b.cols());
+    let flops = 2 * m * n * a.cols();
+    let out = parallel_rows(m, flops, |r0, r1, panel| mm_panel(a, b, r0, r1, panel), n);
+    Mat::from_vec(m, n, out)
+}
+
+/// `C = Aᵀ·B` (shapes `(k,m)ᵀ·(k,n) -> (m,n)`), without forming `Aᵀ`.
+///
+/// This is the compressor's projection `A = MᵀG` with `M: l×k`, `G: l×m`.
+pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b: {}x{} ᵀ· {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    let (m, n, kk) = (a.cols(), b.cols(), a.rows());
+    // C[i,j] = sum_k A[k,i] * B[k,j]  — accumulate outer products of the
+    // k-th rows; each row of A scatters into all rows of C, so parallelize
+    // over k-chunks with per-thread accumulators then reduce.
+    let workers = default_workers();
+    let flops = 2 * m * n * kk;
+    if workers <= 1 || flops < PAR_MIN_FLOPS || kk < 64 {
+        let mut c = vec![0.0f32; m * n];
+        for k in 0..kk {
+            let arow = a.row(k);
+            let brow = b.row(k);
+            for (i, &aki) in arow.iter().enumerate() {
+                if aki != 0.0 {
+                    axpy(&mut c[i * n..(i + 1) * n], aki, brow);
+                }
+            }
+        }
+        return Mat::from_vec(m, n, c);
+    }
+    let nchunks = workers;
+    let chunk = kk.div_ceil(nchunks);
+    let partials: Vec<Vec<f32>> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c0 in (0..kk).step_by(chunk) {
+            let c1 = (c0 + chunk).min(kk);
+            handles.push(scope.spawn(move || {
+                let mut acc = vec![0.0f32; m * n];
+                for k in c0..c1 {
+                    let arow = a.row(k);
+                    let brow = b.row(k);
+                    for (i, &aki) in arow.iter().enumerate() {
+                        if aki != 0.0 {
+                            axpy(&mut acc[i * n..(i + 1) * n], aki, brow);
+                        }
+                    }
+                }
+                acc
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut c = vec![0.0f32; m * n];
+    for p in partials {
+        for (ci, pi) in c.iter_mut().zip(p) {
+            *ci += pi;
+        }
+    }
+    Mat::from_vec(m, n, c)
+}
+
+/// `C = A·Bᵀ` (shapes `(m,k)·(n,k)ᵀ -> (m,n)`), without forming `Bᵀ`.
+pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt: {}x{} · {}x{}ᵀ", a.rows(), a.cols(), b.rows(), b.cols());
+    let (m, n) = (a.rows(), b.rows());
+    let flops = 2 * m * n * a.cols();
+    let out = parallel_rows(
+        m,
+        flops,
+        |r0, r1, panel| {
+            for (pi, i) in (r0..r1).enumerate() {
+                let arow = a.row(i);
+                for j in 0..n {
+                    let brow = b.row(j);
+                    let mut s = 0.0f32;
+                    // dot product, 4-wide unroll
+                    let mut k = 0;
+                    let kk = arow.len();
+                    while k + 4 <= kk {
+                        s += arow[k] * brow[k]
+                            + arow[k + 1] * brow[k + 1]
+                            + arow[k + 2] * brow[k + 2]
+                            + arow[k + 3] * brow[k + 3];
+                        k += 4;
+                    }
+                    while k < kk {
+                        s += arow[k] * brow[k];
+                        k += 1;
+                    }
+                    panel[pi * n + j] = s;
+                }
+            }
+        },
+        n,
+    );
+    Mat::from_vec(m, n, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0f64;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] as f64 * b[(k, j)] as f64;
+                }
+                c[(i, j)] = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg64::seeded(1);
+        for &(m, k, n) in &[(3, 4, 5), (17, 9, 13), (64, 32, 48), (1, 7, 1)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let c = matmul(&a, &b);
+            assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-3, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_large_parallel_path() {
+        let mut rng = Pcg64::seeded(2);
+        let a = Mat::randn(300, 200, &mut rng);
+        let b = Mat::randn(200, 150, &mut rng);
+        let c = matmul(&a, &b);
+        assert!(c.max_abs_diff(&naive(&a, &b)) < 2e-2);
+    }
+
+    #[test]
+    fn at_b_matches_transpose() {
+        let mut rng = Pcg64::seeded(3);
+        for &(k, m, n) in &[(5, 3, 4), (128, 16, 33), (200, 31, 64)] {
+            let a = Mat::randn(k, m, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let c = matmul_at_b(&a, &b);
+            let expect = naive(&a.transpose(), &b);
+            assert!(c.max_abs_diff(&expect) < 2e-2, "({k},{m},{n})");
+        }
+    }
+
+    #[test]
+    fn a_bt_matches_transpose() {
+        let mut rng = Pcg64::seeded(4);
+        for &(m, k, n) in &[(4, 6, 3), (31, 64, 17), (100, 90, 80)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(n, k, &mut rng);
+            let c = matmul_a_bt(&a, &b);
+            let expect = naive(&a, &b.transpose());
+            assert!(c.max_abs_diff(&expect) < 2e-2, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::seeded(5);
+        let a = Mat::randn(20, 20, &mut rng);
+        let c = matmul(&a, &Mat::eye(20));
+        assert!(c.max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(4, 2);
+        let _ = matmul(&a, &b);
+    }
+}

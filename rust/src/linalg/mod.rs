@@ -1,0 +1,23 @@
+//! Dense linear-algebra substrate.
+//!
+//! GradESTC's per-round math is built from a handful of dense primitives
+//! over `f32` matrices: blocked matmul, thin QR, symmetric Jacobi eigen,
+//! thin SVD and randomized SVD (Halko–Martinsson–Tropp). No external BLAS
+//! is available offline, so this module implements them with cache-blocked,
+//! thread-parallel kernels; `benches/linalg.rs` tracks their throughput and
+//! EXPERIMENTS.md §Perf records the optimization history.
+//!
+//! Matrices are row-major [`Mat`] with explicit dimensions; all routines are
+//! deterministic given the caller-provided RNG.
+
+mod mat;
+mod matmul;
+mod qr;
+mod rsvd;
+mod svd;
+
+pub use mat::Mat;
+pub use matmul::{matmul, matmul_at_b, matmul_a_bt};
+pub use qr::{householder_qr, mgs_orthonormalize, ortho_defect};
+pub use rsvd::{randomized_svd, RsvdOptions};
+pub use svd::{jacobi_eigh_symmetric, thin_svd, Svd};

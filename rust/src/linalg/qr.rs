@@ -1,0 +1,203 @@
+//! Thin QR factorization and re-orthonormalization.
+//!
+//! * [`householder_qr`] — numerically robust thin QR via Householder
+//!   reflections; used by the randomized-SVD range finder.
+//! * [`mgs_orthonormalize`] — modified Gram–Schmidt pass used to repair
+//!   float drift in the long-lived GradESTC basis matrix (DESIGN.md §5).
+
+use super::{Mat, matmul};
+
+/// Thin QR: returns `(Q, R)` with `Q: m×n` orthonormal columns and
+/// `R: n×n` upper-triangular, for `A: m×n`, `m >= n`.
+pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows(), a.cols());
+    assert!(m >= n, "householder_qr expects tall matrix, got {m}x{n}");
+    // Work on a column-major copy of A for contiguous column access.
+    let mut r = a.clone(); // row-major; we index columns explicitly
+    // Householder vectors, stored per step.
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(n);
+
+    for j in 0..n {
+        // v = R[j:, j]; compute Householder reflector for this column.
+        let mut v: Vec<f32> = (j..m).map(|i| r[(i, j)]).collect();
+        let norm_x = v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32;
+        if norm_x == 0.0 {
+            // Zero column: skip (reflector = identity). Keep a unit vector
+            // so Q stays well-defined.
+            let mut e = vec![0.0; m - j];
+            e[0] = 1.0;
+            vs.push(e);
+            continue;
+        }
+        let alpha = if v[0] >= 0.0 { -norm_x } else { norm_x };
+        v[0] -= alpha;
+        let vnorm = v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32;
+        if vnorm > 0.0 {
+            v.iter_mut().for_each(|x| *x /= vnorm);
+        } else {
+            v[0] = 1.0;
+        }
+        // Apply H = I - 2 v vᵀ to R[j:, j:].
+        for col in j..n {
+            let mut dot = 0.0f64;
+            for (bi, i) in (j..m).enumerate() {
+                dot += v[bi] as f64 * r[(i, col)] as f64;
+            }
+            let dot = 2.0 * dot as f32;
+            for (bi, i) in (j..m).enumerate() {
+                r[(i, col)] -= dot * v[bi];
+            }
+        }
+        vs.push(v);
+    }
+
+    // Build thin Q by applying reflectors (in reverse) to the first n
+    // columns of the identity.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for j in (0..n).rev() {
+        let v = &vs[j];
+        for col in 0..n {
+            let mut dot = 0.0f64;
+            for (bi, i) in (j..m).enumerate() {
+                dot += v[bi] as f64 * q[(i, col)] as f64;
+            }
+            let dot = 2.0 * dot as f32;
+            for (bi, i) in (j..m).enumerate() {
+                q[(i, col)] -= dot * v[bi];
+            }
+        }
+    }
+
+    // Zero R's strictly-lower part and truncate to n×n.
+    let mut r_out = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_out[(i, j)] = r[(i, j)];
+        }
+    }
+    (q, r_out)
+}
+
+/// Modified Gram–Schmidt: orthonormalize the columns of `a` in place.
+///
+/// Columns that become numerically zero (below `eps`) are replaced with
+/// zeros and reported in the returned list — callers decide how to refill
+/// them. Two MGS passes are performed ("twice is enough", Kahan/Parlett)
+/// for stability.
+pub fn mgs_orthonormalize(a: &mut Mat, eps: f32) -> Vec<usize> {
+    let (m, n) = (a.rows(), a.cols());
+    let mut degenerate = Vec::new();
+    for _pass in 0..2 {
+        for j in 0..n {
+            let mut col_j = a.col(j);
+            // Remove projections on previous columns.
+            for p in 0..j {
+                let col_p = a.col(p);
+                let dot: f64 =
+                    col_p.iter().zip(&col_j).map(|(&x, &y)| x as f64 * y as f64).sum();
+                let dot = dot as f32;
+                for i in 0..m {
+                    col_j[i] -= dot * col_p[i];
+                }
+            }
+            let norm =
+                col_j.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32;
+            if norm < eps {
+                col_j.iter_mut().for_each(|x| *x = 0.0);
+                if _pass == 1 {
+                    degenerate.push(j);
+                }
+            } else {
+                col_j.iter_mut().for_each(|x| *x /= norm);
+            }
+            a.set_col(j, &col_j);
+        }
+    }
+    degenerate
+}
+
+/// ‖QᵀQ − I‖∞ — orthonormality defect, used in tests and debug assertions.
+pub fn ortho_defect(q: &Mat) -> f32 {
+    let g = matmul(&q.transpose(), q);
+    let n = g.rows();
+    let mut worst = 0.0f32;
+    for i in 0..n {
+        for j in 0..n {
+            let target = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((g[(i, j)] - target).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Pcg64::seeded(1);
+        for &(m, n) in &[(8, 8), (50, 10), (129, 31), (4, 1)] {
+            let a = Mat::randn(m, n, &mut rng);
+            let (q, r) = householder_qr(&a);
+            let qr = matmul(&q, &r);
+            assert!(qr.max_abs_diff(&a) < 1e-3, "({m},{n}) diff {}", qr.max_abs_diff(&a));
+        }
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Pcg64::seeded(2);
+        let a = Mat::randn(200, 40, &mut rng);
+        let (q, _) = householder_qr(&a);
+        assert!(ortho_defect(&q) < 1e-4);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Pcg64::seeded(3);
+        let a = Mat::randn(30, 12, &mut rng);
+        let (_, r) = householder_qr(&a);
+        for i in 0..12 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_handles_rank_deficiency() {
+        // Two identical columns: QR must not produce NaNs.
+        let mut rng = Pcg64::seeded(4);
+        let mut a = Mat::randn(20, 3, &mut rng);
+        let c0 = a.col(0);
+        a.set_col(1, &c0);
+        let (q, r) = householder_qr(&a);
+        assert!(q.as_slice().iter().all(|x| x.is_finite()));
+        assert!(r.as_slice().iter().all(|x| x.is_finite()));
+        assert!(matmul(&q, &r).max_abs_diff(&a) < 1e-3);
+    }
+
+    #[test]
+    fn mgs_orthonormalizes() {
+        let mut rng = Pcg64::seeded(5);
+        let mut a = Mat::randn(64, 16, &mut rng);
+        let degen = mgs_orthonormalize(&mut a, 1e-6);
+        assert!(degen.is_empty());
+        assert!(ortho_defect(&a) < 1e-4);
+    }
+
+    #[test]
+    fn mgs_reports_degenerate_columns() {
+        let mut rng = Pcg64::seeded(6);
+        let mut a = Mat::randn(32, 4, &mut rng);
+        let c0 = a.col(0);
+        a.set_col(2, &c0); // duplicate -> degenerate after projection
+        let degen = mgs_orthonormalize(&mut a, 1e-5);
+        assert_eq!(degen, vec![2]);
+    }
+}

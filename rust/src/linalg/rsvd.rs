@@ -1,0 +1,157 @@
+//! Randomized SVD (Halko, Martinsson & Tropp 2011, Algorithms 4.4 + 5.1).
+//!
+//! The paper relies on randomized SVD to find the top-`d` directions of the
+//! fitting-error matrix cheaply (§III-B(c), complexity discussion §III-C).
+//! Pipeline: Gaussian sketch `Y = A Ω`, optional power iterations with QR
+//! re-orthonormalization, thin QR range `Q`, project `B = Qᵀ A`, small SVD
+//! of `B`, then `U = Q·U_B`.
+//!
+//! The sketch/projection matmuls are exactly the Pallas `rangefinder`
+//! kernels at L1; this Rust implementation is the request-path twin and is
+//! cross-checked against the jnp oracle in integration tests.
+
+use super::{householder_qr, matmul, thin_svd, Mat, Svd};
+use crate::util::rng::Pcg64;
+
+/// Options for [`randomized_svd`].
+#[derive(Clone, Copy, Debug)]
+pub struct RsvdOptions {
+    /// Oversampling columns added to the sketch (Halko recommends 5–10).
+    pub oversample: usize,
+    /// Power iterations (0–2; each sharpens the spectrum at one extra pass
+    /// over the data).
+    pub power_iters: usize,
+}
+
+impl Default for RsvdOptions {
+    fn default() -> Self {
+        RsvdOptions { oversample: 6, power_iters: 1 }
+    }
+}
+
+/// Rank-`rank` randomized SVD of `a`.
+///
+/// Returns factors truncated to `rank` (or `min(p,q)` if smaller). The RNG
+/// drives the Gaussian test matrix, making results deterministic per seed.
+pub fn randomized_svd(a: &Mat, rank: usize, opts: RsvdOptions, rng: &mut Pcg64) -> Svd {
+    let (p, q) = (a.rows(), a.cols());
+    let r_full = p.min(q);
+    let rank = rank.min(r_full).max(1);
+    let sketch = (rank + opts.oversample).min(r_full);
+
+    if sketch >= r_full || r_full <= 8 {
+        // Sketching can't beat the exact small SVD here.
+        return truncate(thin_svd(a, rank), rank);
+    }
+
+    // Y = A Ω, Ω: q×sketch Gaussian.
+    let omega = Mat::randn(q, sketch, rng);
+    let mut y = matmul(a, &omega);
+
+    // Power iterations with QR stabilization: Y <- A (Aᵀ Y_q).
+    let at = a.transpose();
+    for _ in 0..opts.power_iters {
+        let (qy, _) = householder_qr(&y);
+        let z = matmul(&at, &qy);
+        let (qz, _) = householder_qr(&z);
+        y = matmul(a, &qz);
+    }
+
+    let (q_range, _) = householder_qr(&y);
+    // B = Qᵀ A (sketch×q), small.
+    let b = matmul(&q_range.transpose(), a);
+    let svd_b = thin_svd(&b, rank);
+    let u = matmul(&q_range, &svd_b.u);
+    truncate(Svd { u, s: svd_b.s, vt: svd_b.vt }, rank)
+}
+
+fn truncate(svd: Svd, rank: usize) -> Svd {
+    if svd.s.len() <= rank {
+        return svd;
+    }
+    Svd {
+        u: svd.u.take_cols(rank),
+        s: svd.s[..rank].to_vec(),
+        vt: svd.vt.take_rows(rank),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::ortho_defect;
+
+    /// Low-rank + noise test matrix.
+    fn low_rank(p: usize, q: usize, r: usize, noise: f32, rng: &mut Pcg64) -> Mat {
+        let u = Mat::randn(p, r, rng);
+        let v = Mat::randn(r, q, rng);
+        let mut a = matmul(&u, &v);
+        let n = Mat::randn(p, q, rng);
+        for (x, nv) in a.as_mut_slice().iter_mut().zip(n.as_slice()) {
+            *x += noise * nv;
+        }
+        a
+    }
+
+    #[test]
+    fn recovers_low_rank_structure() {
+        let mut rng = Pcg64::seeded(1);
+        let a = low_rank(120, 80, 5, 0.01, &mut rng);
+        let svd = randomized_svd(&a, 5, RsvdOptions::default(), &mut rng);
+        let rec = svd.reconstruct();
+        let rel = rec.sub(&a).fro_norm() / a.fro_norm();
+        assert!(rel < 0.05, "relative error {rel}");
+    }
+
+    #[test]
+    fn factors_orthonormal() {
+        let mut rng = Pcg64::seeded(2);
+        let a = low_rank(100, 60, 8, 0.05, &mut rng);
+        let svd = randomized_svd(&a, 8, RsvdOptions::default(), &mut rng);
+        assert!(ortho_defect(&svd.u) < 1e-3);
+        assert_eq!(svd.u.cols(), 8);
+        assert_eq!(svd.s.len(), 8);
+        assert_eq!(svd.vt.rows(), 8);
+    }
+
+    #[test]
+    fn matches_exact_svd_energy() {
+        // Captured energy of rank-k rSVD should be close to exact rank-k SVD.
+        let mut rng = Pcg64::seeded(3);
+        let a = low_rank(90, 70, 10, 0.1, &mut rng);
+        let k = 10;
+        let exact = thin_svd(&a, k);
+        let approx = randomized_svd(&a, k, RsvdOptions { oversample: 8, power_iters: 2 }, &mut rng);
+        let e_exact: f32 = exact.s.iter().map(|s| s * s).sum();
+        let e_approx: f32 = approx.s.iter().map(|s| s * s).sum();
+        assert!(e_approx > 0.97 * e_exact, "exact {e_exact} approx {e_approx}");
+    }
+
+    #[test]
+    fn small_matrix_fallback() {
+        let mut rng = Pcg64::seeded(4);
+        let a = Mat::randn(6, 5, &mut rng);
+        let svd = randomized_svd(&a, 3, RsvdOptions::default(), &mut rng);
+        assert_eq!(svd.s.len(), 3);
+        assert!(svd.u.as_slice().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut r1 = Pcg64::seeded(9);
+        let mut r2 = Pcg64::seeded(9);
+        let a = low_rank(64, 48, 4, 0.02, &mut Pcg64::seeded(5));
+        let s1 = randomized_svd(&a, 4, RsvdOptions::default(), &mut r1);
+        let s2 = randomized_svd(&a, 4, RsvdOptions::default(), &mut r2);
+        assert_eq!(s1.u, s2.u);
+        assert_eq!(s1.s, s2.s);
+    }
+
+    #[test]
+    fn rank_larger_than_dims_clamped() {
+        let mut rng = Pcg64::seeded(6);
+        let a = Mat::randn(10, 4, &mut rng);
+        let svd = randomized_svd(&a, 99, RsvdOptions::default(), &mut rng);
+        assert!(svd.s.len() <= 4);
+    }
+}

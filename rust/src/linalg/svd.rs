@@ -1,0 +1,242 @@
+//! Thin SVD via the Gram-matrix + symmetric Jacobi eigensolver route.
+//!
+//! The compressor only ever needs SVDs of *small* matrices (the `d×m`
+//! projected sketch inside randomized SVD, `d ≤ k ≪ l,m`), so a dense
+//! one-sided approach through the Gram matrix is both simple and fast:
+//!
+//! for `B: p×q` with `p <= q`:  `B Bᵀ = W Λ Wᵀ` (Jacobi), `σᵢ = √λᵢ`,
+//! `U = W`, `Vᵀ = Σ⁻¹ Uᵀ B` (zero-σ rows replaced by zeros).
+//!
+//! Accuracy for the tiny Gram systems involved is well within the f32
+//! tolerance the compressor needs (validated against the jnp oracle through
+//! `python/tests/test_kernel.py` on identical inputs).
+
+use super::{matmul, matmul_a_bt, matmul_at_b, Mat};
+
+/// Thin SVD result: `a ≈ u · diag(s) · vt`.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    /// Left singular vectors, `p×r` (columns orthonormal).
+    pub u: Mat,
+    /// Singular values, descending, length `r`.
+    pub s: Vec<f32>,
+    /// Right singular vectors transposed, `r×q` (rows orthonormal).
+    pub vt: Mat,
+}
+
+/// Symmetric eigendecomposition by the cyclic Jacobi method.
+///
+/// `a` must be symmetric `n×n`. Returns `(eigenvalues, eigenvectors)` with
+/// eigenvalues descending and eigenvectors as *columns* of the returned
+/// matrix.
+pub fn jacobi_eigh_symmetric(a: &Mat, max_sweeps: usize) -> (Vec<f32>, Mat) {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "jacobi_eigh: matrix must be square");
+    // Work in f64 for the iteration: Gram matrices square the condition
+    // number, f32 sweeps stall before convergence.
+    let mut m: Vec<f64> = a.as_slice().iter().map(|&x| x as f64).collect();
+    let mut v: Vec<f64> = vec![0.0; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let idx = |i: usize, j: usize| i * n + j;
+
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius mass.
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[idx(i, j)] * m[idx(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[idx(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[idx(p, p)];
+                let aqq = m[idx(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p,q of m.
+                for i in 0..n {
+                    let aip = m[idx(i, p)];
+                    let aiq = m[idx(i, q)];
+                    m[idx(i, p)] = c * aip - s * aiq;
+                    m[idx(i, q)] = s * aip + c * aiq;
+                }
+                for j in 0..n {
+                    let apj = m[idx(p, j)];
+                    let aqj = m[idx(q, j)];
+                    m[idx(p, j)] = c * apj - s * aqj;
+                    m[idx(q, j)] = s * apj + c * aqj;
+                }
+                // Accumulate eigenvectors.
+                for i in 0..n {
+                    let vip = v[idx(i, p)];
+                    let viq = v[idx(i, q)];
+                    v[idx(i, p)] = c * vip - s * viq;
+                    v[idx(i, q)] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+
+    // Extract, sort descending.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[idx(i, i)], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let vals: Vec<f32> = pairs.iter().map(|&(l, _)| l as f32).collect();
+    let mut vecs = Mat::zeros(n, n);
+    for (new_j, &(_, old_j)) in pairs.iter().enumerate() {
+        for i in 0..n {
+            vecs[(i, new_j)] = v[idx(i, old_j)] as f32;
+        }
+    }
+    (vals, vecs)
+}
+
+/// Thin SVD of an arbitrary `p×q` matrix, keeping at most `rank` components
+/// (all if `rank == 0`). Intended for small/sketched matrices.
+pub fn thin_svd(a: &Mat, rank: usize) -> Svd {
+    let (p, q) = (a.rows(), a.cols());
+    let r_full = p.min(q);
+    let keep = if rank == 0 { r_full } else { rank.min(r_full) };
+
+    if p <= q {
+        // Gram on the small side: B Bᵀ (p×p).
+        let g = matmul_a_bt(a, a);
+        let (vals, w) = jacobi_eigh_symmetric(&g, 30);
+        let s: Vec<f32> = vals.iter().take(keep).map(|&l| l.max(0.0).sqrt()).collect();
+        let u = w.take_cols(keep);
+        // Vᵀ = Σ⁻¹ Uᵀ A, guarding σ≈0.
+        let ut_a = matmul_at_b(&u, a);
+        let mut vt = ut_a;
+        for (i, &si) in s.iter().enumerate() {
+            let inv = if si > 1e-12 { 1.0 / si } else { 0.0 };
+            for x in vt.row_mut(i) {
+                *x *= inv;
+            }
+        }
+        Svd { u, s, vt }
+    } else {
+        // Tall matrix: decompose the transpose and swap factors.
+        let svd_t = thin_svd(&a.transpose(), keep);
+        Svd { u: svd_t.vt.transpose(), s: svd_t.s, vt: svd_t.u.transpose() }
+    }
+}
+
+impl Svd {
+    /// Reconstruct `u · diag(s) · vt`.
+    pub fn reconstruct(&self) -> Mat {
+        let mut us = self.u.clone();
+        for j in 0..self.s.len() {
+            for i in 0..us.rows() {
+                us[(i, j)] *= self.s[j];
+            }
+        }
+        matmul(&us, &self.vt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::ortho_defect;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn eigh_diagonal() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 1.0;
+        a[(1, 1)] = 5.0;
+        a[(2, 2)] = 3.0;
+        let (vals, _) = jacobi_eigh_symmetric(&a, 20);
+        assert!((vals[0] - 5.0).abs() < 1e-5);
+        assert!((vals[1] - 3.0).abs() < 1e-5);
+        assert!((vals[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn eigh_reconstructs() {
+        let mut rng = Pcg64::seeded(1);
+        let b = Mat::randn(10, 10, &mut rng);
+        let a = matmul_a_bt(&b, &b); // symmetric PSD
+        let (vals, w) = jacobi_eigh_symmetric(&a, 30);
+        // A = W Λ Wᵀ
+        let mut wl = w.clone();
+        for j in 0..10 {
+            for i in 0..10 {
+                wl[(i, j)] *= vals[j];
+            }
+        }
+        let rec = matmul(&wl, &w.transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-2 * a.fro_norm());
+    }
+
+    #[test]
+    fn svd_reconstructs_full_rank() {
+        let mut rng = Pcg64::seeded(2);
+        for &(p, q) in &[(6, 9), (9, 6), (12, 12), (1, 5), (5, 1)] {
+            let a = Mat::randn(p, q, &mut rng);
+            let svd = thin_svd(&a, 0);
+            let rec = svd.reconstruct();
+            assert!(
+                rec.max_abs_diff(&a) < 1e-2,
+                "({p},{q}): diff {}",
+                rec.max_abs_diff(&a)
+            );
+        }
+    }
+
+    #[test]
+    fn svd_factors_orthonormal() {
+        let mut rng = Pcg64::seeded(3);
+        let a = Mat::randn(8, 20, &mut rng);
+        let svd = thin_svd(&a, 0);
+        assert!(ortho_defect(&svd.u) < 1e-3);
+        assert!(ortho_defect(&svd.vt.transpose()) < 1e-3);
+    }
+
+    #[test]
+    fn singular_values_descending_nonneg() {
+        let mut rng = Pcg64::seeded(4);
+        let a = Mat::randn(16, 10, &mut rng);
+        let svd = thin_svd(&a, 0);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        assert!(svd.s.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn truncated_svd_is_best_low_rank() {
+        // Build a matrix with known rank-2 dominant structure; rank-2 SVD
+        // must capture almost all its energy.
+        let mut rng = Pcg64::seeded(5);
+        let u = Mat::randn(30, 2, &mut rng);
+        let v = Mat::randn(2, 40, &mut rng);
+        let mut a = matmul(&u, &v);
+        let noise = Mat::randn(30, 40, &mut rng);
+        for (x, n) in a.as_mut_slice().iter_mut().zip(noise.as_slice()) {
+            *x += 0.01 * n;
+        }
+        let svd = thin_svd(&a, 2);
+        let rec = svd.reconstruct();
+        let err = rec.sub(&a).fro_norm() / a.fro_norm();
+        assert!(err < 0.05, "relative err {err}");
+    }
+
+    #[test]
+    fn svd_of_zero_matrix() {
+        let a = Mat::zeros(5, 7);
+        let svd = thin_svd(&a, 3);
+        assert!(svd.s.iter().all(|&s| s == 0.0));
+        assert!(svd.reconstruct().fro_norm() == 0.0);
+    }
+}

@@ -1,0 +1,253 @@
+//! `gradestc` — CLI launcher for the federated-learning coordinator.
+//!
+//! Subcommands:
+//!
+//! * `train`  — run one experiment from flags.
+//! * `exp`    — regenerate a paper table/figure (fig1, fig2, table3,
+//!   table4, fig7, fig8, fig9; fig4/5/6 come from table3's CSVs).
+//! * `info`   — inspect the artifact manifest.
+//!
+//! Every run writes per-round CSVs under `results/` and prints the
+//! summary rows the paper reports.
+
+mod experiments;
+
+use gradestc::config::{
+    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
+};
+use gradestc::util::args::ArgSpec;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.clone(), r.to_vec()),
+        None => {
+            eprintln!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let code = match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "exp" => experiments::cmd_exp(rest),
+        "info" => cmd_info(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{}", usage());
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "gradestc — communication-efficient FL (GradESTC reproduction)\n\n\
+     USAGE:\n  gradestc train [OPTIONS]      run one experiment\n  \
+     gradestc exp <id> [OPTIONS]   regenerate a paper table/figure\n  \
+     gradestc info [--artifacts d] inspect the artifact manifest\n\n\
+     exp ids: fig1 fig2 table3 table4 fig7 fig8 fig9\n\
+     try: gradestc train --help"
+        .to_string()
+}
+
+/// Parse a compressor spec like `gradestc`, `gradestc:k=16`, `topk:frac=0.1`,
+/// `fedpaq:bits=8`, `fedqclip:bits=8,clip=2.5`, `svdfed:k=32,gamma=0.3`,
+/// `signsgd`, `fedavg`.
+pub fn parse_compressor(spec: &str) -> Result<CompressorKind, String> {
+    let (name, kv) = match spec.split_once(':') {
+        Some((n, rest)) => (n, rest),
+        None => (spec, ""),
+    };
+    let mut opts = std::collections::BTreeMap::new();
+    for pair in kv.split(',').filter(|s| !s.is_empty()) {
+        let (k, v) = pair.split_once('=').ok_or_else(|| format!("bad option '{pair}'"))?;
+        opts.insert(k.to_string(), v.to_string());
+    }
+    let f = |k: &str, d: f64| -> Result<f64, String> {
+        opts.get(k).map(|v| v.parse().map_err(|e| format!("{k}: {e}"))).unwrap_or(Ok(d))
+    };
+    let u = |k: &str, d: usize| -> Result<usize, String> {
+        opts.get(k).map(|v| v.parse().map_err(|e| format!("{k}: {e}"))).unwrap_or(Ok(d))
+    };
+    let b = |k: &str| -> bool { opts.get(k).map(|v| v == "1" || v == "true").unwrap_or(false) };
+    Ok(match name {
+        "fedavg" | "none" => CompressorKind::None,
+        "topk" => CompressorKind::TopK { frac: f("frac", 0.1)? },
+        "fedpaq" => CompressorKind::FedPaq { bits: u("bits", 8)? as u8 },
+        "signsgd" => CompressorKind::SignSgd,
+        "svdfed" => CompressorKind::SvdFed { k: u("k", 32)?, gamma: f("gamma", 0.3)? },
+        "fedqclip" => {
+            CompressorKind::FedQClip { bits: u("bits", 8)? as u8, clip: f("clip", 2.5)? }
+        }
+        "gradestc" => CompressorKind::GradEstc(GradEstcParams {
+            k: u("k", 32)?,
+            alpha: f("alpha", 1.3)?,
+            beta: f("beta", 1.0)?,
+            coverage: f("coverage", 0.9)?,
+            freeze_after_init: b("first"),
+            replace_all: b("all"),
+            fixed_d: b("fixedd"),
+            error_feedback: b("ef"),
+        }),
+        other => return Err(format!("unknown compressor '{other}'")),
+    })
+}
+
+/// Parse a dataset name.
+pub fn parse_dataset(s: &str) -> Result<DatasetKind, String> {
+    Ok(match s {
+        "mnist" | "synth-mnist" => DatasetKind::SynthMnist,
+        "cifar10" | "synth-cifar10" => DatasetKind::SynthCifar10,
+        "cifar100" | "synth-cifar100" => DatasetKind::SynthCifar100,
+        "corpus" | "tiny-corpus" => DatasetKind::TinyCorpus,
+        other => return Err(format!("unknown dataset '{other}'")),
+    })
+}
+
+/// Parse a distribution spec: `iid`, `dir0.5`, `dir0.1`.
+pub fn parse_dist(s: &str) -> Result<DataDistribution, String> {
+    if s == "iid" {
+        return Ok(DataDistribution::Iid);
+    }
+    if let Some(a) = s.strip_prefix("dir") {
+        return a
+            .parse()
+            .map(DataDistribution::Dirichlet)
+            .map_err(|e| format!("bad dirichlet alpha: {e}"));
+    }
+    Err(format!("unknown distribution '{s}' (iid | dir<alpha>)"))
+}
+
+fn default_model_for(d: DatasetKind) -> ModelKind {
+    match d {
+        DatasetKind::SynthMnist => ModelKind::LeNet5,
+        DatasetKind::SynthCifar10 => ModelKind::ResNetLite,
+        DatasetKind::SynthCifar100 => ModelKind::AlexNetLite,
+        DatasetKind::TinyCorpus => ModelKind::TinyTransformer,
+    }
+}
+
+fn cmd_train(argv: Vec<String>) -> i32 {
+    let spec = ArgSpec::new("gradestc train", "run one FL experiment")
+        .opt("dataset", "mnist", "mnist | cifar10 | cifar100 | corpus")
+        .opt("dist", "iid", "iid | dir<alpha> (e.g. dir0.5)")
+        .opt(
+            "compressor",
+            "gradestc",
+            "fedavg|topk|fedpaq|signsgd|svdfed|fedqclip|gradestc[:k=..,..]",
+        )
+        .opt("rounds", "30", "global rounds")
+        .opt("clients", "10", "number of clients")
+        .opt("participation", "1.0", "fraction of clients per round")
+        .opt("local-epochs", "1", "local epochs per round")
+        .opt("samples", "384", "training samples per client")
+        .opt("test-samples", "512", "held-out samples")
+        .opt("lr", "0.03", "SGD learning rate")
+        .opt("seed", "7", "rng seed")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("out", "results", "results directory")
+        .flag("native", "use the native Rust trainer instead of XLA artifacts")
+        .flag("quiet", "suppress per-round lines");
+    let args = match spec.parse(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let dataset = match parse_dataset(args.str("dataset")) {
+        Ok(d) => d,
+        Err(e) => return fail(&e),
+    };
+    let dist = match parse_dist(args.str("dist")) {
+        Ok(d) => d,
+        Err(e) => return fail(&e),
+    };
+    let compressor = match parse_compressor(args.str("compressor")) {
+        Ok(c) => c,
+        Err(e) => return fail(&e),
+    };
+    let model = default_model_for(dataset);
+    let use_xla = !args.has_flag("native");
+    let cfg = ExperimentConfig {
+        name: format!(
+            "train-{}-{}-{}",
+            args.str("dataset"),
+            args.str("dist"),
+            compressor.name()
+        ),
+        dataset,
+        model,
+        distribution: dist,
+        num_clients: args.usize("clients"),
+        participation: args.f64("participation"),
+        rounds: args.usize("rounds"),
+        local_epochs: args.usize("local-epochs"),
+        batch_size: if matches!(model, ModelKind::TinyTransformer) { 16 } else { 32 },
+        lr: args.f64("lr") as f32,
+        samples_per_client: args.usize("samples"),
+        test_samples: args.usize("test-samples"),
+        eval_every: 1,
+        threshold_frac: 0.95,
+        compressor,
+        seed: args.f64("seed") as u64,
+        use_xla,
+        artifacts_dir: args.str("artifacts").to_string(),
+    };
+    let quiet = args.has_flag("quiet");
+    match experiments::run_one(&cfg, args.str("out"), !quiet) {
+        Ok(report) => {
+            println!(
+                "\n{}: best acc {:.2}% | total uplink {:.4} MB | uplink@{:.0}% {}",
+                cfg.name,
+                report.best_accuracy * 100.0,
+                report.total_uplink as f64 / 1e6,
+                report.threshold * 100.0,
+                report
+                    .uplink_at_threshold
+                    .map(|b| format!("{:.4} MB", b as f64 / 1e6))
+                    .unwrap_or_else(|| "-".into()),
+            );
+            0
+        }
+        Err(e) => fail(&format!("{e:#}")),
+    }
+}
+
+fn cmd_info(argv: Vec<String>) -> i32 {
+    let spec = ArgSpec::new("gradestc info", "inspect the artifact manifest")
+        .opt("artifacts", "artifacts", "artifacts directory");
+    let args = match spec.parse(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    match gradestc::runtime::Runtime::open(args.str("artifacts")) {
+        Ok(rt) => {
+            println!("platform: {}", rt.platform());
+            for (name, m) in &rt.manifest().models {
+                println!(
+                    "model {name}: {} tensors, {} params, batch {}, eval_batch {}",
+                    m.layers.len(),
+                    m.total_params,
+                    m.batch,
+                    m.eval_batch
+                );
+            }
+            for (key, k) in &rt.manifest().kernels {
+                println!("kernel {key}: {} ({}x{} rank {})", k.kind, k.l, k.m, k.rank);
+            }
+            0
+        }
+        Err(e) => fail(&format!("{e:#}")),
+    }
+}
+
+fn fail(msg: &str) -> i32 {
+    eprintln!("error: {msg}");
+    1
+}

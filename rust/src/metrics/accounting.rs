@@ -1,0 +1,137 @@
+//! Communication accounting and the bandwidth-constrained network model.
+//!
+//! Every byte that would cross the wire in a real deployment is charged to
+//! a [`CommLedger`]: uplink per client per round (compressed payloads,
+//! replacement indices, headers) and downlink (global model broadcast).
+//! The paper's headline metrics — total uplink and uplink-at-threshold —
+//! read directly from the ledger. [`NetworkModel`] converts bytes into
+//! simulated wallclock for time-to-accuracy plots, with the asymmetric
+//! up/down bandwidth that motivates uplink-focused compression (§I).
+
+/// Running totals of simulated communication.
+#[derive(Clone, Debug, Default)]
+pub struct CommLedger {
+    uplink_bytes: u64,
+    downlink_bytes: u64,
+    per_round_uplink: Vec<u64>,
+    current_round_uplink: u64,
+    current_round_downlink: u64,
+}
+
+impl CommLedger {
+    /// Fresh ledger.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge client→server traffic for the current round.
+    pub fn charge_uplink(&mut self, bytes: u64) {
+        self.uplink_bytes += bytes;
+        self.current_round_uplink += bytes;
+    }
+
+    /// Charge server→client traffic for the current round.
+    pub fn charge_downlink(&mut self, bytes: u64) {
+        self.downlink_bytes += bytes;
+        self.current_round_downlink += bytes;
+    }
+
+    /// Close the round; returns `(uplink, downlink)` charged in it.
+    pub fn end_round(&mut self) -> (u64, u64) {
+        let out = (self.current_round_uplink, self.current_round_downlink);
+        self.per_round_uplink.push(self.current_round_uplink);
+        self.current_round_uplink = 0;
+        self.current_round_downlink = 0;
+        out
+    }
+
+    /// Cumulative uplink bytes.
+    pub fn total_uplink(&self) -> u64 {
+        self.uplink_bytes
+    }
+
+    /// Cumulative downlink bytes.
+    pub fn total_downlink(&self) -> u64 {
+        self.downlink_bytes
+    }
+
+    /// Per-round uplink history.
+    pub fn per_round_uplink(&self) -> &[u64] {
+        &self.per_round_uplink
+    }
+}
+
+/// Simple asymmetric link model shared by all clients.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkModel {
+    /// Client→server bandwidth in bytes/sec.
+    pub uplink_bps: f64,
+    /// Server→client bandwidth in bytes/sec.
+    pub downlink_bps: f64,
+    /// Per-message latency in seconds.
+    pub latency_s: f64,
+}
+
+impl NetworkModel {
+    /// A bandwidth-constrained edge setting: 10 Mbit/s up, 50 Mbit/s down,
+    /// 30 ms latency — the regime the paper's intro targets.
+    pub fn edge_default() -> Self {
+        NetworkModel {
+            uplink_bps: 10e6 / 8.0,
+            downlink_bps: 50e6 / 8.0,
+            latency_s: 0.03,
+        }
+    }
+
+    /// Seconds to move `bytes` up the constrained link.
+    pub fn uplink_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.uplink_bps
+    }
+
+    /// Seconds to move `bytes` down.
+    pub fn downlink_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.downlink_bps
+    }
+
+    /// Wallclock for one synchronous round: slowest participant's
+    /// down+up transfer (clients transfer in parallel).
+    pub fn round_time(&self, per_client_up: &[u64], broadcast_bytes: u64) -> f64 {
+        let slowest_up = per_client_up.iter().copied().max().unwrap_or(0);
+        self.downlink_time(broadcast_bytes) + self.uplink_time(slowest_up)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates_per_round() {
+        let mut l = CommLedger::new();
+        l.charge_uplink(100);
+        l.charge_uplink(50);
+        l.charge_downlink(10);
+        assert_eq!(l.end_round(), (150, 10));
+        l.charge_uplink(7);
+        assert_eq!(l.end_round(), (7, 0));
+        assert_eq!(l.total_uplink(), 157);
+        assert_eq!(l.total_downlink(), 10);
+        assert_eq!(l.per_round_uplink(), &[150, 7]);
+    }
+
+    #[test]
+    fn network_times_monotone_in_bytes() {
+        let n = NetworkModel::edge_default();
+        assert!(n.uplink_time(1_000_000) > n.uplink_time(1_000));
+        // Uplink is the constrained direction.
+        assert!(n.uplink_time(1_000_000) > n.downlink_time(1_000_000));
+    }
+
+    #[test]
+    fn round_time_uses_slowest_client() {
+        let n = NetworkModel::edge_default();
+        let t_small = n.round_time(&[100, 100, 100], 1000);
+        let t_skew = n.round_time(&[100, 100, 10_000_000], 1000);
+        assert!(t_skew > t_small);
+    }
+}

@@ -1,0 +1,10 @@
+//! Metrics: round records, CSV/JSONL sinks, communication accounting and
+//! the cosine-similarity probe behind the paper's Fig. 1.
+
+pub mod accounting;
+pub mod recorder;
+pub mod similarity;
+
+pub use accounting::{CommLedger, NetworkModel};
+pub use recorder::{RoundRecord, RunRecorder, RunReport};
+pub use similarity::{cosine, SimilarityProbe};

@@ -1,0 +1,214 @@
+//! Run recording: per-round records, CSV emission and end-of-run reports.
+
+use std::io::Write as _;
+use std::path::Path;
+
+/// One global round's measurements.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    /// Round index (0-based).
+    pub round: usize,
+    /// Mean training loss across participating clients.
+    pub train_loss: f64,
+    /// Server-side test accuracy in `[0,1]` (NaN when not evaluated).
+    pub test_accuracy: f64,
+    /// Server-side test loss (NaN when not evaluated).
+    pub test_loss: f64,
+    /// Uplink bytes charged this round.
+    pub uplink_bytes: u64,
+    /// Downlink bytes charged this round.
+    pub downlink_bytes: u64,
+    /// Simulated round wallclock (seconds) under the network model.
+    pub sim_time_s: f64,
+    /// Sum of rSVD candidate counts `d` across clients/layers this round
+    /// (the paper's Table IV computational-overhead proxy; 0 for baselines).
+    pub sum_d: u64,
+}
+
+/// Collects [`RoundRecord`]s and derives the paper's summary metrics.
+#[derive(Clone, Debug, Default)]
+pub struct RunRecorder {
+    rounds: Vec<RoundRecord>,
+}
+
+/// End-of-run summary (the numbers Table III/IV report).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Best test accuracy seen.
+    pub best_accuracy: f64,
+    /// Total uplink bytes.
+    pub total_uplink: u64,
+    /// Cumulative uplink when accuracy first reached `threshold`
+    /// (None if never reached).
+    pub uplink_at_threshold: Option<u64>,
+    /// The threshold used.
+    pub threshold: f64,
+    /// Round when the threshold was first reached.
+    pub rounds_to_threshold: Option<usize>,
+    /// Σd over the whole run (compute-overhead proxy).
+    pub sum_d: u64,
+    /// Final-round test accuracy.
+    pub final_accuracy: f64,
+}
+
+impl RunRecorder {
+    /// Fresh recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a round.
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    /// All rounds.
+    pub fn rounds(&self) -> &[RoundRecord] {
+        &self.rounds
+    }
+
+    /// Best accuracy over the run (NaN-safe).
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .map(|r| r.test_accuracy)
+            .filter(|a| !a.is_nan())
+            .fold(0.0, f64::max)
+    }
+
+    /// Build the summary report. `threshold` is an absolute accuracy in
+    /// `[0,1]`; Table III uses `threshold_frac · best_accuracy` of the
+    /// *uncompressed* run so all methods chase the same bar.
+    pub fn report(&self, threshold: f64) -> RunReport {
+        let mut cum_uplink = 0u64;
+        let mut uplink_at_threshold = None;
+        let mut rounds_to_threshold = None;
+        for r in &self.rounds {
+            cum_uplink += r.uplink_bytes;
+            if uplink_at_threshold.is_none()
+                && !r.test_accuracy.is_nan()
+                && r.test_accuracy >= threshold
+            {
+                uplink_at_threshold = Some(cum_uplink);
+                rounds_to_threshold = Some(r.round);
+            }
+        }
+        let final_accuracy = self
+            .rounds
+            .iter()
+            .rev()
+            .find(|r| !r.test_accuracy.is_nan())
+            .map(|r| r.test_accuracy)
+            .unwrap_or(f64::NAN);
+        RunReport {
+            best_accuracy: self.best_accuracy(),
+            total_uplink: cum_uplink,
+            uplink_at_threshold,
+            threshold,
+            rounds_to_threshold,
+            sum_d: self.rounds.iter().map(|r| r.sum_d).sum(),
+            final_accuracy,
+        }
+    }
+
+    /// Write the per-round trace as CSV (the data behind Figs. 5/6/7/8/9).
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(
+            f,
+            "round,train_loss,test_accuracy,test_loss,uplink_bytes,downlink_bytes,cum_uplink_bytes,sim_time_s,sum_d"
+        )?;
+        let mut cum = 0u64;
+        for r in &self.rounds {
+            cum += r.uplink_bytes;
+            writeln!(
+                f,
+                "{},{:.6},{:.6},{:.6},{},{},{},{:.4},{}",
+                r.round,
+                r.train_loss,
+                r.test_accuracy,
+                r.test_loss,
+                r.uplink_bytes,
+                r.downlink_bytes,
+                cum,
+                r.sim_time_s,
+                r.sum_d
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Format a byte count as MB with 4 decimals (Table III's unit).
+pub fn fmt_mb(bytes: u64) -> String {
+    format!("{:.4}", bytes as f64 / 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, acc: f64, up: u64) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: 1.0,
+            test_accuracy: acc,
+            test_loss: 1.0,
+            uplink_bytes: up,
+            downlink_bytes: 5,
+            sim_time_s: 0.1,
+            sum_d: 3,
+        }
+    }
+
+    #[test]
+    fn threshold_metrics() {
+        let mut r = RunRecorder::new();
+        r.push(rec(0, 0.2, 100));
+        r.push(rec(1, 0.5, 100));
+        r.push(rec(2, 0.8, 100));
+        r.push(rec(3, 0.7, 100));
+        let rep = r.report(0.75);
+        assert_eq!(rep.uplink_at_threshold, Some(300));
+        assert_eq!(rep.rounds_to_threshold, Some(2));
+        assert_eq!(rep.total_uplink, 400);
+        assert!((rep.best_accuracy - 0.8).abs() < 1e-12);
+        assert!((rep.final_accuracy - 0.7).abs() < 1e-12);
+        assert_eq!(rep.sum_d, 12);
+    }
+
+    #[test]
+    fn threshold_never_reached() {
+        let mut r = RunRecorder::new();
+        r.push(rec(0, 0.2, 10));
+        let rep = r.report(0.9);
+        assert_eq!(rep.uplink_at_threshold, None);
+        assert_eq!(rep.rounds_to_threshold, None);
+    }
+
+    #[test]
+    fn nan_evals_skipped() {
+        let mut r = RunRecorder::new();
+        r.push(rec(0, f64::NAN, 10));
+        r.push(rec(1, 0.6, 10));
+        let rep = r.report(0.5);
+        assert_eq!(rep.uplink_at_threshold, Some(20));
+        assert!((rep.final_accuracy - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_written() {
+        let mut r = RunRecorder::new();
+        r.push(rec(0, 0.3, 10));
+        let dir = std::env::temp_dir().join("gradestc-test-csv");
+        let path = dir.join("run.csv");
+        r.write_csv(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("round,"));
+        assert!(body.lines().count() == 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

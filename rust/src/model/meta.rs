@@ -1,0 +1,351 @@
+//! Architecture metadata: layer names, shapes, and compression geometry.
+//!
+//! Shapes use JAX conventions: conv kernels are HWIO
+//! `[kh, kw, c_in, c_out]`, dense kernels are `[in, out]`. The segment
+//! length `l` for the compressor's reshaped gradient matrix `G ∈ R^{l×m}`
+//! is the layer's *fan-in* (kh·kw·c_in for conv, `in` for dense) so each
+//! column of `G` is one output unit's receptive field — the "natural
+//! structural boundary" of paper §III-A.
+//!
+//! `python/compile/model.py` declares the same tables; `aot.py` writes them
+//! into `artifacts/manifest.json` and `rust/tests/artifacts.rs` asserts
+//! equality, so the two languages cannot drift silently.
+
+use crate::config::ModelKind;
+
+/// What a tensor does in the network (controls compressibility: the paper
+/// compresses only large weight matrices, never biases/norm parameters).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerRole {
+    /// Convolution kernel (HWIO).
+    ConvKernel,
+    /// Dense / linear kernel (`[in, out]`).
+    DenseKernel,
+    /// Bias vector.
+    Bias,
+    /// Embedding table (`[vocab, dim]`).
+    Embedding,
+    /// Normalization scale/offset.
+    Norm,
+}
+
+/// One trainable tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerMeta {
+    /// Unique name, e.g. `"stage2.block0.conv1.kernel"`.
+    pub name: String,
+    /// Tensor shape (JAX conventions, see module docs).
+    pub shape: Vec<usize>,
+    /// Role (drives compressibility and `l`).
+    pub role: LayerRole,
+}
+
+impl LayerMeta {
+    /// Total element count.
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Whether the paper's compressors may touch this tensor.
+    pub fn compressible(&self) -> bool {
+        matches!(self.role, LayerRole::ConvKernel | LayerRole::DenseKernel)
+    }
+
+    /// Segment length `l` (rows of the reshaped gradient matrix): fan-in.
+    pub fn segment_len(&self) -> usize {
+        match self.role {
+            LayerRole::ConvKernel => self.shape[0] * self.shape[1] * self.shape[2],
+            LayerRole::DenseKernel | LayerRole::Embedding => self.shape[0],
+            _ => self.size(),
+        }
+    }
+
+    /// Columns `m = n / l` of the reshaped gradient matrix.
+    pub fn segment_cols(&self) -> usize {
+        self.size() / self.segment_len()
+    }
+}
+
+/// A full architecture: ordered tensor list.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelMeta {
+    /// Stable name (matches python and artifact paths).
+    pub name: &'static str,
+    /// Tensors in parameter-list order (the order artifacts expect).
+    pub layers: Vec<LayerMeta>,
+    /// Input feature shape `[h, w, c]` for vision models, `[seq]` for LM.
+    pub input_shape: Vec<usize>,
+    /// Number of classes (vision) / vocab size (LM).
+    pub num_classes: usize,
+}
+
+impl ModelMeta {
+    /// Total parameter count.
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(|l| l.size()).sum()
+    }
+
+    /// Index of a layer by name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.layers.iter().position(|l| l.name == name)
+    }
+
+    /// Layers selected for compression, largest first, until `coverage`
+    /// of *compressible* parameters is covered (paper §V-B compresses the
+    /// parameter-dominant layers: 92–99% of all weights).
+    pub fn compression_set(&self, coverage: f64) -> Vec<usize> {
+        let mut idx: Vec<usize> =
+            (0..self.layers.len()).filter(|&i| self.layers[i].compressible()).collect();
+        idx.sort_by_key(|&i| std::cmp::Reverse(self.layers[i].size()));
+        let total: usize = idx.iter().map(|&i| self.layers[i].size()).sum();
+        let mut covered = 0usize;
+        let mut out = Vec::new();
+        for i in idx {
+            if (covered as f64) >= coverage * total as f64 {
+                break;
+            }
+            covered += self.layers[i].size();
+            out.push(i);
+        }
+        out.sort_unstable(); // parameter order
+        out
+    }
+}
+
+fn conv(name: &str, kh: usize, kw: usize, cin: usize, cout: usize) -> Vec<LayerMeta> {
+    vec![
+        LayerMeta {
+            name: format!("{name}.kernel"),
+            shape: vec![kh, kw, cin, cout],
+            role: LayerRole::ConvKernel,
+        },
+        LayerMeta { name: format!("{name}.bias"), shape: vec![cout], role: LayerRole::Bias },
+    ]
+}
+
+fn dense(name: &str, d_in: usize, d_out: usize) -> Vec<LayerMeta> {
+    vec![
+        LayerMeta {
+            name: format!("{name}.kernel"),
+            shape: vec![d_in, d_out],
+            role: LayerRole::DenseKernel,
+        },
+        LayerMeta { name: format!("{name}.bias"), shape: vec![d_out], role: LayerRole::Bias },
+    ]
+}
+
+/// Build the canonical layer table for a model.
+///
+/// Any change here must be mirrored in `python/compile/model.py` (checked by
+/// the artifact-manifest integration test).
+pub fn layer_table(model: ModelKind) -> ModelMeta {
+    match model {
+        ModelKind::LeNet5 => {
+            let mut layers = Vec::new();
+            layers.extend(conv("conv1", 5, 5, 1, 6));
+            layers.extend(conv("conv2", 5, 5, 6, 16));
+            layers.extend(dense("fc1", 256, 120));
+            layers.extend(dense("fc2", 120, 84));
+            layers.extend(dense("classifier", 84, 10));
+            ModelMeta { name: "lenet5", layers, input_shape: vec![28, 28, 1], num_classes: 10 }
+        }
+        ModelKind::ResNetLite => {
+            let mut layers = Vec::new();
+            layers.extend(conv("conv_in", 3, 3, 3, 32));
+            for b in 0..2 {
+                layers.extend(conv(&format!("stage1.block{b}.conv1"), 3, 3, 32, 32));
+                layers.extend(conv(&format!("stage1.block{b}.conv2"), 3, 3, 32, 32));
+            }
+            layers.extend(conv("down1", 3, 3, 32, 64));
+            for b in 0..2 {
+                layers.extend(conv(&format!("stage2.block{b}.conv1"), 3, 3, 64, 64));
+                layers.extend(conv(&format!("stage2.block{b}.conv2"), 3, 3, 64, 64));
+            }
+            layers.extend(conv("down2", 3, 3, 64, 128));
+            for b in 0..2 {
+                layers.extend(conv(&format!("stage3.block{b}.conv1"), 3, 3, 128, 128));
+                layers.extend(conv(&format!("stage3.block{b}.conv2"), 3, 3, 128, 128));
+            }
+            layers.extend(dense("classifier", 128, 10));
+            ModelMeta {
+                name: "resnetlite",
+                layers,
+                input_shape: vec![32, 32, 3],
+                num_classes: 10,
+            }
+        }
+        ModelKind::AlexNetLite => {
+            let mut layers = Vec::new();
+            layers.extend(conv("conv1", 3, 3, 3, 32));
+            layers.extend(conv("conv2", 3, 3, 32, 64));
+            layers.extend(conv("conv3", 3, 3, 64, 128));
+            layers.extend(conv("conv4", 3, 3, 128, 128));
+            layers.extend(conv("conv5", 3, 3, 128, 128));
+            layers.extend(dense("fc1", 2048, 512));
+            layers.extend(dense("fc2", 512, 256));
+            layers.extend(dense("classifier", 256, 100));
+            ModelMeta {
+                name: "alexnetlite",
+                layers,
+                input_shape: vec![32, 32, 3],
+                num_classes: 100,
+            }
+        }
+        ModelKind::TinyTransformer => {
+            // Decoder-only LM: vocab 256 (bytes), d=128, 4 layers, 4 heads,
+            // ff 512, seq 64. Matches python/compile/model.py.
+            let (vocab, d, nlayers, dff, seq) = (256, 128, 4, 512, 64);
+            let mut layers = Vec::new();
+            layers.push(LayerMeta {
+                name: "embed.table".into(),
+                shape: vec![vocab, d],
+                role: LayerRole::Embedding,
+            });
+            layers.push(LayerMeta {
+                name: "pos.table".into(),
+                shape: vec![seq, d],
+                role: LayerRole::Embedding,
+            });
+            for i in 0..nlayers {
+                for nm in ["wq", "wk", "wv", "wo"] {
+                    layers.extend(dense(&format!("layer{i}.attn.{nm}"), d, d));
+                }
+                layers.push(LayerMeta {
+                    name: format!("layer{i}.ln1.scale"),
+                    shape: vec![d],
+                    role: LayerRole::Norm,
+                });
+                layers.push(LayerMeta {
+                    name: format!("layer{i}.ln1.bias"),
+                    shape: vec![d],
+                    role: LayerRole::Norm,
+                });
+                layers.extend(dense(&format!("layer{i}.ff.w1"), d, dff));
+                layers.extend(dense(&format!("layer{i}.ff.w2"), dff, d));
+                layers.push(LayerMeta {
+                    name: format!("layer{i}.ln2.scale"),
+                    shape: vec![d],
+                    role: LayerRole::Norm,
+                });
+                layers.push(LayerMeta {
+                    name: format!("layer{i}.ln2.bias"),
+                    shape: vec![d],
+                    role: LayerRole::Norm,
+                });
+            }
+            layers.push(LayerMeta {
+                name: "ln_f.scale".into(),
+                shape: vec![d],
+                role: LayerRole::Norm,
+            });
+            layers.push(LayerMeta {
+                name: "ln_f.bias".into(),
+                shape: vec![d],
+                role: LayerRole::Norm,
+            });
+            layers.extend(dense("lm_head", d, vocab));
+            ModelMeta {
+                name: "tinytransformer",
+                layers,
+                input_shape: vec![seq],
+                num_classes: vocab,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_sizes() {
+        let m = layer_table(ModelKind::LeNet5);
+        // conv1 150+6, conv2 2400+16, fc1 30720+120, fc2 10080+84, cls 840+10
+        assert_eq!(m.total_params(), 150 + 6 + 2400 + 16 + 30720 + 120 + 10080 + 84 + 840 + 10);
+    }
+
+    #[test]
+    fn names_unique() {
+        for kind in [
+            ModelKind::LeNet5,
+            ModelKind::ResNetLite,
+            ModelKind::AlexNetLite,
+            ModelKind::TinyTransformer,
+        ] {
+            let m = layer_table(kind);
+            let mut names: Vec<&str> = m.layers.iter().map(|l| l.name.as_str()).collect();
+            let n = names.len();
+            names.sort_unstable();
+            names.dedup();
+            assert_eq!(names.len(), n, "{kind:?} has duplicate layer names");
+        }
+    }
+
+    #[test]
+    fn segment_geometry_divides_exactly() {
+        for kind in [ModelKind::LeNet5, ModelKind::ResNetLite, ModelKind::AlexNetLite] {
+            let m = layer_table(kind);
+            for l in m.layers.iter().filter(|l| l.compressible()) {
+                assert_eq!(
+                    l.segment_len() * l.segment_cols(),
+                    l.size(),
+                    "{}: l*m != n",
+                    l.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resnetlite_deep_layers_dominate() {
+        // The paper's premise (Figs. 1-2): a small subset of deep layers
+        // holds most parameters. stage3 convs must be ≥ 60% of the model.
+        let m = layer_table(ModelKind::ResNetLite);
+        let total = m.total_params();
+        let stage3: usize = m
+            .layers
+            .iter()
+            .filter(|l| l.name.starts_with("stage3"))
+            .map(|l| l.size())
+            .sum();
+        assert!(
+            stage3 as f64 > 0.6 * total as f64,
+            "stage3 {stage3} of {total}"
+        );
+    }
+
+    #[test]
+    fn compression_set_covers_target() {
+        for kind in [ModelKind::LeNet5, ModelKind::ResNetLite, ModelKind::AlexNetLite] {
+            let m = layer_table(kind);
+            let set = m.compression_set(0.9);
+            let compressible_total: usize =
+                m.layers.iter().filter(|l| l.compressible()).map(|l| l.size()).sum();
+            let covered: usize = set.iter().map(|&i| m.layers[i].size()).sum();
+            assert!(
+                covered as f64 >= 0.9 * compressible_total as f64,
+                "{kind:?}: covered {covered} of {compressible_total}"
+            );
+            // Selection must be sorted and compressible.
+            assert!(set.windows(2).all(|w| w[0] < w[1]));
+            assert!(set.iter().all(|&i| m.layers[i].compressible()));
+        }
+    }
+
+    #[test]
+    fn fan_in_is_segment_len() {
+        let m = layer_table(ModelKind::ResNetLite);
+        let i = m.index_of("stage3.block0.conv1.kernel").unwrap();
+        assert_eq!(m.layers[i].segment_len(), 3 * 3 * 128); // = 1152, the
+        // same l the paper uses for ResNet18 layer3 convs (§V-B).
+        assert_eq!(m.layers[i].segment_cols(), 128);
+    }
+
+    #[test]
+    fn alexnet_fc1_dominates() {
+        let m = layer_table(ModelKind::AlexNetLite);
+        let i = m.index_of("fc1.kernel").unwrap();
+        assert!(m.layers[i].size() as f64 > 0.5 * m.total_params() as f64);
+    }
+}

@@ -1,0 +1,14 @@
+//! Model substrate: architecture metadata, parameter storage, and the
+//! WHDC flatten/segment transform the compressor operates on.
+//!
+//! The source of truth for each architecture lives here ([`meta`]) and is
+//! mirrored by `python/compile/model.py`; `make artifacts` emits a manifest
+//! and the integration tests assert both sides agree layer-by-layer.
+
+pub mod meta;
+pub mod params;
+pub mod reshape;
+
+pub use meta::{layer_table, LayerMeta, LayerRole, ModelMeta};
+pub use params::ParamStore;
+pub use reshape::{segment_matrix, unsegment_matrix};

@@ -1,0 +1,212 @@
+//! Parameter storage: one flat `Vec<f32>` per tensor, aligned with the
+//! model's [`super::meta::ModelMeta`] layer order.
+
+use super::meta::{LayerRole, ModelMeta};
+use crate::util::rng::Pcg64;
+
+/// All trainable tensors of one model replica.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamStore {
+    tensors: Vec<Vec<f32>>,
+}
+
+impl ParamStore {
+    /// Initialize parameters the same way `python/compile/model.py` does:
+    /// He-uniform for conv/dense kernels, zeros for biases/norm-offsets,
+    /// ones for norm-scales, scaled-normal for embeddings.
+    ///
+    /// Layer `i` draws from `rng.fork(i)` so the stream per tensor is
+    /// independent of every other tensor's size — this is the cross-language
+    /// reproducibility contract with python `init_params`.
+    pub fn init(meta: &ModelMeta, rng: &Pcg64) -> Self {
+        let tensors = meta
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, layer)| {
+                let mut r = rng.fork(i as u64);
+                let n = layer.size();
+                match layer.role {
+                    LayerRole::ConvKernel | LayerRole::DenseKernel => {
+                        let fan_in = layer.segment_len() as f64;
+                        let mut bound = (6.0 / fan_in).sqrt() as f32;
+                        // Residual-branch output convs start near zero so
+                        // each block is near-identity at init (fixup-style;
+                        // the models have no batch norm). Without this the
+                        // deep residual stack's activations — and the
+                        // initial loss — explode.
+                        if layer.name.contains("block") && layer.name.ends_with("conv2.kernel")
+                        {
+                            bound *= 0.1;
+                        }
+                        (0..n).map(|_| (r.f32() * 2.0 - 1.0) * bound).collect()
+                    }
+                    LayerRole::Bias => vec![0.0; n],
+                    LayerRole::Norm => {
+                        if layer.name.ends_with("scale") {
+                            vec![1.0; n]
+                        } else {
+                            vec![0.0; n]
+                        }
+                    }
+                    LayerRole::Embedding => {
+                        let mut v = r.normal_vec(n);
+                        v.iter_mut().for_each(|x| *x *= 0.02);
+                        v
+                    }
+                }
+            })
+            .collect();
+        ParamStore { tensors }
+    }
+
+    /// Zero-filled store with the same geometry (for gradient accumulators).
+    pub fn zeros_like(meta: &ModelMeta) -> Self {
+        ParamStore { tensors: meta.layers.iter().map(|l| vec![0.0; l.size()]).collect() }
+    }
+
+    /// Wrap existing tensors (shape-checked against `meta`).
+    pub fn from_tensors(meta: &ModelMeta, tensors: Vec<Vec<f32>>) -> Self {
+        assert_eq!(tensors.len(), meta.layers.len());
+        for (t, l) in tensors.iter().zip(&meta.layers) {
+            assert_eq!(t.len(), l.size(), "tensor '{}' size mismatch", l.name);
+        }
+        ParamStore { tensors }
+    }
+
+    /// Number of tensors.
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    /// True when the store holds no tensors.
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Tensor `i` as a slice.
+    pub fn tensor(&self, i: usize) -> &[f32] {
+        &self.tensors[i]
+    }
+
+    /// Mutable tensor `i`.
+    pub fn tensor_mut(&mut self, i: usize) -> &mut Vec<f32> {
+        &mut self.tensors[i]
+    }
+
+    /// Iterate tensors.
+    pub fn iter(&self) -> impl Iterator<Item = &Vec<f32>> {
+        self.tensors.iter()
+    }
+
+    /// `self += scale * other`, elementwise over all tensors.
+    pub fn axpy(&mut self, scale: f32, other: &ParamStore) {
+        assert_eq!(self.tensors.len(), other.tensors.len());
+        for (a, b) in self.tensors.iter_mut().zip(&other.tensors) {
+            debug_assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += scale * y;
+            }
+        }
+    }
+
+    /// `self *= scale`.
+    pub fn scale(&mut self, scale: f32) {
+        for t in &mut self.tensors {
+            for x in t {
+                *x *= scale;
+            }
+        }
+    }
+
+    /// `self - other` as a new store (the FL "model delta" / pseudo-gradient).
+    pub fn delta(&self, other: &ParamStore) -> ParamStore {
+        assert_eq!(self.tensors.len(), other.tensors.len());
+        let tensors = self
+            .tensors
+            .iter()
+            .zip(&other.tensors)
+            .map(|(a, b)| a.iter().zip(b).map(|(x, y)| x - y).collect())
+            .collect();
+        ParamStore { tensors }
+    }
+
+    /// Global L2 norm over all tensors.
+    pub fn l2_norm(&self) -> f32 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt() as f32
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelKind;
+    use crate::model::meta::layer_table;
+
+    #[test]
+    fn init_matches_meta_geometry() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let p = ParamStore::init(&meta, &Pcg64::seeded(1));
+        assert_eq!(p.len(), meta.layers.len());
+        assert_eq!(p.numel(), meta.total_params());
+    }
+
+    #[test]
+    fn init_deterministic_and_layer_independent() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let a = ParamStore::init(&meta, &Pcg64::seeded(9));
+        let b = ParamStore::init(&meta, &Pcg64::seeded(9));
+        assert_eq!(a, b);
+        let c = ParamStore::init(&meta, &Pcg64::seeded(10));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn biases_zero_scales_one() {
+        let meta = layer_table(ModelKind::TinyTransformer);
+        let p = ParamStore::init(&meta, &Pcg64::seeded(2));
+        for (i, l) in meta.layers.iter().enumerate() {
+            match l.role {
+                LayerRole::Bias => assert!(p.tensor(i).iter().all(|&x| x == 0.0), "{}", l.name),
+                LayerRole::Norm if l.name.ends_with("scale") => {
+                    assert!(p.tensor(i).iter().all(|&x| x == 1.0), "{}", l.name)
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_init_within_he_bound() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let p = ParamStore::init(&meta, &Pcg64::seeded(3));
+        let i = meta.index_of("fc1.kernel").unwrap();
+        let bound = (6.0f32 / 256.0).sqrt();
+        assert!(p.tensor(i).iter().all(|&x| x.abs() <= bound));
+        // and not degenerate
+        let max = p.tensor(i).iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!(max > 0.5 * bound);
+    }
+
+    #[test]
+    fn delta_axpy_roundtrip() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let a = ParamStore::init(&meta, &Pcg64::seeded(4));
+        let mut b = a.clone();
+        b.scale(2.0);
+        let d = b.delta(&a); // d = a
+        let mut rec = a.clone();
+        rec.axpy(1.0, &d); // rec = 2a = b
+        assert!(rec.delta(&b).l2_norm() < 1e-4);
+    }
+}

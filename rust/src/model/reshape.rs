@@ -1,0 +1,118 @@
+//! Gradient preprocessing (paper §III-A(a)): WHDC flatten + segmentation.
+//!
+//! A layer gradient arrives as a flat tensor in the layer's natural memory
+//! order. For compression it is reshaped to `G ∈ R^{l×m}` where **each
+//! column** `G[:, j]` is the `j`-th consecutive length-`l` segment of the
+//! flat vector (paper Eq. in §III-A: `G[:,j] = [g_{(j-1)l+1}, ..., g_{jl}]ᵀ`).
+//!
+//! With HWIO conv kernels and `l = kh·kw·c_in` (fan-in), a column is exactly
+//! one output channel's receptive-field weights — the WHDC ordering of
+//! Fig. 3 — provided the flat vector is laid out fan-in-major. Tensors in
+//! this crate and in the JAX models are stored O-outermost (row-major HWIO
+//! flattens to (h,w,i) varying fastest within an output channel only if we
+//! transpose), so [`segment_matrix`] does the bookkeeping: it treats the
+//! flat input as `[m, l]` row-major (m output units × l fan-in weights) and
+//! produces the `l×m` matrix by transposition.
+
+use crate::linalg::Mat;
+
+/// Segment a flat gradient (length `l·m`, laid out `[m, l]` row-major:
+/// output-unit-major, fan-in contiguous) into the paper's `G ∈ R^{l×m}`.
+pub fn segment_matrix(flat: &[f32], l: usize, m: usize) -> Mat {
+    assert_eq!(flat.len(), l * m, "segment_matrix: {} != {l}*{m}", flat.len());
+    let mut g = Mat::zeros(l, m);
+    for j in 0..m {
+        let seg = &flat[j * l..(j + 1) * l];
+        for i in 0..l {
+            g[(i, j)] = seg[i];
+        }
+    }
+    g
+}
+
+/// Inverse of [`segment_matrix`]: back to the flat `[m, l]` layout.
+pub fn unsegment_matrix(g: &Mat) -> Vec<f32> {
+    let (l, m) = (g.rows(), g.cols());
+    let mut flat = vec![0.0f32; l * m];
+    for j in 0..m {
+        for i in 0..l {
+            flat[j * l + i] = g[(i, j)];
+        }
+    }
+    flat
+}
+
+/// Convert an HWIO-ordered conv kernel tensor (`[kh, kw, cin, cout]`,
+/// row-major) into the fan-in-contiguous `[cout, fan_in]` flat layout the
+/// segmenter expects, i.e. WHDC ordering per output channel.
+pub fn hwio_to_fanin_major(t: &[f32], kh: usize, kw: usize, cin: usize, cout: usize) -> Vec<f32> {
+    assert_eq!(t.len(), kh * kw * cin * cout);
+    let fan_in = kh * kw * cin;
+    let mut out = vec![0.0f32; t.len()];
+    for s in 0..fan_in {
+        // s indexes (h, w, i) row-major
+        for o in 0..cout {
+            out[o * fan_in + s] = t[s * cout + o];
+        }
+    }
+    out
+}
+
+/// Inverse of [`hwio_to_fanin_major`].
+pub fn fanin_major_to_hwio(t: &[f32], kh: usize, kw: usize, cin: usize, cout: usize) -> Vec<f32> {
+    assert_eq!(t.len(), kh * kw * cin * cout);
+    let fan_in = kh * kw * cin;
+    let mut out = vec![0.0f32; t.len()];
+    for s in 0..fan_in {
+        for o in 0..cout {
+            out[s * cout + o] = t[o * fan_in + s];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn segment_roundtrip() {
+        let mut rng = Pcg64::seeded(1);
+        let (l, m) = (12, 7);
+        let flat = rng.normal_vec(l * m);
+        let g = segment_matrix(&flat, l, m);
+        assert_eq!(unsegment_matrix(&g), flat);
+    }
+
+    #[test]
+    fn columns_are_consecutive_segments() {
+        let flat: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let g = segment_matrix(&flat, 4, 3);
+        assert_eq!(g.col(0), vec![0., 1., 2., 3.]);
+        assert_eq!(g.col(1), vec![4., 5., 6., 7.]);
+        assert_eq!(g.col(2), vec![8., 9., 10., 11.]);
+    }
+
+    #[test]
+    fn hwio_roundtrip() {
+        let mut rng = Pcg64::seeded(2);
+        let (kh, kw, cin, cout) = (3, 3, 4, 5);
+        let t = rng.normal_vec(kh * kw * cin * cout);
+        let f = hwio_to_fanin_major(&t, kh, kw, cin, cout);
+        assert_eq!(fanin_major_to_hwio(&f, kh, kw, cin, cout), t);
+    }
+
+    #[test]
+    fn hwio_groups_one_output_channel() {
+        // In HWIO layout, output-channel o's weights are strided; after the
+        // transform they must be contiguous.
+        let (kh, kw, cin, cout) = (2, 1, 2, 3);
+        let fan_in = kh * kw * cin; // 4
+        let t: Vec<f32> = (0..fan_in * cout).map(|x| x as f32).collect();
+        // t[s*cout + o] = s*3 + o
+        let f = hwio_to_fanin_major(&t, kh, kw, cin, cout);
+        // channel 1 slice must be [1, 4, 7, 10]
+        assert_eq!(&f[fan_in..2 * fan_in], &[1.0, 4.0, 7.0, 10.0]);
+    }
+}

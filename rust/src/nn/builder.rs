@@ -1,0 +1,161 @@
+//! Model builders: assemble op stacks matching `python/compile/model.py`.
+
+use crate::config::ModelKind;
+use crate::model::meta::ModelMeta;
+
+use super::ops::{AvgPool2, Conv, Dense, Flatten, GlobalMeanPool, Op, Padding, Relu, Residual};
+
+fn conv_of(meta: &ModelMeta, name: &str, stride: usize, padding: Padding) -> Conv {
+    let w = meta
+        .index_of(&format!("{name}.kernel"))
+        .unwrap_or_else(|| panic!("missing layer {name}.kernel"));
+    let b = meta.index_of(&format!("{name}.bias")).unwrap();
+    let s = &meta.layers[w].shape;
+    Conv::new(w, b, (s[0], s[1], s[2], s[3]), stride, padding)
+}
+
+fn dense_of(meta: &ModelMeta, name: &str) -> Dense {
+    let w = meta
+        .index_of(&format!("{name}.kernel"))
+        .unwrap_or_else(|| panic!("missing layer {name}.kernel"));
+    let b = meta.index_of(&format!("{name}.bias")).unwrap();
+    let s = &meta.layers[w].shape;
+    Dense::new(w, b, (s[0], s[1]))
+}
+
+fn res_block(meta: &ModelMeta, name: &str) -> Residual {
+    // y = relu(x + conv2(relu(conv1(x)))) — matches model.py's `block`.
+    Residual::new(vec![
+        Box::new(conv_of(meta, &format!("{name}.conv1"), 1, Padding::Same)),
+        Box::new(Relu::new()),
+        Box::new(conv_of(meta, &format!("{name}.conv2"), 1, Padding::Same)),
+    ])
+}
+
+/// Build the native op stack for a model kind (vision models only).
+pub fn build_model(kind: ModelKind, meta: &ModelMeta) -> Vec<Box<dyn Op>> {
+    match kind {
+        ModelKind::LeNet5 => vec![
+            Box::new(conv_of(meta, "conv1", 1, Padding::Valid)),
+            Box::new(Relu::new()),
+            Box::new(AvgPool2::new()),
+            Box::new(conv_of(meta, "conv2", 1, Padding::Valid)),
+            Box::new(Relu::new()),
+            Box::new(AvgPool2::new()),
+            Box::new(Flatten::new()),
+            Box::new(dense_of(meta, "fc1")),
+            Box::new(Relu::new()),
+            Box::new(dense_of(meta, "fc2")),
+            Box::new(Relu::new()),
+            Box::new(dense_of(meta, "classifier")),
+        ],
+        ModelKind::ResNetLite => vec![
+            Box::new(conv_of(meta, "conv_in", 1, Padding::Same)),
+            Box::new(Relu::new()),
+            Box::new(res_block(meta, "stage1.block0")),
+            Box::new(res_block(meta, "stage1.block1")),
+            Box::new(conv_of(meta, "down1", 2, Padding::Same)),
+            Box::new(Relu::new()),
+            Box::new(res_block(meta, "stage2.block0")),
+            Box::new(res_block(meta, "stage2.block1")),
+            Box::new(conv_of(meta, "down2", 2, Padding::Same)),
+            Box::new(Relu::new()),
+            Box::new(res_block(meta, "stage3.block0")),
+            Box::new(res_block(meta, "stage3.block1")),
+            Box::new(GlobalMeanPool::new()),
+            Box::new(dense_of(meta, "classifier")),
+        ],
+        ModelKind::AlexNetLite => vec![
+            Box::new(conv_of(meta, "conv1", 1, Padding::Same)),
+            Box::new(Relu::new()),
+            Box::new(AvgPool2::new()),
+            Box::new(conv_of(meta, "conv2", 1, Padding::Same)),
+            Box::new(Relu::new()),
+            Box::new(AvgPool2::new()),
+            Box::new(conv_of(meta, "conv3", 1, Padding::Same)),
+            Box::new(Relu::new()),
+            Box::new(conv_of(meta, "conv4", 1, Padding::Same)),
+            Box::new(Relu::new()),
+            Box::new(conv_of(meta, "conv5", 1, Padding::Same)),
+            Box::new(Relu::new()),
+            Box::new(AvgPool2::new()),
+            Box::new(Flatten::new()),
+            Box::new(dense_of(meta, "fc1")),
+            Box::new(Relu::new()),
+            Box::new(dense_of(meta, "fc2")),
+            Box::new(Relu::new()),
+            Box::new(dense_of(meta, "classifier")),
+        ],
+        ModelKind::TinyTransformer => {
+            panic!("TinyTransformer has no native builder (XLA-only)")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::meta::layer_table;
+    use crate::model::params::ParamStore;
+    use crate::nn::tensor::Tensor;
+    use crate::util::rng::Pcg64;
+
+    fn forward_shape(kind: ModelKind, input: Vec<usize>, expect_classes: usize) {
+        let meta = layer_table(kind);
+        let params = ParamStore::init(&meta, &Pcg64::seeded(1));
+        let mut rng = Pcg64::seeded(2);
+        let n: usize = input.iter().product();
+        let x = Tensor::new(rng.normal_vec(n), input);
+        let mut model = build_model(kind, &meta);
+        let mut h = x;
+        for op in model.iter_mut() {
+            h = op.forward(&params, h);
+        }
+        assert_eq!(h.dims, vec![2, expect_classes]);
+        assert!(h.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn lenet_shapes() {
+        forward_shape(ModelKind::LeNet5, vec![2, 28, 28, 1], 10);
+    }
+
+    #[test]
+    fn resnetlite_shapes() {
+        forward_shape(ModelKind::ResNetLite, vec![2, 32, 32, 3], 10);
+    }
+
+    #[test]
+    fn alexnetlite_shapes() {
+        forward_shape(ModelKind::AlexNetLite, vec![2, 32, 32, 3], 100);
+    }
+
+    #[test]
+    fn whole_model_gradient_check_lenet() {
+        // End-to-end finite-difference check through convs, pools, dense.
+        let meta = layer_table(ModelKind::LeNet5);
+        let mut params = ParamStore::init(&meta, &Pcg64::seeded(3));
+        let trainer =
+            crate::nn::NativeTrainer::new(ModelKind::LeNet5, &meta).unwrap();
+        let mut rng = Pcg64::seeded(4);
+        let x = Tensor::new(rng.normal_vec(2 * 28 * 28), vec![2, 28, 28, 1]);
+        let y = vec![3u32, 7];
+        let (_, grads) = trainer.loss_and_grads(&params, x.clone(), &y);
+        let eps = 1e-2f32;
+        // Check a few coordinates in each kind of tensor.
+        for (ti, ci) in [(0usize, 10usize), (2, 100), (4, 1000), (8, 40), (9, 3)] {
+            let orig = params.tensor(ti)[ci];
+            params.tensor_mut(ti)[ci] = orig + eps;
+            let (lp, _) = trainer.loss_and_grads(&params, x.clone(), &y);
+            params.tensor_mut(ti)[ci] = orig - eps;
+            let (lm, _) = trainer.loss_and_grads(&params, x.clone(), &y);
+            params.tensor_mut(ti)[ci] = orig;
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let an = grads.tensor(ti)[ci] as f64;
+            assert!(
+                (fd - an).abs() < 5e-3 + 0.05 * fd.abs().max(an.abs()),
+                "tensor {ti}[{ci}]: fd {fd} vs an {an}"
+            );
+        }
+    }
+}

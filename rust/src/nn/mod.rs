@@ -1,0 +1,212 @@
+//! From-scratch neural-network substrate (native training backend).
+//!
+//! A minimal define-by-stack framework: a model is a list of [`ops::Op`]s
+//! holding parameter indices into the shared [`ParamStore`]; forward caches
+//! what backward needs; backward walks the stack in reverse, writing
+//! parameter gradients into a gradient store. Conv layers run as im2col +
+//! the crate's blocked GEMM.
+//!
+//! Semantics are kept *identical* to the JAX L2 graphs (NHWC data, HWIO
+//! kernels, `x @ W + b` dense, valid/same padding, avg-pooling, softmax
+//! cross-entropy), so the two backends are interchangeable and
+//! cross-checked: per-op gradients against finite differences here, and
+//! whole-model agreement against the XLA artifacts in
+//! `rust/tests/xla_runtime.rs`.
+
+pub mod builder;
+pub mod ops;
+pub mod tensor;
+
+pub use builder::build_model;
+pub use tensor::Tensor;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ModelKind;
+use crate::coordinator::trainer::{epoch_batches, Trainer};
+use crate::data::synth::Dataset;
+use crate::model::meta::ModelMeta;
+use crate::model::params::ParamStore;
+use crate::util::rng::Pcg64;
+
+/// Native Rust trainer implementing the same step semantics as the XLA
+/// artifacts.
+pub struct NativeTrainer {
+    kind: ModelKind,
+    meta: ModelMeta,
+}
+
+impl NativeTrainer {
+    /// Build for a model kind. The transformer is XLA-only (its native
+    /// backward is out of scope — see DESIGN.md §6).
+    pub fn new(kind: ModelKind, meta: &ModelMeta) -> Result<Self> {
+        if matches!(kind, ModelKind::TinyTransformer) {
+            return Err(anyhow!(
+                "TinyTransformer requires the XLA backend (use_xla = true)"
+            ));
+        }
+        Ok(NativeTrainer { kind, meta: meta.clone() })
+    }
+
+    fn batch_tensors(&self, data: &Dataset, idx: &[usize]) -> (Tensor, Vec<u32>) {
+        let (h, w, c) = (
+            self.meta.input_shape[0],
+            self.meta.input_shape[1],
+            self.meta.input_shape[2],
+        );
+        let mut x = Vec::with_capacity(idx.len() * h * w * c);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(data.sample(i));
+            y.push(data.y[i]);
+        }
+        (Tensor::new(x, vec![idx.len(), h, w, c]), y)
+    }
+
+    /// One forward/backward pass; returns (loss, grads).
+    pub fn loss_and_grads(
+        &self,
+        params: &ParamStore,
+        x: Tensor,
+        y: &[u32],
+    ) -> (f64, ParamStore) {
+        let mut model = build_model(self.kind, &self.meta);
+        let mut grads = ParamStore::zeros_like(&self.meta);
+        let logits = {
+            let mut h = x;
+            for op in model.iter_mut() {
+                h = op.forward(params, h);
+            }
+            h
+        };
+        let (loss, dlogits) = ops::softmax_xent_mean(&logits, y);
+        let mut dy = dlogits;
+        for op in model.iter_mut().rev() {
+            dy = op.backward(params, &mut grads, dy);
+        }
+        (loss, grads)
+    }
+
+    fn forward_logits(&self, params: &ParamStore, x: Tensor) -> Tensor {
+        let mut model = build_model(self.kind, &self.meta);
+        let mut h = x;
+        for op in model.iter_mut() {
+            h = op.forward(params, h);
+        }
+        h
+    }
+}
+
+impl Trainer for NativeTrainer {
+    fn local_train(
+        &self,
+        start: &ParamStore,
+        data: &Dataset,
+        epochs: usize,
+        batch: usize,
+        lr: f32,
+        rng: &mut Pcg64,
+    ) -> Result<(ParamStore, f64)> {
+        let mut params = start.clone();
+        let mut loss_sum = 0.0f64;
+        let mut steps = 0usize;
+        for _ in 0..epochs {
+            for idx in epoch_batches(data.len(), batch, rng) {
+                let (x, y) = self.batch_tensors(data, &idx);
+                let (loss, grads) = self.loss_and_grads(&params, x, &y);
+                params.axpy(-lr, &grads);
+                loss_sum += loss;
+                steps += 1;
+            }
+        }
+        Ok((params, loss_sum / steps.max(1) as f64))
+    }
+
+    fn evaluate(&self, params: &ParamStore, data: &Dataset) -> Result<(f64, f64)> {
+        // Evaluate in chunks to bound memory.
+        let chunk = 64usize;
+        let mut correct = 0usize;
+        let mut loss_sum = 0.0f64;
+        let mut seen = 0usize;
+        let mut i = 0;
+        while i < data.len() {
+            let j = (i + chunk).min(data.len());
+            let idx: Vec<usize> = (i..j).collect();
+            let (x, y) = self.batch_tensors(data, &idx);
+            let logits = self.forward_logits(params, x);
+            let classes = logits.dims[1];
+            for (bi, &label) in y.iter().enumerate() {
+                let row = &logits.data[bi * classes..(bi + 1) * classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                if pred == label as usize {
+                    correct += 1;
+                }
+            }
+            let (l, _) = ops::softmax_xent_mean(&logits, &y);
+            loss_sum += l * (j - i) as f64;
+            seen += j - i;
+            i = j;
+        }
+        Ok((loss_sum / seen.max(1) as f64, correct as f64 / seen.max(1) as f64))
+    }
+
+    fn grads(
+        &self,
+        params: &ParamStore,
+        data: &Dataset,
+        batch: usize,
+        rng: &mut Pcg64,
+    ) -> Result<(Vec<Vec<f32>>, f64)> {
+        let idx = epoch_batches(data.len(), batch, rng)
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("empty dataset"))?;
+        let (x, y) = self.batch_tensors(data, &idx);
+        let (loss, grads) = self.loss_and_grads(params, x, &y);
+        let tensors = (0..grads.len()).map(|i| grads.tensor(i).to_vec()).collect();
+        Ok((tensors, loss))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthGenerator, SynthSpec};
+    use crate::model::meta::layer_table;
+
+    #[test]
+    fn lenet_trains_on_synth_mnist() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let t = NativeTrainer::new(ModelKind::LeNet5, &meta).unwrap();
+        let spec = SynthSpec::for_kind(crate::config::DatasetKind::SynthMnist);
+        let gen = SynthGenerator::new(spec, 3);
+        let mut rng = Pcg64::seeded(1);
+        let train = gen.generate(256, &mut rng);
+        let test = gen.generate(128, &mut rng);
+        let params = ParamStore::init(&meta, &Pcg64::seeded(5));
+        let (acc0_loss, acc0) = t.evaluate(&params, &test).unwrap();
+        let mut p = params;
+        let mut last_loss = f64::INFINITY;
+        for _ in 0..3 {
+            let (np, loss) = t.local_train(&p, &train, 1, 32, 0.05, &mut rng).unwrap();
+            p = np;
+            last_loss = loss;
+        }
+        let (loss1, acc1) = t.evaluate(&p, &test).unwrap();
+        assert!(
+            acc1 > acc0 + 0.1,
+            "accuracy did not improve: {acc0} -> {acc1} (loss {acc0_loss} -> {loss1}, train {last_loss})"
+        );
+    }
+
+    #[test]
+    fn transformer_rejected() {
+        let meta = layer_table(ModelKind::TinyTransformer);
+        assert!(NativeTrainer::new(ModelKind::TinyTransformer, &meta).is_err());
+    }
+}

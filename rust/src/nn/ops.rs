@@ -1,0 +1,708 @@
+//! Differentiable ops for the native trainer.
+//!
+//! Each [`Op`] caches what its backward needs during `forward`. Parameter
+//! gradients accumulate into a [`ParamStore`] aligned with the model's
+//! layer table. Conv runs as im2col + the crate's blocked GEMM, matching
+//! XLA's NHWC/HWIO semantics (including its SAME-padding rule).
+
+use crate::linalg::{matmul, matmul_a_bt, matmul_at_b, Mat};
+use crate::model::params::ParamStore;
+
+use super::tensor::Tensor;
+
+/// Padding mode, matching XLA's conv semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Padding {
+    /// No padding; output shrinks by `k-1`.
+    Valid,
+    /// Output = ceil(input/stride); zero padding split before/after.
+    Same,
+}
+
+fn out_dim(input: usize, k: usize, stride: usize, padding: Padding) -> (usize, usize) {
+    // Returns (output size, pad_before).
+    match padding {
+        Padding::Valid => ((input - k) / stride + 1, 0),
+        Padding::Same => {
+            let out = input.div_ceil(stride);
+            let pad_total = ((out - 1) * stride + k).saturating_sub(input);
+            (out, pad_total / 2)
+        }
+    }
+}
+
+/// im2col: NHWC input → `[B·OH·OW, kh·kw·C]` patch matrix.
+fn im2col(
+    x: &Tensor,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    padding: Padding,
+) -> (Mat, usize, usize) {
+    let (b, h, w, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let (oh, ph) = out_dim(h, kh, stride, padding);
+    let (ow, pw) = out_dim(w, kw, stride, padding);
+    let mut cols = Mat::zeros(b * oh * ow, kh * kw * c);
+    for bi in 0..b {
+        let xoff = bi * h * w * c;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (bi * oh + oy) * ow + ox;
+                let dst = cols.row_mut(row);
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - ph as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pw as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = xoff + ((iy as usize) * w + ix as usize) * c;
+                        let doff = (ky * kw + kx) * c;
+                        dst[doff..doff + c].copy_from_slice(&x.data[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    (cols, oh, ow)
+}
+
+/// col2im: scatter-add patch-gradients back to input layout.
+fn col2im(
+    dcols: &Mat,
+    dims: &[usize],
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    padding: Padding,
+) -> Tensor {
+    let (b, h, w, c) = (dims[0], dims[1], dims[2], dims[3]);
+    let (oh, ph) = out_dim(h, kh, stride, padding);
+    let (ow, pw) = out_dim(w, kw, stride, padding);
+    let mut dx = Tensor::zeros(dims.to_vec());
+    for bi in 0..b {
+        let xoff = bi * h * w * c;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (bi * oh + oy) * ow + ox;
+                let src_row = dcols.row(row);
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - ph as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pw as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let dst = xoff + ((iy as usize) * w + ix as usize) * c;
+                        let soff = (ky * kw + kx) * c;
+                        for ci in 0..c {
+                            dx.data[dst + ci] += src_row[soff + ci];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Mean softmax cross-entropy over the batch; returns (loss, dlogits).
+pub fn softmax_xent_mean(logits: &Tensor, labels: &[u32]) -> (f64, Tensor) {
+    let b = logits.dims[0];
+    let k = logits.dims[1];
+    assert_eq!(labels.len(), b);
+    let mut dlogits = Tensor::zeros(logits.dims.clone());
+    let mut loss = 0.0f64;
+    for bi in 0..b {
+        let row = &logits.data[bi * k..(bi + 1) * k];
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f64> = row.iter().map(|&x| ((x - maxv) as f64).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let label = labels[bi] as usize;
+        loss += z.ln() - (row[label] - maxv) as f64;
+        let drow = &mut dlogits.data[bi * k..(bi + 1) * k];
+        for (j, e) in exps.iter().enumerate() {
+            drow[j] = ((e / z) as f32 - if j == label { 1.0 } else { 0.0 }) / b as f32;
+        }
+    }
+    (loss / b as f64, dlogits)
+}
+
+/// A differentiable operation with cached state.
+pub trait Op {
+    /// Forward; may cache activations for backward.
+    fn forward(&mut self, params: &ParamStore, x: Tensor) -> Tensor;
+    /// Backward: gradient w.r.t. input; parameter grads accumulate.
+    fn backward(&mut self, params: &ParamStore, grads: &mut ParamStore, dy: Tensor) -> Tensor;
+}
+
+/// 2-D convolution (+bias).
+pub struct Conv {
+    /// Weight tensor index (HWIO).
+    pub w_idx: usize,
+    /// Bias tensor index.
+    pub b_idx: usize,
+    /// Kernel height/width, in/out channels.
+    pub kdims: (usize, usize, usize, usize),
+    /// Stride.
+    pub stride: usize,
+    /// Padding mode.
+    pub padding: Padding,
+    cache: Option<(Mat, Vec<usize>, usize, usize)>, // cols, x dims, oh, ow
+}
+
+impl Conv {
+    /// New conv op.
+    pub fn new(
+        w_idx: usize,
+        b_idx: usize,
+        kdims: (usize, usize, usize, usize),
+        stride: usize,
+        padding: Padding,
+    ) -> Self {
+        Conv { w_idx, b_idx, kdims, stride, padding, cache: None }
+    }
+}
+
+impl Op for Conv {
+    fn forward(&mut self, params: &ParamStore, x: Tensor) -> Tensor {
+        let (kh, kw, ci, co) = self.kdims;
+        debug_assert_eq!(x.dims[3], ci, "conv input channels");
+        let (cols, oh, ow) = im2col(&x, kh, kw, self.stride, self.padding);
+        let wmat = Mat::from_vec(kh * kw * ci, co, params.tensor(self.w_idx).to_vec());
+        let mut y = matmul(&cols, &wmat);
+        let bias = params.tensor(self.b_idx);
+        for r in 0..y.rows() {
+            for (v, &bv) in y.row_mut(r).iter_mut().zip(bias) {
+                *v += bv;
+            }
+        }
+        let b = x.dims[0];
+        let out = Tensor::new(y.into_vec(), vec![b, oh, ow, co]);
+        self.cache = Some((cols, x.dims.clone(), oh, ow));
+        out
+    }
+
+    fn backward(&mut self, params: &ParamStore, grads: &mut ParamStore, dy: Tensor) -> Tensor {
+        let (kh, kw, ci, co) = self.kdims;
+        let (cols, xdims, oh, ow) = self.cache.take().expect("forward before backward");
+        let b = xdims[0];
+        let dy_mat = Mat::from_vec(b * oh * ow, co, dy.data);
+        // db = Σ rows of dY.
+        {
+            let db = grads.tensor_mut(self.b_idx);
+            for r in 0..dy_mat.rows() {
+                for (d, &v) in db.iter_mut().zip(dy_mat.row(r)) {
+                    *d += v;
+                }
+            }
+        }
+        // dW = colsᵀ · dY.
+        let dw = matmul_at_b(&cols, &dy_mat);
+        {
+            let gw = grads.tensor_mut(self.w_idx);
+            for (g, &v) in gw.iter_mut().zip(dw.as_slice()) {
+                *g += v;
+            }
+        }
+        // dX = col2im(dY · Wᵀ).
+        let wmat = Mat::from_vec(kh * kw * ci, co, params.tensor(self.w_idx).to_vec());
+        let dcols = matmul_a_bt(&dy_mat, &wmat);
+        col2im(&dcols, &xdims, kh, kw, self.stride, self.padding)
+    }
+}
+
+/// ReLU.
+pub struct Relu {
+    mask: Vec<bool>,
+}
+
+impl Relu {
+    /// New ReLU.
+    pub fn new() -> Self {
+        Relu { mask: Vec::new() }
+    }
+}
+
+impl Default for Relu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Op for Relu {
+    fn forward(&mut self, _p: &ParamStore, mut x: Tensor) -> Tensor {
+        self.mask = x.data.iter().map(|&v| v > 0.0).collect();
+        for v in &mut x.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        x
+    }
+
+    fn backward(&mut self, _p: &ParamStore, _g: &mut ParamStore, mut dy: Tensor) -> Tensor {
+        for (d, &m) in dy.data.iter_mut().zip(&self.mask) {
+            if !m {
+                *d = 0.0;
+            }
+        }
+        dy
+    }
+}
+
+/// 2×2 average pooling, stride 2 (VALID).
+pub struct AvgPool2 {
+    in_dims: Vec<usize>,
+}
+
+impl AvgPool2 {
+    /// New pool op.
+    pub fn new() -> Self {
+        AvgPool2 { in_dims: Vec::new() }
+    }
+}
+
+impl Default for AvgPool2 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Op for AvgPool2 {
+    fn forward(&mut self, _p: &ParamStore, x: Tensor) -> Tensor {
+        let (b, h, w, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+        let (oh, ow) = (h / 2, w / 2);
+        let mut y = Tensor::zeros(vec![b, oh, ow, c]);
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ci in 0..c {
+                        let mut s = 0.0f32;
+                        for dy in 0..2 {
+                            for dx in 0..2 {
+                                s += x.data
+                                    [((bi * h + oy * 2 + dy) * w + ox * 2 + dx) * c + ci];
+                            }
+                        }
+                        y.data[((bi * oh + oy) * ow + ox) * c + ci] = s / 4.0;
+                    }
+                }
+            }
+        }
+        self.in_dims = x.dims.clone();
+        y
+    }
+
+    fn backward(&mut self, _p: &ParamStore, _g: &mut ParamStore, dy: Tensor) -> Tensor {
+        let (b, h, w, c) =
+            (self.in_dims[0], self.in_dims[1], self.in_dims[2], self.in_dims[3]);
+        let (oh, ow) = (h / 2, w / 2);
+        let mut dx = Tensor::zeros(self.in_dims.clone());
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ci in 0..c {
+                        let g = dy.data[((bi * oh + oy) * ow + ox) * c + ci] / 4.0;
+                        for ddy in 0..2 {
+                            for ddx in 0..2 {
+                                dx.data[((bi * h + oy * 2 + ddy) * w + ox * 2 + ddx) * c
+                                    + ci] += g;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        dx
+    }
+}
+
+/// Global mean pool over H and W: `[B,H,W,C] → [B,C]`.
+pub struct GlobalMeanPool {
+    in_dims: Vec<usize>,
+}
+
+impl GlobalMeanPool {
+    /// New op.
+    pub fn new() -> Self {
+        GlobalMeanPool { in_dims: Vec::new() }
+    }
+}
+
+impl Default for GlobalMeanPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Op for GlobalMeanPool {
+    fn forward(&mut self, _p: &ParamStore, x: Tensor) -> Tensor {
+        let (b, h, w, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+        let mut y = Tensor::zeros(vec![b, c]);
+        let scale = 1.0 / (h * w) as f32;
+        for bi in 0..b {
+            for p in 0..h * w {
+                for ci in 0..c {
+                    y.data[bi * c + ci] += x.data[(bi * h * w + p) * c + ci] * scale;
+                }
+            }
+        }
+        self.in_dims = x.dims.clone();
+        y
+    }
+
+    fn backward(&mut self, _p: &ParamStore, _g: &mut ParamStore, dy: Tensor) -> Tensor {
+        let (b, h, w, c) =
+            (self.in_dims[0], self.in_dims[1], self.in_dims[2], self.in_dims[3]);
+        let mut dx = Tensor::zeros(self.in_dims.clone());
+        let scale = 1.0 / (h * w) as f32;
+        for bi in 0..b {
+            for p in 0..h * w {
+                for ci in 0..c {
+                    dx.data[(bi * h * w + p) * c + ci] = dy.data[bi * c + ci] * scale;
+                }
+            }
+        }
+        dx
+    }
+}
+
+/// Flatten `[B, ...] → [B, F]` (NHWC row-major — matches jnp reshape).
+pub struct Flatten {
+    in_dims: Vec<usize>,
+}
+
+impl Flatten {
+    /// New op.
+    pub fn new() -> Self {
+        Flatten { in_dims: Vec::new() }
+    }
+}
+
+impl Default for Flatten {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Op for Flatten {
+    fn forward(&mut self, _p: &ParamStore, x: Tensor) -> Tensor {
+        self.in_dims = x.dims.clone();
+        let b = x.dims[0];
+        let f = x.numel() / b;
+        x.reshape(vec![b, f])
+    }
+
+    fn backward(&mut self, _p: &ParamStore, _g: &mut ParamStore, dy: Tensor) -> Tensor {
+        dy.reshape(self.in_dims.clone())
+    }
+}
+
+/// Dense layer: `y = x·W + b`.
+pub struct Dense {
+    /// Weight tensor index (`[in, out]`).
+    pub w_idx: usize,
+    /// Bias tensor index.
+    pub b_idx: usize,
+    /// (in, out).
+    pub dims: (usize, usize),
+    cache_x: Option<Mat>,
+}
+
+impl Dense {
+    /// New dense op.
+    pub fn new(w_idx: usize, b_idx: usize, dims: (usize, usize)) -> Self {
+        Dense { w_idx, b_idx, dims, cache_x: None }
+    }
+}
+
+impl Op for Dense {
+    fn forward(&mut self, params: &ParamStore, x: Tensor) -> Tensor {
+        let (din, dout) = self.dims;
+        let b = x.dims[0];
+        debug_assert_eq!(x.dims[1], din);
+        let xm = Mat::from_vec(b, din, x.data);
+        let w = Mat::from_vec(din, dout, params.tensor(self.w_idx).to_vec());
+        let mut y = matmul(&xm, &w);
+        let bias = params.tensor(self.b_idx);
+        for r in 0..b {
+            for (v, &bv) in y.row_mut(r).iter_mut().zip(bias) {
+                *v += bv;
+            }
+        }
+        self.cache_x = Some(xm);
+        Tensor::new(y.into_vec(), vec![b, dout])
+    }
+
+    fn backward(&mut self, params: &ParamStore, grads: &mut ParamStore, dy: Tensor) -> Tensor {
+        let (din, dout) = self.dims;
+        let b = dy.dims[0];
+        let dym = Mat::from_vec(b, dout, dy.data);
+        let xm = self.cache_x.take().expect("forward before backward");
+        {
+            let db = grads.tensor_mut(self.b_idx);
+            for r in 0..b {
+                for (d, &v) in db.iter_mut().zip(dym.row(r)) {
+                    *d += v;
+                }
+            }
+        }
+        let dw = matmul_at_b(&xm, &dym);
+        {
+            let gw = grads.tensor_mut(self.w_idx);
+            for (g, &v) in gw.iter_mut().zip(dw.as_slice()) {
+                *g += v;
+            }
+        }
+        let w = Mat::from_vec(din, dout, params.tensor(self.w_idx).to_vec());
+        let dx = matmul_a_bt(&dym, &w);
+        Tensor::new(dx.into_vec(), vec![b, din])
+    }
+}
+
+/// Residual block: `y = relu(x + inner(x))` where `inner` is an op stack.
+pub struct Residual {
+    /// Inner op stack.
+    pub inner: Vec<Box<dyn Op>>,
+    mask: Vec<bool>,
+}
+
+impl Residual {
+    /// New residual block.
+    pub fn new(inner: Vec<Box<dyn Op>>) -> Self {
+        Residual { inner, mask: Vec::new() }
+    }
+}
+
+impl Op for Residual {
+    fn forward(&mut self, params: &ParamStore, x: Tensor) -> Tensor {
+        let mut h = x.clone();
+        for op in self.inner.iter_mut() {
+            h = op.forward(params, h);
+        }
+        debug_assert_eq!(h.dims, x.dims);
+        let mut y = x;
+        for (v, &hv) in y.data.iter_mut().zip(&h.data) {
+            *v += hv;
+        }
+        self.mask = y.data.iter().map(|&v| v > 0.0).collect();
+        for v in &mut y.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        y
+    }
+
+    fn backward(&mut self, params: &ParamStore, grads: &mut ParamStore, mut dy: Tensor) -> Tensor {
+        for (d, &m) in dy.data.iter_mut().zip(&self.mask) {
+            if !m {
+                *d = 0.0;
+            }
+        }
+        // d(inner path)
+        let mut dinner = dy.clone();
+        for op in self.inner.iter_mut().rev() {
+            dinner = op.backward(params, grads, dinner);
+        }
+        // dx = skip + inner
+        for (d, &v) in dy.data.iter_mut().zip(&dinner.data) {
+            *d += v;
+        }
+        dy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelKind;
+    use crate::model::meta::layer_table;
+    use crate::util::rng::Pcg64;
+
+    /// Finite-difference gradient check for a single-op "model".
+    fn grad_check_conv(stride: usize, padding: Padding) {
+        let meta = layer_table(ModelKind::LeNet5); // store shape donor
+        let mut rng = Pcg64::seeded(7);
+        // Tiny conv: 3x3x2x3 on a 2x5x5x2 input.
+        let (kh, kw, ci, co) = (3, 3, 2, 3);
+        let mut params = ParamStore::zeros_like(&meta);
+        // Hijack tensors 0 (conv1.kernel 150) and 1 (bias 6): big enough.
+        let w: Vec<f32> = rng.normal_vec(kh * kw * ci * co);
+        let bias: Vec<f32> = rng.normal_vec(co);
+        params.tensor_mut(0)[..w.len()].copy_from_slice(&w);
+        params.tensor_mut(1)[..co].copy_from_slice(&bias);
+        // But Conv reads the whole tensor — build a dedicated tiny store
+        // instead via from_tensors on a fake meta. Simpler: craft Mat-sized
+        // vectors directly in a 2-tensor store.
+        let fake_meta = crate::model::meta::ModelMeta {
+            name: "t",
+            layers: vec![
+                crate::model::meta::LayerMeta {
+                    name: "w".into(),
+                    shape: vec![kh, kw, ci, co],
+                    role: crate::model::meta::LayerRole::ConvKernel,
+                },
+                crate::model::meta::LayerMeta {
+                    name: "b".into(),
+                    shape: vec![co],
+                    role: crate::model::meta::LayerRole::Bias,
+                },
+            ],
+            input_shape: vec![5, 5, ci],
+            num_classes: 2,
+        };
+        let mut p = ParamStore::from_tensors(&fake_meta, vec![w, bias]);
+        let x = Tensor::new(rng.normal_vec(2 * 5 * 5 * ci), vec![2, 5, 5, ci]);
+        // Loss = sum(conv(x)^2)/2 → dY = Y.
+        let mut conv = Conv::new(0, 1, (kh, kw, ci, co), stride, padding);
+        let y = conv.forward(&p, x.clone());
+        let mut grads = ParamStore::zeros_like(&fake_meta);
+        let dy = y.clone();
+        let dx = conv.backward(&p, &mut grads, dy);
+
+        // FD check on a few weight coords.
+        let eps = 1e-3f32;
+        let loss = |p: &ParamStore, x: &Tensor| -> f64 {
+            let mut c = Conv::new(0, 1, (kh, kw, ci, co), stride, padding);
+            let y = c.forward(p, x.clone());
+            y.data.iter().map(|&v| (v as f64) * (v as f64) / 2.0).sum()
+        };
+        for &ci2 in &[0usize, 7, 23, 51] {
+            let orig = p.tensor(0)[ci2];
+            p.tensor_mut(0)[ci2] = orig + eps;
+            let lp = loss(&p, &x);
+            p.tensor_mut(0)[ci2] = orig - eps;
+            let lm = loss(&p, &x);
+            p.tensor_mut(0)[ci2] = orig;
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let an = grads.tensor(0)[ci2] as f64;
+            assert!(
+                (fd - an).abs() < 0.02 * (1.0 + fd.abs()),
+                "w[{ci2}] fd {fd} vs an {an} (stride {stride}, {padding:?})"
+            );
+        }
+        // FD check on input coords.
+        for &xi in &[0usize, 13, 49] {
+            let mut xp = x.clone();
+            xp.data[xi] += eps;
+            let lp = loss(&p, &xp);
+            xp.data[xi] = x.data[xi] - eps;
+            let lm = loss(&p, &xp);
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let an = dx.data[xi] as f64;
+            assert!(
+                (fd - an).abs() < 0.02 * (1.0 + fd.abs()),
+                "x[{xi}] fd {fd} vs an {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn conv_gradients_valid() {
+        grad_check_conv(1, Padding::Valid);
+    }
+
+    #[test]
+    fn conv_gradients_same() {
+        grad_check_conv(1, Padding::Same);
+    }
+
+    #[test]
+    fn conv_gradients_strided_same() {
+        grad_check_conv(2, Padding::Same);
+    }
+
+    #[test]
+    fn softmax_xent_matches_fd() {
+        let mut rng = Pcg64::seeded(3);
+        let logits = Tensor::new(rng.normal_vec(4 * 5), vec![4, 5]);
+        let labels = vec![0u32, 3, 2, 4];
+        let (l0, d) = softmax_xent_mean(&logits, &labels);
+        assert!(l0 > 0.0);
+        let eps = 1e-3f32;
+        for &i in &[0usize, 7, 19] {
+            let mut lp = logits.clone();
+            lp.data[i] += eps;
+            let (l1, _) = softmax_xent_mean(&lp, &labels);
+            let fd = (l1 - l0) / eps as f64;
+            assert!(
+                (fd - d.data[i] as f64).abs() < 1e-2,
+                "fd {fd} vs {}",
+                d.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn avgpool_preserves_mean_and_grads() {
+        let mut rng = Pcg64::seeded(5);
+        let x = Tensor::new(rng.normal_vec(1 * 4 * 4 * 2), vec![1, 4, 4, 2]);
+        let mut pool = AvgPool2::new();
+        let meta = layer_table(ModelKind::LeNet5);
+        let p = ParamStore::zeros_like(&meta);
+        let y = pool.forward(&p, x.clone());
+        assert_eq!(y.dims, vec![1, 2, 2, 2]);
+        let xmean: f32 = x.data.iter().sum::<f32>() / x.numel() as f32;
+        let ymean: f32 = y.data.iter().sum::<f32>() / y.numel() as f32;
+        assert!((xmean - ymean).abs() < 1e-5);
+        // Backward of ones: every input gets 1/4.
+        let mut g = ParamStore::zeros_like(&meta);
+        let dy = Tensor::new(vec![1.0; 8], vec![1, 2, 2, 2]);
+        let dx = pool.backward(&p, &mut g, dy);
+        assert!(dx.data.iter().all(|&v| (v - 0.25).abs() < 1e-6));
+    }
+
+    #[test]
+    fn same_padding_matches_xla_rule() {
+        // H=5, k=3, s=2 → out=3, pad_total = (3-1)*2+3-5 = 2, before=1.
+        assert_eq!(out_dim(5, 3, 2, Padding::Same), (3, 1));
+        // H=32, k=3, s=1 → out=32, pad 1 before.
+        assert_eq!(out_dim(32, 3, 1, Padding::Same), (32, 1));
+        // Valid: H=28, k=5 → 24.
+        assert_eq!(out_dim(28, 5, 1, Padding::Valid), (24, 0));
+    }
+
+    #[test]
+    fn residual_identity_when_inner_zero() {
+        // Inner conv with zero weights → y = relu(x).
+        let fake_meta = crate::model::meta::ModelMeta {
+            name: "t",
+            layers: vec![
+                crate::model::meta::LayerMeta {
+                    name: "w".into(),
+                    shape: vec![3, 3, 2, 2],
+                    role: crate::model::meta::LayerRole::ConvKernel,
+                },
+                crate::model::meta::LayerMeta {
+                    name: "b".into(),
+                    shape: vec![2],
+                    role: crate::model::meta::LayerRole::Bias,
+                },
+            ],
+            input_shape: vec![4, 4, 2],
+            num_classes: 2,
+        };
+        let p = ParamStore::zeros_like(&fake_meta);
+        let mut rng = Pcg64::seeded(9);
+        let x = Tensor::new(rng.normal_vec(32), vec![1, 4, 4, 2]);
+        let mut res = Residual::new(vec![Box::new(Conv::new(
+            0,
+            1,
+            (3, 3, 2, 2),
+            1,
+            Padding::Same,
+        ))]);
+        let y = res.forward(&p, x.clone());
+        for (yv, xv) in y.data.iter().zip(&x.data) {
+            assert_eq!(*yv, xv.max(0.0));
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Dense NHWC tensor for the native trainer.
+
+/// Flat f32 tensor with explicit dims (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    /// Row-major data.
+    pub data: Vec<f32>,
+    /// Dimensions (e.g. `[B, H, W, C]` or `[B, F]`).
+    pub dims: Vec<usize>,
+}
+
+impl Tensor {
+    /// Wrap data + dims (shape-checked).
+    pub fn new(data: Vec<f32>, dims: Vec<usize>) -> Self {
+        assert_eq!(
+            data.len(),
+            dims.iter().product::<usize>(),
+            "Tensor::new: data {} != dims {:?}",
+            data.len(),
+            dims
+        );
+        Tensor { data, dims }
+    }
+
+    /// Zero tensor.
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        Tensor { data: vec![0.0; n], dims }
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Reshape in place (element count must match).
+    pub fn reshape(mut self, dims: Vec<usize>) -> Self {
+        assert_eq!(self.numel(), dims.iter().product::<usize>());
+        self.dims = dims;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basics() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.numel(), 4);
+        let r = t.reshape(vec![4]);
+        assert_eq!(r.dims, vec![4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape() {
+        let _ = Tensor::new(vec![1.0], vec![2]);
+    }
+}

@@ -1,0 +1,259 @@
+//! Artifact manifest: the typed index of everything `aot.py` produced.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::json::Json;
+use crate::model::meta::{LayerMeta, LayerRole};
+
+/// One lowered step function (train/grad/eval).
+#[derive(Clone, Debug)]
+pub struct StepEntry {
+    /// HLO text file name (relative to the artifacts dir).
+    pub file: String,
+    /// Truncated sha256 of the HLO text (staleness checks).
+    pub sha256_16: String,
+}
+
+/// One model's artifact set.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    /// Layer table as lowered (must match `model::meta::layer_table`).
+    pub layers: Vec<LayerMeta>,
+    /// Input feature shape.
+    pub input_shape: Vec<usize>,
+    /// Classes / vocab.
+    pub classes: usize,
+    /// Train batch size baked into the HLO.
+    pub batch: usize,
+    /// Eval batch size baked into the HLO.
+    pub eval_batch: usize,
+    /// Total parameter count.
+    pub total_params: usize,
+    /// `(params…, x, y, lr) -> (loss, params…)`.
+    pub train_step: StepEntry,
+    /// `(params…, x, y) -> (loss, grads…)`.
+    pub grad_step: StepEntry,
+    /// `(params…, x, y) -> (loss_sum, correct)`.
+    pub eval_step: StepEntry,
+}
+
+/// One lowered compression kernel.
+#[derive(Clone, Debug)]
+pub struct KernelEntry {
+    /// HLO text file name.
+    pub file: String,
+    /// `project` / `reconstruct` / `sketch`.
+    pub kind: String,
+    /// Row dimension `l`.
+    pub l: usize,
+    /// Column dimension `m`.
+    pub m: usize,
+    /// Rank `k` (or sketch width `s`).
+    pub rank: usize,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// Models by name.
+    pub models: std::collections::BTreeMap<String, ModelEntry>,
+    /// Kernels by key (e.g. `project.1152x128x32`).
+    pub kernels: std::collections::BTreeMap<String, KernelEntry>,
+}
+
+fn parse_role(s: &str) -> Result<LayerRole> {
+    Ok(match s {
+        "conv" => LayerRole::ConvKernel,
+        "dense" => LayerRole::DenseKernel,
+        "bias" => LayerRole::Bias,
+        "embed" => LayerRole::Embedding,
+        "norm" => LayerRole::Norm,
+        _ => return Err(anyhow!("unknown layer role '{s}'")),
+    })
+}
+
+fn parse_step(j: &Json) -> Result<StepEntry> {
+    Ok(StepEntry {
+        file: j
+            .req("file")
+            .map_err(|e| anyhow!(e))?
+            .as_str()
+            .ok_or_else(|| anyhow!("step file"))?
+            .to_string(),
+        sha256_16: j
+            .get("sha256_16")
+            .and_then(|x| x.as_str())
+            .unwrap_or_default()
+            .to_string(),
+    })
+}
+
+impl Manifest {
+    /// Load and validate `manifest.json`.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let body = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&body)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(body: &str) -> Result<Manifest> {
+        let j = Json::parse(body).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let mut out = Manifest::default();
+
+        if let Some(Json::Obj(models)) = j.get("models") {
+            for (name, mj) in models {
+                let mut layers = Vec::new();
+                for lj in mj
+                    .req("layers")
+                    .map_err(|e| anyhow!(e))?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("layers not array"))?
+                {
+                    let shape: Vec<usize> = lj
+                        .req("shape")
+                        .map_err(|e| anyhow!(e))?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("shape"))?
+                        .iter()
+                        .map(|x| x.as_usize().ok_or_else(|| anyhow!("shape dim")))
+                        .collect::<Result<_>>()?;
+                    layers.push(LayerMeta {
+                        name: lj
+                            .req("name")
+                            .map_err(|e| anyhow!(e))?
+                            .as_str()
+                            .ok_or_else(|| anyhow!("layer name"))?
+                            .to_string(),
+                        shape,
+                        role: parse_role(
+                            lj.req("role")
+                                .map_err(|e| anyhow!(e))?
+                                .as_str()
+                                .ok_or_else(|| anyhow!("role"))?,
+                        )?,
+                    });
+                }
+                let get_usize = |k: &str| -> Result<usize> {
+                    mj.req(k)
+                        .map_err(|e| anyhow!(e))?
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("{k} not usize"))
+                };
+                out.models.insert(
+                    name.clone(),
+                    ModelEntry {
+                        layers,
+                        input_shape: mj
+                            .req("input_shape")
+                            .map_err(|e| anyhow!(e))?
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("input_shape"))?
+                            .iter()
+                            .map(|x| x.as_usize().unwrap_or(0))
+                            .collect(),
+                        classes: get_usize("classes")?,
+                        batch: get_usize("batch")?,
+                        eval_batch: get_usize("eval_batch")?,
+                        total_params: get_usize("total_params")?,
+                        train_step: parse_step(mj.req("train_step").map_err(|e| anyhow!(e))?)?,
+                        grad_step: parse_step(mj.req("grad_step").map_err(|e| anyhow!(e))?)?,
+                        eval_step: parse_step(mj.req("eval_step").map_err(|e| anyhow!(e))?)?,
+                    },
+                );
+            }
+        }
+
+        if let Some(Json::Obj(kernels)) = j.get("kernels") {
+            for (key, kj) in kernels {
+                let rank = kj
+                    .get("k")
+                    .or_else(|| kj.get("s"))
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| anyhow!("kernel {key}: missing k/s"))?;
+                out.kernels.insert(
+                    key.clone(),
+                    KernelEntry {
+                        file: kj
+                            .req("file")
+                            .map_err(|e| anyhow!(e))?
+                            .as_str()
+                            .ok_or_else(|| anyhow!("kernel file"))?
+                            .to_string(),
+                        kind: kj
+                            .req("kind")
+                            .map_err(|e| anyhow!(e))?
+                            .as_str()
+                            .ok_or_else(|| anyhow!("kind"))?
+                            .to_string(),
+                        l: kj.req("l").map_err(|e| anyhow!(e))?.as_usize().unwrap_or(0),
+                        m: kj.req("m").map_err(|e| anyhow!(e))?.as_usize().unwrap_or(0),
+                        rank,
+                    },
+                );
+            }
+        }
+        Ok(out)
+    }
+
+    /// Find a kernel entry by kind and geometry.
+    pub fn find_kernel(&self, kind: &str, l: usize, m: usize) -> Option<&KernelEntry> {
+        self.kernels.values().find(|k| k.kind == kind && k.l == l && k.m == m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "lenet5": {
+          "layers": [
+            {"name": "conv1.kernel", "shape": [5,5,1,6], "role": "conv"},
+            {"name": "conv1.bias", "shape": [6], "role": "bias"}
+          ],
+          "input_shape": [28,28,1], "classes": 10,
+          "batch": 32, "eval_batch": 64, "total_params": 156,
+          "train_step": {"file": "lenet5.train_step.hlo.txt", "sha256_16": "ab"},
+          "grad_step": {"file": "lenet5.grad_step.hlo.txt", "sha256_16": "cd"},
+          "eval_step": {"file": "lenet5.eval_step.hlo.txt", "sha256_16": "ef"}
+        }
+      },
+      "kernels": {
+        "project.96x48x8": {"file": "kernel.project.96x48x8.hlo.txt",
+          "kind": "project", "l": 96, "m": 48, "k": 8},
+        "sketch.96x48x14": {"file": "kernel.sketch.96x48x14.hlo.txt",
+          "kind": "sketch", "l": 96, "m": 48, "s": 14}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let lenet = &m.models["lenet5"];
+        assert_eq!(lenet.layers.len(), 2);
+        assert_eq!(lenet.layers[0].shape, vec![5, 5, 1, 6]);
+        assert_eq!(lenet.layers[0].role, LayerRole::ConvKernel);
+        assert_eq!(lenet.batch, 32);
+        assert_eq!(lenet.train_step.file, "lenet5.train_step.hlo.txt");
+        assert_eq!(m.kernels["project.96x48x8"].rank, 8);
+        assert_eq!(m.kernels["sketch.96x48x14"].rank, 14);
+    }
+
+    #[test]
+    fn find_kernel_by_geometry() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.find_kernel("project", 96, 48).is_some());
+        assert!(m.find_kernel("project", 96, 49).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_role() {
+        let bad = SAMPLE.replace("\"conv\"", "\"frobnicator\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,247 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! Rust request path.
+//!
+//! The python side (`python/compile/aot.py`) runs once at build time and
+//! lowers every L2 graph / L1 Pallas kernel to HLO *text* under
+//! `artifacts/`, indexed by `manifest.json`. This module wraps the `xla`
+//! crate (PJRT C API, CPU plugin):
+//!
+//! ```text
+//! PjRtClient::cpu() → HloModuleProto::from_text_file → client.compile → execute
+//! ```
+//!
+//! Compilation happens lazily per artifact and is cached for the process
+//! lifetime ([`Runtime`] is cheap to clone; executables are shared).
+
+pub mod manifest;
+
+pub use manifest::{KernelEntry, Manifest, ModelEntry, StepEntry};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+/// A typed host tensor crossing the PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    /// f32 data + dims.
+    F32(Vec<f32>, Vec<usize>),
+    /// i32 data + dims.
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    /// f32 tensor.
+    pub fn f32(data: Vec<f32>, dims: &[usize]) -> Self {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        HostTensor::F32(data, dims.to_vec())
+    }
+
+    /// i32 tensor.
+    pub fn i32(data: Vec<i32>, dims: &[usize]) -> Self {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        HostTensor::I32(data, dims.to_vec())
+    }
+
+    /// Scalar f32.
+    pub fn scalar(v: f32) -> Self {
+        HostTensor::F32(vec![v], vec![])
+    }
+
+    /// Flat f32 view (errors for other dtypes).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    /// Consume into flat f32 data.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(v, _) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    /// First element as f32.
+    pub fn scalar_f32(&self) -> Result<f32> {
+        Ok(self.as_f32()?.first().copied().unwrap_or(f32::NAN))
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            HostTensor::F32(data, dims) => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    dims,
+                    bytes,
+                )
+                .map_err(|e| anyhow!("literal f32: {e:?}"))
+            }
+            HostTensor::I32(data, dims) => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    dims,
+                    bytes,
+                )
+                .map_err(|e| anyhow!("literal i32: {e:?}"))
+            }
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let v = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+                Ok(HostTensor::F32(v, dims))
+            }
+            xla::ElementType::S32 => {
+                let v = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
+                Ok(HostTensor::I32(v, dims))
+            }
+            other => Err(anyhow!("unsupported output dtype {other:?}")),
+        }
+    }
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+/// Shared handle to the PJRT CPU client + compiled-executable cache.
+#[derive(Clone)]
+pub struct Runtime {
+    inner: Arc<Inner>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Runtime {
+            inner: Arc::new(Inner {
+                client,
+                dir,
+                manifest,
+                cache: Mutex::new(HashMap::new()),
+            }),
+        })
+    }
+
+    /// The parsed manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.inner.manifest
+    }
+
+    /// PJRT platform name (e.g. "Host" for the CPU plugin).
+    pub fn platform(&self) -> String {
+        self.inner.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the artifact stored in `file`.
+    pub fn load(&self, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.inner.cache.lock().unwrap();
+            if let Some(exe) = cache.get(file) {
+                return Ok(exe.clone());
+            }
+        }
+        let path = self.inner.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.inner
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?,
+        );
+        self.inner.cache.lock().unwrap().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with host tensors; returns the tuple elements.
+    ///
+    /// All artifacts are lowered with `return_tuple=True`, so the single
+    /// output literal is decomposed into its elements.
+    pub fn call(&self, file: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let exe = self.load(file)?;
+        self.call_exe(&exe, inputs)
+    }
+
+    /// Execute an already-loaded executable.
+    pub fn call_exe(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let outputs = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let buffer = outputs
+            .first()
+            .and_then(|replica| replica.first())
+            .ok_or_else(|| anyhow!("empty execution result"))?;
+        let tuple = buffer
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.inner.dir)
+            .field("models", &self.inner.manifest.models.len())
+            .field("kernels", &self.inner.manifest.kernels.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checked() {
+        let t = HostTensor::f32(vec![1.0, 2.0], &[2]);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0]);
+        assert!(t.scalar_f32().is_ok());
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_bad_shape_panics() {
+        let _ = HostTensor::f32(vec![1.0, 2.0], &[3]);
+    }
+
+    #[test]
+    fn i32_tensor_not_f32() {
+        let t = HostTensor::i32(vec![1, 2], &[2]);
+        assert!(t.as_f32().is_err());
+    }
+}

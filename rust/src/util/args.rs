@@ -1,0 +1,247 @@
+//! Minimal declarative CLI argument parser (offline stand-in for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands; generates `--help` text from the declarations.
+
+use std::collections::BTreeMap;
+
+/// Declared option.
+#[derive(Clone, Debug)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// A declarative argument parser for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct ArgSpec {
+    name: &'static str,
+    about: &'static str,
+    opts: Vec<Opt>,
+    positionals: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl ArgSpec {
+    /// New spec for a command called `name`.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        ArgSpec { name, about, opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: Some(default.to_string()), is_flag: false });
+        self
+    }
+
+    /// Declare `--name <value>` with no default (optional).
+    pub fn opt_no_default(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: false });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Declare a required positional argument.
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    /// Render `--help` text.
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.opts {
+            let d = match &o.default {
+                Some(d) if !o.is_flag => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            let v = if o.is_flag { String::new() } else { " <v>".to_string() };
+            s.push_str(&format!("  --{}{v}  {}{d}\n", o.name, o.help));
+        }
+        s.push_str("  --help  print this message\n");
+        s
+    }
+
+    /// Parse a token list. Returns `Err` with a message (or the help text)
+    /// on malformed input / `--help`.
+    pub fn parse<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                out.values.insert(o.name.to_string(), d.clone());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (key, inline) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.help_text()))?;
+                if opt.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    out.flags.push(key);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it.next().ok_or_else(|| format!("--{key} expects a value"))?,
+                    };
+                    out.values.insert(key, v);
+                }
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        if out.positionals.len() < self.positionals.len() {
+            return Err(format!(
+                "missing positional <{}>\n\n{}",
+                self.positionals[out.positionals.len()].0,
+                self.help_text()
+            ));
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    /// String value of `--key` (panics if undeclared and defaulted nowhere).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Required string value.
+    pub fn str(&self, key: &str) -> &str {
+        self.get(key).unwrap_or_else(|| panic!("missing --{key}"))
+    }
+
+    /// Parse `--key` as `T`.
+    pub fn parse_as<T: std::str::FromStr>(&self, key: &str) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get(key).ok_or_else(|| format!("missing --{key}"))?;
+        raw.parse::<T>().map_err(|e| format!("--{key}={raw}: {e}"))
+    }
+
+    /// `usize` convenience.
+    pub fn usize(&self, key: &str) -> usize {
+        self.parse_as(key).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// `f64` convenience.
+    pub fn f64(&self, key: &str) -> f64 {
+        self.parse_as(key).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Whether a flag was passed.
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Positional argument by index.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("demo", "test command")
+            .opt("rounds", "10", "number of rounds")
+            .opt_no_default("seed", "rng seed")
+            .flag("verbose", "chatty output")
+            .positional("name", "experiment name")
+    }
+
+    fn sv(toks: &[&str]) -> Vec<String> {
+        toks.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse(sv(&["exp1"])).unwrap();
+        assert_eq!(a.usize("rounds"), 10);
+        assert_eq!(a.get("seed"), None);
+        assert!(!a.has_flag("verbose"));
+        assert_eq!(a.pos(0), Some("exp1"));
+    }
+
+    #[test]
+    fn key_value_and_equals() {
+        let a = spec().parse(sv(&["exp", "--rounds", "5", "--seed=99", "--verbose"])).unwrap();
+        assert_eq!(a.usize("rounds"), 5);
+        assert_eq!(a.str("seed"), "99");
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(spec().parse(sv(&["exp", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_positional_rejected() {
+        assert!(spec().parse(sv(&[])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(spec().parse(sv(&["exp", "--rounds"])).is_err());
+    }
+
+    #[test]
+    fn help_is_err_with_usage() {
+        let e = spec().parse(sv(&["--help"])).unwrap_err();
+        assert!(e.contains("USAGE"));
+        assert!(e.contains("--rounds"));
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(spec().parse(sv(&["exp", "--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn bad_parse_reported() {
+        let a = spec().parse(sv(&["exp", "--rounds", "abc"])).unwrap();
+        assert!(a.parse_as::<usize>("rounds").is_err());
+    }
+}

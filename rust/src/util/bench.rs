@@ -1,0 +1,208 @@
+//! Micro-benchmark harness (offline stand-in for `criterion`).
+//!
+//! `cargo bench` targets in `rust/benches/` declare `harness = false` and
+//! drive this module directly. The harness does warmup, adaptive iteration
+//! counts targeting a fixed measurement budget, and reports median /
+//! mean ± stddev / min over sampled batches, plus optional throughput.
+//!
+//! Output is both human-readable and machine-parseable (one `BENCHLINE ...`
+//! per benchmark), which the perf tooling in EXPERIMENTS.md consumes.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's aggregated statistics (nanoseconds per iteration).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    /// Benchmark id.
+    pub name: String,
+    /// Median ns/iter over samples.
+    pub median_ns: f64,
+    /// Mean ns/iter.
+    pub mean_ns: f64,
+    /// Standard deviation of sample means.
+    pub stddev_ns: f64,
+    /// Fastest sample.
+    pub min_ns: f64,
+    /// Items/bytes processed per iteration, if declared (for throughput).
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl Stats {
+    /// Human-readable single line.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "{:<44} median {:>12}  mean {:>12} ± {:>10}  min {:>12}",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.stddev_ns),
+            fmt_ns(self.min_ns),
+        );
+        if let Some((amount, unit)) = self.throughput {
+            let per_sec = amount / (self.median_ns * 1e-9);
+            s.push_str(&format!("  {:>12}/s", fmt_qty(per_sec, unit)));
+        }
+        s
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn fmt_qty(x: f64, unit: &str) -> String {
+    if x >= 1e9 {
+        format!("{:.2} G{unit}", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2} M{unit}", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2} K{unit}", x / 1e3)
+    } else {
+        format!("{x:.1} {unit}")
+    }
+}
+
+/// Benchmark runner for a suite of related benches.
+pub struct Bencher {
+    suite: String,
+    warmup: Duration,
+    measure: Duration,
+    samples: usize,
+    results: Vec<Stats>,
+}
+
+impl Bencher {
+    /// New suite. Budgets default to 0.5 s warmup + 1.5 s measurement per
+    /// bench, 12 samples; override with [`Bencher::budget`].
+    pub fn new(suite: &str) -> Self {
+        // Honor a quick mode for CI-ish runs: GRADESTC_BENCH_FAST=1
+        let fast = std::env::var("GRADESTC_BENCH_FAST").ok().as_deref() == Some("1");
+        Bencher {
+            suite: suite.to_string(),
+            warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(500) },
+            measure: if fast { Duration::from_millis(200) } else { Duration::from_millis(1500) },
+            samples: if fast { 5 } else { 12 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Override time budgets.
+    pub fn budget(mut self, warmup: Duration, measure: Duration, samples: usize) -> Self {
+        self.warmup = warmup;
+        self.measure = measure;
+        self.samples = samples.max(3);
+        self
+    }
+
+    /// Run one benchmark: `f` is called repeatedly; it should perform one
+    /// unit of work and return a value (use [`std::hint::black_box`] inside
+    /// if needed — the harness black-boxes the return).
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &Stats {
+        self.bench_with_throughput(name, None, move || {
+            std::hint::black_box(f());
+        })
+    }
+
+    /// Like [`Bencher::bench`] but annotates items-per-iteration for
+    /// throughput reporting, e.g. `Some((bytes as f64, "B"))`.
+    pub fn bench_with_throughput(
+        &mut self,
+        name: &str,
+        throughput: Option<(f64, &'static str)>,
+        mut f: impl FnMut(),
+    ) -> &Stats {
+        // Warmup & calibration: find iters/sample so one sample ~ measure/samples.
+        let t0 = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while t0.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        let sample_budget = self.measure.as_secs_f64() / self.samples as f64;
+        let iters = ((sample_budget / per_iter).ceil() as u64).max(1);
+
+        let mut sample_means: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let s = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            sample_means.push(s.elapsed().as_secs_f64() * 1e9 / iters as f64);
+        }
+        sample_means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sample_means[sample_means.len() / 2];
+        let mean = sample_means.iter().sum::<f64>() / sample_means.len() as f64;
+        let var = sample_means.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / sample_means.len() as f64;
+        let stats = Stats {
+            name: format!("{}/{}", self.suite, name),
+            median_ns: median,
+            mean_ns: mean,
+            stddev_ns: var.sqrt(),
+            min_ns: sample_means[0],
+            throughput,
+        };
+        println!("{}", stats.render());
+        println!(
+            "BENCHLINE {} median_ns={:.1} mean_ns={:.1} stddev_ns={:.1} min_ns={:.1}",
+            stats.name, stats.median_ns, stats.mean_ns, stats.stddev_ns, stats.min_ns
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_plausible() {
+        let mut b = Bencher::new("t").budget(
+            Duration::from_millis(10),
+            Duration::from_millis(30),
+            4,
+        );
+        let s = b.bench("noop_sum", || (0..100u64).sum::<u64>()).clone();
+        assert!(s.median_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns);
+    }
+
+    #[test]
+    fn throughput_rendered() {
+        let mut b = Bencher::new("t").budget(
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+            3,
+        );
+        let s = b
+            .bench_with_throughput("copy", Some((1024.0, "B")), || {
+                let v = vec![0u8; 1024];
+                std::hint::black_box(v);
+            })
+            .clone();
+        assert!(s.render().contains("/s"));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_qty(2e9, "B").contains("G"));
+    }
+}

@@ -1,0 +1,17 @@
+//! General-purpose substrates the crate owns outright.
+//!
+//! The build environment is fully offline, so widely-used crates
+//! (`rand`, `clap`, `criterion`, `proptest`, `rayon`) are unavailable;
+//! this module provides the small, tested subsets we actually need:
+//!
+//! * [`rng`] — deterministic PCG64 RNG with Gaussian/Dirichlet sampling.
+//! * [`args`] — a minimal declarative CLI argument parser.
+//! * [`bench`] — a micro-benchmark harness (used by `cargo bench` targets).
+//! * [`prop`] — a property-based testing mini-framework with shrinking.
+//! * [`pool`] — a scoped worker pool over std threads.
+
+pub mod args;
+pub mod bench;
+pub mod pool;
+pub mod prop;
+pub mod rng;

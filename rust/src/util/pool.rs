@@ -1,0 +1,104 @@
+//! Scoped data-parallel helpers over std threads (offline stand-in for
+//! `rayon`).
+//!
+//! The FL simulator fans client work (local training, compression) across a
+//! fixed worker count; [`parallel_map`] is the single primitive everything
+//! uses. Work is chunked statically — client workloads are homogeneous, so
+//! static chunking beats a work-stealing queue we would otherwise have to
+//! build.
+
+/// Map `f` over `items` using up to `workers` threads, preserving order.
+///
+/// Falls back to a plain sequential map when `workers <= 1` or the input is
+/// tiny (threads cost more than they save).
+pub fn parallel_map<T, R, F>(workers: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if workers <= 1 || n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let workers = workers.min(n);
+    // Pre-size the output; each worker writes disjoint slots.
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+
+    // Hand each worker a contiguous (index, item) chunk.
+    let mut indexed: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let chunk = n.div_ceil(workers);
+    let out_slots = &mut out;
+
+    std::thread::scope(|scope| {
+        let mut remaining: &mut [Option<R>] = out_slots;
+        let mut handled = 0usize;
+        let mut chunks: Vec<(Vec<(usize, T)>, &mut [Option<R>])> = Vec::new();
+        while !indexed.is_empty() {
+            let take = chunk.min(indexed.len());
+            let batch: Vec<(usize, T)> = indexed.drain(..take).collect();
+            let (head, tail) = remaining.split_at_mut(take);
+            remaining = tail;
+            handled += take;
+            chunks.push((batch, head));
+        }
+        debug_assert_eq!(handled, n);
+        for (batch, slots) in chunks {
+            let f = &f;
+            scope.spawn(move || {
+                for ((_, item), slot) in batch.into_iter().zip(slots.iter_mut()) {
+                    *slot = Some(f(item));
+                }
+            });
+        }
+    });
+
+    out.into_iter().map(|r| r.expect("worker filled every slot")).collect()
+}
+
+/// Number of workers to use by default: respects `GRADESTC_WORKERS`,
+/// otherwise available parallelism (capped at 16).
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("GRADESTC_WORKERS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let v: Vec<usize> = (0..1000).collect();
+        let r = parallel_map(8, v, |x| x * 2);
+        assert_eq!(r, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_fallback() {
+        let r = parallel_map(1, vec![1, 2, 3], |x| x + 1);
+        assert_eq!(r, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let r: Vec<i32> = parallel_map(4, Vec::<i32>::new(), |x| x);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let r = parallel_map(16, vec![5, 6], |x| x);
+        assert_eq!(r, vec![5, 6]);
+    }
+
+    #[test]
+    fn default_workers_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

@@ -1,0 +1,227 @@
+//! Property-based testing mini-framework (offline stand-in for `proptest`).
+//!
+//! Provides seeded generators over the domains the crate's invariants live
+//! in (matrix shapes, f32 vectors, layer configs) plus a [`check`] driver
+//! with greedy shrinking on failure. Used by the L3 property tests on
+//! coordinator/compressor invariants (routing, accounting, basis
+//! orthogonality, codec round-trips).
+
+use crate::util::rng::Pcg64;
+
+/// A value generator: produces a case from RNG, and can shrink a failing
+/// case toward smaller ones.
+pub trait Gen {
+    /// Generated value type.
+    type Value: Clone + std::fmt::Debug;
+    /// Draw one value.
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+    /// Candidate smaller versions of `v` (tried in order). Default: none.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` against `cases` generated values; on failure, shrink greedily
+/// and panic with the minimal counterexample.
+pub fn check<G: Gen>(name: &str, seed: u64, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Pcg64::new(seed, stream_of(name));
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if prop(&v) {
+            continue;
+        }
+        // Shrink.
+        let mut minimal = v.clone();
+        let mut improved = true;
+        let mut steps = 0;
+        while improved && steps < 1000 {
+            improved = false;
+            for cand in gen.shrink(&minimal) {
+                steps += 1;
+                if !prop(&cand) {
+                    minimal = cand;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+        panic!(
+            "property '{name}' failed at case {case} (seed {seed}).\n\
+             original: {v:?}\nminimal after {steps} shrink steps: {minimal:?}"
+        );
+    }
+}
+
+/// Tiny stable FNV-1a hash so each property gets its own RNG stream.
+fn stream_of(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Integers in `[lo, hi]`, shrinking toward `lo`.
+pub struct IntRange {
+    /// Inclusive lower bound.
+    pub lo: usize,
+    /// Inclusive upper bound.
+    pub hi: usize,
+}
+
+impl Gen for IntRange {
+    type Value = usize;
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        self.lo + rng.index(self.hi - self.lo + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// f32 vectors with length in `[min_len, max_len]`, entries ~ scale·N(0,1);
+/// shrinks by halving length and zeroing entries.
+pub struct VecF32 {
+    /// Minimum length.
+    pub min_len: usize,
+    /// Maximum length.
+    pub max_len: usize,
+    /// Entry scale.
+    pub scale: f32,
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+    fn generate(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let n = self.min_len + rng.index(self.max_len - self.min_len + 1);
+        let mut v = rng.normal_vec(n);
+        v.iter_mut().for_each(|x| *x *= self.scale);
+        v
+    }
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            let half = (v.len() / 2).max(self.min_len);
+            out.push(v[..half].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        if v.iter().any(|&x| x != 0.0) {
+            let mut z = v.clone();
+            for x in z.iter_mut() {
+                *x = 0.0;
+            }
+            out.push(z);
+            // Zero just the first half: often isolates the offending entry.
+            let mut hz = v.clone();
+            for x in hz.iter_mut().take(v.len() / 2) {
+                *x = 0.0;
+            }
+            out.push(hz);
+        }
+        out
+    }
+}
+
+/// Pairs of independent generators.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = Vec::new();
+        for a in self.0.shrink(&v.0) {
+            out.push((a, v.1.clone()));
+        }
+        for b in self.1.shrink(&v.1) {
+            out.push((v.0.clone(), b));
+        }
+        out
+    }
+}
+
+/// Matrix-shape generator `(rows, cols)` with bounded area, shrinking both
+/// dims; used heavily by linalg/compressor properties.
+pub struct ShapeGen {
+    /// Minimum of each dimension.
+    pub min_dim: usize,
+    /// Maximum of each dimension.
+    pub max_dim: usize,
+}
+
+impl Gen for ShapeGen {
+    type Value = (usize, usize);
+    fn generate(&self, rng: &mut Pcg64) -> (usize, usize) {
+        let r = IntRange { lo: self.min_dim, hi: self.max_dim };
+        (r.generate(rng), r.generate(rng))
+    }
+    fn shrink(&self, v: &(usize, usize)) -> Vec<(usize, usize)> {
+        let r = IntRange { lo: self.min_dim, hi: self.max_dim };
+        let mut out = Vec::new();
+        for a in r.shrink(&v.0) {
+            out.push((a, v.1));
+        }
+        for b in r.shrink(&v.1) {
+            out.push((v.0, b));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        check("ints_in_range", 1, 200, &IntRange { lo: 3, hi: 9 }, |&v| (3..=9).contains(&v));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails'")]
+    fn failing_property_panics_with_counterexample() {
+        check("always_fails", 2, 10, &IntRange { lo: 0, hi: 100 }, |_| false);
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // Property "v < 50" fails for v >= 50; minimal shrink should land at
+        // exactly 50 via lo/midpoint/decrement moves. We capture the panic
+        // message and check the minimal value.
+        let res = std::panic::catch_unwind(|| {
+            check("lt_50", 3, 500, &IntRange { lo: 0, hi: 1000 }, |&v| v < 50);
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("minimal"), "{msg}");
+        // The minimal counterexample should be 50.
+        assert!(msg.contains("steps: 50"), "{msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = VecF32 { min_len: 2, max_len: 5, scale: 1.0 };
+        let mut rng = Pcg64::seeded(7);
+        for _ in 0..100 {
+            let v = g.generate(&mut rng);
+            assert!((2..=5).contains(&v.len()));
+        }
+    }
+
+    #[test]
+    fn pair_shrinks_componentwise() {
+        let g = Pair(IntRange { lo: 0, hi: 10 }, IntRange { lo: 0, hi: 10 });
+        let shr = g.shrink(&(5, 7));
+        assert!(shr.iter().any(|&(a, b)| a < 5 && b == 7));
+        assert!(shr.iter().any(|&(a, b)| a == 5 && b < 7));
+    }
+}

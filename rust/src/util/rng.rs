@@ -1,0 +1,292 @@
+//! Deterministic random number generation.
+//!
+//! A PCG64 (DXSM) generator plus the distributions the simulator needs:
+//! uniform floats, standard normals (Box–Muller), gamma/Dirichlet (for
+//! non-IID data partitioning), permutations and subset sampling.
+//!
+//! Everything in the repository that consumes randomness is seeded through
+//! this type, so whole experiments are bit-reproducible from a single seed.
+//! The same generator is re-implemented in `python/compile/synthdata.py`
+//! (tests assert cross-language agreement on the first outputs).
+
+/// PCG64-DXSM pseudo-random generator.
+///
+/// 128-bit state / 128-bit increment variant with the DXSM output mixer —
+/// the same generator family NumPy uses by default. Deterministic,
+/// splittable via [`Pcg64::fork`].
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id.
+    ///
+    /// Distinct `(seed, stream)` pairs produce statistically independent
+    /// sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: (((stream as u128) << 1) | 1) ^ 0x5851_f42d_4c95_7f2d_1405_7b7e_f767_814f,
+        };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Seed-only constructor (stream 0).
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive an independent child generator; `tag` distinguishes children.
+    ///
+    /// Used to hand each simulated client / layer its own stream without
+    /// coupling their sequences.
+    pub fn fork(&self, tag: u64) -> Self {
+        // Mix the parent's state into the child seed so forks of forks stay
+        // decorrelated.
+        let s = (self.state >> 64) as u64 ^ (self.state as u64);
+        Self::new(s.wrapping_add(0x9e37_79b9_7f4a_7c15).wrapping_mul(tag | 1), tag)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        // DXSM output function on the *pre-advance* state.
+        let mut hi = (self.state >> 64) as u64;
+        let lo = (self.state as u64) | 1;
+        hi ^= hi >> 32;
+        hi = hi.wrapping_mul(0xda94_2042_e4dd_58b5);
+        hi ^= hi >> 48;
+        hi = hi.wrapping_mul(lo);
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        hi
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / 9007199254740992.0)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / 16777216.0)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire rejection, unbiased).
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform index in `[0, n)`.
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (single value; pairs are not cached so
+    /// the stream position stays easy to reason about cross-language).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// `n` standard-normal f32 samples.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal() as f32).collect()
+    }
+
+    /// Marsaglia–Tsang gamma sampler, `shape > 0`, unit scale.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            let u = self.f64().max(1e-300);
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.max(1e-300).ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln())
+            {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Sample from `Dirichlet(alpha * 1_k)` — symmetric concentration.
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..k).map(|_| self.gamma(alpha)).collect();
+        let s: f64 = v.iter().sum();
+        if s <= 0.0 {
+            // Degenerate draw (all ~0): put mass on a random coordinate, the
+            // limiting behaviour of Dirichlet as alpha -> 0.
+            let i = self.index(k);
+            v.iter_mut().for_each(|x| *x = 0.0);
+            v[i] = 1.0;
+            return v;
+        }
+        v.iter_mut().for_each(|x| *x /= s);
+        v
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices out of `[0, n)` (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.index(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::new(42, 7);
+        let mut b = Pcg64::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn fork_decorrelates() {
+        let root = Pcg64::seeded(1);
+        let mut c1 = root.fork(1);
+        let mut c2 = root.fork(2);
+        let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::seeded(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_unbiased_small() {
+        let mut r = Pcg64::seeded(9);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            // each bucket ~10k; allow 5% tolerance
+            assert!((9_500..10_500).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seeded(11);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Pcg64::seeded(13);
+        for &shape in &[0.3, 1.0, 2.5, 10.0] {
+            let n = 40_000;
+            let m: f64 = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!((m - shape).abs() / shape < 0.07, "shape={shape} mean={m}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Pcg64::seeded(17);
+        for &a in &[0.1, 0.5, 5.0] {
+            let v = r.dirichlet(a, 10);
+            let s: f64 = v.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(v.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Pcg64::seeded(19);
+        let s = r.sample_indices(50, 10);
+        let mut t = s.clone();
+        t.sort_unstable();
+        t.dedup();
+        assert_eq!(t.len(), 10);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seeded(23);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+    }
+}

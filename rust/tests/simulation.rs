@@ -1,0 +1,178 @@
+//! Integration tests over the full coordinator (native backend: hermetic,
+//! no artifacts needed).
+
+use gradestc::config::{
+    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
+};
+use gradestc::coordinator::Simulation;
+
+fn base_cfg(name: &str, comp: CompressorKind) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.into(),
+        dataset: DatasetKind::SynthMnist,
+        model: gradestc::config::ModelKind::LeNet5,
+        distribution: DataDistribution::Iid,
+        num_clients: 4,
+        participation: 1.0,
+        rounds: 6,
+        local_epochs: 1,
+        batch_size: 32,
+        lr: 0.05,
+        samples_per_client: 128,
+        test_samples: 128,
+        eval_every: 1,
+        threshold_frac: 0.9,
+        compressor: comp,
+        seed: 11,
+        use_xla: false,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+#[test]
+fn fedavg_learns() {
+    let mut sim = Simulation::build(base_cfg("it-fedavg", CompressorKind::None)).unwrap();
+    let report = sim.run().unwrap();
+    assert!(
+        report.best_accuracy > 0.5,
+        "fedavg best acc {}",
+        report.best_accuracy
+    );
+    // First and last eval must show improvement.
+    let rounds = sim.recorder.rounds();
+    assert!(rounds.last().unwrap().test_accuracy > rounds[0].test_accuracy);
+}
+
+#[test]
+fn every_compressor_trains_end_to_end() {
+    let comps = vec![
+        CompressorKind::TopK { frac: 0.1 },
+        CompressorKind::FedPaq { bits: 8 },
+        CompressorKind::SignSgd,
+        CompressorKind::SvdFed { k: 8, gamma: 0.6 },
+        CompressorKind::FedQClip { bits: 8, clip: 2.5 },
+        CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+        CompressorKind::GradEstc(GradEstcParams {
+            k: 8,
+            error_feedback: true,
+            ..Default::default()
+        }),
+    ];
+    for comp in comps {
+        let name = comp.name().to_string();
+        let mut cfg = base_cfg(&format!("it-{name}"), comp);
+        cfg.rounds = 5;
+        let mut sim = Simulation::build(cfg).unwrap();
+        let report = sim.run().unwrap();
+        assert!(
+            report.best_accuracy > 0.35,
+            "{name}: best acc {} too low",
+            report.best_accuracy
+        );
+        assert!(report.total_uplink > 0);
+    }
+}
+
+#[test]
+fn gradestc_beats_fedavg_on_uplink_with_comparable_accuracy() {
+    let mut fa = Simulation::build(base_cfg("it-cmp-fedavg", CompressorKind::None)).unwrap();
+    let r_fa = fa.run().unwrap();
+    let mut ge = Simulation::build(base_cfg(
+        "it-cmp-gradestc",
+        CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+    ))
+    .unwrap();
+    let r_ge = ge.run().unwrap();
+    assert!(
+        (r_ge.total_uplink as f64) < 0.5 * r_fa.total_uplink as f64,
+        "gradestc uplink {} not ≪ fedavg {}",
+        r_ge.total_uplink,
+        r_fa.total_uplink
+    );
+    assert!(
+        r_ge.best_accuracy > r_fa.best_accuracy - 0.08,
+        "gradestc acc {} vs fedavg {}",
+        r_ge.best_accuracy,
+        r_fa.best_accuracy
+    );
+}
+
+#[test]
+fn uplink_accounting_consistent() {
+    let mut sim = Simulation::build(base_cfg(
+        "it-accounting",
+        CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+    ))
+    .unwrap();
+    let report = sim.run().unwrap();
+    // Ledger total == Σ per-round records == report total.
+    let per_round: u64 = sim.recorder.rounds().iter().map(|r| r.uplink_bytes).sum();
+    assert_eq!(per_round, report.total_uplink);
+    assert_eq!(sim.total_uplink(), report.total_uplink);
+    // Downlink: broadcast × participants × rounds.
+    let expect_down = (4 * sim.global.numel() as u64) * 4 * 6;
+    let down: u64 = sim.recorder.rounds().iter().map(|r| r.downlink_bytes).sum();
+    assert_eq!(down, expect_down);
+}
+
+#[test]
+fn partial_participation_runs() {
+    let mut cfg = base_cfg("it-partial", CompressorKind::None);
+    cfg.num_clients = 10;
+    cfg.participation = 0.3;
+    cfg.rounds = 4;
+    let mut sim = Simulation::build(cfg).unwrap();
+    let report = sim.run().unwrap();
+    // 3 of 10 clients → uplink ≈ 3 × model bytes per round.
+    let model_bytes = 4 * sim.global.numel() as u64;
+    let per_round = sim.recorder.rounds()[0].uplink_bytes;
+    let overhead = 4 * 10 * 8; // payload frame headers
+    assert!(per_round <= 3 * model_bytes + overhead, "{per_round} vs {model_bytes}");
+    assert!(report.total_uplink > 0);
+}
+
+#[test]
+fn noniid_degrades_gracefully() {
+    let mut iid = base_cfg("it-iid", CompressorKind::None);
+    iid.rounds = 5;
+    let mut skew = iid.clone();
+    skew.name = "it-skew".into();
+    skew.distribution = DataDistribution::Dirichlet(0.1);
+    let r_iid = Simulation::build(iid).unwrap().run().unwrap();
+    let r_skew = Simulation::build(skew).unwrap().run().unwrap();
+    // Non-IID must still learn (well above chance), even if slower.
+    assert!(r_skew.best_accuracy > 0.3, "non-iid acc {}", r_skew.best_accuracy);
+    assert!(r_iid.best_accuracy >= r_skew.best_accuracy - 0.05);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let run = || {
+        let mut sim = Simulation::build(base_cfg(
+            "it-det",
+            CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+        ))
+        .unwrap();
+        sim.run().unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.total_uplink, b.total_uplink);
+    assert!((a.best_accuracy - b.best_accuracy).abs() < 1e-12);
+}
+
+#[test]
+fn config_roundtrips_through_json_and_rebuilds() {
+    let cfg = base_cfg(
+        "it-json",
+        CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+    );
+    let j = cfg.to_json().to_pretty();
+    let parsed =
+        ExperimentConfig::from_json(&gradestc::config::Json::parse(&j).unwrap()).unwrap();
+    assert_eq!(cfg, parsed);
+    // And the parsed config still builds a working simulation.
+    let mut sim = Simulation::build(parsed).unwrap();
+    let rec = sim.step(0).unwrap();
+    assert!(rec.train_loss.is_finite());
+}

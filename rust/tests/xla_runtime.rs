@@ -1,0 +1,204 @@
+//! Integration: AOT artifacts → PJRT load/execute → agreement with the
+//! native substrate.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise, so
+//! plain `cargo test` still passes in a fresh checkout).
+
+use gradestc::config::ModelKind;
+use gradestc::coordinator::trainer::{Trainer, XlaTrainer};
+use gradestc::data::synth::{SynthGenerator, SynthSpec};
+use gradestc::linalg::{matmul, matmul_at_b, Mat};
+use gradestc::model::meta::layer_table;
+use gradestc::model::params::ParamStore;
+use gradestc::nn::NativeTrainer;
+use gradestc::runtime::{HostTensor, Runtime};
+use gradestc::util::rng::Pcg64;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("GRADESTC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at '{dir}' — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifest_matches_rust_layer_tables() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    for (name, entry) in &rt.manifest().models {
+        let kind = match name.as_str() {
+            "lenet5" => ModelKind::LeNet5,
+            "resnetlite" => ModelKind::ResNetLite,
+            "alexnetlite" => ModelKind::AlexNetLite,
+            "tinytransformer" => ModelKind::TinyTransformer,
+            other => panic!("unknown model in manifest: {other}"),
+        };
+        let meta = layer_table(kind);
+        assert_eq!(entry.layers.len(), meta.layers.len(), "{name}: tensor count");
+        for (a, b) in entry.layers.iter().zip(&meta.layers) {
+            assert_eq!(a.name, b.name, "{name}");
+            assert_eq!(a.shape, b.shape, "{name}/{}", a.name);
+            assert_eq!(a.role, b.role, "{name}/{}", a.name);
+        }
+        assert_eq!(entry.total_params, meta.total_params(), "{name}");
+    }
+}
+
+#[test]
+fn pallas_project_kernel_matches_native_linalg() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let Some(entry) = rt.manifest().find_kernel("project", 96, 48) else {
+        panic!("test kernel project.96x48x8 missing from manifest");
+    };
+    let (l, m, k) = (entry.l, entry.m, entry.rank);
+    let mut rng = Pcg64::seeded(11);
+    // Orthonormal M via QR of a Gaussian.
+    let raw = Mat::randn(l, k, &mut rng);
+    let (q, _) = gradestc::linalg::householder_qr(&raw);
+    let g = Mat::randn(l, m, &mut rng);
+
+    let out = rt
+        .call(
+            &entry.file,
+            &[
+                HostTensor::f32(q.as_slice().to_vec(), &[l, k]),
+                HostTensor::f32(g.as_slice().to_vec(), &[l, m]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 2, "project kernel returns (A, E)");
+    let a_xla = Mat::from_vec(k, m, out[0].as_f32().unwrap().to_vec());
+    let e_xla = Mat::from_vec(l, m, out[1].as_f32().unwrap().to_vec());
+
+    let a_native = matmul_at_b(&q, &g);
+    let e_native = g.sub(&matmul(&q, &a_native));
+    assert!(
+        a_xla.max_abs_diff(&a_native) < 1e-3,
+        "A diff {}",
+        a_xla.max_abs_diff(&a_native)
+    );
+    assert!(
+        e_xla.max_abs_diff(&e_native) < 1e-3,
+        "E diff {}",
+        e_xla.max_abs_diff(&e_native)
+    );
+}
+
+#[test]
+fn pallas_reconstruct_kernel_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let entry = rt.manifest().find_kernel("reconstruct", 96, 48).unwrap();
+    let (l, m, k) = (entry.l, entry.m, entry.rank);
+    let mut rng = Pcg64::seeded(13);
+    let mmat = Mat::randn(l, k, &mut rng);
+    let a = Mat::randn(k, m, &mut rng);
+    let out = rt
+        .call(
+            &entry.file,
+            &[
+                HostTensor::f32(mmat.as_slice().to_vec(), &[l, k]),
+                HostTensor::f32(a.as_slice().to_vec(), &[k, m]),
+            ],
+        )
+        .unwrap();
+    let ghat = Mat::from_vec(l, m, out[0].as_f32().unwrap().to_vec());
+    let native = matmul(&mmat, &a);
+    assert!(ghat.max_abs_diff(&native) < 1e-3);
+}
+
+#[test]
+fn sketch_kernel_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let entry = rt.manifest().find_kernel("sketch", 96, 48).unwrap();
+    let (l, m, s) = (entry.l, entry.m, entry.rank);
+    let mut rng = Pcg64::seeded(17);
+    let e = Mat::randn(l, m, &mut rng);
+    let omega = Mat::randn(m, s, &mut rng);
+    let out = rt
+        .call(
+            &entry.file,
+            &[
+                HostTensor::f32(e.as_slice().to_vec(), &[l, m]),
+                HostTensor::f32(omega.as_slice().to_vec(), &[m, s]),
+            ],
+        )
+        .unwrap();
+    let y = Mat::from_vec(l, s, out[0].as_f32().unwrap().to_vec());
+    let native = matmul(&e, &omega);
+    assert!(y.max_abs_diff(&native) < 1e-2, "diff {}", y.max_abs_diff(&native));
+}
+
+/// The decisive cross-check: the XLA train step and the native Rust
+/// trainer implement the same semantics. One SGD batch from identical
+/// state must produce near-identical loss and parameters.
+#[test]
+fn xla_and_native_trainers_agree_on_lenet() {
+    let Some(dir) = artifacts_dir() else { return };
+    let meta = layer_table(ModelKind::LeNet5);
+    let xla = XlaTrainer::new(&dir, ModelKind::LeNet5, &meta).unwrap();
+    let native = NativeTrainer::new(ModelKind::LeNet5, &meta).unwrap();
+
+    let spec = SynthSpec::for_kind(gradestc::config::DatasetKind::SynthMnist);
+    let gen = SynthGenerator::new(spec, 21);
+    let mut rng = Pcg64::seeded(22);
+    let data = gen.generate(xla.train_batch(), &mut rng);
+    let params = ParamStore::init(&meta, &Pcg64::seeded(23));
+
+    // Same rng seed → identical batch schedule in both backends.
+    let (p_xla, loss_xla) = xla
+        .local_train(&params, &data, 1, xla.train_batch(), 0.05, &mut Pcg64::seeded(9))
+        .unwrap();
+    let (p_nat, loss_nat) = native
+        .local_train(&params, &data, 1, xla.train_batch(), 0.05, &mut Pcg64::seeded(9))
+        .unwrap();
+
+    assert!(
+        (loss_xla - loss_nat).abs() < 1e-3 * (1.0 + loss_nat.abs()),
+        "loss: xla {loss_xla} native {loss_nat}"
+    );
+    for i in 0..meta.layers.len() {
+        let worst = p_xla
+            .tensor(i)
+            .iter()
+            .zip(p_nat.tensor(i))
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(worst < 5e-4, "tensor {} ({}) diff {worst}", i, meta.layers[i].name);
+    }
+
+    // Evaluation agreement.
+    let test = gen.generate(128, &mut rng);
+    let (el_x, ea_x) = xla.evaluate(&p_xla, &test).unwrap();
+    let (el_n, ea_n) = native.evaluate(&p_nat, &test).unwrap();
+    assert!((el_x - el_n).abs() < 1e-2 * (1.0 + el_n.abs()), "{el_x} vs {el_n}");
+    assert!((ea_x - ea_n).abs() < 0.03, "{ea_x} vs {ea_n}");
+}
+
+#[test]
+fn grad_step_matches_native_grads() {
+    let Some(dir) = artifacts_dir() else { return };
+    let meta = layer_table(ModelKind::LeNet5);
+    let xla = XlaTrainer::new(&dir, ModelKind::LeNet5, &meta).unwrap();
+    let native = NativeTrainer::new(ModelKind::LeNet5, &meta).unwrap();
+    let spec = SynthSpec::for_kind(gradestc::config::DatasetKind::SynthMnist);
+    let gen = SynthGenerator::new(spec, 31);
+    let mut rng = Pcg64::seeded(32);
+    let data = gen.generate(xla.train_batch(), &mut rng);
+    let params = ParamStore::init(&meta, &Pcg64::seeded(33));
+
+    let (gx, lx) = xla.grads(&params, &data, 32, &mut Pcg64::seeded(4)).unwrap();
+    let (gn, ln) = native.grads(&params, &data, 32, &mut Pcg64::seeded(4)).unwrap();
+    assert!((lx - ln).abs() < 1e-3 * (1.0 + ln.abs()));
+    for (i, (a, b)) in gx.iter().zip(&gn).enumerate() {
+        let worst =
+            a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        let scale = b.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!(worst < 1e-3 + 1e-2 * scale, "tensor {i}: diff {worst} scale {scale}");
+    }
+}
