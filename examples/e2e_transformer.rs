@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
         seed: 42,
         use_xla: true, // the transformer is XLA-only: this IS the e2e proof
         artifacts_dir: "artifacts".into(),
+        workers: 1, // XLA lanes run on the coordinator thread anyway
     };
     println!(
         "e2e: TinyTransformer ({} params) on synthetic byte corpus, \

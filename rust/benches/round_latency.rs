@@ -1,8 +1,11 @@
 //! End-to-end round latency: one full FL round (local training via the
 //! XLA artifacts when present, compression, decompression, aggregation,
-//! evaluation skipped) per model — the §Perf L3 headline number.
+//! evaluation skipped) per model — the §Perf L3 headline number — plus a
+//! worker-count sweep (1/2/4/8) over a 20-client GradESTC round that
+//! measures the round engine's parallel speedup.
 //!
-//! Run with `cargo bench --bench round_latency` after `make artifacts`.
+//! Run with `cargo bench --bench round_latency` (`make artifacts` first to
+//! include the XLA cases; the native cases and the sweep always run).
 
 use gradestc::config::{
     CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
@@ -31,6 +34,7 @@ fn cfg(model: ModelKind, dataset: DatasetKind, comp: CompressorKind, xla: bool) 
         seed: 7,
         use_xla: xla,
         artifacts_dir: "artifacts".into(),
+        workers: 1,
     }
 }
 
@@ -67,6 +71,27 @@ fn main() {
             });
         }
     }
+    // Worker-count sweep: 20-client GradESTC round on the native backend.
+    // The 1-worker case is the sequential baseline; the speedup at 2/4/8
+    // workers is the round engine's headline number (results are
+    // bit-identical across the sweep, only wallclock changes).
+    for workers in [1usize, 2, 4, 8] {
+        let comp = CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() });
+        let mut c = cfg(ModelKind::LeNet5, DatasetKind::SynthMnist, comp, false);
+        c.num_clients = 20;
+        c.workers = workers;
+        let mut sim = Simulation::build(c).unwrap();
+        let mut round = 0usize;
+        // one warm round to initialize the compressor bases
+        sim.step(round).unwrap();
+        round += 1;
+        b.bench(&format!("lenet5-gradestc-20clients-w{workers}"), || {
+            let rec = sim.step(round).unwrap();
+            round += 1;
+            std::hint::black_box(rec.train_loss);
+        });
+    }
+
     // FedAvg baseline to isolate compression overhead.
     if have_artifacts {
         let mut sim = Simulation::build(cfg(

@@ -39,16 +39,29 @@ pub struct CompressStats {
 
 /// Client-side compressor over a full model update (all tensors, in layer
 /// order; non-compressed tensors pass through as raw f32).
+///
+/// `Send` is a supertrait: the round engine moves each client lane — the
+/// compressor together with its paired [`Decompressor`] — into worker
+/// tasks, so every implementation must be transferable across threads.
 pub trait Compressor: Send {
     /// Compress one round's update. `update[i]` is tensor `i`'s flat data.
     fn compress(&mut self, update: &[Vec<f32>]) -> (Vec<Payload>, CompressStats);
 }
 
-/// Server-side decompressor paired with one client's compressor.
+/// Server-side decompressor paired with one client's compressor. `Send`
+/// for the same reason as [`Compressor`]: it rides in the client lane.
 pub trait Decompressor: Send {
     /// Reconstruct tensor-aligned flat updates from payloads.
     fn decompress(&mut self, payloads: &[Payload]) -> Vec<Vec<f32>>;
 }
+
+// Compile-time proof that lane state crosses threads: the engine relies on
+// `Box<dyn Compressor>` / `Box<dyn Decompressor>` being `Send`.
+const _: () = {
+    const fn assert_send<T: Send + ?Sized>() {}
+    assert_send::<dyn Compressor>();
+    assert_send::<dyn Decompressor>();
+};
 
 /// Build the (compressor, decompressor) pair for a config.
 pub fn build_pair(

@@ -186,6 +186,11 @@ pub struct ExperimentConfig {
     pub use_xla: bool,
     /// Artifacts directory (manifest + HLO text).
     pub artifacts_dir: String,
+    /// Worker threads for the round engine's per-client phase and FedAvg
+    /// reduction. `0` = auto (the `GRADESTC_WORKERS` environment variable,
+    /// else available parallelism); `1` = fully sequential. Results are
+    /// bit-identical for every value.
+    pub workers: usize,
 }
 
 impl ExperimentConfig {
@@ -210,6 +215,7 @@ impl ExperimentConfig {
             seed: 7,
             use_xla: false,
             artifacts_dir: "artifacts".into(),
+            workers: 1,
         }
     }
 
@@ -250,6 +256,18 @@ impl ExperimentConfig {
             seed,
             use_xla: false,
             artifacts_dir: "artifacts".into(),
+            workers: 1,
+        }
+    }
+
+    /// The effective worker count: `workers`, or the process-wide default
+    /// ([`crate::util::pool::default_workers`]: `GRADESTC_WORKERS`, else
+    /// available parallelism) when set to `0`.
+    pub fn resolved_workers(&self) -> usize {
+        if self.workers == 0 {
+            crate::util::pool::default_workers()
+        } else {
+            self.workers
         }
     }
 
@@ -311,6 +329,7 @@ impl ExperimentConfig {
             ("seed", Json::num(self.seed as f64)),
             ("use_xla", Json::Bool(self.use_xla)),
             ("artifacts_dir", Json::str(&self.artifacts_dir)),
+            ("workers", Json::num(self.workers as f64)),
         ])
     }
 
@@ -348,6 +367,9 @@ impl ExperimentConfig {
             seed: j.req("seed")?.as_f64().ok_or("seed")? as u64,
             use_xla: j.req("use_xla")?.as_bool().ok_or("use_xla")?,
             artifacts_dir: j.req("artifacts_dir")?.as_str().ok_or("artifacts_dir")?.to_string(),
+            // Optional for backward compatibility with pre-engine configs:
+            // absent means sequential, the old behaviour.
+            workers: j.get("workers").and_then(|v| v.as_usize()).unwrap_or(1),
         })
     }
 }
@@ -494,6 +516,31 @@ mod tests {
         p.replace_all = false;
         p.freeze_after_init = true;
         assert_eq!(CompressorKind::GradEstc(p).name(), "gradestc-first");
+    }
+
+    #[test]
+    fn workers_roundtrips_and_defaults() {
+        let mut cfg = ExperimentConfig::preset_quickstart();
+        cfg.workers = 8;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.workers, 8);
+
+        // Pre-engine configs (no "workers" field) parse as sequential.
+        let mut j = cfg.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("workers");
+        }
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.workers, 1);
+    }
+
+    #[test]
+    fn resolved_workers_auto_and_explicit() {
+        let mut cfg = ExperimentConfig::preset_quickstart();
+        cfg.workers = 3;
+        assert_eq!(cfg.resolved_workers(), 3);
+        cfg.workers = 0;
+        assert!(cfg.resolved_workers() >= 1); // auto: env / hardware
     }
 
     #[test]

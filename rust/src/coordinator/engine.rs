@@ -1,0 +1,161 @@
+//! The staged round engine: broadcast → parallel per-client phase →
+//! fixed-order weighted reduction → apply/eval.
+//!
+//! One FL round decomposes into stages with very different sharing shapes:
+//!
+//! 1. **Broadcast** — the coordinator charges the downlink for every
+//!    participant (pure accounting; the global model is shared read-only).
+//! 2. **Per-client phase** — each participant's *lane* (its private shard,
+//!    RNG, compressor, and the server's paired decompressor, all colocated
+//!    in [`Client`]) runs local SGD from the broadcast model, compresses the
+//!    pseudo-gradient, and reconstructs it server-side. Lanes touch only
+//!    disjoint state plus `&`-shared inputs, so [`run_client_phase`] fans
+//!    them across worker threads via
+//!    [`parallel_map`](crate::util::pool::parallel_map) whenever the
+//!    backend allows ([`ExecPlan::Parallel`]).
+//! 3. **Reduction** — lane outcomes are consumed in participant order
+//!    (uplink charges, loss averaging, hook dispatch) and the weighted
+//!    FedAvg aggregate runs as a deterministic chunked reduction
+//!    ([`ParamStore::weighted_sum`]).
+//! 4. **Apply/eval** — the coordinator applies the aggregate and evaluates.
+//!
+//! # Determinism
+//!
+//! The engine is bit-deterministic in the worker count: every lane's state
+//! evolves only from its own streams (client RNG, compressor/decompressor
+//! state), results are collected in participant order regardless of
+//! completion order, and the reduction's chunk geometry is fixed. `workers =
+//! 1` and `workers = N` therefore produce identical
+//! [`RoundRecord`](crate::metrics::RoundRecord)s — the property that keeps
+//! temporally-correlated compressor state (GradESTC basis evolution)
+//! reproducible at any parallelism. `rust/tests/simulation.rs` asserts this
+//! end-to-end.
+
+use anyhow::Result;
+
+use super::trainer::{ParallelTrainer, Trainer};
+use super::Client;
+use crate::compress::CompressStats;
+use crate::model::params::ParamStore;
+use crate::util::pool::parallel_map;
+
+/// Immutable inputs shared (`&`) by every client lane in a round.
+#[derive(Clone, Copy)]
+pub struct RoundInputs<'a> {
+    /// Broadcast global parameters (read-only).
+    pub global: &'a ParamStore,
+    /// Local SGD epochs per round.
+    pub local_epochs: usize,
+    /// Minibatch size.
+    pub batch_size: usize,
+    /// SGD learning rate.
+    pub lr: f32,
+}
+
+/// How the per-client phase executes.
+pub enum ExecPlan<'a> {
+    /// Fan lanes across `workers` threads; the trainer is `Sync` and shared
+    /// by `&self` (the native backend).
+    Parallel {
+        /// Shared trainer.
+        trainer: &'a dyn ParallelTrainer,
+        /// Worker-thread count (> 1).
+        workers: usize,
+    },
+    /// Run every lane on the coordinator thread — used when `workers <= 1`
+    /// or the backend cannot cross threads (the XLA backend's PJRT handles
+    /// are `Rc`-based).
+    Sequential {
+        /// Coordinator-thread trainer.
+        trainer: &'a dyn Trainer,
+    },
+}
+
+/// One client lane's round output, in participant order.
+pub struct LaneOutcome {
+    /// Client id.
+    pub cid: usize,
+    /// Mean minibatch loss over local training.
+    pub mean_loss: f64,
+    /// Exact wire bytes of the compressed update.
+    pub uplink_bytes: u64,
+    /// Server-side reconstruction of the update (tensor-aligned).
+    pub update: Vec<Vec<f32>>,
+    /// Compression statistics (Σd proxy etc.).
+    pub stats: CompressStats,
+    /// FedAvg weight (shard size).
+    pub weight: f64,
+}
+
+/// Detach disjoint `&mut Client` lanes for the participant set, in `ids`
+/// order.
+///
+/// Panics if `ids` repeats a client (the sampler returns distinct ids).
+pub fn take_lanes<'a>(
+    clients: &'a mut [Client],
+    ids: &[usize],
+) -> Vec<(usize, &'a mut Client)> {
+    let mut slots: Vec<Option<&'a mut Client>> = clients.iter_mut().map(Some).collect();
+    ids.iter()
+        .map(|&cid| (cid, slots[cid].take().expect("duplicate participant id")))
+        .collect()
+}
+
+/// Run one client lane: local SGD from the broadcast model, compress the
+/// pseudo-gradient, reconstruct server-side. Touches only the lane's own
+/// state plus the shared read-only inputs.
+fn run_lane(
+    trainer: &dyn Trainer,
+    inputs: &RoundInputs<'_>,
+    cid: usize,
+    client: &mut Client,
+) -> Result<LaneOutcome> {
+    let (new_params, mean_loss) = trainer.local_train(
+        inputs.global,
+        &client.data,
+        inputs.local_epochs,
+        inputs.batch_size,
+        inputs.lr,
+        &mut client.rng,
+    )?;
+    // Pseudo-gradient: Δ = new − global. Hand its buffers to the
+    // compressor directly — no per-tensor re-copy in the hot phase.
+    let tensors = new_params.delta(inputs.global).into_tensors();
+    let (payloads, stats) = client.compressor.compress(&tensors);
+    let uplink_bytes: u64 = payloads.iter().map(|p| p.wire_bytes()).sum();
+    // Server-side reconstruction by the lane's paired decompressor.
+    let update = client.decompressor.decompress(&payloads);
+    Ok(LaneOutcome {
+        cid,
+        mean_loss,
+        uplink_bytes,
+        update,
+        stats,
+        weight: client.data.len() as f64,
+    })
+}
+
+/// Execute the per-client phase for every lane.
+///
+/// Outcomes are returned in `lanes` (participant) order regardless of
+/// scheduling; the first error in that order wins, so failures are
+/// deterministic too.
+pub fn run_client_phase(
+    plan: ExecPlan<'_>,
+    inputs: RoundInputs<'_>,
+    lanes: Vec<(usize, &mut Client)>,
+) -> Result<Vec<LaneOutcome>> {
+    match plan {
+        ExecPlan::Parallel { trainer, workers } => {
+            parallel_map(workers, lanes, |(cid, client)| {
+                run_lane(trainer.as_trainer(), &inputs, cid, client)
+            })
+            .into_iter()
+            .collect()
+        }
+        ExecPlan::Sequential { trainer } => lanes
+            .into_iter()
+            .map(|(cid, client)| run_lane(trainer, &inputs, cid, client))
+            .collect(),
+    }
+}

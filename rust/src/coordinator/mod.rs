@@ -1,24 +1,35 @@
 //! FL coordinator: the Layer-3 runtime that drives federated training.
 //!
 //! One [`Simulation`] owns the global model, the synthetic federated
-//! dataset, one (compressor, decompressor) pair per client, a [`Trainer`]
-//! backend (XLA artifacts or the native reference), and the communication
-//! ledger. `run()` executes the FedAvg round loop of paper §V:
+//! dataset, one client *lane* per client (private shard + RNG + compressor
+//! + the server's paired decompressor), a [`Trainer`] backend (XLA
+//! artifacts or the native reference), and the communication ledger.
+//! `run()` executes the FedAvg round loop of paper §V, staged by the round
+//! engine ([`engine`]):
 //!
 //! ```text
 //! for round r:
-//!   sample participants                    (participation fraction)
-//!   broadcast global params  → downlink charge
-//!   per client: local SGD (E epochs) → update Δᵢ → compress → uplink charge
-//!   server: decompress Δ̂ᵢ → weighted FedAvg aggregate → apply
-//!   evaluate on held-out data, record round
+//!   sample participants                     (participation fraction)
+//!   stage 1  broadcast global params        → downlink charge
+//!   stage 2  per-client phase, one lane per participant, fanned across
+//!            `cfg.workers` threads when the backend is Sync:
+//!              local SGD (E epochs) → Δᵢ → compress → decompress Δ̂ᵢ
+//!   stage 3  fixed-order accounting (uplink, loss, Σd, hook) + weighted
+//!            FedAvg aggregate via a deterministic chunked reduction
+//!   stage 4  apply aggregate, evaluate on held-out data, record round
 //! ```
+//!
+//! The engine is bit-deterministic in the worker count (see [`engine`]'s
+//! module docs): `workers = 1` and `workers = N` produce identical
+//! [`RoundRecord`]s for the same seed.
 
+pub mod engine;
 pub mod sampling;
 pub mod trainer;
 
+pub use engine::{ExecPlan, LaneOutcome, RoundInputs};
 pub use sampling::ParticipationSampler;
-pub use trainer::{NativeOrXla, Trainer, XlaTrainer};
+pub use trainer::{NativeOrXla, ParallelTrainer, Trainer, XlaTrainer};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -32,19 +43,21 @@ use crate::model::meta::{layer_table, ModelMeta};
 use crate::model::params::ParamStore;
 use crate::util::rng::Pcg64;
 
-/// One simulated client.
+/// One simulated client *lane*: everything a round's per-client phase
+/// touches, colocated so the engine can move it into a worker task as one
+/// disjoint unit — the client's private shard, RNG and compressor, plus the
+/// server's paired decompressor. Client and server compressor state must
+/// evolve in lockstep (the temporal-correlation contract), which pairing
+/// them in one lane makes structural.
 pub struct Client {
     /// Client id.
     pub id: usize,
     /// This client's private shard.
     pub data: Dataset,
-    compressor: Box<dyn Compressor>,
-    rng: Pcg64,
-}
-
-/// Server-side per-client decompression state.
-struct ServerSide {
-    decompressor: Box<dyn Decompressor>,
+    pub(crate) compressor: Box<dyn Compressor>,
+    /// Server-side decompression state paired with this client's compressor.
+    pub(crate) decompressor: Box<dyn Decompressor>,
+    pub(crate) rng: Pcg64,
 }
 
 /// A fully-built federated simulation.
@@ -55,9 +68,8 @@ pub struct Simulation {
     pub meta: ModelMeta,
     /// Global model parameters.
     pub global: ParamStore,
-    /// Clients in id order.
+    /// Client lanes in id order.
     pub clients: Vec<Client>,
-    server_sides: Vec<ServerSide>,
     /// Held-out evaluation data.
     pub test_data: Dataset,
     trainer: NativeOrXla,
@@ -149,7 +161,6 @@ impl Simulation {
             .with_context(|| "building trainer backend")?;
 
         let mut clients = Vec::with_capacity(cfg.num_clients);
-        let mut server_sides = Vec::with_capacity(cfg.num_clients);
         for (id, data) in shards.into_iter().enumerate() {
             let (compressor, decompressor) =
                 build_pair(&cfg.compressor, &meta, cfg.seed ^ (id as u64) << 8);
@@ -157,9 +168,9 @@ impl Simulation {
                 id,
                 data,
                 compressor,
+                decompressor,
                 rng: root.fork(7000 + id as u64),
             });
-            server_sides.push(ServerSide { decompressor });
         }
 
         let global = ParamStore::init(&meta, &Pcg64::new(cfg.seed, 0x6000));
@@ -173,7 +184,6 @@ impl Simulation {
             meta,
             global,
             clients,
-            server_sides,
             test_data,
             trainer,
             sampler,
@@ -197,66 +207,60 @@ impl Simulation {
         self.ledger.total_uplink()
     }
 
-    /// Execute one round; returns the round record.
+    /// Execute one round through the staged engine; returns the round
+    /// record. Bit-identical for every `cfg.workers` value (see [`engine`]).
     pub fn step(&mut self, round: usize) -> Result<RoundRecord> {
         let participants = self.sampler.sample(round);
         let broadcast_bytes = 4 * self.global.numel() as u64;
+        let workers = self.cfg.resolved_workers();
 
-        let mut per_client_up: Vec<u64> = Vec::with_capacity(participants.len());
-        let mut updates: Vec<(usize, Vec<Vec<f32>>)> =
-            Vec::with_capacity(participants.len());
-        let mut weights: Vec<f64> = Vec::with_capacity(participants.len());
+        // Stage 1: broadcast — every participant downloads the global model.
+        for _ in &participants {
+            self.ledger.charge_downlink(broadcast_bytes);
+        }
+
+        // Stage 2: per-client phase (local SGD → compress → decompress),
+        // one lane per participant, fanned across workers when the backend
+        // allows.
+        let inputs = engine::RoundInputs {
+            global: &self.global,
+            local_epochs: self.cfg.local_epochs,
+            batch_size: self.cfg.batch_size,
+            lr: self.cfg.lr,
+        };
+        let lanes = engine::take_lanes(&mut self.clients, &participants);
+        let outcomes = engine::run_client_phase(self.trainer.plan(workers), inputs, lanes)?;
+
+        // Stage 3: fixed-order accounting over lane outcomes (participant
+        // order, independent of completion order) …
+        let mut per_client_up: Vec<u64> = Vec::with_capacity(outcomes.len());
+        let mut updates: Vec<(usize, Vec<Vec<f32>>)> = Vec::with_capacity(outcomes.len());
+        let mut weights: Vec<f64> = Vec::with_capacity(outcomes.len());
         let mut loss_sum = 0.0f64;
         let mut sum_d = 0u64;
-
-        for &cid in &participants {
-            self.ledger.charge_downlink(broadcast_bytes);
-            let client = &mut self.clients[cid];
-            // Local training from the broadcast global model.
-            let (new_params, mean_loss) = self.trainer.local_train(
-                &self.global,
-                &client.data,
-                self.cfg.local_epochs,
-                self.cfg.batch_size,
-                self.cfg.lr,
-                &mut client.rng,
-            )?;
-            loss_sum += mean_loss;
-            // Pseudo-gradient: Δ = new − global.
-            let delta = new_params.delta(&self.global);
-            let tensors: Vec<Vec<f32>> =
-                (0..delta.len()).map(|i| delta.tensor(i).to_vec()).collect();
-            let (payloads, stats) = client.compressor.compress(&tensors);
-            sum_d += stats.sum_d;
-            let up: u64 = payloads.iter().map(|p| p.wire_bytes()).sum();
-            self.ledger.charge_uplink(up);
-            per_client_up.push(up);
-            // Server-side reconstruction.
-            let rec = self.server_sides[cid].decompressor.decompress(&payloads);
-            updates.push((cid, rec));
-            weights.push(client.data.len() as f64);
+        for outcome in outcomes {
+            self.ledger.charge_uplink(outcome.uplink_bytes);
+            per_client_up.push(outcome.uplink_bytes);
+            loss_sum += outcome.mean_loss;
+            sum_d += outcome.stats.sum_d;
+            weights.push(outcome.weight);
+            updates.push((outcome.cid, outcome.update));
         }
 
-        if let Some(mut hook) = self.round_hook.take() {
+        if let Some(hook) = self.round_hook.as_mut() {
             hook(round, &Simulation2Hook { updates: &updates, meta: &self.meta });
-            self.round_hook = Some(hook);
         }
 
-        // FedAvg aggregation, weighted by shard size.
+        // … followed by the weighted FedAvg aggregate as a deterministic
+        // chunked reduction (shard-size weights).
         let wtotal: f64 = weights.iter().sum();
-        let mut agg = ParamStore::zeros_like(&self.meta);
-        for ((_, upd), w) in updates.iter().zip(&weights) {
-            let scale = (w / wtotal) as f32;
-            for (i, t) in upd.iter().enumerate() {
-                let dst = agg.tensor_mut(i);
-                for (d, &v) in dst.iter_mut().zip(t) {
-                    *d += scale * v;
-                }
-            }
-        }
+        let scales: Vec<f32> = weights.iter().map(|w| (w / wtotal) as f32).collect();
+        let terms: Vec<&[Vec<f32>]> = updates.iter().map(|(_, u)| u.as_slice()).collect();
+        let agg = ParamStore::weighted_sum(&self.meta, &terms, &scales, workers);
+
+        // Stage 4: apply, evaluate, record.
         self.global.axpy(1.0, &agg);
 
-        // Evaluation.
         let (test_loss, test_acc) = if round % self.cfg.eval_every == 0
             || round + 1 == self.cfg.rounds
         {

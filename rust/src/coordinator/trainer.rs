@@ -6,6 +6,14 @@
 //! reference implementation used when artifacts are unavailable and as an
 //! independent cross-check of the L2 graphs (both backends implement
 //! identical semantics; `rust/tests/xla_runtime.rs` compares them).
+//!
+//! The trait is split in two for the round engine
+//! ([`crate::coordinator::engine`]): [`Trainer`] is the minimal
+//! coordinator-thread interface, and [`ParallelTrainer`] marks backends
+//! that are additionally `Sync` and therefore shareable by `&self` across
+//! worker threads. The native backend qualifies (it is stateless between
+//! calls); the XLA backend does not — its PJRT handles are `Rc`-based — so
+//! [`NativeOrXla::plan`] degrades it gracefully to sequential execution.
 
 use anyhow::{anyhow, Context, Result};
 
@@ -17,11 +25,13 @@ use crate::nn::NativeTrainer;
 use crate::runtime::{HostTensor, ModelEntry, Runtime};
 use crate::util::rng::Pcg64;
 
-/// A training backend.
+/// A training backend (coordinator-thread interface).
 ///
-/// Not `Send`: the `xla` crate's PJRT handles are `Rc`-based, so a trainer
-/// lives on the coordinator thread (PJRT parallelizes *within* an execute
-/// call instead).
+/// Implementations need not be `Send`: the `xla` crate's PJRT handles are
+/// `Rc`-based, so that backend lives on the coordinator thread (PJRT
+/// parallelizes *within* an execute call instead). Backends that *are*
+/// thread-shareable opt into the round engine's parallel per-client phase
+/// through [`ParallelTrainer`].
 pub trait Trainer {
     /// Run `epochs` of local SGD from `start`; returns (new params,
     /// mean minibatch loss).
@@ -46,6 +56,24 @@ pub trait Trainer {
         batch: usize,
         rng: &mut Pcg64,
     ) -> Result<(Vec<Vec<f32>>, f64)>;
+}
+
+/// A trainer that is `Sync` and can be shared by `&self` across the round
+/// engine's worker threads.
+///
+/// Blanket-implemented for every `Trainer + Sync` type, so a backend only
+/// has to *be* thread-shareable to qualify — `NativeTrainer` is the
+/// canonical instance (asserted in `crate::nn`'s tests).
+pub trait ParallelTrainer: Trainer + Sync {
+    /// View as a plain [`Trainer`] (explicit upcast; kept as a method so
+    /// the engine does not rely on trait-object upcasting coercion).
+    fn as_trainer(&self) -> &dyn Trainer;
+}
+
+impl<T: Trainer + Sync> ParallelTrainer for T {
+    fn as_trainer(&self) -> &dyn Trainer {
+        self
+    }
 }
 
 /// Assemble one minibatch from dataset rows into trainer inputs.
@@ -277,6 +305,24 @@ impl NativeOrXla {
             Ok(NativeOrXla::Xla(XlaTrainer::new(&cfg.artifacts_dir, cfg.model, meta)?))
         } else {
             Ok(NativeOrXla::Native(NativeTrainer::new(cfg.model, meta)?))
+        }
+    }
+
+    /// Scheduling plan for the round engine's per-client phase.
+    ///
+    /// The native backend is `Sync` and fans lanes across `workers`
+    /// threads; the XLA backend degrades gracefully to coordinator-thread
+    /// execution (its PJRT handles cannot cross threads — PJRT already
+    /// parallelizes within each execute call). Results are bit-identical
+    /// either way.
+    pub fn plan(&self, workers: usize) -> super::engine::ExecPlan<'_> {
+        use super::engine::ExecPlan;
+        match self {
+            NativeOrXla::Native(t) if workers > 1 => {
+                ExecPlan::Parallel { trainer: t, workers }
+            }
+            NativeOrXla::Native(t) => ExecPlan::Sequential { trainer: t },
+            NativeOrXla::Xla(t) => ExecPlan::Sequential { trainer: t },
         }
     }
 }

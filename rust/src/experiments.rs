@@ -68,6 +68,7 @@ pub fn cmd_exp(argv: Vec<String>) -> i32 {
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("samples", "0", "override samples per client (0 = preset default)")
         .opt("eval-every", "1", "evaluate every N rounds")
+        .opt("workers", "0", "worker threads for the per-client phase (0 = auto)")
         .flag("native", "use the native trainer instead of XLA artifacts")
         .flag("ef", "include the error-feedback extension in table4");
     let args = match spec.parse(rest) {
@@ -87,6 +88,7 @@ pub fn cmd_exp(argv: Vec<String>) -> i32 {
         with_ef: args.has_flag("ef"),
         samples: args.usize("samples"),
         eval_every: args.usize("eval-every"),
+        workers: args.usize("workers"),
     };
     let r = match id.as_str() {
         "fig1" => exp_fig1(&ctx),
@@ -120,6 +122,7 @@ struct ExpCtx {
     with_ef: bool,
     samples: usize,
     eval_every: usize,
+    workers: usize,
 }
 
 impl ExpCtx {
@@ -141,6 +144,9 @@ impl ExpCtx {
         if self.eval_every > 1 {
             cfg.eval_every = self.eval_every;
         }
+        // Bit-identical for any worker count, so experiment outputs stay
+        // reproducible regardless of this knob.
+        cfg.workers = self.workers;
         cfg
     }
 }

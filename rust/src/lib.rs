@@ -21,11 +21,23 @@
 //! use gradestc::config::ExperimentConfig;
 //! use gradestc::coordinator::Simulation;
 //!
-//! let cfg = ExperimentConfig::preset_quickstart();
+//! let mut cfg = ExperimentConfig::preset_quickstart();
+//! cfg.workers = 0; // 0 = auto: GRADESTC_WORKERS env var, else CPU count
 //! let mut sim = Simulation::build(cfg).unwrap();
 //! let report = sim.run().unwrap();
 //! println!("best accuracy {:.2}%", report.best_accuracy * 100.0);
 //! ```
+//!
+//! The round engine ([`coordinator::engine`]) fans each round's per-client
+//! phase — local SGD, compression, server-side reconstruction — across
+//! worker threads and aggregates with a deterministic chunked reduction.
+//! Parallelism is controlled by `ExperimentConfig::workers` (`--workers` on
+//! the CLI): `0` resolves to the `GRADESTC_WORKERS` environment variable or
+//! the available CPU count, `1` runs fully sequential, and any value
+//! produces bit-identical results — compressor state on both ends evolves
+//! in lockstep no matter the execution order. The XLA backend runs its
+//! lanes on the coordinator thread (PJRT handles don't cross threads), also
+//! with identical results.
 //!
 //! See `examples/` for runnable end-to-end drivers and `DESIGN.md` for the
 //! full system inventory.

@@ -146,6 +146,11 @@ fn cmd_train(argv: Vec<String>) -> i32 {
         .opt("test-samples", "512", "held-out samples")
         .opt("lr", "0.03", "SGD learning rate")
         .opt("seed", "7", "rng seed")
+        .opt(
+            "workers",
+            "0",
+            "worker threads for the per-client phase (0 = auto via GRADESTC_WORKERS / cores; results are identical for any value)",
+        )
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("out", "results", "results directory")
         .flag("native", "use the native Rust trainer instead of XLA artifacts")
@@ -195,6 +200,7 @@ fn cmd_train(argv: Vec<String>) -> i32 {
         seed: args.f64("seed") as u64,
         use_xla,
         artifacts_dir: args.str("artifacts").to_string(),
+        workers: args.usize("workers"),
     };
     let quiet = args.has_flag("quiet");
     match experiments::run_one(&cfg, args.str("out"), !quiet) {

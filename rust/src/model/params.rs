@@ -2,7 +2,13 @@
 //! model's [`super::meta::ModelMeta`] layer order.
 
 use super::meta::{LayerRole, ModelMeta};
+use crate::util::pool::chunked_reduce;
 use crate::util::rng::Pcg64;
+
+/// Element-chunk length for the deterministic parallel reduction. Fixed (it
+/// must never depend on the worker count) and large enough that per-chunk
+/// dispatch overhead is negligible next to the FMA work.
+const REDUCE_CHUNK: usize = 16 * 1024;
 
 /// All trainable tensors of one model replica.
 #[derive(Clone, Debug, PartialEq)]
@@ -89,6 +95,14 @@ impl ParamStore {
         &self.tensors[i]
     }
 
+    /// Consume the store into its owned per-tensor buffers (layer order).
+    ///
+    /// Lets the round engine hand a delta's buffers straight to the
+    /// compressor without re-copying every tensor.
+    pub fn into_tensors(self) -> Vec<Vec<f32>> {
+        self.tensors
+    }
+
     /// Mutable tensor `i`.
     pub fn tensor_mut(&mut self, i: usize) -> &mut Vec<f32> {
         &mut self.tensors[i]
@@ -117,6 +131,38 @@ impl ParamStore {
                 *x *= scale;
             }
         }
+    }
+
+    /// Deterministic weighted sum across participant updates:
+    /// `out[t][e] = Σ_p scales[p] · terms[p][t][e]`.
+    ///
+    /// Each element accumulates over `terms` in slice order, and the work is
+    /// split into fixed [`REDUCE_CHUNK`]-element chunks whose geometry never
+    /// depends on `workers` — so the result is bit-identical to a sequential
+    /// fold for every worker count. This is the round engine's FedAvg
+    /// aggregation stage.
+    pub fn weighted_sum(
+        meta: &ModelMeta,
+        terms: &[&[Vec<f32>]],
+        scales: &[f32],
+        workers: usize,
+    ) -> ParamStore {
+        assert_eq!(terms.len(), scales.len(), "one scale per term");
+        let mut out = ParamStore::zeros_like(meta);
+        for term in terms {
+            assert_eq!(term.len(), out.tensors.len(), "term tensor count mismatch");
+        }
+        let slices: Vec<&mut [f32]> =
+            out.tensors.iter_mut().map(|t| t.as_mut_slice()).collect();
+        chunked_reduce(workers, slices, REDUCE_CHUNK, |ti, offset, chunk| {
+            for (term, &scale) in terms.iter().zip(scales) {
+                let src = &term[ti][offset..offset + chunk.len()];
+                for (dst, &v) in chunk.iter_mut().zip(src) {
+                    *dst += scale * v;
+                }
+            }
+        });
+        out
     }
 
     /// `self - other` as a new store (the FL "model delta" / pseudo-gradient).
@@ -196,6 +242,47 @@ mod tests {
         // and not degenerate
         let max = p.tensor(i).iter().fold(0.0f32, |m, &x| m.max(x.abs()));
         assert!(max > 0.5 * bound);
+    }
+
+    #[test]
+    fn weighted_sum_matches_sequential_fold_bitwise() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let mut rng = Pcg64::seeded(31);
+        let updates: Vec<Vec<Vec<f32>>> = (0..5)
+            .map(|_| meta.layers.iter().map(|l| rng.normal_vec(l.size())).collect())
+            .collect();
+        let scales: Vec<f32> = (0..5).map(|i| 0.1 + 0.07 * i as f32).collect();
+
+        // Reference: the engine's pre-refactor sequential accumulation.
+        let mut seq = ParamStore::zeros_like(&meta);
+        for (upd, &s) in updates.iter().zip(&scales) {
+            for (i, t) in upd.iter().enumerate() {
+                for (d, &v) in seq.tensor_mut(i).iter_mut().zip(t) {
+                    *d += s * v;
+                }
+            }
+        }
+
+        let terms: Vec<&[Vec<f32>]> = updates.iter().map(|u| u.as_slice()).collect();
+        for workers in [1usize, 2, 8] {
+            let par = ParamStore::weighted_sum(&meta, &terms, &scales, workers);
+            for i in 0..seq.len() {
+                let same = seq
+                    .tensor(i)
+                    .iter()
+                    .zip(par.tensor(i))
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "tensor {i} differs at workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_sum_empty_terms_is_zero() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let z = ParamStore::weighted_sum(&meta, &[], &[], 4);
+        assert_eq!(z.l2_norm(), 0.0);
+        assert_eq!(z.numel(), meta.total_params());
     }
 
     #[test]

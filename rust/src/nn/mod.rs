@@ -31,6 +31,11 @@ use crate::util::rng::Pcg64;
 
 /// Native Rust trainer implementing the same step semantics as the XLA
 /// artifacts.
+///
+/// Holds only immutable architecture metadata, so it is `Sync` and the
+/// round engine shares one instance by `&self` across worker threads
+/// (every mutable buffer is allocated per `local_train` call) — this is
+/// the [`crate::coordinator::trainer::ParallelTrainer`] backend.
 pub struct NativeTrainer {
     kind: ModelKind,
     meta: ModelMeta,
@@ -208,5 +213,16 @@ mod tests {
     fn transformer_rejected() {
         let meta = layer_table(ModelKind::TinyTransformer);
         assert!(NativeTrainer::new(ModelKind::TinyTransformer, &meta).is_err());
+    }
+
+    #[test]
+    fn native_trainer_is_shareable_across_workers() {
+        // The round engine's parallel per-client phase requires the native
+        // backend to be Sync and a ParallelTrainer; regressing this (e.g.
+        // by adding interior-mutable caches) must fail loudly.
+        fn assert_sync<T: Sync>() {}
+        fn assert_parallel<T: crate::coordinator::trainer::ParallelTrainer>() {}
+        assert_sync::<NativeTrainer>();
+        assert_parallel::<NativeTrainer>();
     }
 }

@@ -3,8 +3,8 @@
 //!
 //! The python side (`python/compile/aot.py`) runs once at build time and
 //! lowers every L2 graph / L1 Pallas kernel to HLO *text* under
-//! `artifacts/`, indexed by `manifest.json`. This module wraps the `xla`
-//! crate (PJRT C API, CPU plugin):
+//! `artifacts/`, indexed by `manifest.json`. The PJRT half of this module
+//! wraps the `xla` crate (PJRT C API, CPU plugin):
 //!
 //! ```text
 //! PjRtClient::cpu() → HloModuleProto::from_text_file → client.compile → execute
@@ -12,16 +12,22 @@
 //!
 //! Compilation happens lazily per artifact and is cached for the process
 //! lifetime ([`Runtime`] is cheap to clone; executables are shared).
+//!
+//! # The `xla` cargo feature
+//!
+//! PJRT support is gated behind the off-by-default `xla` feature (the `xla`
+//! crate is not vendored; see `rust/Cargo.toml`). Without the feature this
+//! module still type-checks — [`HostTensor`] and the manifest schema are
+//! pure Rust — but [`Runtime::open`] returns a clear runtime error, so any
+//! configuration requesting artifacts (`use_xla = true`) fails fast with an
+//! actionable message instead of a link error. The native trainer
+//! ([`crate::nn::NativeTrainer`]) covers every CNN workload without it.
 
 pub mod manifest;
 
 pub use manifest::{KernelEntry, Manifest, ModelEntry, StepEntry};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
-
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
 /// A typed host tensor crossing the PJRT boundary.
 #[derive(Clone, Debug, PartialEq)]
@@ -70,157 +76,255 @@ impl HostTensor {
     pub fn scalar_f32(&self) -> Result<f32> {
         Ok(self.as_f32()?.first().copied().unwrap_or(f32::NAN))
     }
+}
 
-    fn to_literal(&self) -> Result<xla::Literal> {
-        match self {
-            HostTensor::F32(data, dims) => {
-                let bytes: &[u8] = unsafe {
-                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-                };
-                xla::Literal::create_from_shape_and_untyped_data(
-                    xla::ElementType::F32,
-                    dims,
-                    bytes,
-                )
-                .map_err(|e| anyhow!("literal f32: {e:?}"))
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::{Arc, Mutex};
+
+    use anyhow::{anyhow, Context, Result};
+
+    use super::{HostTensor, Manifest};
+
+    /// A compiled-and-loaded PJRT executable.
+    pub type Executable = xla::PjRtLoadedExecutable;
+
+    impl HostTensor {
+        fn to_literal(&self) -> Result<xla::Literal> {
+            match self {
+                HostTensor::F32(data, dims) => {
+                    let bytes: &[u8] = unsafe {
+                        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                    };
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::F32,
+                        dims,
+                        bytes,
+                    )
+                    .map_err(|e| anyhow!("literal f32: {e:?}"))
+                }
+                HostTensor::I32(data, dims) => {
+                    let bytes: &[u8] = unsafe {
+                        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                    };
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::S32,
+                        dims,
+                        bytes,
+                    )
+                    .map_err(|e| anyhow!("literal i32: {e:?}"))
+                }
             }
-            HostTensor::I32(data, dims) => {
-                let bytes: &[u8] = unsafe {
-                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-                };
-                xla::Literal::create_from_shape_and_untyped_data(
-                    xla::ElementType::S32,
-                    dims,
-                    bytes,
-                )
-                .map_err(|e| anyhow!("literal i32: {e:?}"))
+        }
+
+        fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+            let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            match shape.ty() {
+                xla::ElementType::F32 => {
+                    let v = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+                    Ok(HostTensor::F32(v, dims))
+                }
+                xla::ElementType::S32 => {
+                    let v = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
+                    Ok(HostTensor::I32(v, dims))
+                }
+                other => Err(anyhow!("unsupported output dtype {other:?}")),
             }
         }
     }
 
-    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
-        let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        match shape.ty() {
-            xla::ElementType::F32 => {
-                let v = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
-                Ok(HostTensor::F32(v, dims))
+    struct Inner {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        manifest: Manifest,
+        cache: Mutex<HashMap<String, Arc<Executable>>>,
+    }
+
+    /// Shared handle to the PJRT CPU client + compiled-executable cache.
+    #[derive(Clone)]
+    pub struct Runtime {
+        inner: Arc<Inner>,
+    }
+
+    impl Runtime {
+        /// Open the artifacts directory (must contain `manifest.json`).
+        pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest = Manifest::load(&dir.join("manifest.json"))
+                .with_context(|| format!("loading manifest from {}", dir.display()))?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+            Ok(Runtime {
+                inner: Arc::new(Inner {
+                    client,
+                    dir,
+                    manifest,
+                    cache: Mutex::new(HashMap::new()),
+                }),
+            })
+        }
+
+        /// The parsed manifest.
+        pub fn manifest(&self) -> &Manifest {
+            &self.inner.manifest
+        }
+
+        /// PJRT platform name (e.g. "Host" for the CPU plugin).
+        pub fn platform(&self) -> String {
+            self.inner.client.platform_name()
+        }
+
+        /// Compile (or fetch from cache) the artifact stored in `file`.
+        pub fn load(&self, file: &str) -> Result<Arc<Executable>> {
+            {
+                let cache = self.inner.cache.lock().unwrap();
+                if let Some(exe) = cache.get(file) {
+                    return Ok(exe.clone());
+                }
             }
-            xla::ElementType::S32 => {
-                let v = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
-                Ok(HostTensor::I32(v, dims))
-            }
-            other => Err(anyhow!("unsupported output dtype {other:?}")),
+            let path = self.inner.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = Arc::new(
+                self.inner
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?,
+            );
+            self.inner.cache.lock().unwrap().insert(file.to_string(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Execute an artifact with host tensors; returns the tuple elements.
+        ///
+        /// All artifacts are lowered with `return_tuple=True`, so the single
+        /// output literal is decomposed into its elements.
+        pub fn call(&self, file: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            let exe = self.load(file)?;
+            self.call_exe(&exe, inputs)
+        }
+
+        /// Execute an already-loaded executable.
+        pub fn call_exe(
+            &self,
+            exe: &Executable,
+            inputs: &[HostTensor],
+        ) -> Result<Vec<HostTensor>> {
+            let literals: Vec<xla::Literal> =
+                inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+            let outputs = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("execute: {e:?}"))?;
+            let buffer = outputs
+                .first()
+                .and_then(|replica| replica.first())
+                .ok_or_else(|| anyhow!("empty execution result"))?;
+            let tuple = buffer
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let parts = tuple.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+            parts.iter().map(HostTensor::from_literal).collect()
+        }
+    }
+
+    impl std::fmt::Debug for Runtime {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Runtime")
+                .field("dir", &self.inner.dir)
+                .field("models", &self.inner.manifest.models.len())
+                .field("kernels", &self.inner.manifest.kernels.len())
+                .finish()
         }
     }
 }
 
-struct Inner {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
-}
+#[cfg(not(feature = "xla"))]
+mod pjrt {
+    use std::path::Path;
+    use std::sync::Arc;
 
-/// Shared handle to the PJRT CPU client + compiled-executable cache.
-#[derive(Clone)]
-pub struct Runtime {
-    inner: Arc<Inner>,
-}
+    use anyhow::{anyhow, Result};
 
-impl Runtime {
-    /// Open the artifacts directory (must contain `manifest.json`).
-    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-        Ok(Runtime {
-            inner: Arc::new(Inner {
-                client,
-                dir,
-                manifest,
-                cache: Mutex::new(HashMap::new()),
-            }),
-        })
+    use super::{HostTensor, Manifest};
+
+    /// Opaque compiled-executable handle. Uninhabited without the `xla`
+    /// feature: code that stores or passes one still type-checks, but no
+    /// value can ever exist.
+    pub enum Executable {}
+
+    enum Never {}
+
+    /// Stub runtime compiled when the `xla` feature is off. Uninhabited —
+    /// [`Runtime::open`] is the only constructor and it always returns a
+    /// descriptive error, so every artifact-requiring path fails fast with
+    /// an actionable message.
+    pub struct Runtime {
+        never: Never,
     }
 
-    /// The parsed manifest.
-    pub fn manifest(&self) -> &Manifest {
-        &self.inner.manifest
-    }
-
-    /// PJRT platform name (e.g. "Host" for the CPU plugin).
-    pub fn platform(&self) -> String {
-        self.inner.client.platform_name()
-    }
-
-    /// Compile (or fetch from cache) the artifact stored in `file`.
-    pub fn load(&self, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        {
-            let cache = self.inner.cache.lock().unwrap();
-            if let Some(exe) = cache.get(file) {
-                return Ok(exe.clone());
-            }
+    impl Runtime {
+        /// Always fails: this build has no PJRT support.
+        pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+            Err(anyhow!(
+                "XLA artifacts at '{}' were requested, but this binary was built without \
+                 PJRT support (the off-by-default `xla` cargo feature). Either run with \
+                 the native backend (--native on the CLI, or use_xla = false in the \
+                 config), or add the `xla` crate to rust/Cargo.toml and rebuild with \
+                 `cargo build --features xla`.",
+                dir.as_ref().display()
+            ))
         }
-        let path = self.inner.dir.join(file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Arc::new(
-            self.inner
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?,
-        );
-        self.inner.cache.lock().unwrap().insert(file.to_string(), exe.clone());
-        Ok(exe)
+
+        /// Unreachable (no `Runtime` value can exist).
+        pub fn manifest(&self) -> &Manifest {
+            match self.never {}
+        }
+
+        /// Unreachable (no `Runtime` value can exist).
+        pub fn platform(&self) -> String {
+            match self.never {}
+        }
+
+        /// Unreachable (no `Runtime` value can exist).
+        pub fn load(&self, _file: &str) -> Result<Arc<Executable>> {
+            match self.never {}
+        }
+
+        /// Unreachable (no `Runtime` value can exist).
+        pub fn call(&self, _file: &str, _inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            match self.never {}
+        }
+
+        /// Unreachable (no `Runtime` value can exist).
+        pub fn call_exe(
+            &self,
+            _exe: &Executable,
+            _inputs: &[HostTensor],
+        ) -> Result<Vec<HostTensor>> {
+            match self.never {}
+        }
     }
 
-    /// Execute an artifact with host tensors; returns the tuple elements.
-    ///
-    /// All artifacts are lowered with `return_tuple=True`, so the single
-    /// output literal is decomposed into its elements.
-    pub fn call(&self, file: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let exe = self.load(file)?;
-        self.call_exe(&exe, inputs)
+    impl Clone for Runtime {
+        fn clone(&self) -> Self {
+            match self.never {}
+        }
     }
 
-    /// Execute an already-loaded executable.
-    pub fn call_exe(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        inputs: &[HostTensor],
-    ) -> Result<Vec<HostTensor>> {
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        let outputs = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        let buffer = outputs
-            .first()
-            .and_then(|replica| replica.first())
-            .ok_or_else(|| anyhow!("empty execution result"))?;
-        let tuple = buffer
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let parts = tuple.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
-        parts.iter().map(HostTensor::from_literal).collect()
+    impl std::fmt::Debug for Runtime {
+        fn fmt(&self, _f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            match self.never {}
+        }
     }
 }
 
-impl std::fmt::Debug for Runtime {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Runtime")
-            .field("dir", &self.inner.dir)
-            .field("models", &self.inner.manifest.models.len())
-            .field("kernels", &self.inner.manifest.kernels.len())
-            .finish()
-    }
-}
+pub use pjrt::{Executable, Runtime};
 
 #[cfg(test)]
 mod tests {
@@ -243,5 +347,14 @@ mod tests {
     fn i32_tensor_not_f32() {
         let t = HostTensor::i32(vec![1, 2], &[2]);
         assert!(t.as_f32().is_err());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn open_without_feature_gives_actionable_error() {
+        let err = Runtime::open("artifacts").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("xla"), "{msg}");
+        assert!(msg.contains("--native"), "{msg}");
     }
 }

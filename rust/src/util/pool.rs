@@ -1,11 +1,23 @@
 //! Scoped data-parallel helpers over std threads (offline stand-in for
 //! `rayon`).
 //!
-//! The FL simulator fans client work (local training, compression) across a
-//! fixed worker count; [`parallel_map`] is the single primitive everything
-//! uses. Work is chunked statically — client workloads are homogeneous, so
-//! static chunking beats a work-stealing queue we would otherwise have to
-//! build.
+//! Two primitives back the round engine ([`crate::coordinator::engine`]):
+//!
+//! * [`parallel_map`] — fan a vector of independent work items across a
+//!   fixed worker count, preserving input order. The engine's per-client
+//!   phase runs one item per participant lane (local SGD → compress →
+//!   decompress).
+//! * [`chunked_reduce`] — run a reduction callback over disjoint fixed-size
+//!   chunks of output slices (the engine's FedAvg accumulation). Chunk
+//!   geometry depends only on the chunk length — never on the worker count —
+//!   so a callback that is a pure function of `(slot, offset, chunk)` yields
+//!   bit-identical results at every parallelism level.
+//!
+//! Work is chunked statically — client workloads are homogeneous, so static
+//! chunking beats a work-stealing queue we would otherwise have to build.
+//! The default worker count respects the `GRADESTC_WORKERS` environment
+//! variable (see [`default_workers`]); per-run counts come from
+//! `ExperimentConfig::workers`.
 
 /// Map `f` over `items` using up to `workers` threads, preserving order.
 ///
@@ -57,6 +69,33 @@ where
     out.into_iter().map(|r| r.expect("worker filled every slot")).collect()
 }
 
+/// Deterministic chunked reduction over a set of mutable output slices.
+///
+/// Every slice in `outputs` is cut into `chunk_len`-element chunks and
+/// `f(slot, offset, chunk)` runs once per chunk across up to `workers`
+/// threads, where `slot` is the slice's index in `outputs` and `offset` the
+/// chunk's starting element within that slice. Chunk boundaries depend only
+/// on `chunk_len`, never on `workers`, so any `f` that is a pure function of
+/// its arguments produces bit-identical output for every worker count — the
+/// property the round engine's weighted FedAvg reduction relies on.
+pub fn chunked_reduce<T, F>(workers: usize, outputs: Vec<&mut [T]>, chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunked_reduce: chunk_len must be positive");
+    let mut units: Vec<(usize, usize, &mut [T])> = Vec::new();
+    for (slot, slice) in outputs.into_iter().enumerate() {
+        let mut offset = 0usize;
+        for chunk in slice.chunks_mut(chunk_len) {
+            let len = chunk.len();
+            units.push((slot, offset, chunk));
+            offset += len;
+        }
+    }
+    parallel_map(workers, units, |(slot, offset, chunk)| f(slot, offset, chunk));
+}
+
 /// Number of workers to use by default: respects `GRADESTC_WORKERS`,
 /// otherwise available parallelism (capped at 16).
 pub fn default_workers() -> usize {
@@ -100,5 +139,51 @@ mod tests {
     #[test]
     fn default_workers_positive() {
         assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn chunked_reduce_covers_every_chunk_once() {
+        let mut a = vec![0u32; 10];
+        let mut b = vec![0u32; 3];
+        chunked_reduce(4, vec![&mut a[..], &mut b[..]], 4, |slot, offset, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v += (slot as u32) * 1000 + (offset + i) as u32 + 1;
+            }
+        });
+        let expect_a: Vec<u32> = (0..10).map(|i| i + 1).collect();
+        let expect_b: Vec<u32> = (0..3).map(|i| 1000 + i + 1).collect();
+        assert_eq!(a, expect_a);
+        assert_eq!(b, expect_b);
+    }
+
+    #[test]
+    fn chunked_reduce_bitwise_stable_across_worker_counts() {
+        // A float accumulation whose result depends on per-element add order:
+        // identical chunk geometry must give identical bits for any workers.
+        let terms: Vec<Vec<f32>> = (0..7)
+            .map(|t| (0..100).map(|i| ((t * 31 + i) as f32).sin() * 1e-3).collect())
+            .collect();
+        let run = |workers: usize| -> Vec<u32> {
+            let mut out = vec![0.0f32; 100];
+            chunked_reduce(workers, vec![&mut out[..]], 16, |_slot, offset, chunk| {
+                for term in &terms {
+                    let src = &term[offset..offset + chunk.len()];
+                    for (d, &v) in chunk.iter_mut().zip(src) {
+                        *d += v;
+                    }
+                }
+            });
+            out.into_iter().map(f32::to_bits).collect()
+        };
+        let seq = run(1);
+        assert_eq!(seq, run(2));
+        assert_eq!(seq, run(8));
+    }
+
+    #[test]
+    fn chunked_reduce_empty_slices_ok() {
+        let mut a: Vec<f32> = Vec::new();
+        chunked_reduce(4, vec![&mut a[..]], 8, |_, _, _| panic!("no chunks expected"));
+        assert!(a.is_empty());
     }
 }

@@ -4,7 +4,8 @@
 use gradestc::config::{
     CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
 };
-use gradestc::coordinator::Simulation;
+use gradestc::coordinator::{Simulation, Simulation2Hook};
+use gradestc::metrics::RoundRecord;
 
 fn base_cfg(name: &str, comp: CompressorKind) -> ExperimentConfig {
     ExperimentConfig {
@@ -26,6 +27,7 @@ fn base_cfg(name: &str, comp: CompressorKind) -> ExperimentConfig {
         seed: 11,
         use_xla: false,
         artifacts_dir: "artifacts".into(),
+        workers: 1,
     }
 }
 
@@ -159,6 +161,130 @@ fn deterministic_given_seed() {
     let b = run();
     assert_eq!(a.total_uplink, b.total_uplink);
     assert!((a.best_accuracy - b.best_accuracy).abs() < 1e-12);
+}
+
+/// Assert two round traces are bit-identical (floats compared by bits so
+/// NaN evals also count as equal).
+fn assert_rounds_bitwise_equal(a: &[RoundRecord], b: &[RoundRecord], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: round count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.round, y.round, "{label}");
+        let r = x.round;
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "{label}: train_loss, round {r}"
+        );
+        assert_eq!(
+            x.test_accuracy.to_bits(),
+            y.test_accuracy.to_bits(),
+            "{label}: test_accuracy, round {r}"
+        );
+        assert_eq!(
+            x.test_loss.to_bits(),
+            y.test_loss.to_bits(),
+            "{label}: test_loss, round {r}"
+        );
+        assert_eq!(x.uplink_bytes, y.uplink_bytes, "{label}: uplink, round {r}");
+        assert_eq!(x.downlink_bytes, y.downlink_bytes, "{label}: downlink, round {r}");
+        assert_eq!(
+            x.sim_time_s.to_bits(),
+            y.sim_time_s.to_bits(),
+            "{label}: sim_time, round {r}"
+        );
+        assert_eq!(x.sum_d, y.sum_d, "{label}: sum_d, round {r}");
+    }
+}
+
+/// Run a config at a given worker count, returning the full round trace
+/// plus the summary report.
+fn run_with_workers(
+    mut cfg: ExperimentConfig,
+    workers: usize,
+) -> (Vec<RoundRecord>, gradestc::metrics::RunReport) {
+    cfg.workers = workers;
+    let mut sim = Simulation::build(cfg).unwrap();
+    let report = sim.run().unwrap();
+    (sim.recorder.rounds().to_vec(), report)
+}
+
+/// Tentpole acceptance: the parallel round engine is bit-deterministic in
+/// the worker count for the paper's method (per-client compressor state —
+/// the GradESTC basis — must evolve in lockstep at any parallelism).
+#[test]
+fn parallel_engine_bit_identical_gradestc() {
+    let mut cfg = base_cfg(
+        "it-par-gradestc",
+        CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+    );
+    // Partial participation so lane extraction sees non-trivial subsets.
+    cfg.num_clients = 8;
+    cfg.participation = 0.5;
+    cfg.rounds = 4;
+    let (seq, seq_rep) = run_with_workers(cfg.clone(), 1);
+    let (par, par_rep) = run_with_workers(cfg, 8);
+    assert_rounds_bitwise_equal(&seq, &par, "gradestc w1 vs w8");
+    assert_eq!(seq_rep.total_uplink, par_rep.total_uplink);
+    assert_eq!(
+        seq_rep.best_accuracy.to_bits(),
+        par_rep.best_accuracy.to_bits()
+    );
+    assert_eq!(seq_rep.sum_d, par_rep.sum_d);
+}
+
+/// Same determinism bar for a stateless-baseline compressor (TopK).
+#[test]
+fn parallel_engine_bit_identical_topk() {
+    let mut cfg = base_cfg("it-par-topk", CompressorKind::TopK { frac: 0.1 });
+    cfg.rounds = 4;
+    let (seq, seq_rep) = run_with_workers(cfg.clone(), 1);
+    for workers in [2usize, 8] {
+        let (par, par_rep) = run_with_workers(cfg.clone(), workers);
+        assert_rounds_bitwise_equal(&seq, &par, &format!("topk w1 vs w{workers}"));
+        assert_eq!(seq_rep.total_uplink, par_rep.total_uplink);
+        assert_eq!(
+            seq_rep.best_accuracy.to_bits(),
+            par_rep.best_accuracy.to_bits()
+        );
+    }
+}
+
+/// `workers: 0` resolves to an automatic count and still runs fine.
+#[test]
+fn auto_workers_runs() {
+    let mut cfg = base_cfg("it-auto-workers", CompressorKind::None);
+    cfg.rounds = 2;
+    cfg.workers = 0;
+    let mut sim = Simulation::build(cfg).unwrap();
+    let rec = sim.step(0).unwrap();
+    assert!(rec.train_loss.is_finite());
+}
+
+/// A hook that panics must not be silently dropped: the next round still
+/// invokes it (regression test for the old take()/put-back dance).
+#[test]
+fn round_hook_survives_panic() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    let calls = Arc::new(AtomicUsize::new(0));
+    let calls2 = calls.clone();
+    let mut cfg = base_cfg("it-hook-panic", CompressorKind::None);
+    cfg.rounds = 3;
+    let mut sim = Simulation::build(cfg).unwrap();
+    sim.set_round_hook(Box::new(move |round, _view: &Simulation2Hook| {
+        calls2.fetch_add(1, Ordering::SeqCst);
+        if round == 0 {
+            panic!("hook bails on round 0");
+        }
+    }));
+    // Round 0 panics inside the hook…
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| sim.step(0)));
+    assert!(caught.is_err());
+    assert_eq!(calls.load(Ordering::SeqCst), 1);
+    // …but the hook is still installed and fires on the next round.
+    sim.step(1).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 2);
 }
 
 #[test]
