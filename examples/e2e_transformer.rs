@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
         use_xla: true, // the transformer is XLA-only: this IS the e2e proof
         artifacts_dir: "artifacts".into(),
         workers: 1, // XLA lanes run on the coordinator thread anyway
+        net: gradestc::config::NetConfig::default(),
     };
     println!(
         "e2e: TinyTransformer ({} params) on synthetic byte corpus, \

@@ -2,16 +2,22 @@
 //! XLA artifacts when present, compression, decompression, aggregation,
 //! evaluation skipped) per model — the §Perf L3 headline number — plus a
 //! worker-count sweep (1/2/4/8) over a 20-client GradESTC round that
-//! measures the round engine's parallel speedup.
+//! measures the round engine's parallel speedup, and encode/decode
+//! throughput of the wire codec for GradESTC vs Raw payload sets.
 //!
 //! Run with `cargo bench --bench round_latency` (`make artifacts` first to
 //! include the XLA cases; the native cases and the sweep always run).
 
+use gradestc::compress::{build_pair, Compressor as _, Payload};
 use gradestc::config::{
     CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
+    NetConfig,
 };
 use gradestc::coordinator::Simulation;
+use gradestc::model::meta::layer_table;
+use gradestc::net::wire;
 use gradestc::util::bench::Bencher;
+use gradestc::util::rng::Pcg64;
 use std::time::Duration;
 
 fn cfg(model: ModelKind, dataset: DatasetKind, comp: CompressorKind, xla: bool) -> ExperimentConfig {
@@ -35,7 +41,24 @@ fn cfg(model: ModelKind, dataset: DatasetKind, comp: CompressorKind, xla: bool) 
         use_xla: xla,
         artifacts_dir: "artifacts".into(),
         workers: 1,
+        net: NetConfig::default(),
     }
+}
+
+/// One LeNet-5 update compressed by `kind`, as a ready-to-encode payload
+/// set (GradESTC warmed for one round first so the bench measures the
+/// steady-state coefficient payloads, not the init-round basis refresh).
+fn payload_set(kind: &CompressorKind) -> Vec<Payload> {
+    let meta = layer_table(ModelKind::LeNet5);
+    let mut rng = Pcg64::seeded(0xBE7C);
+    let (mut c, _d) = build_pair(kind, &meta, 9);
+    let warm: Vec<Vec<f32>> =
+        meta.layers.iter().map(|l| rng.normal_vec(l.size())).collect();
+    let _ = c.compress(&warm);
+    let update: Vec<Vec<f32>> =
+        meta.layers.iter().map(|l| rng.normal_vec(l.size())).collect();
+    let (payloads, _) = c.compress(&update);
+    payloads
 }
 
 fn main() {
@@ -89,6 +112,28 @@ fn main() {
             let rec = sim.step(round).unwrap();
             round += 1;
             std::hint::black_box(rec.train_loss);
+        });
+    }
+
+    // Wire-codec throughput: encode/decode one client's payload set for
+    // the paper's method vs the uncompressed baseline. The Raw set is ~25×
+    // larger, so this isolates codec cost per byte on both regimes.
+    let cases = [
+        (
+            "gradestc",
+            CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+        ),
+        ("raw", CompressorKind::None),
+    ];
+    for (name, kind) in cases {
+        let payloads = payload_set(&kind);
+        let encoded = wire::encode(&payloads);
+        let bytes = encoded.len() as f64;
+        b.bench_with_throughput(&format!("wire-encode-{name}"), Some((bytes, "B")), || {
+            std::hint::black_box(wire::encode(&payloads));
+        });
+        b.bench_with_throughput(&format!("wire-decode-{name}"), Some((bytes, "B")), || {
+            std::hint::black_box(wire::decode(&encoded).unwrap());
         });
     }
 

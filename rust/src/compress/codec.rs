@@ -1,10 +1,20 @@
 //! Wire payloads and their exact byte accounting.
 //!
 //! Every compressor emits one [`Payload`] per model tensor. `wire_bytes`
-//! is the exact size a binary serializer would put on the uplink — the
-//! number the paper's Table III totals are made of (paper Eq. 14 for
-//! GradESTC: `C = k·n/l + d_r·l + k` floats… we charge 4 bytes per f32,
-//! 4 per index, plus a fixed 8-byte frame header).
+//! is the exact size the binary serializer ([`crate::net::wire`]) puts on
+//! the uplink — the number the paper's Table III totals are made of (paper
+//! Eq. 14 for GradESTC: `C = k·n/l + d_r·l + k` floats… 4 bytes per f32,
+//! 4 per index, plus the fixed 8-byte frame header).
+//!
+//! Since the transport subsystem landed, these payloads really are
+//! serialized: the round engine encodes them with
+//! [`wire::encode`](crate::net::wire::encode), ships the buffer across the
+//! [`Transport`](crate::net::Transport), and decodes server-side, and the
+//! communication ledger is charged from the encoded buffer's length.
+//! `wire_bytes` is therefore a *checked invariant*, not an estimate:
+//! `wire::encode([p]).len() == p.wire_bytes()` for every variant
+//! (`debug_assert`ed on encode and property-tested in
+//! `rust/tests/properties.rs`, including bit-packing edge cases).
 
 /// Fixed per-payload frame header (type tag + length), bytes.
 pub const FRAME_HEADER: u64 = 8;
@@ -148,7 +158,7 @@ pub fn pack_bits(codes: &[u32], bits: u8) -> Vec<u8> {
     let mut out = vec![0u8; total_bits.div_ceil(8)];
     let mut bitpos = 0usize;
     for &c in codes {
-        debug_assert!(bits == 32 as u8 || c < (1u32 << bits));
+        debug_assert!(c < (1u32 << bits));
         for b in 0..bits as usize {
             if (c >> b) & 1 == 1 {
                 out[bitpos >> 3] |= 1 << (bitpos & 7);

@@ -6,6 +6,7 @@
 //! results stay self-describing.
 
 use super::json::Json;
+use crate::net::NetConfig;
 
 /// Which synthetic dataset family to train on (DESIGN.md §2.1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -191,6 +192,10 @@ pub struct ExperimentConfig {
     /// else available parallelism); `1` = fully sequential. Results are
     /// bit-identical for every value.
     pub workers: usize,
+    /// Simulated network: per-client link profiles (heterogeneous when
+    /// `het_spread > 0`), client-dropout rate, and straggler deadline. The
+    /// default is byte-identical to the pre-transport accounting.
+    pub net: NetConfig,
 }
 
 impl ExperimentConfig {
@@ -216,6 +221,7 @@ impl ExperimentConfig {
             use_xla: false,
             artifacts_dir: "artifacts".into(),
             workers: 1,
+            net: NetConfig::default(),
         }
     }
 
@@ -257,6 +263,7 @@ impl ExperimentConfig {
             use_xla: false,
             artifacts_dir: "artifacts".into(),
             workers: 1,
+            net: NetConfig::default(),
         }
     }
 
@@ -330,6 +337,7 @@ impl ExperimentConfig {
             ("use_xla", Json::Bool(self.use_xla)),
             ("artifacts_dir", Json::str(&self.artifacts_dir)),
             ("workers", Json::num(self.workers as f64)),
+            ("net", net_to_json(&self.net)),
         ])
     }
 
@@ -370,8 +378,40 @@ impl ExperimentConfig {
             // Optional for backward compatibility with pre-engine configs:
             // absent means sequential, the old behaviour.
             workers: j.get("workers").and_then(|v| v.as_usize()).unwrap_or(1),
+            // Optional for backward compatibility with pre-transport
+            // configs: absent means the ideal-network default.
+            net: j.get("net").map(parse_net).transpose()?.unwrap_or_default(),
         })
     }
+}
+
+fn net_to_json(n: &NetConfig) -> Json {
+    Json::obj(vec![
+        ("uplink_mbps", Json::num(n.uplink_mbps)),
+        ("downlink_mbps", Json::num(n.downlink_mbps)),
+        ("latency_ms", Json::num(n.latency_ms)),
+        ("het_spread", Json::num(n.het_spread)),
+        ("dropout", Json::num(n.dropout)),
+        ("deadline_s", Json::num(n.deadline_s)),
+    ])
+}
+
+fn parse_net(j: &Json) -> Result<NetConfig, String> {
+    let d = NetConfig::default();
+    let f = |key: &str, dv: f64| -> Result<f64, String> {
+        match j.get(key) {
+            Some(v) => v.as_f64().ok_or_else(|| format!("net.{key} must be a number")),
+            None => Ok(dv),
+        }
+    };
+    Ok(NetConfig {
+        uplink_mbps: f("uplink_mbps", d.uplink_mbps)?,
+        downlink_mbps: f("downlink_mbps", d.downlink_mbps)?,
+        latency_ms: f("latency_ms", d.latency_ms)?,
+        het_spread: f("het_spread", d.het_spread)?,
+        dropout: f("dropout", d.dropout)?,
+        deadline_s: f("deadline_s", d.deadline_s)?,
+    })
 }
 
 /// Stable dataset name for configs/paths.
@@ -532,6 +572,38 @@ mod tests {
         }
         let back = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(back.workers, 1);
+    }
+
+    #[test]
+    fn net_roundtrips_and_defaults() {
+        let mut cfg = ExperimentConfig::preset_quickstart();
+        cfg.net = NetConfig {
+            uplink_mbps: 2.5,
+            downlink_mbps: 20.0,
+            latency_ms: 80.0,
+            het_spread: 0.4,
+            dropout: 0.15,
+            deadline_s: 12.0,
+        };
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+
+        // Pre-transport configs (no "net" field) parse as the ideal
+        // default network.
+        let mut j = cfg.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("net");
+        }
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.net, NetConfig::default());
+
+        // A partial net object fills the rest from the default.
+        if let Json::Obj(m) = &mut j {
+            m.insert("net".into(), Json::obj(vec![("dropout", Json::num(0.3))]));
+        }
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.net.dropout, 0.3);
+        assert_eq!(back.net.uplink_mbps, NetConfig::default().uplink_mbps);
     }
 
     #[test]

@@ -39,6 +39,7 @@ impl Json {
     }
 
     /// Serialize compactly.
+    #[allow(clippy::inherent_to_string)] // Display would imply parse/format symmetry we don't want
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, None, 0);

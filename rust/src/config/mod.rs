@@ -14,3 +14,6 @@ pub use experiment::{
     CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
 };
 pub use json::Json;
+// The network knobs live with the net subsystem; re-exported here because
+// they are part of the experiment schema.
+pub use crate::net::NetConfig;

@@ -1,48 +1,62 @@
-//! The staged round engine: broadcast → parallel per-client phase →
-//! fixed-order weighted reduction → apply/eval.
+//! The staged round engine: broadcast → parallel client phase → transport
+//! → parallel server phase → fixed-order reduction → apply/eval.
 //!
 //! One FL round decomposes into stages with very different sharing shapes:
 //!
-//! 1. **Broadcast** — the coordinator charges the downlink for every
-//!    participant (pure accounting; the global model is shared read-only).
-//! 2. **Per-client phase** — each participant's *lane* (its private shard,
+//! 1. **Broadcast** — the coordinator encodes the global model once
+//!    ([`wire::encode_params`](crate::net::wire::encode_params)) and ships
+//!    the frame to every surviving participant through the
+//!    [`Transport`](crate::net::Transport); the downlink is charged from
+//!    the delivered frames' lengths. (Every client receives an identical
+//!    frame, so the coordinator decodes one copy and shares it read-only
+//!    across lanes.)
+//! 2. **Client phase** — each participant's *lane* (its private shard,
 //!    RNG, compressor, and the server's paired decompressor, all colocated
-//!    in [`Client`]) runs local SGD from the broadcast model, compresses the
-//!    pseudo-gradient, and reconstructs it server-side. Lanes touch only
+//!    in [`Client`]) runs local SGD from the decoded broadcast, compresses
+//!    the pseudo-gradient, and **encodes it to wire bytes**
+//!    ([`wire::encode`](crate::net::wire::encode)). Lanes touch only
 //!    disjoint state plus `&`-shared inputs, so [`run_client_phase`] fans
 //!    them across worker threads via
 //!    [`parallel_map`](crate::util::pool::parallel_map) whenever the
 //!    backend allows ([`ExecPlan::Parallel`]).
-//! 3. **Reduction** — lane outcomes are consumed in participant order
-//!    (uplink charges, loss averaging, hook dispatch) and the weighted
-//!    FedAvg aggregate runs as a deterministic chunked reduction
+//! 3. **Transport** — the coordinator uploads each lane's frame in
+//!    participant order, drains the fabric, charges the uplink from the
+//!    drained buffer lengths, and applies the straggler deadline.
+//! 4. **Server phase** — [`run_server_phase`] decodes each on-time frame
+//!    and reconstructs the update with the lane's paired decompressor,
+//!    again fanned across workers (per-lane state only, so order-free).
+//! 5. **Reduction** — outcomes are consumed in participant order and the
+//!    weighted FedAvg aggregate runs as a deterministic chunked reduction
 //!    ([`ParamStore::weighted_sum`]).
-//! 4. **Apply/eval** — the coordinator applies the aggregate and evaluates.
 //!
 //! # Determinism
 //!
 //! The engine is bit-deterministic in the worker count: every lane's state
 //! evolves only from its own streams (client RNG, compressor/decompressor
-//! state), results are collected in participant order regardless of
-//! completion order, and the reduction's chunk geometry is fixed. `workers =
-//! 1` and `workers = N` therefore produce identical
-//! [`RoundRecord`](crate::metrics::RoundRecord)s — the property that keeps
-//! temporally-correlated compressor state (GradESTC basis evolution)
-//! reproducible at any parallelism. `rust/tests/simulation.rs` asserts this
-//! end-to-end.
+//! state), frames and results are collected in participant order
+//! regardless of completion order, dropout is a pure function of
+//! `(seed, round, cid)`, and the reduction's chunk geometry is fixed.
+//! `workers = 1` and `workers = N` therefore produce identical
+//! [`RoundRecord`](crate::metrics::RoundRecord)s — including identical
+//! surviving-client sets — the property that keeps temporally-correlated
+//! compressor state (GradESTC basis evolution) reproducible at any
+//! parallelism. `rust/tests/simulation.rs` asserts this end-to-end, with
+//! and without dropout.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::trainer::{ParallelTrainer, Trainer};
 use super::Client;
 use crate::compress::CompressStats;
 use crate::model::params::ParamStore;
+use crate::net::wire;
 use crate::util::pool::parallel_map;
 
 /// Immutable inputs shared (`&`) by every client lane in a round.
 #[derive(Clone, Copy)]
 pub struct RoundInputs<'a> {
-    /// Broadcast global parameters (read-only).
+    /// Broadcast global parameters (decoded from the broadcast frame,
+    /// read-only).
     pub global: &'a ParamStore,
     /// Local SGD epochs per round.
     pub local_epochs: usize,
@@ -71,16 +85,16 @@ pub enum ExecPlan<'a> {
     },
 }
 
-/// One client lane's round output, in participant order.
-pub struct LaneOutcome {
+/// One client lane's uplink-side round output, in participant order: the
+/// *encoded* update frame plus the client-local measurements.
+pub struct ClientFrame {
     /// Client id.
     pub cid: usize,
     /// Mean minibatch loss over local training.
     pub mean_loss: f64,
-    /// Exact wire bytes of the compressed update.
-    pub uplink_bytes: u64,
-    /// Server-side reconstruction of the update (tensor-aligned).
-    pub update: Vec<Vec<f32>>,
+    /// Wire-encoded compressed update (what gets uploaded; its length is
+    /// the uplink charge).
+    pub frame: Vec<u8>,
     /// Compression statistics (Σd proxy etc.).
     pub stats: CompressStats,
     /// FedAvg weight (shard size).
@@ -101,15 +115,15 @@ pub fn take_lanes<'a>(
         .collect()
 }
 
-/// Run one client lane: local SGD from the broadcast model, compress the
-/// pseudo-gradient, reconstruct server-side. Touches only the lane's own
-/// state plus the shared read-only inputs.
+/// Run one client lane's uplink side: local SGD from the broadcast model,
+/// compress the pseudo-gradient, encode it to wire bytes. Touches only the
+/// lane's own state plus the shared read-only inputs.
 fn run_lane(
     trainer: &dyn Trainer,
     inputs: &RoundInputs<'_>,
     cid: usize,
     client: &mut Client,
-) -> Result<LaneOutcome> {
+) -> Result<ClientFrame> {
     let (new_params, mean_loss) = trainer.local_train(
         inputs.global,
         &client.data,
@@ -122,29 +136,26 @@ fn run_lane(
     // compressor directly — no per-tensor re-copy in the hot phase.
     let tensors = new_params.delta(inputs.global).into_tensors();
     let (payloads, stats) = client.compressor.compress(&tensors);
-    let uplink_bytes: u64 = payloads.iter().map(|p| p.wire_bytes()).sum();
-    // Server-side reconstruction by the lane's paired decompressor.
-    let update = client.decompressor.decompress(&payloads);
-    Ok(LaneOutcome {
+    let frame = wire::encode(&payloads);
+    Ok(ClientFrame {
         cid,
         mean_loss,
-        uplink_bytes,
-        update,
+        frame,
         stats,
         weight: client.data.len() as f64,
     })
 }
 
-/// Execute the per-client phase for every lane.
+/// Execute the client phase for every lane.
 ///
-/// Outcomes are returned in `lanes` (participant) order regardless of
+/// Frames are returned in `lanes` (participant) order regardless of
 /// scheduling; the first error in that order wins, so failures are
 /// deterministic too.
 pub fn run_client_phase(
     plan: ExecPlan<'_>,
     inputs: RoundInputs<'_>,
     lanes: Vec<(usize, &mut Client)>,
-) -> Result<Vec<LaneOutcome>> {
+) -> Result<Vec<ClientFrame>> {
     match plan {
         ExecPlan::Parallel { trainer, workers } => {
             parallel_map(workers, lanes, |(cid, client)| {
@@ -158,4 +169,29 @@ pub fn run_client_phase(
             .map(|(cid, client)| run_lane(trainer, &inputs, cid, client))
             .collect(),
     }
+}
+
+/// Execute the server phase: decode each uploaded frame and reconstruct
+/// the update with the lane's paired decompressor.
+///
+/// `frames[i]` must be lane `lanes[i]`'s upload (the coordinator aligns
+/// them by construction). Each unit touches only its own lane's
+/// decompressor state, so the phase fans across `workers` threads with
+/// bit-identical results at any count. Returns `(client_id, update)` in
+/// lane order.
+pub fn run_server_phase(
+    workers: usize,
+    lanes: Vec<(usize, &mut Client)>,
+    frames: Vec<Vec<u8>>,
+) -> Result<Vec<(usize, Vec<Vec<f32>>)>> {
+    assert_eq!(lanes.len(), frames.len(), "one frame per lane");
+    let units: Vec<((usize, &mut Client), Vec<u8>)> =
+        lanes.into_iter().zip(frames).collect();
+    parallel_map(workers, units, |((cid, client), frame)| {
+        let payloads = wire::decode(&frame)
+            .with_context(|| format!("decoding client {cid}'s upload"))?;
+        Ok((cid, client.decompressor.decompress(&payloads)))
+    })
+    .into_iter()
+    .collect()
 }

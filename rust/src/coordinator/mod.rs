@@ -3,31 +3,42 @@
 //! One [`Simulation`] owns the global model, the synthetic federated
 //! dataset, one client *lane* per client (private shard + RNG + compressor
 //! + the server's paired decompressor), a [`Trainer`] backend (XLA
-//! artifacts or the native reference), and the communication ledger.
+//! artifacts or the native reference), the [`Transport`] fabric every byte
+//! crosses, the per-client link model, and the communication ledger.
 //! `run()` executes the FedAvg round loop of paper §V, staged by the round
 //! engine ([`engine`]):
 //!
 //! ```text
 //! for round r:
-//!   sample participants                     (participation fraction)
-//!   stage 1  broadcast global params        → downlink charge
-//!   stage 2  per-client phase, one lane per participant, fanned across
+//!   sample participants, apply dropout      (participation · survival)
+//!   stage 1  encode global params → Transport → downlink charged from
+//!            the delivered frames → decode client-side
+//!   stage 2  client phase, one lane per survivor, fanned across
 //!            `cfg.workers` threads when the backend is Sync:
-//!              local SGD (E epochs) → Δᵢ → compress → decompress Δ̂ᵢ
-//!   stage 3  fixed-order accounting (uplink, loss, Σd, hook) + weighted
-//!            FedAvg aggregate via a deterministic chunked reduction
-//!   stage 4  apply aggregate, evaluate on held-out data, record round
+//!              local SGD (E epochs) → Δᵢ → compress → encode to bytes
+//!   stage 3  upload frames through the Transport (participant order),
+//!            uplink charged from the drained buffers, straggler deadline
+//!   stage 4  server phase: decode + reconstruct Δ̂ᵢ per lane (parallel)
+//!   stage 5  fixed-order accounting (loss, Σd, hook) + weighted FedAvg
+//!            over on-time clients via a deterministic chunked reduction
+//!   stage 6  apply aggregate, evaluate on held-out data, record round
 //! ```
+//!
+//! Late (straggler) uploads are still decoded — the paired compressor/
+//! decompressor state must evolve in lockstep — but are excluded from the
+//! round's aggregate, mirroring a synchronous server that processes late
+//! arrivals off the critical path.
 //!
 //! The engine is bit-deterministic in the worker count (see [`engine`]'s
 //! module docs): `workers = 1` and `workers = N` produce identical
-//! [`RoundRecord`]s for the same seed.
+//! [`RoundRecord`]s — including identical surviving-client sets under
+//! dropout — for the same seed.
 
 pub mod engine;
 pub mod sampling;
 pub mod trainer;
 
-pub use engine::{ExecPlan, LaneOutcome, RoundInputs};
+pub use engine::{ClientFrame, ExecPlan, RoundInputs};
 pub use sampling::ParticipationSampler;
 pub use trainer::{NativeOrXla, ParallelTrainer, Trainer, XlaTrainer};
 
@@ -41,6 +52,7 @@ use crate::data::{partition_indices, Partition};
 use crate::metrics::{CommLedger, NetworkModel, RoundRecord, RunRecorder, RunReport};
 use crate::model::meta::{layer_table, ModelMeta};
 use crate::model::params::ParamStore;
+use crate::net::{wire, DropoutModel, Loopback, Transport};
 use crate::util::rng::Pcg64;
 
 /// One simulated client *lane*: everything a round's per-client phase
@@ -76,6 +88,8 @@ pub struct Simulation {
     sampler: ParticipationSampler,
     ledger: CommLedger,
     network: NetworkModel,
+    transport: Box<dyn Transport>,
+    dropout: DropoutModel,
     /// Per-round records.
     pub recorder: RunRecorder,
     /// Optional per-round callback hook (gradient probes, logging).
@@ -152,6 +166,7 @@ impl Simulation {
     /// Build everything from a config. Fails if `use_xla` is set but the
     /// artifacts are missing or don't cover the model.
     pub fn build(cfg: ExperimentConfig) -> Result<Simulation> {
+        cfg.net.validate().map_err(|e| anyhow!("invalid network config: {e}"))?;
         let meta = layer_table(cfg.model);
         let mut root = Pcg64::new(cfg.seed, 0x51);
 
@@ -179,6 +194,11 @@ impl Simulation {
             cfg.participation,
             root.fork(42),
         );
+        // Per-client links and the dropout model draw from their own seed
+        // streams, so enabling them never perturbs data/model/sampler RNG.
+        let network =
+            NetworkModel::from_profiles(cfg.net.sample_links(cfg.num_clients, cfg.seed));
+        let dropout = DropoutModel::new(cfg.net.dropout, cfg.seed ^ 0xD20);
         Ok(Simulation {
             cfg,
             meta,
@@ -188,10 +208,23 @@ impl Simulation {
             trainer,
             sampler,
             ledger: CommLedger::new(),
-            network: NetworkModel::edge_default(),
+            network,
+            transport: Box::new(Loopback::new()),
+            dropout,
             recorder: RunRecorder::new(),
             round_hook: None,
         })
+    }
+
+    /// The per-client link model in effect.
+    pub fn network(&self) -> &NetworkModel {
+        &self.network
+    }
+
+    /// Swap the transport fabric (e.g. a future distributed backend). The
+    /// replacement must honor [`Transport`]'s FIFO drain contract.
+    pub fn set_transport(&mut self, transport: Box<dyn Transport>) {
+        self.transport = transport;
     }
 
     /// Install a per-round hook (used by the Fig. 1 similarity probe).
@@ -211,54 +244,109 @@ impl Simulation {
     /// record. Bit-identical for every `cfg.workers` value (see [`engine`]).
     pub fn step(&mut self, round: usize) -> Result<RoundRecord> {
         let participants = self.sampler.sample(round);
-        let broadcast_bytes = 4 * self.global.numel() as u64;
+        // Dropout: a dropped client never hears the broadcast and never
+        // uploads. Pure per-(seed, round, cid) decision, so the surviving
+        // set is identical at any worker count.
+        let survivors = self.dropout.filter(round, &participants);
         let workers = self.cfg.resolved_workers();
 
-        // Stage 1: broadcast — every participant downloads the global model.
-        for _ in &participants {
-            self.ledger.charge_downlink(broadcast_bytes);
+        // Stage 1: broadcast — encode the global model once, ship the
+        // frame (one shared allocation) to every survivor through the
+        // transport, and charge the downlink from the buffers that
+        // actually crossed it.
+        let broadcast: std::sync::Arc<[u8]> = wire::encode_params(&self.global).into();
+        let broadcast_bytes = broadcast.len() as u64;
+        for &cid in &survivors {
+            self.transport.broadcast(cid, &broadcast)?;
         }
+        let delivered = self.transport.drain_broadcasts();
+        for (_, frame) in &delivered {
+            self.ledger.charge_downlink(frame.len() as u64);
+        }
+        // Client side: every client received an identical frame, so decode
+        // one copy and share it read-only across lanes (the f32 ↔ LE-bytes
+        // round trip is bit-exact).
+        let global_rx = match delivered.first() {
+            Some((_, frame)) => wire::decode_params(&self.meta, frame)
+                .context("decoding the model broadcast")?,
+            None => self.global.clone(),
+        };
 
-        // Stage 2: per-client phase (local SGD → compress → decompress),
-        // one lane per participant, fanned across workers when the backend
-        // allows.
+        // Stage 2: client phase (local SGD → compress → encode), one lane
+        // per survivor, fanned across workers when the backend allows.
         let inputs = engine::RoundInputs {
-            global: &self.global,
+            global: &global_rx,
             local_epochs: self.cfg.local_epochs,
             batch_size: self.cfg.batch_size,
             lr: self.cfg.lr,
         };
-        let lanes = engine::take_lanes(&mut self.clients, &participants);
+        let lanes = engine::take_lanes(&mut self.clients, &survivors);
         let outcomes = engine::run_client_phase(self.trainer.plan(workers), inputs, lanes)?;
 
-        // Stage 3: fixed-order accounting over lane outcomes (participant
-        // order, independent of completion order) …
-        let mut per_client_up: Vec<u64> = Vec::with_capacity(outcomes.len());
-        let mut updates: Vec<(usize, Vec<Vec<f32>>)> = Vec::with_capacity(outcomes.len());
-        let mut weights: Vec<f64> = Vec::with_capacity(outcomes.len());
+        // Stage 3: upload every frame through the transport in participant
+        // order; the uplink charge is whatever the server drains. Weights
+        // are keyed by client id, not position, so a transport that ever
+        // reorders frames cannot silently mis-weight the aggregate.
         let mut loss_sum = 0.0f64;
         let mut sum_d = 0u64;
+        let mut weight_of: Vec<f64> = vec![0.0; self.clients.len()];
         for outcome in outcomes {
-            self.ledger.charge_uplink(outcome.uplink_bytes);
-            per_client_up.push(outcome.uplink_bytes);
             loss_sum += outcome.mean_loss;
             sum_d += outcome.stats.sum_d;
-            weights.push(outcome.weight);
-            updates.push((outcome.cid, outcome.update));
+            weight_of[outcome.cid] = outcome.weight;
+            self.transport.upload(outcome.cid, outcome.frame)?;
         }
+        let uploads = self.transport.drain_uploads();
+        debug_assert_eq!(
+            uploads.iter().map(|(cid, _)| *cid).collect::<Vec<_>>(),
+            survivors,
+            "transport violated the FIFO drain contract"
+        );
+        let mut per_client_up: Vec<(usize, u64)> = Vec::with_capacity(uploads.len());
+        for (cid, frame) in &uploads {
+            self.ledger.charge_uplink(frame.len() as u64);
+            per_client_up.push((*cid, frame.len() as u64));
+        }
+        // Straggler deadline: a client whose broadcast+upload transfer on
+        // its own link exceeds the deadline arrives too late to enter the
+        // aggregate. Its bytes are still charged (they crossed the wire)
+        // and its frame is still decoded below (paired compressor state
+        // must stay in lockstep) — it just doesn't contribute to FedAvg.
+        let deadline = self.cfg.net.deadline();
+        let on_time: Vec<bool> = per_client_up
+            .iter()
+            .map(|&(cid, up)| match deadline {
+                Some(d) => self.network.link(cid).round_trip_time(broadcast_bytes, up) <= d,
+                None => true,
+            })
+            .collect();
+
+        // Stage 4: server phase — decode each upload and reconstruct the
+        // update with the lane's paired decompressor, fanned across workers.
+        let ids: Vec<usize> = uploads.iter().map(|(cid, _)| *cid).collect();
+        let frames: Vec<Vec<u8>> = uploads.into_iter().map(|(_, f)| f).collect();
+        let lanes = engine::take_lanes(&mut self.clients, &ids);
+        let updates = engine::run_server_phase(workers, lanes, frames)?;
 
         if let Some(hook) = self.round_hook.as_mut() {
             hook(round, &Simulation2Hook { updates: &updates, meta: &self.meta });
         }
 
-        // … followed by the weighted FedAvg aggregate as a deterministic
-        // chunked reduction (shard-size weights).
-        let wtotal: f64 = weights.iter().sum();
-        let scales: Vec<f32> = weights.iter().map(|w| (w / wtotal) as f32).collect();
-        let terms: Vec<&[Vec<f32>]> = updates.iter().map(|(_, u)| u.as_slice()).collect();
+        // Stage 5: weighted FedAvg over the on-time clients as a
+        // deterministic chunked reduction (shard-size weights).
+        let mut terms: Vec<&[Vec<f32>]> = Vec::with_capacity(updates.len());
+        let mut used_weights: Vec<f64> = Vec::with_capacity(updates.len());
+        for ((cid, update), &ot) in updates.iter().zip(&on_time) {
+            if ot {
+                terms.push(update.as_slice());
+                used_weights.push(weight_of[*cid]);
+            }
+        }
+        let wtotal: f64 = used_weights.iter().sum();
+        let scales: Vec<f32> = used_weights.iter().map(|w| (w / wtotal) as f32).collect();
         let agg = ParamStore::weighted_sum(&self.meta, &terms, &scales, workers);
 
-        // Stage 4: apply, evaluate, record.
+        // Stage 6: apply, evaluate, record.
         self.global.axpy(1.0, &agg);
 
         let (test_loss, test_acc) = if round % self.cfg.eval_every == 0
@@ -272,13 +360,14 @@ impl Simulation {
         let (up, down) = self.ledger.end_round();
         let record = RoundRecord {
             round,
-            train_loss: loss_sum / participants.len().max(1) as f64,
+            train_loss: loss_sum / survivors.len().max(1) as f64,
             test_accuracy: test_acc,
             test_loss,
             uplink_bytes: up,
             downlink_bytes: down,
-            sim_time_s: self.network.round_time(&per_client_up, broadcast_bytes),
+            sim_time_s: self.network.round_time(&per_client_up, broadcast_bytes, deadline),
             sum_d,
+            survivors,
         };
         self.recorder.push(record.clone());
         Ok(record)

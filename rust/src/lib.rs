@@ -39,6 +39,36 @@
 //! lanes on the coordinator thread (PJRT handles don't cross threads), also
 //! with identical results.
 //!
+//! ## The network boundary ([`net`])
+//!
+//! All coordinator↔client traffic crosses the [`net::Transport`] as real
+//! byte buffers: the broadcast is encoded with
+//! [`net::wire::encode_params`], each client's compressed update is
+//! encoded with [`net::wire::encode`] (whose output length *defines*
+//! [`compress::Payload::wire_bytes`] — property-tested), and the
+//! communication ledger is charged from the drained frames. Per-client
+//! [`net::LinkProfile`]s (heterogeneous when `net.het_spread > 0`), a
+//! per-round client-dropout model, and a straggler deadline are configured
+//! through `ExperimentConfig::net` (`--dropout`, `--deadline`,
+//! `--up-mbps`, `--down-mbps`, `--latency-ms`, `--het-spread` on the CLI).
+//! The defaults — homogeneous edge links, no dropout, no deadline — are
+//! byte- and bit-identical to the pre-transport engine.
+//!
+//! ## Module map
+//!
+//! * [`compress`] — GradESTC + every baseline compressor ([`compress::Payload`]).
+//! * [`config`] — typed experiment configs, JSON round-tripping, presets.
+//! * [`coordinator`] — the staged round engine and [`coordinator::Simulation`].
+//! * [`data`] — synthetic datasets and non-IID partitioning.
+//! * [`linalg`] — dense matrix kernels (rSVD, MGS) for the compressors.
+//! * [`metrics`] — round records, CSV sinks, [`metrics::CommLedger`],
+//!   heterogeneous [`metrics::NetworkModel`].
+//! * [`model`] — layer tables and flat parameter stores.
+//! * [`net`] — wire codec, link/dropout simulation, [`net::Transport`].
+//! * [`nn`] — the native reference trainer.
+//! * [`runtime`] — PJRT/XLA artifact execution (feature-gated).
+//! * [`util`] — RNG, CLI args, bench harness, property testing, thread pool.
+//!
 //! See `examples/` for runnable end-to-end drivers and `DESIGN.md` for the
 //! full system inventory.
 
@@ -49,6 +79,7 @@ pub mod data;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod nn;
 pub mod runtime;
 pub mod util;

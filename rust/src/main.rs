@@ -14,6 +14,7 @@ mod experiments;
 
 use gradestc::config::{
     CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
+    NetConfig,
 };
 use gradestc::util::args::ArgSpec;
 
@@ -151,6 +152,20 @@ fn cmd_train(argv: Vec<String>) -> i32 {
             "0",
             "worker threads for the per-client phase (0 = auto via GRADESTC_WORKERS / cores; results are identical for any value)",
         )
+        .opt("up-mbps", "10", "mean client uplink bandwidth, Mbit/s")
+        .opt("down-mbps", "50", "mean client downlink bandwidth, Mbit/s")
+        .opt("latency-ms", "30", "mean per-message latency, ms")
+        .opt(
+            "het-spread",
+            "0",
+            "per-client link heterogeneity: bandwidth/latency scaled by exp(spread*N(0,1)); 0 = identical links",
+        )
+        .opt("dropout", "0", "per-round per-client dropout probability in [0,1)")
+        .opt(
+            "deadline",
+            "0",
+            "straggler deadline in seconds (late updates are excluded from the aggregate); 0 = wait for everyone",
+        )
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("out", "results", "results directory")
         .flag("native", "use the native Rust trainer instead of XLA artifacts")
@@ -201,6 +216,14 @@ fn cmd_train(argv: Vec<String>) -> i32 {
         use_xla,
         artifacts_dir: args.str("artifacts").to_string(),
         workers: args.usize("workers"),
+        net: NetConfig {
+            uplink_mbps: args.f64("up-mbps"),
+            downlink_mbps: args.f64("down-mbps"),
+            latency_ms: args.f64("latency-ms"),
+            het_spread: args.f64("het-spread"),
+            dropout: args.f64("dropout"),
+            deadline_s: args.f64("deadline"),
+        },
     };
     let quiet = args.has_flag("quiet");
     match experiments::run_one(&cfg, args.str("out"), !quiet) {

@@ -1,12 +1,26 @@
-//! Communication accounting and the bandwidth-constrained network model.
+//! Communication accounting over the real transport, and the
+//! heterogeneous-link network model.
 //!
-//! Every byte that would cross the wire in a real deployment is charged to
-//! a [`CommLedger`]: uplink per client per round (compressed payloads,
-//! replacement indices, headers) and downlink (global model broadcast).
-//! The paper's headline metrics — total uplink and uplink-at-threshold —
-//! read directly from the ledger. [`NetworkModel`] converts bytes into
-//! simulated wallclock for time-to-accuracy plots, with the asymmetric
-//! up/down bandwidth that motivates uplink-focused compression (§I).
+//! Every byte that crosses the [`Transport`](crate::net::Transport) is
+//! charged to a [`CommLedger`] from the *actual encoded frame lengths* the
+//! coordinator drains: uplink per client per round (the
+//! [`net::wire`](crate::net::wire)-encoded payload buffers — compressed
+//! tensors, replacement indices, frame headers and all) and downlink (the
+//! dense model-broadcast frame, once per surviving participant). The
+//! paper's headline metrics — total uplink and uplink-at-threshold — read
+//! directly from the ledger; since the codec guarantees
+//! `encode(p).len() == p.wire_bytes()`, those totals are byte-identical to
+//! the pre-transport analytical accounting.
+//!
+//! [`NetworkModel`] converts bytes into simulated wallclock for
+//! time-to-accuracy plots. It holds one [`LinkProfile`] *per client*
+//! (sampled from `ExperimentConfig::net`, heterogeneous when
+//! `het_spread > 0`), with the asymmetric up/down bandwidth that motivates
+//! uplink-focused compression (§I); a round takes as long as its slowest
+//! surviving participant, clipped to the straggler deadline when one is
+//! configured.
+
+use crate::net::LinkProfile;
 
 /// Running totals of simulated communication.
 #[derive(Clone, Debug, Default)]
@@ -61,43 +75,55 @@ impl CommLedger {
     }
 }
 
-/// Simple asymmetric link model shared by all clients.
-#[derive(Clone, Copy, Debug)]
+/// Per-client link model: one [`LinkProfile`] per client id.
+#[derive(Clone, Debug)]
 pub struct NetworkModel {
-    /// Client→server bandwidth in bytes/sec.
-    pub uplink_bps: f64,
-    /// Server→client bandwidth in bytes/sec.
-    pub downlink_bps: f64,
-    /// Per-message latency in seconds.
-    pub latency_s: f64,
+    links: Vec<LinkProfile>,
 }
 
 impl NetworkModel {
-    /// A bandwidth-constrained edge setting: 10 Mbit/s up, 50 Mbit/s down,
-    /// 30 ms latency — the regime the paper's intro targets.
-    pub fn edge_default() -> Self {
-        NetworkModel {
-            uplink_bps: 10e6 / 8.0,
-            downlink_bps: 50e6 / 8.0,
-            latency_s: 0.03,
+    /// Build from per-client profiles (index = client id).
+    pub fn from_profiles(links: Vec<LinkProfile>) -> Self {
+        assert!(!links.is_empty(), "network model needs at least one link");
+        NetworkModel { links }
+    }
+
+    /// Every client on the same link.
+    pub fn homogeneous(num_clients: usize, link: LinkProfile) -> Self {
+        Self::from_profiles(vec![link; num_clients.max(1)])
+    }
+
+    /// `num_clients` identical bandwidth-constrained edge links
+    /// ([`LinkProfile::edge_default`]).
+    pub fn edge_default(num_clients: usize) -> Self {
+        Self::homogeneous(num_clients, LinkProfile::edge_default())
+    }
+
+    /// Client `cid`'s link.
+    pub fn link(&self, cid: usize) -> &LinkProfile {
+        &self.links[cid]
+    }
+
+    /// Wallclock for one synchronous round: the slowest surviving
+    /// participant's broadcast-download plus update-upload on *its own*
+    /// link (clients transfer in parallel). With a straggler `deadline`,
+    /// the server stops waiting at the deadline, so no round costs more
+    /// than that.
+    pub fn round_time(
+        &self,
+        per_client_up: &[(usize, u64)],
+        broadcast_bytes: u64,
+        deadline: Option<f64>,
+    ) -> f64 {
+        let mut worst = 0.0f64;
+        for &(cid, up) in per_client_up {
+            let mut t = self.link(cid).round_trip_time(broadcast_bytes, up);
+            if let Some(d) = deadline {
+                t = t.min(d);
+            }
+            worst = worst.max(t);
         }
-    }
-
-    /// Seconds to move `bytes` up the constrained link.
-    pub fn uplink_time(&self, bytes: u64) -> f64 {
-        self.latency_s + bytes as f64 / self.uplink_bps
-    }
-
-    /// Seconds to move `bytes` down.
-    pub fn downlink_time(&self, bytes: u64) -> f64 {
-        self.latency_s + bytes as f64 / self.downlink_bps
-    }
-
-    /// Wallclock for one synchronous round: slowest participant's
-    /// down+up transfer (clients transfer in parallel).
-    pub fn round_time(&self, per_client_up: &[u64], broadcast_bytes: u64) -> f64 {
-        let slowest_up = per_client_up.iter().copied().max().unwrap_or(0);
-        self.downlink_time(broadcast_bytes) + self.uplink_time(slowest_up)
+        worst
     }
 }
 
@@ -120,18 +146,43 @@ mod tests {
     }
 
     #[test]
-    fn network_times_monotone_in_bytes() {
-        let n = NetworkModel::edge_default();
-        assert!(n.uplink_time(1_000_000) > n.uplink_time(1_000));
-        // Uplink is the constrained direction.
-        assert!(n.uplink_time(1_000_000) > n.downlink_time(1_000_000));
+    fn round_time_uses_slowest_client() {
+        let n = NetworkModel::edge_default(3);
+        let t_small = n.round_time(&[(0, 100), (1, 100), (2, 100)], 1000, None);
+        let t_skew = n.round_time(&[(0, 100), (1, 100), (2, 10_000_000)], 1000, None);
+        assert!(t_skew > t_small);
+        // Equal links: the skewed round costs exactly the slowest client's
+        // round trip.
+        let l = LinkProfile::edge_default();
+        assert_eq!(t_skew.to_bits(), l.round_trip_time(1000, 10_000_000).to_bits());
     }
 
     #[test]
-    fn round_time_uses_slowest_client() {
-        let n = NetworkModel::edge_default();
-        let t_small = n.round_time(&[100, 100, 100], 1000);
-        let t_skew = n.round_time(&[100, 100, 10_000_000], 1000);
-        assert!(t_skew > t_small);
+    fn heterogeneous_links_dominate_round_time() {
+        let fast = LinkProfile::edge_default();
+        let slow = LinkProfile { uplink_bps: fast.uplink_bps / 100.0, ..fast };
+        let n = NetworkModel::from_profiles(vec![fast, slow]);
+        // Same byte counts, but the client on the slow link sets the pace.
+        let t = n.round_time(&[(0, 10_000), (1, 10_000)], 1000, None);
+        assert_eq!(t.to_bits(), slow.round_trip_time(1000, 10_000).to_bits());
+        assert!(t > fast.round_trip_time(1000, 10_000));
+    }
+
+    #[test]
+    fn deadline_caps_round_time() {
+        let n = NetworkModel::edge_default(2);
+        let uncapped = n.round_time(&[(0, 100), (1, 100_000_000)], 1000, None);
+        assert!(uncapped > 1.0);
+        let capped = n.round_time(&[(0, 100), (1, 100_000_000)], 1000, Some(0.5));
+        assert_eq!(capped, 0.5);
+        // Deadline above the slowest client changes nothing.
+        let loose = n.round_time(&[(0, 100), (1, 100_000_000)], 1000, Some(1e9));
+        assert_eq!(loose.to_bits(), uncapped.to_bits());
+    }
+
+    #[test]
+    fn empty_round_costs_nothing() {
+        let n = NetworkModel::edge_default(4);
+        assert_eq!(n.round_time(&[], 1_000_000, None), 0.0);
     }
 }

@@ -1,5 +1,7 @@
-//! Metrics: round records, CSV/JSONL sinks, communication accounting and
-//! the cosine-similarity probe behind the paper's Fig. 1.
+//! Metrics: round records, CSV/JSONL sinks, communication accounting
+//! (charged from the encoded frames that cross [`crate::net::Transport`]),
+//! the per-client heterogeneous-link [`NetworkModel`], and the
+//! cosine-similarity probe behind the paper's Fig. 1.
 
 pub mod accounting;
 pub mod recorder;

@@ -23,6 +23,9 @@ pub struct RoundRecord {
     /// Sum of rSVD candidate counts `d` across clients/layers this round
     /// (the paper's Table IV computational-overhead proxy; 0 for baselines).
     pub sum_d: u64,
+    /// Clients that survived dropout and actually ran this round (sorted
+    /// ids; equals the sampled participant set when `net.dropout == 0`).
+    pub survivors: Vec<usize>,
 }
 
 /// Collects [`RoundRecord`]s and derives the paper's summary metrics.
@@ -119,14 +122,14 @@ impl RunRecorder {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "round,train_loss,test_accuracy,test_loss,uplink_bytes,downlink_bytes,cum_uplink_bytes,sim_time_s,sum_d"
+            "round,train_loss,test_accuracy,test_loss,uplink_bytes,downlink_bytes,cum_uplink_bytes,sim_time_s,sum_d,n_survivors"
         )?;
         let mut cum = 0u64;
         for r in &self.rounds {
             cum += r.uplink_bytes;
             writeln!(
                 f,
-                "{},{:.6},{:.6},{:.6},{},{},{},{:.4},{}",
+                "{},{:.6},{:.6},{:.6},{},{},{},{:.4},{},{}",
                 r.round,
                 r.train_loss,
                 r.test_accuracy,
@@ -135,7 +138,8 @@ impl RunRecorder {
                 r.downlink_bytes,
                 cum,
                 r.sim_time_s,
-                r.sum_d
+                r.sum_d,
+                r.survivors.len()
             )?;
         }
         Ok(())
@@ -161,6 +165,7 @@ mod tests {
             downlink_bytes: 5,
             sim_time_s: 0.1,
             sum_d: 3,
+            survivors: vec![0, 1],
         }
     }
 

@@ -1,0 +1,277 @@
+//! Per-client link profiles, heterogeneous link sampling, and the
+//! client-dropout model.
+//!
+//! Real federated deployments do not share one perfect pipe: edge clients
+//! sit behind links whose bandwidth and latency vary by orders of
+//! magnitude, some disappear mid-round, and a synchronous server cannot
+//! wait forever for the slowest (Ozfatura et al.'s partial-participation
+//! setting; Edin et al.'s practical-limitations study). [`NetConfig`] is
+//! the experiment-facing knob set; it samples one [`LinkProfile`] per
+//! client — deterministically from the run seed via
+//! [`Pcg64`](crate::util::rng::Pcg64) — and owns the dropout rate and
+//! straggler deadline the coordinator enforces.
+
+use crate::util::rng::Pcg64;
+
+/// One client's link: asymmetric bandwidth plus per-message latency.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkProfile {
+    /// Client→server bandwidth in bytes/sec.
+    pub uplink_bps: f64,
+    /// Server→client bandwidth in bytes/sec.
+    pub downlink_bps: f64,
+    /// Per-message latency in seconds.
+    pub latency_s: f64,
+}
+
+impl LinkProfile {
+    /// The bandwidth-constrained edge setting the paper's intro targets:
+    /// 10 Mbit/s up, 50 Mbit/s down, 30 ms latency.
+    pub fn edge_default() -> Self {
+        LinkProfile { uplink_bps: 10e6 / 8.0, downlink_bps: 50e6 / 8.0, latency_s: 0.03 }
+    }
+
+    /// Seconds to move `bytes` up the constrained link.
+    pub fn uplink_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.uplink_bps
+    }
+
+    /// Seconds to move `bytes` down.
+    pub fn downlink_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.downlink_bps
+    }
+
+    /// Seconds for one synchronous round trip on this link: receive the
+    /// broadcast, then push the update back up.
+    pub fn round_trip_time(&self, down_bytes: u64, up_bytes: u64) -> f64 {
+        self.downlink_time(down_bytes) + self.uplink_time(up_bytes)
+    }
+}
+
+/// Experiment-facing network knobs (`ExperimentConfig::net`, the CLI's
+/// `--up-mbps`/`--dropout`/… flags, and the `"net"` JSON object).
+///
+/// The default — homogeneous edge links, no dropout, no deadline — keeps
+/// the simulation byte- and bit-identical to the pre-transport engine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetConfig {
+    /// Mean client→server bandwidth, Mbit/s.
+    pub uplink_mbps: f64,
+    /// Mean server→client bandwidth, Mbit/s.
+    pub downlink_mbps: f64,
+    /// Mean per-message latency, milliseconds.
+    pub latency_ms: f64,
+    /// Heterogeneity: per-client bandwidth/latency are scaled by
+    /// `exp(het_spread · N(0,1))` (log-normal). `0` = identical links.
+    pub het_spread: f64,
+    /// Per-round, per-client probability of dropping out before the round
+    /// starts (no broadcast received, no upload sent). `0` = never.
+    pub dropout: f64,
+    /// Straggler deadline in seconds: a client whose broadcast+upload
+    /// transfer exceeds this arrives too late and is excluded from the
+    /// aggregate (its bytes still crossed the wire and are still charged).
+    /// `0` = the server waits for everyone.
+    pub deadline_s: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            uplink_mbps: 10.0,
+            downlink_mbps: 50.0,
+            latency_ms: 30.0,
+            het_spread: 0.0,
+            dropout: 0.0,
+            deadline_s: 0.0,
+        }
+    }
+}
+
+impl NetConfig {
+    /// Range-check the knobs; returns a description of the first problem.
+    /// Called by `Simulation::build` so bad CLI/JSON values surface as
+    /// config errors, not panics.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..1.0).contains(&self.dropout) {
+            return Err(format!("net.dropout = {} must be in [0, 1)", self.dropout));
+        }
+        for (name, v) in [("uplink_mbps", self.uplink_mbps), ("downlink_mbps", self.downlink_mbps)]
+        {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(format!("net.{name} = {v} must be a positive bandwidth"));
+            }
+        }
+        for (name, v) in [
+            ("latency_ms", self.latency_ms),
+            ("het_spread", self.het_spread),
+            ("deadline_s", self.deadline_s),
+        ] {
+            if !(v.is_finite() && v >= 0.0) {
+                return Err(format!("net.{name} = {v} must be finite and non-negative"));
+            }
+        }
+        Ok(())
+    }
+
+    /// The mean link these knobs describe.
+    pub fn base_profile(&self) -> LinkProfile {
+        LinkProfile {
+            uplink_bps: self.uplink_mbps * 1e6 / 8.0,
+            downlink_bps: self.downlink_mbps * 1e6 / 8.0,
+            latency_s: self.latency_ms / 1e3,
+        }
+    }
+
+    /// The straggler deadline, `None` when disabled.
+    pub fn deadline(&self) -> Option<f64> {
+        (self.deadline_s > 0.0).then_some(self.deadline_s)
+    }
+
+    /// Sample one link per client. Deterministic in `(self, n, seed)`; with
+    /// `het_spread == 0` every client gets exactly [`Self::base_profile`]
+    /// and no RNG is consumed.
+    pub fn sample_links(&self, n: usize, seed: u64) -> Vec<LinkProfile> {
+        let base = self.base_profile();
+        if self.het_spread == 0.0 {
+            return vec![base; n];
+        }
+        let root = Pcg64::new(seed, 0x4E57_11);
+        (0..n)
+            .map(|cid| {
+                let mut r = root.fork(cid as u64);
+                let bw = (self.het_spread * r.normal()).exp();
+                let lat = (self.het_spread * r.normal()).exp();
+                LinkProfile {
+                    uplink_bps: base.uplink_bps * bw,
+                    downlink_bps: base.downlink_bps * bw,
+                    latency_s: base.latency_s * lat,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Per-round client-dropout decisions.
+///
+/// `survives(round, cid)` is a pure function of `(seed, round, cid)` — no
+/// shared RNG stream to advance — so the surviving-client set is identical
+/// at every worker count and independent of evaluation order, which is
+/// what keeps dropout runs bit-reproducible.
+#[derive(Clone, Copy, Debug)]
+pub struct DropoutModel {
+    rate: f64,
+    seed: u64,
+}
+
+impl DropoutModel {
+    /// `rate` ∈ [0, 1); `0` disables dropout entirely. User-facing rates
+    /// are range-checked earlier by [`NetConfig::validate`]; this assert
+    /// only guards internal callers.
+    pub fn new(rate: f64, seed: u64) -> Self {
+        assert!((0.0..1.0).contains(&rate), "dropout rate {rate} must be in [0, 1)");
+        DropoutModel { rate, seed }
+    }
+
+    /// Does client `cid` stay up for `round`?
+    pub fn survives(&self, round: usize, cid: usize) -> bool {
+        if self.rate <= 0.0 {
+            return true;
+        }
+        let mix = self.seed ^ (round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Pcg64::new(mix, 0xD209_0000 ^ cid as u64).f64() >= self.rate
+    }
+
+    /// Filter a participant set down to the surviving clients, preserving
+    /// order.
+    pub fn filter(&self, round: usize, participants: &[usize]) -> Vec<usize> {
+        participants.iter().copied().filter(|&cid| self.survives(round, cid)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_legacy_edge_profile() {
+        let base = NetConfig::default().base_profile();
+        assert_eq!(base, LinkProfile::edge_default());
+        assert_eq!(NetConfig::default().deadline(), None);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_knobs() {
+        assert!(NetConfig::default().validate().is_ok());
+        for bad in [
+            NetConfig { dropout: 1.0, ..Default::default() },
+            NetConfig { dropout: -0.1, ..Default::default() },
+            NetConfig { uplink_mbps: 0.0, ..Default::default() },
+            NetConfig { downlink_mbps: -5.0, ..Default::default() },
+            NetConfig { latency_ms: f64::NAN, ..Default::default() },
+            NetConfig { het_spread: -1.0, ..Default::default() },
+            NetConfig { deadline_s: f64::INFINITY, ..Default::default() },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn times_monotone_and_asymmetric() {
+        let l = LinkProfile::edge_default();
+        assert!(l.uplink_time(1_000_000) > l.uplink_time(1_000));
+        assert!(l.uplink_time(1_000_000) > l.downlink_time(1_000_000));
+        let rt = l.round_trip_time(1000, 2000);
+        assert!((rt - (l.downlink_time(1000) + l.uplink_time(2000))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn homogeneous_sampling_is_exact_and_rng_free() {
+        let cfg = NetConfig::default();
+        let links = cfg.sample_links(5, 42);
+        assert_eq!(links.len(), 5);
+        assert!(links.iter().all(|l| *l == cfg.base_profile()));
+    }
+
+    #[test]
+    fn heterogeneous_sampling_deterministic_and_spread() {
+        let cfg = NetConfig { het_spread: 0.5, ..Default::default() };
+        let a = cfg.sample_links(20, 7);
+        let b = cfg.sample_links(20, 7);
+        assert_eq!(a, b);
+        let c = cfg.sample_links(20, 8);
+        assert_ne!(a, c);
+        // Links must actually differ from each other.
+        assert!(a.windows(2).any(|w| w[0].uplink_bps != w[1].uplink_bps));
+        assert!(a.iter().all(|l| l.uplink_bps > 0.0 && l.latency_s > 0.0));
+    }
+
+    #[test]
+    fn dropout_zero_never_drops() {
+        let d = DropoutModel::new(0.0, 1);
+        assert!((0..100).all(|r| (0..20).all(|c| d.survives(r, c))));
+    }
+
+    #[test]
+    fn dropout_rate_roughly_respected() {
+        let d = DropoutModel::new(0.3, 99);
+        let total = 200 * 50;
+        let survived: usize =
+            (0..200).map(|r| (0..50).filter(|&c| d.survives(r, c)).count()).sum();
+        let frac = survived as f64 / total as f64;
+        assert!((frac - 0.7).abs() < 0.03, "survival fraction {frac}");
+    }
+
+    #[test]
+    fn dropout_is_pure_per_round_and_client() {
+        let d = DropoutModel::new(0.4, 5);
+        // Same query twice → same answer; varies across rounds and clients.
+        for r in 0..10 {
+            for c in 0..10 {
+                assert_eq!(d.survives(r, c), d.survives(r, c));
+            }
+        }
+        let per_round: Vec<Vec<usize>> =
+            (0..10).map(|r| d.filter(r, &(0..10).collect::<Vec<_>>())).collect();
+        assert!(per_round.windows(2).any(|w| w[0] != w[1]), "dropout never varied");
+    }
+}

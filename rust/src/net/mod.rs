@@ -1,0 +1,37 @@
+//! The network boundary: wire-format codec, per-client link simulation,
+//! and the transport layer the coordinator routes every byte through.
+//!
+//! The paper's headline claim is uplink bytes saved on bandwidth-starved
+//! edge links (§I, Table III). Before this subsystem the repository only
+//! *priced* serialization — [`Payload::wire_bytes`](crate::compress::Payload::wire_bytes)
+//! computed what a binary encoder would emit, but no bytes ever existed and
+//! every client shared one perfect link. This module makes the boundary
+//! real:
+//!
+//! * [`wire`] — the binary codec. `encode` turns a client's payload list
+//!   into one framed byte buffer; `decode` reconstructs it bit-exactly.
+//!   The codec is the *definition* of `wire_bytes`: for every payload,
+//!   `encode([p]).len() == p.wire_bytes()` (property-tested), so the
+//!   accounting the paper's tables are built from is charged off actual
+//!   buffer lengths, not estimates.
+//! * [`link`] — per-client [`LinkProfile`]s (bandwidth + latency), the
+//!   [`NetConfig`] experiment knobs that sample them (heterogeneous spread,
+//!   dropout rate, straggler deadline; deterministic per seed via
+//!   [`crate::util::rng::Pcg64`]), and the [`DropoutModel`].
+//! * [`transport`] — the [`Transport`] trait every broadcast/upload crosses
+//!   as real byte buffers, with the in-memory [`Loopback`] implementation
+//!   the simulator uses. A future distributed backend plugs in here.
+//!
+//! The round engine ([`crate::coordinator::engine`]) encodes on the client
+//! lane, ships frames through the transport, and decodes server-side; the
+//! [`CommLedger`](crate::metrics::CommLedger) is charged from the drained
+//! frames' lengths. With the default [`NetConfig`] (homogeneous links, no
+//! dropout, no deadline) the simulation is byte-for-byte and bit-for-bit
+//! identical to the pre-transport accounting.
+
+pub mod link;
+pub mod transport;
+pub mod wire;
+
+pub use link::{DropoutModel, LinkProfile, NetConfig};
+pub use transport::{Loopback, Transport};

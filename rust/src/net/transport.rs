@@ -1,0 +1,123 @@
+//! The transport boundary: every byte between coordinator and clients
+//! crosses a [`Transport`] as a real encoded frame.
+//!
+//! The round engine no longer hands in-memory structs from "client" to
+//! "server": the coordinator encodes the model broadcast, `broadcast`s it
+//! per participant, lanes compress-and-encode their updates, and the
+//! coordinator `upload`s and drains those frames before the server-side
+//! decode. The communication ledger is charged from the drained buffers'
+//! lengths — whatever crossed the transport *is* the accounting.
+//!
+//! [`Loopback`] is the in-memory implementation the simulator uses:
+//! deterministic FIFO queues, no loss, no reordering. A distributed or
+//! async backend (sockets, RDMA, a message bus) implements the same four
+//! methods and plugs into the engine unchanged.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+/// Byte-level message fabric between the coordinator and its clients.
+///
+/// Ordering contract: frames are delivered FIFO per direction, and a
+/// `drain_*` call yields everything sent since the previous drain, in send
+/// order. The engine relies on this to keep accounting in participant
+/// order (and therefore bit-deterministic).
+///
+/// Broadcast frames are `Arc<[u8]>`: a round fans one identical model
+/// snapshot out to every participant, so the fabric shares a single
+/// allocation instead of materializing `num_clients` dense-model copies —
+/// the round's would-be memory high-water mark at production client
+/// counts. Uploads are distinct per client and stay owned `Vec<u8>`s.
+pub trait Transport: Send {
+    /// Queue the server→client broadcast frame for `to`.
+    fn broadcast(&mut self, to: usize, frame: &Arc<[u8]>) -> Result<()>;
+
+    /// Take every delivered broadcast frame, in send order, as
+    /// `(client_id, frame)`.
+    fn drain_broadcasts(&mut self) -> Vec<(usize, Arc<[u8]>)>;
+
+    /// Queue a client→server frame from `from`.
+    fn upload(&mut self, from: usize, frame: Vec<u8>) -> Result<()>;
+
+    /// Take every delivered upload, in send order, as `(client_id, frame)`.
+    fn drain_uploads(&mut self) -> Vec<(usize, Vec<u8>)>;
+}
+
+/// In-memory loopback transport: perfect FIFO delivery within the process.
+#[derive(Debug, Default)]
+pub struct Loopback {
+    downlink: VecDeque<(usize, Arc<[u8]>)>,
+    uplink: VecDeque<(usize, Vec<u8>)>,
+}
+
+impl Loopback {
+    /// Fresh, empty fabric.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Transport for Loopback {
+    fn broadcast(&mut self, to: usize, frame: &Arc<[u8]>) -> Result<()> {
+        self.downlink.push_back((to, Arc::clone(frame)));
+        Ok(())
+    }
+
+    fn drain_broadcasts(&mut self) -> Vec<(usize, Arc<[u8]>)> {
+        self.downlink.drain(..).collect()
+    }
+
+    fn upload(&mut self, from: usize, frame: Vec<u8>) -> Result<()> {
+        self.uplink.push_back((from, frame));
+        Ok(())
+    }
+
+    fn drain_uploads(&mut self) -> Vec<(usize, Vec<u8>)> {
+        self.uplink.drain(..).collect()
+    }
+}
+
+// The coordinator boxes its transport and the box rides inside `Simulation`,
+// which tests move across threads; keep the object-safety + Send contract
+// checked at compile time.
+const _: () = {
+    const fn assert_send<T: Send + ?Sized>() {}
+    assert_send::<dyn Transport>();
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_per_direction_and_drain_empties() {
+        let mut t = Loopback::new();
+        let a: Arc<[u8]> = vec![1u8, 2].into();
+        let b: Arc<[u8]> = vec![3u8].into();
+        t.broadcast(3, &a).unwrap();
+        t.broadcast(1, &b).unwrap();
+        t.upload(1, vec![9, 9, 9]).unwrap();
+        let rx = t.drain_broadcasts();
+        assert_eq!(rx.len(), 2);
+        assert_eq!((rx[0].0, &rx[0].1[..]), (3, &[1u8, 2][..]));
+        assert_eq!((rx[1].0, &rx[1].1[..]), (1, &[3u8][..]));
+        assert!(t.drain_broadcasts().is_empty());
+        assert_eq!(t.drain_uploads(), vec![(1, vec![9, 9, 9])]);
+        assert!(t.drain_uploads().is_empty());
+    }
+
+    #[test]
+    fn broadcast_shares_one_allocation() {
+        let mut t = Loopback::new();
+        let frame: Arc<[u8]> = vec![7u8; 16].into();
+        t.broadcast(0, &frame).unwrap();
+        t.broadcast(1, &frame).unwrap();
+        let rx = t.drain_broadcasts();
+        assert_eq!(rx.len(), 2);
+        // Same bytes, same allocation — no per-client dense-model copies.
+        assert!(rx.iter().all(|(_, f)| f[..] == frame[..]));
+        assert!(rx.iter().all(|(_, f)| Arc::ptr_eq(f, &frame)));
+    }
+}

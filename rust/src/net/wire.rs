@@ -1,0 +1,495 @@
+//! Binary wire codec for compressed-update payloads and model broadcasts.
+//!
+//! Every frame is `[tag: u32 LE][body_len: u32 LE][body]` — exactly the
+//! 8-byte [`FRAME_HEADER`] the accounting has always charged — and every
+//! body layout is arranged so the encoded size of a payload equals
+//! [`Payload::wire_bytes`] to the byte. That identity is the codec's
+//! contract: `wire_bytes` used to be a *claim* about what a serializer
+//! would emit; it is now a *checked invariant* over this encoder
+//! (`debug_assert`ed on every encode, property-tested in
+//! `rust/tests/properties.rs`).
+//!
+//! Body layouts (all little-endian):
+//!
+//! | variant     | body                                                        |
+//! |-------------|-------------------------------------------------------------|
+//! | `Raw`       | `f32 × n`                                                   |
+//! | `Sparse`    | `len u32, indices u32 × k, values f32 × k`                  |
+//! | `Quantized` | `lo f32, hi f32, bits u8, len u32, packed bytes`            |
+//! | `Signs`     | `scale f32, len u32, packed bytes`                          |
+//! | `Basis`     | `l u32, k u32, m u32, ℙ u32 × d, 𝕄 f32 × d·l, A f32 × k·m` |
+//! | `SvdCoeffs` | `l u32, k u32, m u32, flag u8, A f32 × k·m[, basis f32 × r]`|
+//!
+//! Counts that are not stored explicitly (`Sparse` pair count, `Basis`
+//! replacement count `d`, `SvdCoeffs` refit length) are derived from the
+//! frame length and validated, so `decode` rejects truncated or
+//! inconsistent frames instead of misreading them.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::compress::codec::{Payload, FRAME_HEADER};
+use crate::model::meta::ModelMeta;
+use crate::model::params::ParamStore;
+
+const TAG_RAW: u32 = 0;
+const TAG_SPARSE: u32 = 1;
+const TAG_QUANTIZED: u32 = 2;
+const TAG_SIGNS: u32 = 3;
+const TAG_BASIS: u32 = 4;
+const TAG_SVD: u32 = 5;
+
+// ---- encoding --------------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
+    for &v in vs {
+        put_f32(buf, v);
+    }
+}
+
+fn put_u32s(buf: &mut Vec<u8>, vs: &[u32]) {
+    for &v in vs {
+        put_u32(buf, v);
+    }
+}
+
+/// Lossless `usize → u32` for on-wire counts (tensor sizes are far below
+/// 2^32; a violation is a programming error, not a runtime condition).
+fn wire_u32(n: usize, what: &str) -> u32 {
+    u32::try_from(n).unwrap_or_else(|_| panic!("{what} = {n} exceeds the u32 wire format"))
+}
+
+/// Encode a client's full payload list into one framed byte buffer.
+///
+/// The result's length equals `Σ p.wire_bytes()` exactly — the invariant
+/// the communication ledger relies on.
+pub fn encode(payloads: &[Payload]) -> Vec<u8> {
+    let total: u64 = payloads.iter().map(|p| p.wire_bytes()).sum();
+    let mut buf = Vec::with_capacity(total as usize);
+    for p in payloads {
+        encode_one(&mut buf, p);
+    }
+    debug_assert_eq!(buf.len() as u64, total, "encoded length != Σ wire_bytes");
+    buf
+}
+
+fn encode_one(buf: &mut Vec<u8>, p: &Payload) {
+    let start = buf.len();
+    let tag = match p {
+        Payload::Raw(..) => TAG_RAW,
+        Payload::Sparse { .. } => TAG_SPARSE,
+        Payload::Quantized { .. } => TAG_QUANTIZED,
+        Payload::Signs { .. } => TAG_SIGNS,
+        Payload::Basis { .. } => TAG_BASIS,
+        Payload::SvdCoeffs { .. } => TAG_SVD,
+    };
+    put_u32(buf, tag);
+    let len_pos = buf.len();
+    put_u32(buf, 0); // patched below
+    debug_assert_eq!((buf.len() - start) as u64, FRAME_HEADER);
+    match p {
+        Payload::Raw(v) => put_f32s(buf, v),
+        Payload::Sparse { indices, values, len } => {
+            assert_eq!(indices.len(), values.len(), "sparse index/value mismatch");
+            put_u32(buf, wire_u32(*len, "sparse len"));
+            put_u32s(buf, indices);
+            put_f32s(buf, values);
+        }
+        Payload::Quantized { lo, hi, bits, packed, len } => {
+            put_f32(buf, *lo);
+            put_f32(buf, *hi);
+            buf.push(*bits);
+            put_u32(buf, wire_u32(*len, "quantized len"));
+            buf.extend_from_slice(packed);
+        }
+        Payload::Signs { scale, packed, len } => {
+            put_f32(buf, *scale);
+            put_u32(buf, wire_u32(*len, "signs len"));
+            buf.extend_from_slice(packed);
+        }
+        Payload::Basis { replace_idx, new_vectors, coeffs, l, k, m } => {
+            assert_eq!(new_vectors.len(), replace_idx.len() * l, "basis 𝕄 geometry");
+            assert_eq!(coeffs.len(), k * m, "basis A geometry");
+            put_u32(buf, wire_u32(*l, "basis l"));
+            put_u32(buf, wire_u32(*k, "basis k"));
+            put_u32(buf, wire_u32(*m, "basis m"));
+            put_u32s(buf, replace_idx);
+            put_f32s(buf, new_vectors);
+            put_f32s(buf, coeffs);
+        }
+        Payload::SvdCoeffs { coeffs, refit_basis, l, k, m } => {
+            assert_eq!(coeffs.len(), k * m, "svd A geometry");
+            put_u32(buf, wire_u32(*l, "svd l"));
+            put_u32(buf, wire_u32(*k, "svd k"));
+            put_u32(buf, wire_u32(*m, "svd m"));
+            buf.push(refit_basis.is_some() as u8);
+            put_f32s(buf, coeffs);
+            if let Some(basis) = refit_basis {
+                put_f32s(buf, basis);
+            }
+        }
+    }
+    let body = (buf.len() - len_pos - 4) as u32;
+    buf[len_pos..len_pos + 4].copy_from_slice(&body.to_le_bytes());
+    debug_assert_eq!((buf.len() - start) as u64, p.wire_bytes());
+}
+
+// ---- decoding --------------------------------------------------------------
+
+/// Bounds-checked little-endian cursor over a received frame.
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Reader { b, i: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.remaining() >= n, "frame truncated: wanted {n} bytes, {} left", self.remaining());
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.bytes(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let s = self.bytes(4)?;
+        Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
+        // Guard n before multiplying: header-supplied counts must never
+        // overflow the size arithmetic, only fail cleanly.
+        ensure!(n <= self.remaining() / 4, "frame truncated: wanted {n} u32s");
+        let s = self.bytes(n * 4)?;
+        Ok(s.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        ensure!(n <= self.remaining() / 4, "frame truncated: wanted {n} f32s");
+        let s = self.bytes(n * 4)?;
+        Ok(s.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+}
+
+/// Decode a framed byte buffer back into the payload list (inverse of
+/// [`encode`], bit-exact). Fails on truncated, trailing, or inconsistent
+/// frames.
+pub fn decode(bytes: &[u8]) -> Result<Vec<Payload>> {
+    let mut r = Reader::new(bytes);
+    let mut out = Vec::new();
+    while r.remaining() > 0 {
+        out.push(decode_one(&mut r)?);
+    }
+    Ok(out)
+}
+
+fn decode_one(r: &mut Reader<'_>) -> Result<Payload> {
+    let tag = r.u32()?;
+    let body_len = r.u32()? as usize;
+    let mut b = Reader::new(r.bytes(body_len)?);
+    let payload = match tag {
+        TAG_RAW => {
+            ensure!(body_len % 4 == 0, "raw body length {body_len} not a multiple of 4");
+            Payload::Raw(b.f32s(body_len / 4)?)
+        }
+        TAG_SPARSE => {
+            let len = b.u32()? as usize;
+            let rest = b.remaining();
+            ensure!(rest % 8 == 0, "sparse body has {rest} pair bytes (not a multiple of 8)");
+            let pairs = rest / 8;
+            ensure!(pairs <= len, "sparse frame claims {pairs} pairs for a length-{len} tensor");
+            let indices = b.u32s(pairs)?;
+            let values = b.f32s(pairs)?;
+            for &i in &indices {
+                ensure!((i as usize) < len, "sparse index {i} out of bounds (len {len})");
+            }
+            Payload::Sparse { indices, values, len }
+        }
+        TAG_QUANTIZED => {
+            let lo = b.f32()?;
+            let hi = b.f32()?;
+            let bits = b.u8()?;
+            let len = b.u32()? as usize;
+            ensure!((1..=16).contains(&bits), "quantized bit width {bits} outside 1..=16");
+            let expect = (len * bits as usize).div_ceil(8);
+            ensure!(
+                b.remaining() == expect,
+                "quantized frame holds {} packed bytes, geometry needs {expect}",
+                b.remaining()
+            );
+            let packed = b.bytes(expect)?.to_vec();
+            Payload::Quantized { lo, hi, bits, packed, len }
+        }
+        TAG_SIGNS => {
+            let scale = b.f32()?;
+            let len = b.u32()? as usize;
+            let expect = len.div_ceil(8);
+            ensure!(
+                b.remaining() == expect,
+                "signs frame holds {} packed bytes, geometry needs {expect}",
+                b.remaining()
+            );
+            let packed = b.bytes(expect)?.to_vec();
+            Payload::Signs { scale, packed, len }
+        }
+        TAG_BASIS => {
+            let l = b.u32()? as usize;
+            let k = b.u32()? as usize;
+            let m = b.u32()? as usize;
+            // Checked product: k and m come off the wire, so k·m may not
+            // fit — reject instead of overflowing in debug builds.
+            let km = k
+                .checked_mul(m)
+                .filter(|&km| km <= b.remaining() / 4)
+                .ok_or_else(|| {
+                    anyhow!("basis frame too short for the {k}x{m} coefficient block")
+                })?;
+            // Replacement count d is implicit: the variable region holds
+            // d indices + d·l vector entries, 4·d·(1+l) bytes.
+            let var = b.remaining() - 4 * km;
+            let per = 4 * (l + 1);
+            ensure!(var % per == 0, "basis frame geometry: {var} variable bytes, {per} per replacement");
+            let d = var / per;
+            let replace_idx = b.u32s(d)?;
+            for &i in &replace_idx {
+                ensure!((i as usize) < k, "basis replacement index {i} out of bounds (k {k})");
+            }
+            let new_vectors = b.f32s(d * l)?;
+            let coeffs = b.f32s(km)?;
+            Payload::Basis { replace_idx, new_vectors, coeffs, l, k, m }
+        }
+        TAG_SVD => {
+            let l = b.u32()? as usize;
+            let k = b.u32()? as usize;
+            let m = b.u32()? as usize;
+            let flag = b.u8()?;
+            ensure!(flag <= 1, "svd refit flag {flag} is not 0/1");
+            let km = k
+                .checked_mul(m)
+                .ok_or_else(|| anyhow!("svd frame claims an impossible {k}x{m} block"))?;
+            let coeffs = b.f32s(km)?;
+            let refit_basis = if flag == 1 {
+                let rest = b.remaining();
+                ensure!(rest % 4 == 0, "svd refit block of {rest} bytes not a multiple of 4");
+                Some(b.f32s(rest / 4)?)
+            } else {
+                None
+            };
+            Payload::SvdCoeffs { coeffs, refit_basis, l, k, m }
+        }
+        other => bail!("unknown payload tag {other}"),
+    };
+    ensure!(b.remaining() == 0, "frame has {} trailing bytes", b.remaining());
+    Ok(payload)
+}
+
+// ---- model broadcast -------------------------------------------------------
+
+/// Encode the global model for broadcast: the dense f32 tensors in layer
+/// order, little-endian, no per-tensor framing (a model snapshot is one
+/// logical message). Exactly `4 · numel` bytes — the figure the downlink
+/// has always been charged.
+pub fn encode_params(params: &ParamStore) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(4 * params.numel());
+    for t in params.iter() {
+        put_f32s(&mut buf, t);
+    }
+    buf
+}
+
+/// Decode a broadcast frame back into a [`ParamStore`] (bit-exact inverse
+/// of [`encode_params`]); `meta` supplies the tensor geometry.
+pub fn decode_params(meta: &ModelMeta, bytes: &[u8]) -> Result<ParamStore> {
+    let total: usize = meta.layers.iter().map(|l| l.size()).sum();
+    ensure!(
+        bytes.len() == 4 * total,
+        "broadcast frame is {} bytes, model needs {}",
+        bytes.len(),
+        4 * total
+    );
+    let mut r = Reader::new(bytes);
+    let tensors: Vec<Vec<f32>> =
+        meta.layers.iter().map(|l| r.f32s(l.size())).collect::<Result<_>>()?;
+    Ok(ParamStore::from_tensors(meta, tensors))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::codec::pack_bits;
+    use crate::config::ModelKind;
+    use crate::model::meta::layer_table;
+    use crate::util::rng::Pcg64;
+
+    fn roundtrip(p: Payload) {
+        let buf = encode(std::slice::from_ref(&p));
+        assert_eq!(buf.len() as u64, p.wire_bytes(), "{p:?}");
+        let back = decode(&buf).unwrap();
+        assert_eq!(back, vec![p]);
+    }
+
+    #[test]
+    fn raw_roundtrip_exact_length() {
+        roundtrip(Payload::Raw(vec![1.0, -2.5, 3.25e-7, f32::MIN_POSITIVE]));
+        roundtrip(Payload::Raw(Vec::new()));
+    }
+
+    #[test]
+    fn sparse_roundtrip() {
+        roundtrip(Payload::Sparse {
+            indices: vec![0, 7, 93],
+            values: vec![0.5, -0.25, 19.0],
+            len: 100,
+        });
+    }
+
+    #[test]
+    fn quantized_roundtrip_odd_lengths_and_widths() {
+        for (bits, len) in [(1u8, 13usize), (3, 17), (8, 64), (12, 5), (16, 9)] {
+            let mut rng = Pcg64::seeded(bits as u64 * 100 + len as u64);
+            let max = (1u64 << bits) - 1;
+            let codes: Vec<u32> = (0..len).map(|_| rng.below(max + 1) as u32).collect();
+            roundtrip(Payload::Quantized {
+                lo: -1.5,
+                hi: 2.25,
+                bits,
+                packed: pack_bits(&codes, bits),
+                len,
+            });
+        }
+    }
+
+    #[test]
+    fn signs_roundtrip_non_multiple_of_8() {
+        let codes: Vec<u32> = (0..21).map(|i| (i % 2) as u32).collect();
+        roundtrip(Payload::Signs { scale: 0.03, packed: pack_bits(&codes, 1), len: 21 });
+    }
+
+    #[test]
+    fn basis_roundtrip_including_empty_replacement() {
+        let (l, k, m) = (16usize, 4usize, 6usize);
+        for d in [0usize, 1, 3] {
+            let mut rng = Pcg64::seeded(d as u64 + 5);
+            roundtrip(Payload::Basis {
+                replace_idx: (0..d as u32).collect(),
+                new_vectors: rng.normal_vec(d * l),
+                coeffs: rng.normal_vec(k * m),
+                l,
+                k,
+                m,
+            });
+        }
+    }
+
+    #[test]
+    fn svd_roundtrip_with_and_without_refit() {
+        let (l, k, m) = (32usize, 5usize, 7usize);
+        let mut rng = Pcg64::seeded(11);
+        roundtrip(Payload::SvdCoeffs {
+            coeffs: rng.normal_vec(k * m),
+            refit_basis: None,
+            l,
+            k,
+            m,
+        });
+        roundtrip(Payload::SvdCoeffs {
+            coeffs: rng.normal_vec(k * m),
+            refit_basis: Some(rng.normal_vec(k * l)),
+            l,
+            k,
+            m,
+        });
+    }
+
+    #[test]
+    fn multi_payload_buffer_roundtrips_in_order() {
+        let payloads = vec![
+            Payload::Raw(vec![1.0, 2.0]),
+            Payload::Signs { scale: 1.5, packed: vec![0b101], len: 3 },
+            Payload::Raw(vec![-4.0]),
+        ];
+        let buf = encode(&payloads);
+        let total: u64 = payloads.iter().map(|p| p.wire_bytes()).sum();
+        assert_eq!(buf.len() as u64, total);
+        assert_eq!(decode(&buf).unwrap(), payloads);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        // Unknown tag.
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 99);
+        put_u32(&mut buf, 0);
+        assert!(decode(&buf).is_err());
+        // Truncated body.
+        let good = encode(&[Payload::Raw(vec![1.0, 2.0, 3.0])]);
+        assert!(decode(&good[..good.len() - 2]).is_err());
+        // Trailing junk after a valid frame.
+        let mut padded = good.clone();
+        padded.push(0xFF);
+        assert!(decode(&padded).is_err());
+        // Inconsistent quantized geometry: claim len 100 with 1 packed byte.
+        let mut bad = Vec::new();
+        put_u32(&mut bad, TAG_QUANTIZED);
+        put_u32(&mut bad, 4 + 4 + 1 + 4 + 1);
+        put_f32(&mut bad, 0.0);
+        put_f32(&mut bad, 1.0);
+        bad.push(8);
+        put_u32(&mut bad, 100);
+        bad.push(0);
+        assert!(decode(&bad).is_err());
+        // Hostile dimension headers whose products would overflow the size
+        // arithmetic must fail cleanly, not panic.
+        for tag in [TAG_BASIS, TAG_SVD] {
+            let mut evil = Vec::new();
+            put_u32(&mut evil, tag);
+            put_u32(&mut evil, 13);
+            put_u32(&mut evil, u32::MAX); // l
+            put_u32(&mut evil, u32::MAX); // k
+            put_u32(&mut evil, u32::MAX); // m
+            evil.push(1);
+            assert!(decode(&evil).is_err(), "tag {tag}");
+        }
+    }
+
+    #[test]
+    fn params_broadcast_roundtrip_bit_exact() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let params = ParamStore::init(&meta, &Pcg64::seeded(3));
+        let frame = encode_params(&params);
+        assert_eq!(frame.len(), 4 * params.numel());
+        let back = decode_params(&meta, &frame).unwrap();
+        for i in 0..params.len() {
+            let same = params
+                .tensor(i)
+                .iter()
+                .zip(back.tensor(i))
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "tensor {i} not bit-exact");
+        }
+        assert!(decode_params(&meta, &frame[..frame.len() - 4]).is_err());
+    }
+}

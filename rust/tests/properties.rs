@@ -3,6 +3,8 @@
 //!
 //! Covered invariants:
 //! * codec round-trips (quantization error bound, top-k support recovery)
+//! * wire format: `encode([p]).len() == p.wire_bytes()` and bit-exact
+//!   decode for every payload variant, including bit-packing edge cases
 //! * GradESTC basis orthonormality + client/server lockstep on random
 //!   streams (not just the friendly low-rank streams in unit tests)
 //! * partitioner: exact cover, no starvation, for arbitrary shapes
@@ -14,6 +16,7 @@ use gradestc::config::{DataDistribution, GradEstcParams, ModelKind};
 use gradestc::data::partition_indices;
 use gradestc::linalg::ortho_defect;
 use gradestc::model::meta::layer_table;
+use gradestc::net::wire;
 use gradestc::util::prop::{check, Gen, IntRange, Pair};
 use gradestc::util::rng::Pcg64;
 
@@ -109,6 +112,120 @@ fn prop_gradestc_basis_defect_bounded() {
             let _ = s.decompress(&payloads);
         }
         c.basis_matrices().iter().all(|m| ortho_defect(m) < 1e-2)
+    });
+}
+
+/// Build one payload of the given variant with pseudo-random contents.
+/// `n` drives lengths (deliberately including n % 8 ≠ 0) and `bits` the
+/// quantizer width / basis segment length.
+fn make_payload(variant: usize, n: usize, bits: usize) -> Payload {
+    let mut rng = Pcg64::seeded((variant * 1_000_000 + n * 31 + bits) as u64);
+    match variant {
+        0 => Payload::Raw(rng.normal_vec(n)),
+        1 => {
+            let pairs = (n / 4).max(1).min(n);
+            let indices: Vec<u32> = {
+                let mut idx = rng.sample_indices(n, pairs);
+                idx.sort_unstable();
+                idx.into_iter().map(|i| i as u32).collect()
+            };
+            Payload::Sparse { indices, values: rng.normal_vec(pairs), len: n }
+        }
+        2 => {
+            let max = (1u64 << bits) - 1;
+            let codes: Vec<u32> = (0..n).map(|_| rng.below(max + 1) as u32).collect();
+            Payload::Quantized {
+                lo: -1.0,
+                hi: 1.0,
+                bits: bits as u8,
+                packed: pack_bits(&codes, bits as u8),
+                len: n,
+            }
+        }
+        3 => {
+            let codes: Vec<u32> = (0..n).map(|_| rng.index(2) as u32).collect();
+            Payload::Signs { scale: 0.5, packed: pack_bits(&codes, 1), len: n }
+        }
+        4 => {
+            let (l, k, m) = (bits, (n % 7) + 1, (n % 5) + 1);
+            let d = n % (k + 1); // 0..=k replacements
+            Payload::Basis {
+                replace_idx: (0..d as u32).collect(),
+                new_vectors: rng.normal_vec(d * l),
+                coeffs: rng.normal_vec(k * m),
+                l,
+                k,
+                m,
+            }
+        }
+        _ => {
+            let (l, k, m) = (bits, (n % 6) + 1, (n % 4) + 1);
+            let refit = (n % 2 == 0).then(|| rng.normal_vec(k * l));
+            Payload::SvdCoeffs { coeffs: rng.normal_vec(k * m), refit_basis: refit, l, k, m }
+        }
+    }
+}
+
+/// Satellite acceptance: the encoded length of every payload variant equals
+/// `wire_bytes()` exactly, and decode is a bit-exact inverse — across
+/// random lengths (including len % 8 ≠ 0) and every bit width 1..=16.
+#[test]
+fn prop_wire_encode_length_equals_wire_bytes() {
+    let gen = Pair(
+        IntRange { lo: 0, hi: 5 },                                  // variant
+        Pair(IntRange { lo: 1, hi: 700 }, IntRange { lo: 1, hi: 16 }), // (n, bits)
+    );
+    check("wire_len_identity", 0x5EED_CAFE, 150, &gen, |&(variant, (n, bits))| {
+        let p = make_payload(variant, n, bits);
+        let buf = wire::encode(std::slice::from_ref(&p));
+        buf.len() as u64 == p.wire_bytes()
+            && wire::decode(&buf).map(|back| back == vec![p]).unwrap_or(false)
+    });
+}
+
+/// The edge cases the satellite calls out, pinned explicitly: 1-bit and
+/// 16-bit packing at lengths straddling byte boundaries.
+#[test]
+fn wire_bitpacking_edges_exact() {
+    for &len in &[1usize, 7, 8, 9, 15, 16, 17, 63, 65] {
+        for &bits in &[1usize, 16] {
+            let p = make_payload(2, len, bits);
+            let buf = wire::encode(std::slice::from_ref(&p));
+            assert_eq!(buf.len() as u64, p.wire_bytes(), "quantized len={len} bits={bits}");
+            assert_eq!(wire::decode(&buf).unwrap(), vec![p]);
+        }
+        let s = make_payload(3, len, 1);
+        let buf = wire::encode(std::slice::from_ref(&s));
+        assert_eq!(buf.len() as u64, s.wire_bytes(), "signs len={len}");
+        assert_eq!(wire::decode(&buf).unwrap(), vec![s]);
+    }
+}
+
+/// End-to-end over a real compressor stream: everything GradESTC emits —
+/// init-round Basis refreshes, steady-state coefficient rounds, raw
+/// passthrough tensors — survives encode→decode bit-exactly with the
+/// claimed lengths.
+#[test]
+fn prop_wire_roundtrips_gradestc_stream() {
+    let meta = layer_table(ModelKind::LeNet5);
+    check("wire_gradestc_stream", 0x31A7, 8, &StreamGen, |&(seed, rounds)| {
+        let params = GradEstcParams { k: 8, ..Default::default() };
+        let mut c = GradEstcClient::new(&meta, params, seed);
+        let mut rng = Pcg64::seeded(seed ^ 0xF00D);
+        for _ in 0..rounds {
+            let update = random_update(&meta, &mut rng);
+            let (payloads, _) = c.compress(&update);
+            let buf = wire::encode(&payloads);
+            let claimed: u64 = payloads.iter().map(|p| p.wire_bytes()).sum();
+            if buf.len() as u64 != claimed {
+                return false;
+            }
+            match wire::decode(&buf) {
+                Ok(back) if back == payloads => {}
+                _ => return false,
+            }
+        }
+        true
     });
 }
 

@@ -2,7 +2,7 @@
 //! no artifacts needed).
 
 use gradestc::config::{
-    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
+    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, NetConfig,
 };
 use gradestc::coordinator::{Simulation, Simulation2Hook};
 use gradestc::metrics::RoundRecord;
@@ -28,6 +28,7 @@ fn base_cfg(name: &str, comp: CompressorKind) -> ExperimentConfig {
         use_xla: false,
         artifacts_dir: "artifacts".into(),
         workers: 1,
+        net: NetConfig::default(),
     }
 }
 
@@ -193,6 +194,7 @@ fn assert_rounds_bitwise_equal(a: &[RoundRecord], b: &[RoundRecord], label: &str
             "{label}: sim_time, round {r}"
         );
         assert_eq!(x.sum_d, y.sum_d, "{label}: sum_d, round {r}");
+        assert_eq!(x.survivors, y.survivors, "{label}: survivors, round {r}");
     }
 }
 
@@ -285,6 +287,137 @@ fn round_hook_survives_panic() {
     // …but the hook is still installed and fires on the next round.
     sim.step(1).unwrap();
     assert_eq!(calls.load(Ordering::SeqCst), 2);
+}
+
+/// Acceptance bar for the transport subsystem: with the default net config
+/// the ledger — now charged from actual encoded buffer lengths — must match
+/// the analytical `wire_bytes()` accounting to the byte. FedAvg's uplink is
+/// exactly `participants · Σ_t (FRAME_HEADER + 4·|t|)` per round, and the
+/// downlink is exactly the dense model broadcast per participant.
+#[test]
+fn ledger_charges_match_wire_bytes_exactly() {
+    let mut cfg = base_cfg("it-wire-exact", CompressorKind::None);
+    cfg.rounds = 2;
+    let mut sim = Simulation::build(cfg).unwrap();
+    sim.run().unwrap();
+    let per_client: u64 = sim
+        .meta
+        .layers
+        .iter()
+        .map(|l| gradestc::compress::codec::FRAME_HEADER + 4 * l.size() as u64)
+        .sum();
+    let rounds = sim.recorder.rounds();
+    for r in rounds {
+        assert_eq!(r.uplink_bytes, 4 * per_client, "round {}", r.round);
+        assert_eq!(r.downlink_bytes, 4 * (4 * sim.global.numel() as u64), "round {}", r.round);
+        assert_eq!(r.survivors, vec![0, 1, 2, 3]);
+    }
+}
+
+/// Same seed + same dropout rate ⇒ identical surviving-client sets and
+/// bit-identical round records at workers=1 vs workers=8 (satellite
+/// determinism bar for the dropout model).
+#[test]
+fn dropout_deterministic_across_workers() {
+    let mut cfg = base_cfg(
+        "it-dropout-det",
+        CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+    );
+    cfg.num_clients = 8;
+    cfg.rounds = 5;
+    cfg.net.dropout = 0.3;
+    let (seq, seq_rep) = run_with_workers(cfg.clone(), 1);
+    let (par, par_rep) = run_with_workers(cfg, 8);
+    assert_rounds_bitwise_equal(&seq, &par, "dropout w1 vs w8");
+    assert_eq!(seq_rep.total_uplink, par_rep.total_uplink);
+    assert_eq!(seq_rep.best_accuracy.to_bits(), par_rep.best_accuracy.to_bits());
+    // The rate must actually bite somewhere in the trace…
+    assert!(
+        seq.iter().any(|r| r.survivors.len() < 8),
+        "dropout 0.3 never dropped anyone in 5 rounds"
+    );
+    // …and dropped clients must not be charged: the broadcast goes only to
+    // survivors, so each round's downlink is survivors × model bytes.
+    for r in &seq {
+        assert_eq!(
+            r.downlink_bytes % r.survivors.len().max(1) as u64,
+            0,
+            "round {}: downlink not a multiple of survivor count",
+            r.round
+        );
+    }
+}
+
+/// Dropout reduces traffic: fewer uploads and broadcasts cross the wire.
+#[test]
+fn dropout_reduces_traffic() {
+    let base = base_cfg("it-dropout-traffic", CompressorKind::None);
+    let mut dropped = base.clone();
+    dropped.name = "it-dropout-traffic-d".into();
+    dropped.net.dropout = 0.5;
+    dropped.num_clients = 8;
+    let mut full = base.clone();
+    full.num_clients = 8;
+    let r_full = Simulation::build(full).unwrap().run().unwrap();
+    let r_drop = Simulation::build(dropped).unwrap().run().unwrap();
+    assert!(
+        r_drop.total_uplink < r_full.total_uplink,
+        "dropout uplink {} !< full {}",
+        r_drop.total_uplink,
+        r_full.total_uplink
+    );
+}
+
+/// An impossibly tight straggler deadline: every update arrives late, so
+/// the global model never moves — but the run completes, bytes are still
+/// charged (they crossed the wire), and state stays consistent.
+#[test]
+fn straggler_deadline_excludes_all_updates() {
+    let mut cfg = base_cfg("it-deadline", CompressorKind::None);
+    cfg.rounds = 2;
+    cfg.net.deadline_s = 1e-9; // below even the per-message latency
+    let mut sim = Simulation::build(cfg).unwrap();
+    let before = sim.global.clone();
+    let rec = sim.step(0).unwrap();
+    assert_eq!(sim.global, before, "late updates must not be aggregated");
+    assert!(rec.uplink_bytes > 0, "stragglers' bytes still cross the wire");
+    // Round time is capped at the deadline.
+    assert!(rec.sim_time_s <= 1e-9);
+}
+
+/// A generous deadline changes nothing: bit-identical to no deadline.
+#[test]
+fn loose_deadline_is_a_noop() {
+    let mut cfg = base_cfg(
+        "it-deadline-loose",
+        CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+    );
+    cfg.rounds = 3;
+    let (plain, _) = run_with_workers(cfg.clone(), 1);
+    cfg.net.deadline_s = 1e9;
+    let (loose, _) = run_with_workers(cfg, 1);
+    for (a, b) in plain.iter().zip(&loose) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert_eq!(a.uplink_bytes, b.uplink_bytes);
+        assert_eq!(a.survivors, b.survivors);
+    }
+}
+
+/// Heterogeneous links slow the simulated clock but leave learning and
+/// accounting untouched (links only affect time, never bytes or math).
+#[test]
+fn heterogeneous_links_only_affect_time() {
+    let base = base_cfg("it-het", CompressorKind::None);
+    let mut het = base.clone();
+    het.name = "it-het-spread".into();
+    het.net.het_spread = 1.0;
+    let mut a = Simulation::build(base).unwrap();
+    let mut b = Simulation::build(het).unwrap();
+    let ra = a.step(0).unwrap();
+    let rb = b.step(0).unwrap();
+    assert_eq!(ra.uplink_bytes, rb.uplink_bytes);
+    assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits());
+    assert_ne!(ra.sim_time_s.to_bits(), rb.sim_time_s.to_bits());
 }
 
 #[test]
