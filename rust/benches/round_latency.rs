@@ -8,13 +8,14 @@
 //! Run with `cargo bench --bench round_latency` (`make artifacts` first to
 //! include the XLA cases; the native cases and the sweep always run).
 
-use gradestc::compress::{build_pair, Compressor as _, Payload};
+use gradestc::compress::{build_pair, Compressor as _, Decompressor as _, LayerUpdate, Payload};
 use gradestc::config::{
     CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
     NetConfig,
 };
-use gradestc::coordinator::Simulation;
+use gradestc::coordinator::{ServerAggregator, Simulation};
 use gradestc::model::meta::layer_table;
+use gradestc::model::params::ParamStore;
 use gradestc::net::wire;
 use gradestc::util::bench::Bencher;
 use gradestc::util::rng::Pcg64;
@@ -113,6 +114,51 @@ fn main() {
             round += 1;
             std::hint::black_box(rec.train_loss);
         });
+    }
+
+    // Server-phase aggregation: dense (decompress every client to a full
+    // model, then weighted_sum) vs the fused compressed-domain fold
+    // (ServerAggregator folds low-rank factors via matmul_acc, one
+    // accumulator per layer). Steady-state GradESTC payloads from 16
+    // clients on the ResNetLite geometry — the parameter-dominant case the
+    // refactor targets.
+    {
+        let meta = layer_table(ModelKind::ResNetLite);
+        let kind = CompressorKind::GradEstc(GradEstcParams { k: 32, ..Default::default() });
+        let n_clients = 16usize;
+        let mut decoded: Vec<Vec<LayerUpdate>> = Vec::with_capacity(n_clients);
+        for cid in 0..n_clients {
+            let mut rng = Pcg64::seeded(0xA66 + cid as u64);
+            let (mut c, mut d) = build_pair(&kind, &meta, cid as u64);
+            let warm: Vec<Vec<f32>> =
+                meta.layers.iter().map(|l| rng.normal_vec(l.size())).collect();
+            let (p0, _) = c.compress(&warm);
+            let _ = d.decode(p0);
+            let update: Vec<Vec<f32>> =
+                meta.layers.iter().map(|l| rng.normal_vec(l.size())).collect();
+            let (p1, _) = c.compress(&update);
+            decoded.push(d.decode(p1));
+        }
+        let scales: Vec<f32> = vec![1.0 / n_clients as f32; n_clients];
+        // Same worker counts on both sides so the dense-vs-fused delta
+        // isolates the compressed-domain fold, not parallel speedup.
+        for workers in [1usize, 8] {
+            b.bench(&format!("server-phase-dense-16clients-w{workers}"), || {
+                let dense: Vec<Vec<Vec<f32>>> = decoded
+                    .iter()
+                    .map(|us| us.iter().map(LayerUpdate::to_dense).collect())
+                    .collect();
+                let terms: Vec<&[Vec<f32>]> = dense.iter().map(|u| u.as_slice()).collect();
+                std::hint::black_box(ParamStore::weighted_sum(&meta, &terms, &scales, workers));
+            });
+            b.bench(&format!("server-phase-fused-16clients-w{workers}"), || {
+                let batch: Vec<(f32, Vec<LayerUpdate>)> =
+                    scales.iter().copied().zip(decoded.iter().cloned()).collect();
+                let mut agg = ServerAggregator::new(&meta);
+                agg.fold_batch(workers, batch);
+                std::hint::black_box(agg.finish(&meta));
+            });
+        }
     }
 
     // Wire-codec throughput: encode/decode one client's payload set for

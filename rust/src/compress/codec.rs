@@ -140,11 +140,13 @@ impl super::Compressor for RawCompressor {
 pub struct RawDecompressor;
 
 impl super::Decompressor for RawDecompressor {
-    fn decompress(&mut self, payloads: &[Payload]) -> Vec<Vec<f32>> {
+    fn decode(&mut self, payloads: Vec<Payload>) -> Vec<super::LayerUpdate> {
         payloads
-            .iter()
+            .into_iter()
             .map(|p| match p {
-                Payload::Raw(v) => v.clone(),
+                // Move the payload's buffer straight through — the only
+                // dense copy in the raw pipeline is the wire decode itself.
+                Payload::Raw(v) => super::LayerUpdate::Dense(v),
                 other => panic!("RawDecompressor got {other:?}"),
             })
             .collect()
@@ -167,6 +169,23 @@ pub fn pack_bits(codes: &[u32], bits: u8) -> Vec<u8> {
         }
     }
     out
+}
+
+/// Dequantize bit-packed uniform codes: `x̂ = lo + q·(hi-lo)/(2^bits-1)`
+/// per element. The *single* definition of the reconstruction formula —
+/// both [`LayerUpdate::to_dense`](crate::compress::LayerUpdate::to_dense)
+/// and the server aggregation plane's quantized fold stream from here, so
+/// the two paths agree bit-for-bit by construction.
+pub fn dequant_values(
+    lo: f32,
+    hi: f32,
+    bits: u8,
+    packed: &[u8],
+    n: usize,
+) -> impl Iterator<Item = f32> {
+    let levels = (1u32 << bits) - 1;
+    let step = (hi - lo) / levels as f32;
+    unpack_bits(packed, bits, n).into_iter().map(move |c| lo + c as f32 * step)
 }
 
 /// Inverse of [`pack_bits`].

@@ -37,6 +37,12 @@ impl EfWrapper {
 }
 
 impl Compressor for EfWrapper {
+    fn state_fingerprint(&self) -> u64 {
+        // The lane's lockstep-relevant state is the wrapped client's basis;
+        // the residual is local-only and has no server mirror.
+        self.inner.state_fingerprint()
+    }
+
     fn compress(&mut self, update: &[Vec<f32>]) -> (Vec<Payload>, CompressStats) {
         // u' = u + residual
         let corrected: Vec<Vec<f32>> = match &self.residual {

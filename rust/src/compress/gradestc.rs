@@ -25,14 +25,16 @@
 //! `freeze_after_init` (GradESTC-first), `replace_all` (GradESTC-all),
 //! `fixed_d` (GradESTC-k).
 
+use std::sync::Arc;
+
 use super::codec::Payload;
-use super::{CompressStats, Compressor, Decompressor};
+use super::{
+    assemble_updates, basis_fingerprint, CompressStats, Compressor, Decompressor, LayerUpdate,
+    SegmentGeom,
+};
 use crate::config::GradEstcParams;
 use crate::linalg::{matmul, matmul_at_b, mgs_orthonormalize, randomized_svd, Mat, RsvdOptions};
 use crate::model::meta::{LayerRole, ModelMeta};
-use crate::model::reshape::{
-    fanin_major_to_hwio, hwio_to_fanin_major, segment_matrix, unsegment_matrix,
-};
 use crate::util::rng::Pcg64;
 
 /// Re-orthonormalize the shared basis every this many rounds (both sides,
@@ -57,6 +59,13 @@ pub(crate) mod geometry {
         pub(crate) k: usize,
         /// HWIO conv dims when the tensor needs layout conversion.
         pub(crate) conv: Option<(usize, usize, usize, usize)>,
+    }
+
+    impl LayerGeom {
+        /// The public segment-space geometry (basis size `k` stripped).
+        pub(crate) fn seg(&self) -> SegmentGeom {
+            SegmentGeom { l: self.l, m: self.m, conv: self.conv }
+        }
     }
 
     pub(crate) fn layer_geoms(meta: &ModelMeta, params: &GradEstcParams) -> Vec<LayerGeom> {
@@ -88,42 +97,11 @@ pub(crate) mod geometry {
             .collect()
     }
 
-    /// Flatten a tensor into fan-in-major order and segment it into G.
+    /// Flatten a tensor into fan-in-major order and segment it into G
+    /// (delegates to [`SegmentGeom::flat_to_segments`]; the inverse is
+    /// [`SegmentGeom::segments_to_flat`]).
     pub(crate) fn to_g(geom: &LayerGeom, flat: &[f32]) -> Mat {
-        match geom.conv {
-            Some((kh, kw, ci, co)) => {
-                let f = hwio_to_fanin_major(flat, kh, kw, ci, co);
-                segment_matrix(&f, geom.l, geom.m)
-            }
-            None => {
-                // Dense [in, out] row-major: column j of G must be output
-                // unit j's fan-in — i.e. the transposed layout.
-                let mut f = vec![0.0f32; flat.len()];
-                for i in 0..geom.l {
-                    for o in 0..geom.m {
-                        f[o * geom.l + i] = flat[i * geom.m + o];
-                    }
-                }
-                segment_matrix(&f, geom.l, geom.m)
-            }
-        }
-    }
-
-    /// Inverse of [`to_g`].
-    pub(crate) fn from_g(geom: &LayerGeom, g: &Mat) -> Vec<f32> {
-        let f = unsegment_matrix(g);
-        match geom.conv {
-            Some((kh, kw, ci, co)) => fanin_major_to_hwio(&f, kh, kw, ci, co),
-            None => {
-                let mut flat = vec![0.0f32; f.len()];
-                for o in 0..geom.m {
-                    for i in 0..geom.l {
-                        flat[i * geom.m + o] = f[o * geom.l + i];
-                    }
-                }
-                flat
-            }
-        }
+        geom.seg().flat_to_segments(flat)
     }
 
     /// Apply the Eq. 12 replacement to a basis matrix.
@@ -140,7 +118,7 @@ pub(crate) mod geometry {
     }
 }
 
-use geometry::{apply_replacements, from_g, layer_geoms, to_g, LayerGeom};
+use geometry::{apply_replacements, layer_geoms, to_g, LayerGeom};
 
 // ---------------------------------------------------------------------------
 // Client
@@ -312,8 +290,12 @@ impl GradEstcClient {
                         .sum();
                     scores.push((row_sq, k + i));
                 }
-                // Top-k by score.
-                scores.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+                // Top-k by score. `total_cmp` is NaN-safe (a NaN score —
+                // e.g. from an overflowed row norm — orders deterministically
+                // instead of panicking) and the stable sort preserves the
+                // original order of tied scores, so the deterministic
+                // tie-break is unchanged from the `partial_cmp` days.
+                scores.sort_by(|x, y| y.0.total_cmp(&x.0));
                 let top: std::collections::HashSet<usize> =
                     scores.iter().take(k).map(|&(_, i)| i).collect();
 
@@ -356,6 +338,10 @@ impl GradEstcClient {
 }
 
 impl Compressor for GradEstcClient {
+    fn state_fingerprint(&self) -> u64 {
+        basis_fingerprint(self.layers.iter().map(|s| s.basis.as_ref()))
+    }
+
     fn compress(&mut self, update: &[Vec<f32>]) -> (Vec<Payload>, CompressStats) {
         assert_eq!(update.len(), self.ntensors);
         let mut stats = CompressStats::default();
@@ -384,7 +370,10 @@ impl Compressor for GradEstcClient {
 
 struct ServerLayer {
     geom: LayerGeom,
-    basis: Option<Mat>,
+    /// Mirrored basis, shared by `Arc` with the [`LayerUpdate::LowRank`]s
+    /// this server hands out; mutated copy-on-write so a snapshot held by
+    /// the aggregation plane can never observe a later round's state.
+    basis: Option<Arc<Mat>>,
 }
 
 /// Server-side GradESTC decompressor (paper Algorithm 2).
@@ -406,39 +395,47 @@ impl GradEstcServer {
 }
 
 impl Decompressor for GradEstcServer {
-    fn decompress(&mut self, payloads: &[Payload]) -> Vec<Vec<f32>> {
+    fn state_fingerprint(&self) -> u64 {
+        basis_fingerprint(self.layers.iter().map(|s| s.basis.as_deref()))
+    }
+
+    fn decode(&mut self, payloads: Vec<Payload>) -> Vec<LayerUpdate> {
         let round = self.round;
         self.round += 1;
-        let mut out: Vec<Vec<f32>> = payloads
-            .iter()
-            .map(|p| match p {
-                Payload::Raw(v) => v.clone(),
-                _ => Vec::new(), // filled below
-            })
-            .collect();
+        let mut slots: Vec<Option<Payload>> = payloads.into_iter().map(Some).collect();
+        let mut structured = Vec::with_capacity(self.layers.len());
         for state in &mut self.layers {
             let geom = state.geom;
-            let Payload::Basis { replace_idx, new_vectors, coeffs, l, k, m } =
-                &payloads[geom.tensor]
+            let Some(Payload::Basis { replace_idx, new_vectors, coeffs, l, k, m }) =
+                slots[geom.tensor].take()
             else {
                 panic!("GradEstcServer: expected Basis payload for tensor {}", geom.tensor)
             };
-            assert_eq!((*l, *k, *m), (geom.l, geom.k, geom.m));
-            let basis = state.basis.get_or_insert_with(|| Mat::zeros(geom.l, geom.k));
+            assert_eq!((l, k, m), (geom.l, geom.k, geom.m));
+            let basis =
+                state.basis.get_or_insert_with(|| Arc::new(Mat::zeros(geom.l, geom.k)));
             let reortho_due = round > 0
                 && round % REORTHO_PERIOD == 0
                 && !self.params.freeze_after_init;
             if reortho_due {
                 // Mirror the client's deterministic repair (same schedule,
                 // same algorithm → bit-identical state).
-                mgs_orthonormalize(basis, 1e-7);
+                mgs_orthonormalize(Arc::make_mut(basis), 1e-7);
             }
-            apply_replacements(basis, replace_idx, new_vectors, geom.l);
-            let a = Mat::from_vec(geom.k, geom.m, coeffs.clone());
-            let ghat = matmul(basis, &a);
-            out[geom.tensor] = from_g(&geom, &ghat);
+            apply_replacements(Arc::make_mut(basis), &replace_idx, &new_vectors, geom.l);
+            // Alg. 2's reconstruction Ĝ = M·A is *deferred*: the aggregate
+            // plane either fuses it into the per-layer accumulator
+            // (`matmul_acc`) or a probe densifies it explicitly.
+            structured.push((
+                geom.tensor,
+                LayerUpdate::LowRank {
+                    coeffs: Mat::from_vec(geom.k, geom.m, coeffs),
+                    basis: Arc::clone(basis),
+                    geom: geom.seg(),
+                },
+            ));
         }
-        out
+        assemble_updates(slots, structured, "GradEstcServer")
     }
 }
 
@@ -492,13 +489,11 @@ mod tests {
                             *x += 0.02 * n;
                         }
                         // Return in the tensor's natural layout: invert to_g
-                        // by treating flat as G column-major-ish — use from_g
-                        // on a fake geom for exactness.
-                        let geom = LayerGeom {
-                            tensor: 0,
+                        // by treating flat as G column-major-ish — use the
+                        // segment geometry's inverse map for exactness.
+                        let geom = SegmentGeom {
                             l: l.segment_len(),
                             m: l.segment_cols(),
-                            k: 1,
                             conv: match l.role {
                                 LayerRole::ConvKernel => Some((
                                     l.shape[0], l.shape[1], l.shape[2], l.shape[3],
@@ -507,7 +502,7 @@ mod tests {
                             },
                         };
                         let g = Mat::from_vec(geom.l, geom.m, flat);
-                        from_g(&geom, &g)
+                        geom.segments_to_flat(&g)
                     })
                     .collect()
             })
@@ -671,9 +666,13 @@ mod tests {
         for (cl, sl) in c.layers.iter().zip(&s.layers) {
             assert_eq!(
                 cl.basis.as_ref().unwrap(),
-                sl.basis.as_ref().unwrap(),
+                sl.basis.as_deref().unwrap(),
                 "basis diverged"
             );
         }
+        // The public fingerprints must agree exactly when (and only when)
+        // the bases are bit-identical.
+        assert_eq!(c.state_fingerprint(), s.state_fingerprint());
+        assert_ne!(c.state_fingerprint(), 0);
     }
 }

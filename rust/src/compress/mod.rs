@@ -2,9 +2,26 @@
 //! baseline it is evaluated against.
 //!
 //! A [`Compressor`] turns a client's per-layer update into a compact
-//! [`Payload`]; the server-side [`Decompressor`] reconstructs it. Payload
-//! byte sizes are *exact wire sizes* (what a real serializer would emit),
+//! [`Payload`]; the server-side [`Decompressor`] *decodes* it into a typed
+//! [`LayerUpdate`] while advancing whatever server state the protocol
+//! keeps (basis replacements, periodic re-orthonormalization). Payload
+//! byte sizes are *exact wire sizes* (what the binary serializer emits),
 //! charged to the communication ledger by the coordinator.
+//!
+//! ## The decode / aggregate split
+//!
+//! Decoding is deliberately **not** densification. `decode` returns the
+//! update in its structured form — low-rank factors, sparse pairs, packed
+//! quantization codes — and the server aggregation plane
+//! ([`crate::coordinator::ServerAggregator`]) folds those structures
+//! directly into per-layer accumulators, so a round's server phase never
+//! materializes one dense model per client. Reconstructing a dense tensor
+//! ([`LayerUpdate::to_dense`], or the [`Decompressor::decompress`]
+//! convenience) is the opt-in path, used by the round-hook probes and the
+//! error-feedback mirror. Crucially, `decode` still runs for stragglers
+//! whose updates are excluded from the aggregate: client and server state
+//! must evolve in lockstep (the temporal-correlation contract), so the
+//! state advance is unconditional and only the fold weight is withheld.
 //!
 //! Implementations:
 //! * [`gradestc`] — the paper's method (Algorithms 1 & 2).
@@ -26,7 +43,13 @@ pub use codec::Payload;
 pub use error_feedback::EfWrapper;
 pub use gradestc::{GradEstcClient, GradEstcServer};
 
+use std::sync::Arc;
+
+use crate::linalg::{matmul, Mat};
 use crate::model::meta::ModelMeta;
+use crate::model::reshape::{
+    fanin_major_to_hwio, hwio_to_fanin_major, segment_matrix, unsegment_matrix,
+};
 
 /// Per-round, per-client compression statistics surfaced to the recorder.
 #[derive(Clone, Copy, Debug, Default)]
@@ -35,6 +58,168 @@ pub struct CompressStats {
     pub sum_d: u64,
     /// Basis vectors actually replaced this round (GradESTC only).
     pub replaced: u64,
+}
+
+/// Segment-space geometry of one compressed layer: how a flat tensor maps
+/// to the paper's `G ∈ R^{l×m}` (§III-A) and back.
+///
+/// Carried by [`LayerUpdate::LowRank`] so the aggregation plane can keep a
+/// per-layer accumulator in segment space and convert to the tensor's flat
+/// layout exactly once per round, instead of once per client.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SegmentGeom {
+    /// Segment length (rows of G; the layer's fan-in).
+    pub l: usize,
+    /// Segment count (columns of G; the layer's output units).
+    pub m: usize,
+    /// HWIO conv dims `(kh, kw, cin, cout)` when the tensor needs layout
+    /// conversion; `None` for dense `[in, out]` kernels.
+    pub conv: Option<(usize, usize, usize, usize)>,
+}
+
+impl SegmentGeom {
+    /// Flatten a tensor into fan-in-major order and segment it into G.
+    pub fn flat_to_segments(&self, flat: &[f32]) -> Mat {
+        match self.conv {
+            Some((kh, kw, ci, co)) => {
+                let f = hwio_to_fanin_major(flat, kh, kw, ci, co);
+                segment_matrix(&f, self.l, self.m)
+            }
+            None => {
+                // Dense [in, out] row-major: column j of G must be output
+                // unit j's fan-in — i.e. the transposed layout.
+                let mut f = vec![0.0f32; flat.len()];
+                for i in 0..self.l {
+                    for o in 0..self.m {
+                        f[o * self.l + i] = flat[i * self.m + o];
+                    }
+                }
+                segment_matrix(&f, self.l, self.m)
+            }
+        }
+    }
+
+    /// Inverse of [`SegmentGeom::flat_to_segments`].
+    pub fn segments_to_flat(&self, g: &Mat) -> Vec<f32> {
+        let f = unsegment_matrix(g);
+        match self.conv {
+            Some((kh, kw, ci, co)) => fanin_major_to_hwio(&f, kh, kw, ci, co),
+            None => {
+                let mut flat = vec![0.0f32; f.len()];
+                for o in 0..self.m {
+                    for i in 0..self.l {
+                        flat[i * self.m + o] = f[o * self.l + i];
+                    }
+                }
+                flat
+            }
+        }
+    }
+}
+
+/// One tensor's decoded update in its *structured* form — what
+/// [`Decompressor::decode`] hands the server aggregation plane.
+///
+/// Every variant knows how to fold itself into a per-layer accumulator
+/// without densifying first; [`LayerUpdate::to_dense`] is the explicit
+/// opt-in reconstruction used by round-hook probes.
+#[derive(Clone, Debug)]
+pub enum LayerUpdate {
+    /// Dense f32 data in the tensor's natural flat layout.
+    Dense(Vec<f32>),
+    /// Scatter (index, value) pairs into a `len`-element tensor.
+    Sparse {
+        /// Flat indices.
+        indices: Vec<u32>,
+        /// Values at those indices.
+        values: Vec<f32>,
+        /// Dense length.
+        len: usize,
+    },
+    /// Bit-packed uniform quantization codes; `x̂ = lo + q·(hi-lo)/(2^bits-1)`.
+    /// SignSGD decodes here too (`bits = 1`, `lo = -scale`, `hi = scale`).
+    QuantDense {
+        /// Minimum of the quantization range.
+        lo: f32,
+        /// Maximum of the quantization range.
+        hi: f32,
+        /// Bit width (1..=16).
+        bits: u8,
+        /// Bit-packed codes.
+        packed: Vec<u8>,
+        /// Dense length.
+        len: usize,
+    },
+    /// Low-rank factorization `Ĝ = basis · coeffs` in segment space. The
+    /// basis is an `Arc` view of the decompressor's own state — O(1) to
+    /// hand out, never a per-client copy.
+    LowRank {
+        /// Combination coefficients A, `k × m`.
+        coeffs: Mat,
+        /// Basis M, `l × k` (shared server state).
+        basis: Arc<Mat>,
+        /// Segment geometry mapping G back to the flat tensor layout.
+        geom: SegmentGeom,
+    },
+}
+
+impl LayerUpdate {
+    /// Dense element count of the tensor this update describes.
+    pub fn dense_len(&self) -> usize {
+        match self {
+            LayerUpdate::Dense(v) => v.len(),
+            LayerUpdate::Sparse { len, .. } | LayerUpdate::QuantDense { len, .. } => *len,
+            LayerUpdate::LowRank { geom, .. } => geom.l * geom.m,
+        }
+    }
+
+    /// f32-equivalents this update *owns* (the shared low-rank basis is
+    /// server state, not a per-client copy) — the API-level memory
+    /// accounting the aggregation-plane tests assert on.
+    pub fn stored_floats(&self) -> usize {
+        match self {
+            LayerUpdate::Dense(v) => v.len(),
+            LayerUpdate::Sparse { indices, values, .. } => indices.len() + values.len(),
+            LayerUpdate::QuantDense { packed, .. } => packed.len().div_ceil(4),
+            LayerUpdate::LowRank { coeffs, .. } => coeffs.as_slice().len(),
+        }
+    }
+
+    /// Reconstruct the dense flat tensor. This is the opt-in
+    /// materialization path (round hooks, error-feedback mirror); the
+    /// aggregation plane folds the structured form directly instead.
+    pub fn to_dense(&self) -> Vec<f32> {
+        match self {
+            LayerUpdate::Dense(v) => v.clone(),
+            LayerUpdate::Sparse { indices, values, len } => {
+                // Producer contract (enforced on the wire): indices are
+                // strictly increasing, so assignment here and the
+                // aggregator's scatter-add agree exactly.
+                debug_assert!(indices.windows(2).all(|w| w[0] < w[1]));
+                let mut out = vec![0.0f32; *len];
+                for (&i, &v) in indices.iter().zip(values) {
+                    out[i as usize] = v;
+                }
+                out
+            }
+            LayerUpdate::QuantDense { lo, hi, bits, packed, len } => {
+                codec::dequant_values(*lo, *hi, *bits, packed, *len).collect()
+            }
+            LayerUpdate::LowRank { coeffs, basis, geom } => {
+                let ghat = matmul(basis, coeffs);
+                geom.segments_to_flat(&ghat)
+            }
+        }
+    }
+
+    /// Like [`LayerUpdate::to_dense`] but consumes the update, moving the
+    /// buffer out of the `Dense` variant instead of cloning it.
+    pub fn into_dense(self) -> Vec<f32> {
+        match self {
+            LayerUpdate::Dense(v) => v,
+            other => other.to_dense(),
+        }
+    }
 }
 
 /// Client-side compressor over a full model update (all tensors, in layer
@@ -46,13 +231,41 @@ pub struct CompressStats {
 pub trait Compressor: Send {
     /// Compress one round's update. `update[i]` is tensor `i`'s flat data.
     fn compress(&mut self, update: &[Vec<f32>]) -> (Vec<Payload>, CompressStats);
+
+    /// Deterministic, layer-order-sensitive hash of the compressor's
+    /// persistent state (0 for stateless compressors). Paired with
+    /// [`Decompressor::state_fingerprint`] to assert the client/server
+    /// lockstep invariant from outside the crate (tests, diagnostics);
+    /// paired implementations must hash the same state in the same order
+    /// (the in-crate implementations share one `basis_fingerprint` helper).
+    fn state_fingerprint(&self) -> u64 {
+        0
+    }
 }
 
 /// Server-side decompressor paired with one client's compressor. `Send`
 /// for the same reason as [`Compressor`]: it rides in the client lane.
 pub trait Decompressor: Send {
-    /// Reconstruct tensor-aligned flat updates from payloads.
-    fn decompress(&mut self, payloads: &[Payload]) -> Vec<Vec<f32>>;
+    /// Decode payloads into typed per-tensor updates, advancing any
+    /// server-side state (basis replacement, periodic re-ortho). Runs for
+    /// *every* received upload — including stragglers whose fold weight is
+    /// zero — because paired client/server state must stay in lockstep.
+    fn decode(&mut self, payloads: Vec<Payload>) -> Vec<LayerUpdate>;
+
+    /// Decode and densify: the legacy reconstruction path, kept for probes
+    /// and tests. Advances state exactly like [`Decompressor::decode`].
+    fn decompress(&mut self, payloads: &[Payload]) -> Vec<Vec<f32>> {
+        self.decode(payloads.to_vec())
+            .into_iter()
+            .map(LayerUpdate::into_dense)
+            .collect()
+    }
+
+    /// Hash of the decompressor's persistent state; see
+    /// [`Compressor::state_fingerprint`].
+    fn state_fingerprint(&self) -> u64 {
+        0
+    }
 }
 
 // Compile-time proof that lane state crosses threads: the engine relies on
@@ -62,6 +275,56 @@ const _: () = {
     assert_send::<dyn Compressor>();
     assert_send::<dyn Decompressor>();
 };
+
+/// Assemble a decode result: remaining `Raw` payload slots become moved
+/// [`LayerUpdate::Dense`] entries and the structured tensors (whose slots
+/// were taken) receive their prepared updates.
+pub(crate) fn assemble_updates(
+    slots: Vec<Option<Payload>>,
+    structured: Vec<(usize, LayerUpdate)>,
+    who: &str,
+) -> Vec<LayerUpdate> {
+    let mut out: Vec<LayerUpdate> = slots
+        .into_iter()
+        .map(|s| match s {
+            Some(Payload::Raw(v)) => LayerUpdate::Dense(v),
+            Some(other) => panic!("{who}: unexpected {other:?} for an uncompressed tensor"),
+            // Placeholder for a structured tensor, patched below.
+            None => LayerUpdate::Dense(Vec::new()),
+        })
+        .collect();
+    for (tensor, update) in structured {
+        out[tensor] = update;
+    }
+    out
+}
+
+/// FNV-1a over a stream of words — the shared basis-state fingerprint
+/// (must be identical on the client and server side of a lane).
+pub(crate) fn fnv1a_words(words: impl Iterator<Item = u64>) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for w in words {
+        h ^= w;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint a set of optional basis matrices (layer order): presence
+/// flag, dims, and every element's bit pattern.
+pub(crate) fn basis_fingerprint<'a>(bases: impl Iterator<Item = Option<&'a Mat>>) -> u64 {
+    let mut words: Vec<u64> = Vec::new();
+    for b in bases {
+        match b {
+            None => words.push(u64::MAX),
+            Some(m) => {
+                words.push(((m.rows() as u64) << 32) | m.cols() as u64);
+                words.extend(m.as_slice().iter().map(|x| x.to_bits() as u64));
+            }
+        }
+    }
+    fnv1a_words(words.into_iter())
+}
 
 /// Build the (compressor, decompressor) pair for a config.
 pub fn build_pair(

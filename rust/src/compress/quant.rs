@@ -11,7 +11,7 @@
 //! `E[Q(x)] = x` — the property the FedPAQ convergence proof needs; tested
 //! below.
 
-use super::codec::{pack_bits, unpack_bits, Payload};
+use super::codec::{pack_bits, Payload};
 use super::{CompressStats, Compressor, Decompressor};
 use crate::model::meta::ModelMeta;
 use crate::util::rng::Pcg64;
@@ -111,20 +111,17 @@ impl QuantDecompressor {
 }
 
 impl Decompressor for QuantDecompressor {
-    fn decompress(&mut self, payloads: &[Payload]) -> Vec<Vec<f32>> {
+    fn decode(&mut self, payloads: Vec<Payload>) -> Vec<super::LayerUpdate> {
         payloads
-            .iter()
+            .into_iter()
             .zip(&self.sizes)
             .map(|(p, &n)| match p {
-                Payload::Raw(v) => v.clone(),
+                Payload::Raw(v) => super::LayerUpdate::Dense(v),
                 Payload::Quantized { lo, hi, bits, packed, len } => {
-                    assert_eq!(*len, n);
-                    let levels = (1u32 << bits) - 1;
-                    let scale = (hi - lo) / levels as f32;
-                    unpack_bits(packed, *bits, n)
-                        .into_iter()
-                        .map(|c| lo + c as f32 * scale)
-                        .collect()
+                    assert_eq!(len, n);
+                    // Codes stay bit-packed: the aggregation plane folds
+                    // `lo + q·step` per element straight from the packing.
+                    super::LayerUpdate::QuantDense { lo, hi, bits, packed, len }
                 }
                 other => panic!("QuantDecompressor got {other:?}"),
             })
@@ -182,18 +179,24 @@ impl SignDecompressor {
 }
 
 impl Decompressor for SignDecompressor {
-    fn decompress(&mut self, payloads: &[Payload]) -> Vec<Vec<f32>> {
+    fn decode(&mut self, payloads: Vec<Payload>) -> Vec<super::LayerUpdate> {
         payloads
-            .iter()
+            .into_iter()
             .zip(&self.sizes)
             .map(|(p, &n)| match p {
-                Payload::Raw(v) => v.clone(),
+                Payload::Raw(v) => super::LayerUpdate::Dense(v),
                 Payload::Signs { scale, packed, len } => {
-                    assert_eq!(*len, n);
-                    unpack_bits(packed, 1, n)
-                        .into_iter()
-                        .map(|b| if b == 1 { *scale } else { -*scale })
-                        .collect()
+                    assert_eq!(len, n);
+                    // A sign field is 1-bit uniform quantization over
+                    // [-scale, scale]: code 0 → -scale + 0·2scale = -scale,
+                    // code 1 → -scale + 2scale = +scale, both exact in f32.
+                    super::LayerUpdate::QuantDense {
+                        lo: -scale,
+                        hi: scale,
+                        bits: 1,
+                        packed,
+                        len,
+                    }
                 }
                 other => panic!("SignDecompressor got {other:?}"),
             })

@@ -14,19 +14,31 @@
 //! between expensive refreshes — whose staleness under drift is exactly
 //! what GradESTC's incremental updates fix.
 
+use std::sync::Arc;
+
 use super::codec::Payload;
-use super::{CompressStats, Compressor, Decompressor};
+use super::{
+    assemble_updates, basis_fingerprint, CompressStats, Compressor, Decompressor, LayerUpdate,
+    SegmentGeom,
+};
 use crate::config::GradEstcParams;
 use crate::linalg::{matmul, matmul_at_b, randomized_svd, Mat, RsvdOptions};
 use crate::model::meta::ModelMeta;
 use crate::util::rng::Pcg64;
 
 // Reuse GradESTC's geometry helpers: same segmentation, same layer picks.
-use super::gradestc::geometry::{from_g, layer_geoms, to_g, LayerGeom};
+use super::gradestc::geometry::{layer_geoms, to_g, LayerGeom};
 
 struct LayerState {
     geom: LayerGeom,
     basis: Option<Mat>,
+}
+
+/// Server-side layer state: the shared basis lives behind an `Arc` so the
+/// decoded [`LayerUpdate::LowRank`]s borrow it at O(1) instead of copying.
+struct ServerLayerState {
+    geom: LayerGeom,
+    basis: Option<Arc<Mat>>,
 }
 
 /// Client-side SVDFed compressor.
@@ -64,6 +76,10 @@ impl SvdFedCompressor {
 }
 
 impl Compressor for SvdFedCompressor {
+    fn state_fingerprint(&self) -> u64 {
+        basis_fingerprint(self.layers.iter().map(|s| s.basis.as_ref()))
+    }
+
     fn compress(&mut self, update: &[Vec<f32>]) -> (Vec<Payload>, CompressStats) {
         assert_eq!(update.len(), self.ntensors);
         let mut stats = CompressStats::default();
@@ -108,7 +124,7 @@ impl Compressor for SvdFedCompressor {
 
 /// Server-side SVDFed decompressor.
 pub struct SvdFedDecompressor {
-    layers: Vec<LayerState>,
+    layers: Vec<ServerLayerState>,
 }
 
 impl SvdFedDecompressor {
@@ -119,42 +135,46 @@ impl SvdFedDecompressor {
         SvdFedDecompressor {
             layers: layer_geoms(meta, &params)
                 .into_iter()
-                .map(|geom| LayerState { geom, basis: None })
+                .map(|geom| ServerLayerState { geom, basis: None })
                 .collect(),
         }
     }
 }
 
 impl Decompressor for SvdFedDecompressor {
-    fn decompress(&mut self, payloads: &[Payload]) -> Vec<Vec<f32>> {
-        let mut out: Vec<Vec<f32>> = payloads
-            .iter()
-            .map(|p| match p {
-                Payload::Raw(v) => v.clone(),
-                _ => Vec::new(),
-            })
-            .collect();
+    fn state_fingerprint(&self) -> u64 {
+        basis_fingerprint(self.layers.iter().map(|s| s.basis.as_deref()))
+    }
+
+    fn decode(&mut self, payloads: Vec<Payload>) -> Vec<LayerUpdate> {
+        let mut slots: Vec<Option<Payload>> = payloads.into_iter().map(Some).collect();
+        let mut structured = Vec::with_capacity(self.layers.len());
         for state in &mut self.layers {
             let geom = state.geom;
-            let Payload::SvdCoeffs { coeffs, refit_basis, l, k, m } =
-                &payloads[geom.tensor]
+            let Some(Payload::SvdCoeffs { coeffs, refit_basis, l, k, m }) =
+                slots[geom.tensor].take()
             else {
                 panic!("SvdFedDecompressor: expected SvdCoeffs for {}", geom.tensor)
             };
             if let Some(b) = refit_basis {
-                state.basis = Some(Mat::from_vec(*l, *k, b.clone()));
+                state.basis = Some(Arc::new(Mat::from_vec(l, k, b)));
             }
             let basis = state
                 .basis
                 .as_ref()
                 .expect("coefficients received before any basis");
-            let a = Mat::from_vec(*k, *m, coeffs.clone());
-            let ghat = matmul(basis, &a);
-            // geom was built at default k; override with the payload's dims.
-            let geom = LayerGeom { l: *l, m: *m, k: *k, ..geom };
-            out[geom.tensor] = from_g(&geom, &ghat);
+            structured.push((
+                geom.tensor,
+                LayerUpdate::LowRank {
+                    coeffs: Mat::from_vec(k, m, coeffs),
+                    basis: Arc::clone(basis),
+                    // geom was built at default k; the segment dims come
+                    // from the payload, the conv mapping from the layer.
+                    geom: SegmentGeom { l, m, conv: geom.conv },
+                },
+            ));
         }
-        out
+        assemble_updates(slots, structured, "SvdFedDecompressor")
     }
 }
 

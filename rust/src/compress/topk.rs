@@ -82,19 +82,17 @@ impl TopKDecompressor {
 }
 
 impl Decompressor for TopKDecompressor {
-    fn decompress(&mut self, payloads: &[Payload]) -> Vec<Vec<f32>> {
+    fn decode(&mut self, payloads: Vec<Payload>) -> Vec<super::LayerUpdate> {
         payloads
-            .iter()
+            .into_iter()
             .zip(&self.sizes)
             .map(|(p, &n)| match p {
-                Payload::Raw(v) => v.clone(),
+                Payload::Raw(v) => super::LayerUpdate::Dense(v),
                 Payload::Sparse { indices, values, len } => {
-                    assert_eq!(*len, n);
-                    let mut out = vec![0.0f32; n];
-                    for (&i, &v) in indices.iter().zip(values) {
-                        out[i as usize] = v;
-                    }
-                    out
+                    assert_eq!(len, n);
+                    // Stays sparse: the aggregation plane scatter-adds the
+                    // kept entries without densifying.
+                    super::LayerUpdate::Sparse { indices, values, len }
                 }
                 other => panic!("TopKDecompressor got {other:?}"),
             })

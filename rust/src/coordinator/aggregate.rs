@@ -1,0 +1,312 @@
+//! The server aggregation plane: weighted FedAvg over *structured*
+//! updates, folded in the compressed domain.
+//!
+//! The pre-refactor server phase inflated every survivor's payload back
+//! into a dense model (`O(survivors × model)` memory) and then reduced.
+//! [`ServerAggregator`] instead keeps **one accumulator per layer** —
+//! `O(model)` total — and folds each survivor's [`LayerUpdate`]s into it
+//! directly:
+//!
+//! * [`LayerUpdate::LowRank`] fuses reconstruction with aggregation:
+//!   `Acc_G += α · M·A` via [`matmul_acc`], scaling the k-sized inner loop
+//!   instead of an `l×m` dense gradient, with the accumulator held in
+//!   segment (G) space and converted to the tensor's flat layout once per
+//!   round — not once per client.
+//! * [`LayerUpdate::Sparse`] scatter-adds `α·v` at the kept indices.
+//! * [`LayerUpdate::QuantDense`] folds `α·(lo + q·step)` straight from the
+//!   bit-packed codes.
+//! * [`LayerUpdate::Dense`] is a plain [`axpy`].
+//!
+//! # Determinism
+//!
+//! Each layer's accumulator is folded over clients **in participant
+//! order**, sequentially; [`ServerAggregator::fold_batch`] parallelizes
+//! over *layers* (disjoint accumulators), never over clients, so
+//! `workers = 1` and `workers = N` produce bit-identical aggregates. For
+//! dense/sparse/quantized updates the per-element operation sequence is
+//! exactly the old dense reduction's (`acc += scale · v` in client order
+//! from a zero accumulator), so those paths are bit-identical to the
+//! legacy `ParamStore::weighted_sum` pipeline; the fused low-rank path
+//! reorders float products (α folded into the matmul) and agrees to
+//! ~1e-7 relative — both equalities are locked in by
+//! `rust/tests/aggregation.rs`.
+
+use crate::compress::codec::dequant_values;
+use crate::compress::{LayerUpdate, SegmentGeom};
+use crate::linalg::{axpy, matmul_acc, Mat};
+use crate::model::meta::ModelMeta;
+use crate::model::params::ParamStore;
+use crate::util::pool::parallel_map;
+
+/// One layer's running aggregate.
+enum LayerAcc {
+    /// Nothing folded yet. Materialized lazily by the first fold so a
+    /// low-rank layer never pays for (and then discards) a dense zero
+    /// buffer, and so mixing dense and low-rank folds for one tensor is a
+    /// hard error in every build, not a silent overwrite.
+    Empty,
+    /// Flat accumulator in the tensor's natural layout (dense / sparse /
+    /// quantized folds).
+    Flat(Vec<f32>),
+    /// Segment-space accumulator for low-rank folds; converted to the flat
+    /// layout once, in [`ServerAggregator::finish`].
+    Seg { g: Mat, geom: SegmentGeom },
+}
+
+impl LayerAcc {
+    /// Flat accumulator view, materializing `Empty` at `len` zeros. Panics
+    /// if this layer already accumulates in segment space.
+    fn flat(&mut self, len: usize, what: &str) -> &mut Vec<f32> {
+        if let LayerAcc::Empty = self {
+            *self = LayerAcc::Flat(vec![0.0; len]);
+        }
+        match self {
+            LayerAcc::Flat(dst) => {
+                assert_eq!(dst.len(), len, "{what} update length mismatch");
+                dst
+            }
+            _ => panic!("{what} update folded into a segment-space accumulator"),
+        }
+    }
+}
+
+/// Streaming weighted-FedAvg accumulator over structured updates; see the
+/// module docs. Peak memory is `O(model)` plus one client's compressed
+/// updates — never `survivors × model`.
+pub struct ServerAggregator {
+    accs: Vec<LayerAcc>,
+}
+
+impl ServerAggregator {
+    /// Fresh zero aggregate for a model. Accumulator buffers materialize
+    /// lazily on first fold (flat or segment space, whichever the layer's
+    /// updates call for).
+    pub fn new(meta: &ModelMeta) -> Self {
+        ServerAggregator {
+            accs: meta.layers.iter().map(|_| LayerAcc::Empty).collect(),
+        }
+    }
+
+    /// Fold one survivor's updates with FedAvg weight `scale`, layer by
+    /// layer on the calling thread (the streaming path).
+    pub fn fold(&mut self, scale: f32, updates: Vec<LayerUpdate>) {
+        assert_eq!(updates.len(), self.accs.len(), "update tensor count mismatch");
+        for (acc, update) in self.accs.iter_mut().zip(updates) {
+            fold_one(acc, scale, update);
+        }
+    }
+
+    /// Fold a whole round's `(scale, updates)` batch — participant order —
+    /// fanned across `workers` threads **by layer**: each worker owns a
+    /// disjoint set of accumulators and folds every client into them in
+    /// batch order, so the result is bit-identical to calling
+    /// [`ServerAggregator::fold`] per client at any worker count.
+    pub fn fold_batch(&mut self, workers: usize, batch: Vec<(f32, Vec<LayerUpdate>)>) {
+        let ntensors = self.accs.len();
+        // Transpose client-major into tensor-major ownership (pure moves).
+        let mut per_tensor: Vec<Vec<(f32, LayerUpdate)>> =
+            (0..ntensors).map(|_| Vec::with_capacity(batch.len())).collect();
+        for (scale, updates) in batch {
+            assert_eq!(updates.len(), ntensors, "update tensor count mismatch");
+            for (t, update) in updates.into_iter().enumerate() {
+                per_tensor[t].push((scale, update));
+            }
+        }
+        let units: Vec<(&mut LayerAcc, Vec<(f32, LayerUpdate)>)> =
+            self.accs.iter_mut().zip(per_tensor).collect();
+        parallel_map(workers, units, |(acc, folds)| {
+            for (scale, update) in folds {
+                fold_one(acc, scale, update);
+            }
+        });
+    }
+
+    /// Finish the round: convert segment-space accumulators back to flat
+    /// tensor layout (once per layer) and wrap the result. Layers no fold
+    /// ever touched come out as zeros.
+    pub fn finish(self, meta: &ModelMeta) -> ParamStore {
+        let tensors: Vec<Vec<f32>> = self
+            .accs
+            .into_iter()
+            .zip(&meta.layers)
+            .map(|(acc, layer)| match acc {
+                LayerAcc::Empty => vec![0.0; layer.size()],
+                LayerAcc::Flat(v) => v,
+                LayerAcc::Seg { g, geom } => geom.segments_to_flat(&g),
+            })
+            .collect();
+        ParamStore::from_tensors(meta, tensors)
+    }
+}
+
+fn fold_one(acc: &mut LayerAcc, scale: f32, update: LayerUpdate) {
+    match update {
+        LayerUpdate::Dense(v) => {
+            axpy(acc.flat(v.len(), "dense"), scale, &v);
+        }
+        LayerUpdate::Sparse { indices, values, len } => {
+            // Strictly-increasing indices (the producer contract, enforced
+            // by wire::decode) make this scatter-add exactly equivalent to
+            // densify-then-add: no index is touched twice.
+            debug_assert!(indices.windows(2).all(|w| w[0] < w[1]));
+            let dst = acc.flat(len, "sparse");
+            for (&i, &v) in indices.iter().zip(&values) {
+                dst[i as usize] += scale * v;
+            }
+        }
+        LayerUpdate::QuantDense { lo, hi, bits, packed, len } => {
+            let dst = acc.flat(len, "quantized");
+            // Stream dequantized values straight into the accumulator (the
+            // shared `dequant_values` formula keeps this path and
+            // `to_dense` in exact agreement); the only transient buffer is
+            // this layer's code vector, freed before the next fold.
+            for (d, v) in dst.iter_mut().zip(dequant_values(lo, hi, bits, &packed, len)) {
+                *d += scale * v;
+            }
+        }
+        LayerUpdate::LowRank { coeffs, basis, geom } => {
+            // First low-rank fold materializes this layer's accumulator in
+            // segment space (all lanes share one compressor config, so a
+            // tensor is low-rank for everyone or no one — mixing is a hard
+            // error in every build, never a silent overwrite).
+            if let LayerAcc::Empty = acc {
+                *acc = LayerAcc::Seg { g: Mat::zeros(geom.l, geom.m), geom };
+            }
+            let LayerAcc::Seg { g, geom: acc_geom } = acc else {
+                panic!("low-rank update folded into a dense accumulator")
+            };
+            assert_eq!(*acc_geom, geom, "segment geometry changed mid-round");
+            // The fusion: Acc_G += scale · M·A, never materializing Ĝ.
+            matmul_acc(g, scale, &basis, &coeffs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelKind;
+    use crate::model::meta::layer_table;
+    use crate::util::rng::Pcg64;
+    use std::sync::Arc;
+
+    fn dense_batch(
+        meta: &ModelMeta,
+        n: usize,
+        rng: &mut Pcg64,
+    ) -> Vec<(f32, Vec<LayerUpdate>)> {
+        (0..n)
+            .map(|i| {
+                let updates = meta
+                    .layers
+                    .iter()
+                    .map(|l| LayerUpdate::Dense(rng.normal_vec(l.size())))
+                    .collect();
+                (0.1 + 0.07 * i as f32, updates)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dense_fold_matches_weighted_sum_bitwise() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let mut rng = Pcg64::seeded(17);
+        let batch = dense_batch(&meta, 5, &mut rng);
+
+        let dense: Vec<Vec<Vec<f32>>> = batch
+            .iter()
+            .map(|(_, us)| us.iter().map(LayerUpdate::to_dense).collect())
+            .collect();
+        let scales: Vec<f32> = batch.iter().map(|(s, _)| *s).collect();
+        let terms: Vec<&[Vec<f32>]> = dense.iter().map(|u| u.as_slice()).collect();
+        let reference = ParamStore::weighted_sum(&meta, &terms, &scales, 1);
+
+        for workers in [1usize, 2, 8] {
+            let mut agg = ServerAggregator::new(&meta);
+            agg.fold_batch(workers, batch.clone());
+            let got = agg.finish(&meta);
+            for t in 0..reference.len() {
+                let same = reference
+                    .tensor(t)
+                    .iter()
+                    .zip(got.tensor(t))
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "tensor {t} differs at workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_fold_equals_batched_fold() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let mut rng = Pcg64::seeded(23);
+        let batch = dense_batch(&meta, 4, &mut rng);
+
+        let mut streamed = ServerAggregator::new(&meta);
+        for (scale, updates) in batch.clone() {
+            streamed.fold(scale, updates);
+        }
+        let streamed = streamed.finish(&meta);
+
+        let mut batched = ServerAggregator::new(&meta);
+        batched.fold_batch(8, batch);
+        let batched = batched.finish(&meta);
+        for t in 0..streamed.len() {
+            let same = streamed
+                .tensor(t)
+                .iter()
+                .zip(batched.tensor(t))
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "tensor {t}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "dense accumulator")]
+    fn mixed_dense_then_lowrank_folds_panic() {
+        let mut rng = Pcg64::seeded(5);
+        let geom = SegmentGeom { l: 4, m: 4, conv: None };
+        let mut acc = LayerAcc::Empty;
+        fold_one(&mut acc, 1.0, LayerUpdate::Dense(vec![1.0; 16]));
+        fold_one(
+            &mut acc,
+            1.0,
+            LayerUpdate::LowRank {
+                coeffs: Mat::randn(2, 4, &mut rng),
+                basis: Arc::new(Mat::randn(4, 2, &mut rng)),
+                geom,
+            },
+        );
+    }
+
+    #[test]
+    fn lowrank_fold_fuses_reconstruction() {
+        // One 8x6 layer, two clients with different bases/coefficients:
+        // the fused fold must match densify-then-weighted-add closely.
+        let mut rng = Pcg64::seeded(31);
+        let geom = SegmentGeom { l: 8, m: 6, conv: None };
+        let mk = |rng: &mut Pcg64| LayerUpdate::LowRank {
+            coeffs: Mat::randn(3, 6, rng),
+            basis: Arc::new(Mat::randn(8, 3, rng)),
+            geom,
+        };
+        let (u1, u2) = (mk(&mut rng), mk(&mut rng));
+        let (s1, s2) = (0.3f32, 0.7f32);
+
+        let mut expect = vec![0.0f32; 48];
+        for (s, u) in [(s1, &u1), (s2, &u2)] {
+            for (e, v) in expect.iter_mut().zip(u.to_dense()) {
+                *e += s * v;
+            }
+        }
+
+        let mut acc = LayerAcc::Empty;
+        fold_one(&mut acc, s1, u1);
+        fold_one(&mut acc, s2, u2);
+        let LayerAcc::Seg { g, geom } = acc else { panic!("accumulator not in G space") };
+        let got = geom.segments_to_flat(&g);
+        for (a, b) in expect.iter().zip(&got) {
+            assert!((a - b).abs() <= 1e-5 * a.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+}

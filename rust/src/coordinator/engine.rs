@@ -22,12 +22,19 @@
 //! 3. **Transport** — the coordinator uploads each lane's frame in
 //!    participant order, drains the fabric, charges the uplink from the
 //!    drained buffer lengths, and applies the straggler deadline.
-//! 4. **Server phase** — [`run_server_phase`] decodes each on-time frame
-//!    and reconstructs the update with the lane's paired decompressor,
-//!    again fanned across workers (per-lane state only, so order-free).
-//! 5. **Reduction** — outcomes are consumed in participant order and the
-//!    weighted FedAvg aggregate runs as a deterministic chunked reduction
-//!    ([`ParamStore::weighted_sum`]).
+//! 4. **Server decode** — [`run_server_phase`] decodes *every* received
+//!    frame (stragglers included — paired client/server state must evolve
+//!    in lockstep) with the lane's paired decompressor into structured
+//!    [`LayerUpdate`]s, fanned across workers (per-lane state only, so
+//!    order-free). Nothing is densified here: low-rank layers stay as
+//!    `(coeffs, basis)` factors, sparse and quantized layers keep their
+//!    compact forms.
+//! 5. **Aggregation** — the on-time updates are folded in participant
+//!    order into the
+//!    [`ServerAggregator`](crate::coordinator::ServerAggregator)'s
+//!    per-layer accumulators, parallelized over *layers* (disjoint
+//!    accumulator buffers), fusing low-rank reconstruction with the
+//!    weighted FedAvg reduction in `O(model)` memory.
 //!
 //! # Determinism
 //!
@@ -47,7 +54,7 @@ use anyhow::{Context, Result};
 
 use super::trainer::{ParallelTrainer, Trainer};
 use super::Client;
-use crate::compress::CompressStats;
+use crate::compress::{CompressStats, LayerUpdate};
 use crate::model::params::ParamStore;
 use crate::net::wire;
 use crate::util::pool::parallel_map;
@@ -171,26 +178,29 @@ pub fn run_client_phase(
     }
 }
 
-/// Execute the server phase: decode each uploaded frame and reconstruct
-/// the update with the lane's paired decompressor.
+/// Execute the server decode phase: decode each uploaded frame into
+/// structured [`LayerUpdate`]s with the lane's paired decompressor,
+/// advancing its state (basis replacement, re-ortho).
 ///
 /// `frames[i]` must be lane `lanes[i]`'s upload (the coordinator aligns
 /// them by construction). Each unit touches only its own lane's
 /// decompressor state, so the phase fans across `workers` threads with
-/// bit-identical results at any count. Returns `(client_id, update)` in
-/// lane order.
+/// bit-identical results at any count. Returns `(client_id, updates)` in
+/// lane order. No densification happens here — the dense materialization
+/// is the round hook's opt-in path, and aggregation folds the structured
+/// forms directly ([`super::ServerAggregator`]).
 pub fn run_server_phase(
     workers: usize,
     lanes: Vec<(usize, &mut Client)>,
     frames: Vec<Vec<u8>>,
-) -> Result<Vec<(usize, Vec<Vec<f32>>)>> {
+) -> Result<Vec<(usize, Vec<LayerUpdate>)>> {
     assert_eq!(lanes.len(), frames.len(), "one frame per lane");
     let units: Vec<((usize, &mut Client), Vec<u8>)> =
         lanes.into_iter().zip(frames).collect();
     parallel_map(workers, units, |((cid, client), frame)| {
         let payloads = wire::decode(&frame)
             .with_context(|| format!("decoding client {cid}'s upload"))?;
-        Ok((cid, client.decompressor.decompress(&payloads)))
+        Ok((cid, client.decompressor.decode(payloads)))
     })
     .into_iter()
     .collect()

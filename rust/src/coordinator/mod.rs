@@ -18,9 +18,15 @@
 //!              local SGD (E epochs) → Δᵢ → compress → encode to bytes
 //!   stage 3  upload frames through the Transport (participant order),
 //!            uplink charged from the drained buffers, straggler deadline
-//!   stage 4  server phase: decode + reconstruct Δ̂ᵢ per lane (parallel)
-//!   stage 5  fixed-order accounting (loss, Σd, hook) + weighted FedAvg
-//!            over on-time clients via a deterministic chunked reduction
+//!   stage 4  server decode: frame → structured LayerUpdates per lane
+//!            (parallel over lanes; stragglers decoded too — lockstep —
+//!            but folded with weight 0, i.e. skipped by the aggregate)
+//!   stage 5  streaming compressed-domain aggregation: on-time updates
+//!            folded in participant order into per-layer accumulators
+//!            (parallel over layers, [`ServerAggregator`]), fusing
+//!            low-rank reconstruction with the weighted FedAvg reduction
+//!            in O(model) memory; dense per-client updates materialize
+//!            only when a round hook asks to observe them
 //!   stage 6  apply aggregate, evaluate on held-out data, record round
 //! ```
 //!
@@ -34,17 +40,19 @@
 //! [`RoundRecord`]s — including identical surviving-client sets under
 //! dropout — for the same seed.
 
+pub mod aggregate;
 pub mod engine;
 pub mod sampling;
 pub mod trainer;
 
+pub use aggregate::ServerAggregator;
 pub use engine::{ClientFrame, ExecPlan, RoundInputs};
 pub use sampling::ParticipationSampler;
 pub use trainer::{NativeOrXla, ParallelTrainer, Trainer, XlaTrainer};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::compress::{build_pair, Compressor, Decompressor};
+use crate::compress::{build_pair, Compressor, Decompressor, LayerUpdate};
 use crate::config::{DatasetKind, ExperimentConfig, ModelKind};
 use crate::data::corpus::CorpusGenerator;
 use crate::data::synth::{Dataset, SynthGenerator, SynthSpec};
@@ -93,12 +101,17 @@ pub struct Simulation {
     /// Per-round records.
     pub recorder: RunRecorder,
     /// Optional per-round callback hook (gradient probes, logging).
-    round_hook: Option<Box<dyn FnMut(usize, &Simulation2Hook)>>,
+    round_hook: Option<Box<dyn FnMut(usize, &RoundHookView)>>,
 }
 
 /// Read-only view passed to round hooks.
-pub struct Simulation2Hook<'a> {
-    /// Round's decompressed updates per participant `(client_id, tensors)`.
+///
+/// Installing a hook is the *only* thing that makes the server phase
+/// materialize dense per-client updates (the Fig. 1 similarity probe needs
+/// them); without one, updates stay in their structured compressed form
+/// end to end.
+pub struct RoundHookView<'a> {
+    /// Round's densified updates per participant `(client_id, tensors)`.
     pub updates: &'a [(usize, Vec<Vec<f32>>)],
     /// Model metadata.
     pub meta: &'a ModelMeta,
@@ -228,11 +241,28 @@ impl Simulation {
     }
 
     /// Install a per-round hook (used by the Fig. 1 similarity probe).
+    /// This opts the server phase into densifying every survivor's update
+    /// for the hook's [`RoundHookView`]; leave it uninstalled to keep the
+    /// round loop in the compressed domain.
     pub fn set_round_hook(
         &mut self,
-        hook: Box<dyn FnMut(usize, &Simulation2Hook)>,
+        hook: Box<dyn FnMut(usize, &RoundHookView)>,
     ) {
         self.round_hook = Some(hook);
+    }
+
+    /// `(client compressor, server decompressor)` state fingerprints per
+    /// client lane, id order. The two halves must be equal whenever the
+    /// paired states are in lockstep — the invariant the straggler-decode
+    /// tests assert from outside the crate. Stateless compressors report
+    /// `(0, 0)`.
+    pub fn lane_fingerprints(&self) -> Vec<(u64, u64)> {
+        self.clients
+            .iter()
+            .map(|c| {
+                (c.compressor.state_fingerprint(), c.decompressor.state_fingerprint())
+            })
+            .collect()
     }
 
     /// Total uplink bytes charged so far.
@@ -321,33 +351,60 @@ impl Simulation {
             })
             .collect();
 
-        // Stage 4: server phase — decode each upload and reconstruct the
-        // update with the lane's paired decompressor, fanned across workers.
+        // Stage 4: server decode — every received frame (stragglers too:
+        // paired compressor/decompressor state must advance in lockstep)
+        // becomes structured LayerUpdates, fanned across workers per lane.
         let ids: Vec<usize> = uploads.iter().map(|(cid, _)| *cid).collect();
         let frames: Vec<Vec<u8>> = uploads.into_iter().map(|(_, f)| f).collect();
         let lanes = engine::take_lanes(&mut self.clients, &ids);
-        let updates = engine::run_server_phase(workers, lanes, frames)?;
+        let decoded = engine::run_server_phase(workers, lanes, frames)?;
 
+        // Opt-in dense path: only an installed round hook (the Fig. 1
+        // probe) forces materializing per-client dense updates; the
+        // aggregate below folds the structured forms directly either way.
+        // Deliberate trade-off: with a hook installed, low-rank layers are
+        // reconstructed twice (once here, once fused into the fold) so the
+        // aggregate stays bit-identical whether or not a hook is observing
+        // the round — today's only hook user runs uncompressed (FedAvg),
+        // where the view is a plain buffer clone.
         if let Some(hook) = self.round_hook.as_mut() {
-            hook(round, &Simulation2Hook { updates: &updates, meta: &self.meta });
+            let dense: Vec<(usize, Vec<Vec<f32>>)> = decoded
+                .iter()
+                .map(|(cid, updates)| {
+                    (*cid, updates.iter().map(LayerUpdate::to_dense).collect())
+                })
+                .collect();
+            hook(round, &RoundHookView { updates: &dense, meta: &self.meta });
         }
 
-        // Stage 5: weighted FedAvg over the on-time clients as a
-        // deterministic chunked reduction (shard-size weights).
-        let mut terms: Vec<&[Vec<f32>]> = Vec::with_capacity(updates.len());
-        let mut used_weights: Vec<f64> = Vec::with_capacity(updates.len());
-        for ((cid, update), &ot) in updates.iter().zip(&on_time) {
-            if ot {
-                terms.push(update.as_slice());
-                used_weights.push(weight_of[*cid]);
-            }
-        }
-        let wtotal: f64 = used_weights.iter().sum();
-        let scales: Vec<f32> = used_weights.iter().map(|w| (w / wtotal) as f32).collect();
-        let agg = ParamStore::weighted_sum(&self.meta, &terms, &scales, workers);
+        // Stage 5: streaming compressed-domain aggregation — fold the
+        // on-time clients' structured updates (participant order,
+        // shard-size weights) into per-layer accumulators, parallel over
+        // layers. Stragglers were decoded above but carry weight 0: they
+        // simply don't enter the fold.
+        let wtotal: f64 = decoded
+            .iter()
+            .zip(&on_time)
+            .filter(|(_, ot)| **ot)
+            .map(|((cid, _), _)| weight_of[*cid])
+            .sum();
 
-        // Stage 6: apply, evaluate, record.
-        self.global.axpy(1.0, &agg);
+        // Stage 6: apply, evaluate, record. A round with no usable weight
+        // (every survivor missed the deadline, or all on-time shards are
+        // empty) skips the apply entirely instead of normalizing by 0 —
+        // the old dense path would have produced NaN scales there and
+        // poisoned the global model.
+        if wtotal > 0.0 {
+            let folds: Vec<(f32, Vec<LayerUpdate>)> = decoded
+                .into_iter()
+                .zip(&on_time)
+                .filter(|(_, ot)| **ot)
+                .map(|((cid, updates), _)| ((weight_of[cid] / wtotal) as f32, updates))
+                .collect();
+            let mut agg = ServerAggregator::new(&self.meta);
+            agg.fold_batch(workers, folds);
+            self.global.axpy(1.0, &agg.finish(&self.meta));
+        }
 
         let (test_loss, test_acc) = if round % self.cfg.eval_every == 0
             || round + 1 == self.cfg.rounds

@@ -12,7 +12,7 @@ use anyhow::{Context, Result};
 use gradestc::config::{
     CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
 };
-use gradestc::coordinator::{Simulation, Simulation2Hook};
+use gradestc::coordinator::{RoundHookView, Simulation};
 use gradestc::metrics::recorder::fmt_mb;
 use gradestc::metrics::{RunReport, SimilarityProbe};
 use gradestc::model::meta::layer_table;
@@ -179,7 +179,7 @@ fn exp_fig1(ctx: &ExpCtx) -> Result<()> {
     let probed2 = probed.clone();
 
     let mut sim = Simulation::build(cfg.clone())?;
-    sim.set_round_hook(Box::new(move |_round, view: &Simulation2Hook| {
+    sim.set_round_hook(Box::new(move |_round, view: &RoundHookView| {
         // Client 0's raw update per layer (FedAvg → decompressed == raw).
         if let Some((_, tensors)) = view.updates.iter().find(|(id, _)| *id == 0) {
             let grads: Vec<Vec<f32>> =

@@ -29,8 +29,17 @@
 //! ```
 //!
 //! The round engine ([`coordinator::engine`]) fans each round's per-client
-//! phase — local SGD, compression, server-side reconstruction — across
-//! worker threads and aggregates with a deterministic chunked reduction.
+//! phase — local SGD, compression, server-side decoding — across worker
+//! threads, then aggregates **in the compressed domain**: the server never
+//! inflates a survivor's payload into a dense model. Decoding returns
+//! typed [`compress::LayerUpdate`]s (low-rank factors, sparse pairs,
+//! packed quantization codes) and the
+//! [`coordinator::ServerAggregator`] folds them straight into per-layer
+//! accumulators — fusing low-rank reconstruction `Ĝ = M·A` with the
+//! weighted FedAvg reduction via [`linalg::matmul_acc`] — so the server
+//! phase peaks at `O(model)` memory instead of `O(survivors × model)`.
+//! Dense per-client updates materialize only when a round hook (the
+//! Fig. 1 probe) is installed.
 //! Parallelism is controlled by `ExperimentConfig::workers` (`--workers` on
 //! the CLI): `0` resolves to the `GRADESTC_WORKERS` environment variable or
 //! the available CPU count, `1` runs fully sequential, and any value
@@ -56,11 +65,17 @@
 //!
 //! ## Module map
 //!
-//! * [`compress`] — GradESTC + every baseline compressor ([`compress::Payload`]).
+//! * [`compress`] — GradESTC + every baseline compressor
+//!   ([`compress::Payload`] on the wire, [`compress::LayerUpdate`] after
+//!   the server decode).
 //! * [`config`] — typed experiment configs, JSON round-tripping, presets.
-//! * [`coordinator`] — the staged round engine and [`coordinator::Simulation`].
+//! * [`coordinator`] — the staged round engine,
+//!   [`coordinator::ServerAggregator`] (compressed-domain FedAvg), and
+//!   [`coordinator::Simulation`].
 //! * [`data`] — synthetic datasets and non-IID partitioning.
-//! * [`linalg`] — dense matrix kernels (rSVD, MGS) for the compressors.
+//! * [`linalg`] — dense matrix kernels (rSVD, MGS, fused
+//!   [`linalg::matmul_acc`]) for the compressors and the aggregation
+//!   plane.
 //! * [`metrics`] — round records, CSV sinks, [`metrics::CommLedger`],
 //!   heterogeneous [`metrics::NetworkModel`].
 //! * [`model`] — layer tables and flat parameter stores.

@@ -1,14 +1,18 @@
 //! Cache-blocked, thread-parallel matrix multiplication.
 //!
-//! Three entry points cover every product the compressor needs without
-//! materializing transposes:
+//! Four entry points cover every product the compressor and the server
+//! aggregation plane need without materializing transposes:
 //!
 //! * [`matmul`]       — `C = A·B`
+//! * [`matmul_acc`]   — `C += α·A·B` (fused low-rank reconstruct+fold)
 //! * [`matmul_at_b`]  — `C = Aᵀ·B`   (projection `A = MᵀG`)
 //! * [`matmul_a_bt`]  — `C = A·Bᵀ`   (Gram matrices for the small eigsolve)
 //!
-//! The inner kernel is an i-k-j loop over row panels with an unrolled
-//! 8-wide FMA body, parallelized over row blocks with scoped threads.
+//! plus the scaled-accumulate primitive [`axpy`] they are built from. The
+//! inner kernel is an i-k-j loop over row panels with an unrolled 8-wide
+//! FMA body, parallelized over row blocks with scoped threads
+//! (`matmul_acc` excepted — its callers parallelize over disjoint
+//! accumulators already).
 
 use super::Mat;
 use crate::util::pool::default_workers;
@@ -18,8 +22,10 @@ const PAR_MIN_ROWS: usize = 16;
 /// Only parallelize when the total FLOP count is worth a thread wake-up.
 const PAR_MIN_FLOPS: usize = 1 << 22;
 
+/// `dst += a * x`, the scaled-accumulate primitive behind every kernel
+/// here and the server aggregation plane's dense folds.
 #[inline]
-fn axpy(dst: &mut [f32], a: f32, x: &[f32]) {
+pub fn axpy(dst: &mut [f32], a: f32, x: &[f32]) {
     // dst += a * x ; 8-wide unroll, tail handled scalar. The compiler
     // auto-vectorizes this loop (verified via benches/linalg.rs).
     let n = dst.len();
@@ -99,6 +105,50 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     let flops = 2 * m * n * a.cols();
     let out = parallel_rows(m, flops, |r0, r1, panel| mm_panel(a, b, r0, r1, panel), n);
     Mat::from_vec(m, n, out)
+}
+
+/// `C += α · A·B` in place (shapes `(m,k)·(k,n) += (m,n)`), the fused
+/// reconstruct-and-accumulate kernel of the server aggregation plane.
+///
+/// For a low-rank update `Ĝ = M·A` folded with FedAvg weight α, this
+/// scales the `k`-sized inner loop (one multiply per `(i,k)` pair) instead
+/// of the `l×m` dense product — the whole point of aggregating in the
+/// compressed domain (paper Eq. 14 shapes).
+///
+/// Deliberately single-threaded: the caller
+/// ([`ServerAggregator`](crate::coordinator::ServerAggregator)) already
+/// fans out over disjoint per-layer accumulators, and each output element
+/// accumulates in a fixed `k`-order, so results are bit-identical at any
+/// outer parallelism.
+pub fn matmul_acc(c: &mut Mat, alpha: f32, a: &Mat, b: &Mat) {
+    assert_eq!(
+        a.cols(),
+        b.rows(),
+        "matmul_acc: {}x{} · {}x{}",
+        a.rows(),
+        a.cols(),
+        b.rows(),
+        b.cols()
+    );
+    assert_eq!(
+        (c.rows(), c.cols()),
+        (a.rows(), b.cols()),
+        "matmul_acc: accumulator is {}x{}, product is {}x{}",
+        c.rows(),
+        c.cols(),
+        a.rows(),
+        b.cols()
+    );
+    for i in 0..a.rows() {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (k, &aik) in arow.iter().enumerate() {
+            // No zero-skip here: an `α·aik == 0` test would silently drop
+            // non-finite B rows exactly when inputs misbehave (and basis
+            // rows are dense Gaussians, so the branch saves nothing).
+            axpy(crow, alpha * aik, b.row(k));
+        }
+    }
 }
 
 /// `C = Aᵀ·B` (shapes `(k,m)ᵀ·(k,n) -> (m,n)`), without forming `Aᵀ`.
@@ -254,6 +304,34 @@ mod tests {
             let expect = naive(&a, &b.transpose());
             assert!(c.max_abs_diff(&expect) < 2e-2, "({m},{k},{n})");
         }
+    }
+
+    #[test]
+    fn matmul_acc_accumulates_scaled_products() {
+        let mut rng = Pcg64::seeded(6);
+        let a1 = Mat::randn(24, 4, &mut rng);
+        let b1 = Mat::randn(4, 9, &mut rng);
+        let a2 = Mat::randn(24, 4, &mut rng);
+        let b2 = Mat::randn(4, 9, &mut rng);
+        let mut c = Mat::zeros(24, 9);
+        matmul_acc(&mut c, 0.25, &a1, &b1);
+        matmul_acc(&mut c, -1.5, &a2, &b2);
+        let mut expect = Mat::zeros(24, 9);
+        for (i, src) in [(0.25f32, naive(&a1, &b1)), (-1.5, naive(&a2, &b2))] {
+            for (e, s) in expect.as_mut_slice().iter_mut().zip(src.as_slice()) {
+                *e += i * s;
+            }
+        }
+        assert!(c.max_abs_diff(&expect) < 1e-4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_acc_shape_checked() {
+        let mut c = Mat::zeros(3, 3);
+        let a = Mat::zeros(3, 2);
+        let b = Mat::zeros(2, 4); // product is 3x4, accumulator 3x3
+        matmul_acc(&mut c, 1.0, &a, &b);
     }
 
     #[test]

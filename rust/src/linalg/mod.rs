@@ -17,7 +17,7 @@ mod rsvd;
 mod svd;
 
 pub use mat::Mat;
-pub use matmul::{matmul, matmul_at_b, matmul_a_bt};
+pub use matmul::{axpy, matmul, matmul_acc, matmul_at_b, matmul_a_bt};
 pub use qr::{householder_qr, mgs_orthonormalize, ortho_defect};
 pub use rsvd::{randomized_svd, RsvdOptions};
 pub use svd::{jacobi_eigh_symmetric, thin_svd, Svd};

@@ -139,8 +139,16 @@ impl ParamStore {
     /// Each element accumulates over `terms` in slice order, and the work is
     /// split into fixed [`REDUCE_CHUNK`]-element chunks whose geometry never
     /// depends on `workers` — so the result is bit-identical to a sequential
-    /// fold for every worker count. This is the round engine's FedAvg
-    /// aggregation stage.
+    /// fold for every worker count.
+    ///
+    /// Since the compressed-domain aggregation plane landed, the round
+    /// engine folds structured updates through
+    /// [`ServerAggregator`](crate::coordinator::ServerAggregator) instead
+    /// of densifying into `terms`; this remains the *dense-path reference*
+    /// the equivalence tests (`rust/tests/aggregation.rs`) and the
+    /// `server-phase-dense` bench compare against, and the dense fold's
+    /// per-element operation order is what the aggregator reproduces
+    /// bit-for-bit on non-low-rank payloads.
     pub fn weighted_sum(
         meta: &ModelMeta,
         terms: &[&[Vec<f32>]],

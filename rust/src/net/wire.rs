@@ -223,8 +223,16 @@ fn decode_one(r: &mut Reader<'_>) -> Result<Payload> {
             ensure!(pairs <= len, "sparse frame claims {pairs} pairs for a length-{len} tensor");
             let indices = b.u32s(pairs)?;
             let values = b.f32s(pairs)?;
-            for &i in &indices {
+            // Strictly increasing ⇒ in-bounds-checked, sorted, and free of
+            // duplicates — the producer contract (top-k emits sorted unique
+            // indices) that keeps the scatter-add fold and the dense
+            // reconstruction equivalent. Reject hostile frames that break it.
+            for (pos, &i) in indices.iter().enumerate() {
                 ensure!((i as usize) < len, "sparse index {i} out of bounds (len {len})");
+                ensure!(
+                    pos == 0 || indices[pos - 1] < i,
+                    "sparse indices not strictly increasing at pair {pos}"
+                );
             }
             Payload::Sparse { indices, values, len }
         }
@@ -461,6 +469,16 @@ mod tests {
         put_u32(&mut bad, 100);
         bad.push(0);
         assert!(decode(&bad).is_err());
+        // Duplicate / unsorted sparse indices violate the producer
+        // contract the scatter-add fold relies on: reject the frame.
+        for indices in [vec![3u32, 3, 7], vec![7u32, 3, 9]] {
+            let sparse = encode(&[Payload::Sparse {
+                indices,
+                values: vec![1.0, 2.0, 3.0],
+                len: 10,
+            }]);
+            assert!(decode(&sparse).is_err(), "non-increasing sparse indices accepted");
+        }
         // Hostile dimension headers whose products would overflow the size
         // arithmetic must fail cleanly, not panic.
         for tag in [TAG_BASIS, TAG_SVD] {

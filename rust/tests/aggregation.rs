@@ -1,0 +1,225 @@
+//! Acceptance tests for the streaming compressed-domain aggregation plane:
+//! the fused server fold must agree with the legacy dense pipeline
+//! (`decompress` → `ParamStore::weighted_sum`) — exactly for raw / sparse /
+//! quantized payloads, to ≤1e-5 relative error for fused low-rank layers —
+//! and the decoded updates must stay compressed (the O(model) memory
+//! claim, asserted at the API level).
+
+use gradestc::compress::{
+    build_pair, Compressor, Decompressor, GradEstcClient, LayerUpdate, Payload,
+};
+use gradestc::config::{CompressorKind, GradEstcParams, ModelKind};
+use gradestc::coordinator::ServerAggregator;
+use gradestc::model::meta::{layer_table, ModelMeta};
+use gradestc::model::params::ParamStore;
+use gradestc::util::rng::Pcg64;
+
+const N_CLIENTS: usize = 4;
+
+/// One round of per-client payload sets for a compressor kind, after
+/// `warm_rounds` warm-up rounds (GradESTC/SVDFed need an init round to
+/// reach their steady-state payload shapes).
+fn client_payloads(
+    meta: &ModelMeta,
+    kind: &CompressorKind,
+    warm_rounds: usize,
+) -> (Vec<Vec<Payload>>, Vec<Box<dyn Decompressor>>, Vec<Box<dyn Decompressor>>) {
+    let mut payloads = Vec::new();
+    let mut decoders_a = Vec::new();
+    let mut decoders_b = Vec::new();
+    for cid in 0..N_CLIENTS {
+        let mut rng = Pcg64::seeded(0x5EED + cid as u64);
+        let (mut c, da) = build_pair(kind, meta, 100 + cid as u64);
+        // A second, identically-seeded decompressor: one per aggregation
+        // path, so both observe the same payload stream and state.
+        let (_, db) = build_pair(kind, meta, 100 + cid as u64);
+        let mut last = Vec::new();
+        for _ in 0..=warm_rounds {
+            let update: Vec<Vec<f32>> =
+                meta.layers.iter().map(|l| rng.normal_vec(l.size())).collect();
+            let (p, _) = c.compress(&update);
+            last = p;
+        }
+        payloads.push(last);
+        decoders_a.push(da);
+        decoders_b.push(db);
+    }
+    (payloads, decoders_a, decoders_b)
+}
+
+fn scales() -> Vec<f32> {
+    (0..N_CLIENTS).map(|i| 0.1 + 0.2 * i as f32).collect()
+}
+
+/// Dense reference: legacy `decompress` + `weighted_sum` pipeline. Warm
+/// decompressor state through the same payload history as the fused path.
+fn dense_aggregate(
+    meta: &ModelMeta,
+    payloads: &[Vec<Payload>],
+    decoders: &mut [Box<dyn Decompressor>],
+) -> ParamStore {
+    let dense: Vec<Vec<Vec<f32>>> = payloads
+        .iter()
+        .zip(decoders.iter_mut())
+        .map(|(p, d)| d.decompress(p))
+        .collect();
+    let terms: Vec<&[Vec<f32>]> = dense.iter().map(|u| u.as_slice()).collect();
+    ParamStore::weighted_sum(meta, &terms, &scales(), 1)
+}
+
+/// Fused path: `decode` + `ServerAggregator::fold_batch`.
+fn fused_aggregate(
+    meta: &ModelMeta,
+    payloads: &[Vec<Payload>],
+    decoders: &mut [Box<dyn Decompressor>],
+    workers: usize,
+) -> ParamStore {
+    let batch: Vec<(f32, Vec<LayerUpdate>)> = payloads
+        .iter()
+        .zip(decoders.iter_mut())
+        .zip(scales())
+        .map(|((p, d), s)| (s, d.decode(p.clone())))
+        .collect();
+    let mut agg = ServerAggregator::new(meta);
+    agg.fold_batch(workers, batch);
+    agg.finish(meta)
+}
+
+#[test]
+fn fused_aggregate_exact_for_raw_sparse_and_quantized() {
+    let meta = layer_table(ModelKind::LeNet5);
+    let kinds = [
+        CompressorKind::None,
+        CompressorKind::TopK { frac: 0.1 },
+        CompressorKind::FedPaq { bits: 8 },
+        CompressorKind::FedQClip { bits: 8, clip: 2.5 },
+        CompressorKind::SignSgd,
+    ];
+    for kind in kinds {
+        let (payloads, mut da, mut db) = client_payloads(&meta, &kind, 0);
+        let reference = dense_aggregate(&meta, &payloads, &mut da);
+        for workers in [1usize, 8] {
+            let fused = fused_aggregate(&meta, &payloads, &mut db, workers);
+            for t in 0..reference.len() {
+                for (i, (a, b)) in
+                    reference.tensor(t).iter().zip(fused.tensor(t)).enumerate()
+                {
+                    assert!(
+                        a == b,
+                        "{}: tensor {t}[{i}] {a} != {b} (workers {workers})",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_aggregate_close_for_lowrank() {
+    let meta = layer_table(ModelKind::LeNet5);
+    let kinds = [
+        CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+        CompressorKind::SvdFed { k: 8, gamma: 0.9 },
+    ];
+    for kind in kinds {
+        // Steady-state round (after one warm-up) so the fold exercises the
+        // incremental-replacement payload shape, not just init.
+        let (payloads, mut da, mut db) = client_payloads(&meta, &kind, 1);
+        // Warm both decoder sets through the init-round payloads so their
+        // basis state matches the compressors'.
+        let (warm, _, _) = client_payloads(&meta, &kind, 0);
+        for ((p, a), b) in warm.iter().zip(da.iter_mut()).zip(db.iter_mut()) {
+            let _ = a.decompress(p);
+            let _ = b.decode(p.clone());
+        }
+        let reference = dense_aggregate(&meta, &payloads, &mut da);
+        let fused = fused_aggregate(&meta, &payloads, &mut db, 8);
+        for t in 0..reference.len() {
+            let num: f64 = reference
+                .tensor(t)
+                .iter()
+                .zip(fused.tensor(t))
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            let den: f64 =
+                reference.tensor(t).iter().map(|&x| (x as f64).powi(2)).sum();
+            let rel = (num / den.max(1e-30)).sqrt();
+            assert!(rel <= 1e-5, "{}: tensor {t} rel err {rel}", kind.name());
+        }
+    }
+}
+
+#[test]
+fn decoded_updates_stay_compressed_domain() {
+    // The O(model)-memory claim at the API level: in steady state a
+    // GradESTC client's decoded update owns only coefficients (k·m per
+    // compressed layer; the basis is a shared server-state Arc) plus the
+    // small raw tensors — far below one dense model, and the compressed
+    // tensors must come back as LowRank, never as densified buffers.
+    let meta = layer_table(ModelKind::LeNet5);
+    let params = GradEstcParams { k: 8, ..Default::default() };
+    let kind = CompressorKind::GradEstc(params.clone());
+    // The expected compressed set comes from the compressor config itself,
+    // not from what happened to decode as LowRank — so a layer silently
+    // regressing to a dense decode fails the assertion below.
+    let compressed = GradEstcClient::new(&meta, params, 0).compressed_tensors();
+    assert!(!compressed.is_empty(), "config selects no compressed layers");
+
+    let (warm, mut decoders, _) = client_payloads(&meta, &kind, 0);
+    for (p, d) in warm.iter().zip(decoders.iter_mut()) {
+        let _ = d.decode(p.clone());
+    }
+    let (payloads, _, _) = client_payloads(&meta, &kind, 1);
+
+    let model_floats = meta.total_params();
+    let mut all_clients_floats = 0usize;
+    for (p, d) in payloads.iter().zip(decoders.iter_mut()) {
+        let updates = d.decode(p.clone());
+        // Every tensor the config compresses must stay structured.
+        for (t, u) in updates.iter().enumerate() {
+            if compressed.contains(&t) {
+                assert!(
+                    matches!(u, LayerUpdate::LowRank { .. }),
+                    "tensor {t} decoded dense despite being in the compressed set"
+                );
+                assert_eq!(u.dense_len(), meta.layers[t].size());
+            }
+        }
+        let owned: usize = updates.iter().map(LayerUpdate::stored_floats).sum();
+        assert!(
+            owned < model_floats / 2,
+            "one decoded client owns {owned} floats vs model {model_floats}"
+        );
+        all_clients_floats += owned;
+    }
+    // Even all survivors together stay below one dense model: the fused
+    // server phase peaks at O(model + k·m), not O(survivors × model).
+    assert!(
+        all_clients_floats < model_floats,
+        "{N_CLIENTS} decoded clients own {all_clients_floats} floats vs model {model_floats}"
+    );
+}
+
+#[test]
+fn signs_decode_matches_legacy_exactly() {
+    // SignSGD now decodes through the QuantDense lane (1 bit over
+    // [-scale, scale]); the reconstruction must still be exactly ±scale.
+    let meta = layer_table(ModelKind::LeNet5);
+    let mut rng = Pcg64::seeded(77);
+    let update: Vec<Vec<f32>> =
+        meta.layers.iter().map(|l| rng.normal_vec(l.size())).collect();
+    let (mut c, mut d) = build_pair(&CompressorKind::SignSgd, &meta, 3);
+    let (payloads, _) = c.compress(&update);
+    let rec = d.decompress(&payloads);
+    for (t, (orig, r)) in update.iter().zip(&rec).enumerate() {
+        if let Payload::Signs { scale, .. } = &payloads[t] {
+            for (o, v) in orig.iter().zip(r) {
+                let expect = if *o >= 0.0 { *scale } else { -*scale };
+                assert!(*v == expect, "tensor {t}: {v} != ±{scale}");
+            }
+        } else {
+            assert_eq!(orig, r);
+        }
+    }
+}

@@ -4,7 +4,7 @@
 use gradestc::config::{
     CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, NetConfig,
 };
-use gradestc::coordinator::{Simulation, Simulation2Hook};
+use gradestc::coordinator::{RoundHookView, Simulation};
 use gradestc::metrics::RoundRecord;
 
 fn base_cfg(name: &str, comp: CompressorKind) -> ExperimentConfig {
@@ -251,6 +251,82 @@ fn parallel_engine_bit_identical_topk() {
     }
 }
 
+/// Same determinism bar through the aggregation plane's quantized fold
+/// lane (FedPAQ codes are folded straight from the bit-packing).
+#[test]
+fn parallel_engine_bit_identical_fedpaq() {
+    let mut cfg = base_cfg("it-par-fedpaq", CompressorKind::FedPaq { bits: 8 });
+    cfg.rounds = 3;
+    let (seq, seq_rep) = run_with_workers(cfg.clone(), 1);
+    let (par, par_rep) = run_with_workers(cfg, 8);
+    assert_rounds_bitwise_equal(&seq, &par, "fedpaq w1 vs w8");
+    assert_eq!(seq_rep.total_uplink, par_rep.total_uplink);
+    assert_eq!(
+        seq_rep.best_accuracy.to_bits(),
+        par_rep.best_accuracy.to_bits()
+    );
+}
+
+/// Satellite regression: a round where *every* survivor misses the
+/// deadline has zero total aggregate weight. The apply must be skipped —
+/// never normalized by `wtotal == 0` into NaN scales — so the global model
+/// stays finite and unchanged while the round is still recorded.
+#[test]
+fn zero_weight_round_skips_apply_without_nan() {
+    let mut cfg = base_cfg(
+        "it-zero-weight",
+        CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+    );
+    cfg.rounds = 3;
+    cfg.net.deadline_s = 1e-9; // everyone is a straggler
+    let mut sim = Simulation::build(cfg).unwrap();
+    let before = sim.global.clone();
+    for round in 0..3 {
+        let rec = sim.step(round).unwrap();
+        assert!(rec.train_loss.is_finite(), "round {round}");
+    }
+    assert_eq!(sim.global, before, "zero-weight rounds must not move the model");
+    for i in 0..sim.global.len() {
+        assert!(
+            sim.global.tensor(i).iter().all(|x| x.is_finite()),
+            "tensor {i} poisoned by a zero-weight round"
+        );
+    }
+    assert_eq!(sim.recorder.rounds().len(), 3, "skipped applies must still record");
+}
+
+/// Straggler lanes still advance server-side basis state: with an
+/// impossibly tight deadline every upload is excluded from the aggregate,
+/// yet each lane's client-compressor and server-decompressor fingerprints
+/// (GradESTC basis bits) must stay equal round after round — the decode
+/// runs unconditionally, only the fold weight is withheld.
+#[test]
+fn straggler_decode_keeps_lane_state_lockstep() {
+    let kinds = [
+        CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+        CompressorKind::SvdFed { k: 8, gamma: 0.6 },
+    ];
+    for kind in kinds {
+        let name = kind.name();
+        let mut cfg = base_cfg(&format!("it-straggler-lockstep-{name}"), kind);
+        cfg.rounds = 4;
+        cfg.net.deadline_s = 1e-9;
+        let mut sim = Simulation::build(cfg).unwrap();
+        for round in 0..4 {
+            sim.step(round).unwrap();
+            for (cid, (client_fp, server_fp)) in
+                sim.lane_fingerprints().iter().enumerate()
+            {
+                assert_eq!(
+                    client_fp, server_fp,
+                    "{name} round {round} client {cid}: lane state diverged"
+                );
+                assert_ne!(*client_fp, 0, "{name}: fingerprints must cover bases");
+            }
+        }
+    }
+}
+
 /// `workers: 0` resolves to an automatic count and still runs fine.
 #[test]
 fn auto_workers_runs() {
@@ -274,7 +350,7 @@ fn round_hook_survives_panic() {
     let mut cfg = base_cfg("it-hook-panic", CompressorKind::None);
     cfg.rounds = 3;
     let mut sim = Simulation::build(cfg).unwrap();
-    sim.set_round_hook(Box::new(move |round, _view: &Simulation2Hook| {
+    sim.set_round_hook(Box::new(move |round, _view: &RoundHookView| {
         calls2.fetch_add(1, Ordering::SeqCst);
         if round == 0 {
             panic!("hook bails on round 0");
