@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
         artifacts_dir: "artifacts".into(),
         workers: 1, // XLA lanes run on the coordinator thread anyway
         net: gradestc::config::NetConfig::default(),
+        sched: gradestc::config::SchedConfig::default(),
     };
     println!(
         "e2e: TinyTransformer ({} params) on synthetic byte corpus, \

@@ -2,7 +2,7 @@
 //! at the real ResNetLite update geometry. These are the per-client,
 //! per-round costs the paper's §III-C complexity analysis describes.
 
-use gradestc::compress::build_pair;
+use gradestc::compress::{build_pair, Compressor as _};
 use gradestc::config::{CompressorKind, GradEstcParams, ModelKind};
 use gradestc::model::meta::layer_table;
 use gradestc::util::bench::Bencher;

@@ -11,7 +11,7 @@
 use gradestc::compress::{build_pair, Compressor as _, Decompressor as _, LayerUpdate, Payload};
 use gradestc::config::{
     CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
-    NetConfig,
+    NetConfig, SchedConfig,
 };
 use gradestc::coordinator::{ServerAggregator, Simulation};
 use gradestc::model::meta::layer_table;
@@ -43,6 +43,7 @@ fn cfg(model: ModelKind, dataset: DatasetKind, comp: CompressorKind, xla: bool) 
         artifacts_dir: "artifacts".into(),
         workers: 1,
         net: NetConfig::default(),
+        sched: SchedConfig::default(),
     }
 }
 

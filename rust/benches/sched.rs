@@ -1,0 +1,86 @@
+//! Scheduler-plane throughput: one short end-to-end run (build + rounds,
+//! evaluation after the first record and the last) per control flow —
+//! sync vs async-buffered — at worker counts 1 and 8, on an 8-client
+//! heterogeneous-link GradESTC workload.
+//!
+//! Besides the usual `BENCHLINE` output this bench writes
+//! `BENCH_sched.json` (in the package root — `rust/BENCH_sched.json` when
+//! driven by CI) so the perf trajectory of the scheduler plane is
+//! machine-tracked from its first PR. Run with
+//! `cargo bench --bench sched` (`GRADESTC_BENCH_FAST=1` for the quick CI
+//! budget).
+
+use gradestc::config::{
+    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
+    NetConfig, SchedConfig, SchedKind,
+};
+use gradestc::coordinator::Simulation;
+use gradestc::util::bench::Bencher;
+use std::time::Duration;
+
+fn cfg(kind: SchedKind, workers: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "bench-sched".into(),
+        dataset: DatasetKind::SynthMnist,
+        model: ModelKind::LeNet5,
+        distribution: DataDistribution::Iid,
+        num_clients: 8,
+        participation: 1.0,
+        rounds: 3,
+        local_epochs: 1,
+        batch_size: 32,
+        lr: 0.03,
+        samples_per_client: 64,
+        test_samples: 64,
+        eval_every: usize::MAX,
+        threshold_frac: 0.95,
+        compressor: CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+        seed: 7,
+        use_xla: false,
+        artifacts_dir: "artifacts".into(),
+        workers,
+        net: NetConfig { het_spread: 1.0, ..NetConfig::default() },
+        sched: SchedConfig { kind, ..SchedConfig::default() },
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new("sched").budget(
+        Duration::from_millis(200),
+        Duration::from_millis(2000),
+        5,
+    );
+    let cases: [(&str, SchedKind); 2] = [
+        ("sync", SchedKind::Sync),
+        ("async-k4", SchedKind::Async { k: 4, staleness_p: 0.5 }),
+    ];
+    for (sname, kind) in &cases {
+        for workers in [1usize, 8] {
+            b.bench(&format!("{sname}-8c-r3-w{workers}"), || {
+                let mut sim = Simulation::build(cfg(*kind, workers)).unwrap();
+                let report = sim.run_scheduled().unwrap();
+                std::hint::black_box(report.total_uplink);
+            });
+        }
+    }
+
+    // Machine-readable trajectory file (no serde in the hermetic build:
+    // hand-rolled JSON over the harness stats).
+    let mut json = String::from("{\n  \"suite\": \"sched\",\n  \"benches\": [\n");
+    let results = b.results();
+    for (i, s) in results.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \
+             \"stddev_ns\": {:.1}, \"min_ns\": {:.1}}}{}\n",
+            s.name,
+            s.median_ns,
+            s.mean_ns,
+            s.stddev_ns,
+            s.min_ns,
+            if i + 1 == results.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_sched.json", &json).expect("writing BENCH_sched.json");
+    println!("wrote BENCH_sched.json ({} benches)", results.len());
+}

@@ -7,6 +7,7 @@
 
 use super::json::Json;
 use crate::net::NetConfig;
+use crate::sched::{SchedConfig, SchedKind};
 
 /// Which synthetic dataset family to train on (DESIGN.md §2.1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -196,6 +197,11 @@ pub struct ExperimentConfig {
     /// `het_spread > 0`), client-dropout rate, and straggler deadline. The
     /// default is byte-identical to the pre-transport accounting.
     pub net: NetConfig,
+    /// Round scheduler ([`crate::sched`]): sync (lockstep, the default —
+    /// bit-identical to the pre-scheduler engine), semi-sync (deadline +
+    /// straggler rollover), or async buffered (`k` arrivals per apply,
+    /// staleness-discounted), plus the per-dispatch compute-time draw.
+    pub sched: SchedConfig,
 }
 
 impl ExperimentConfig {
@@ -222,6 +228,7 @@ impl ExperimentConfig {
             artifacts_dir: "artifacts".into(),
             workers: 1,
             net: NetConfig::default(),
+            sched: SchedConfig::default(),
         }
     }
 
@@ -264,6 +271,7 @@ impl ExperimentConfig {
             artifacts_dir: "artifacts".into(),
             workers: 1,
             net: NetConfig::default(),
+            sched: SchedConfig::default(),
         }
     }
 
@@ -338,6 +346,7 @@ impl ExperimentConfig {
             ("artifacts_dir", Json::str(&self.artifacts_dir)),
             ("workers", Json::num(self.workers as f64)),
             ("net", net_to_json(&self.net)),
+            ("sched", sched_to_json(&self.sched)),
         ])
     }
 
@@ -381,6 +390,9 @@ impl ExperimentConfig {
             // Optional for backward compatibility with pre-transport
             // configs: absent means the ideal-network default.
             net: j.get("net").map(parse_net).transpose()?.unwrap_or_default(),
+            // Optional for backward compatibility with pre-scheduler
+            // configs: absent means the synchronous lockstep default.
+            sched: j.get("sched").map(parse_sched).transpose()?.unwrap_or_default(),
         })
     }
 }
@@ -394,6 +406,47 @@ fn net_to_json(n: &NetConfig) -> Json {
         ("dropout", Json::num(n.dropout)),
         ("deadline_s", Json::num(n.deadline_s)),
     ])
+}
+
+fn sched_to_json(s: &SchedConfig) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![("kind", Json::str(s.kind.name()))];
+    if let SchedKind::Async { k, staleness_p } = s.kind {
+        fields.push(("k", Json::num(k as f64)));
+        fields.push(("staleness", Json::num(staleness_p)));
+    }
+    fields.push(("compute_base_s", Json::num(s.compute_base_s)));
+    fields.push(("compute_spread", Json::num(s.compute_spread)));
+    Json::obj(fields)
+}
+
+fn parse_sched(j: &Json) -> Result<SchedConfig, String> {
+    let d = SchedConfig::default();
+    let f = |key: &str, dv: f64| -> Result<f64, String> {
+        match j.get(key) {
+            Some(v) => v.as_f64().ok_or_else(|| format!("sched.{key} must be a number")),
+            None => Ok(dv),
+        }
+    };
+    let kind = match j.get("kind") {
+        None => SchedKind::Sync,
+        Some(v) => match v.as_str().ok_or("sched.kind must be a string")? {
+            "sync" => SchedKind::Sync,
+            "semisync" => SchedKind::SemiSync,
+            "async" => SchedKind::Async {
+                k: j.get("k")
+                    .map(|v| v.as_usize().ok_or("sched.k must be a positive integer"))
+                    .transpose()?
+                    .unwrap_or(crate::sched::DEFAULT_ASYNC_K),
+                staleness_p: f("staleness", crate::sched::DEFAULT_STALENESS_P)?,
+            },
+            other => return Err(format!("unknown sched.kind '{other}'")),
+        },
+    };
+    Ok(SchedConfig {
+        kind,
+        compute_base_s: f("compute_base_s", d.compute_base_s)?,
+        compute_spread: f("compute_spread", d.compute_spread)?,
+    })
 }
 
 fn parse_net(j: &Json) -> Result<NetConfig, String> {
@@ -604,6 +657,48 @@ mod tests {
         let back = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(back.net.dropout, 0.3);
         assert_eq!(back.net.uplink_mbps, NetConfig::default().uplink_mbps);
+    }
+
+    #[test]
+    fn sched_roundtrips_and_defaults() {
+        for kind in [
+            SchedKind::Sync,
+            SchedKind::SemiSync,
+            SchedKind::Async { k: 4, staleness_p: 1.0 },
+        ] {
+            let mut cfg = ExperimentConfig::preset_quickstart();
+            cfg.sched = SchedConfig { kind, compute_base_s: 0.5, compute_spread: 0.3 };
+            let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back, cfg);
+        }
+
+        // Pre-scheduler configs (no "sched" field) parse as lockstep sync.
+        let mut j = ExperimentConfig::preset_quickstart().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("sched");
+        }
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.sched, SchedConfig::default());
+
+        // A partial sched object fills the rest from the default.
+        if let Json::Obj(m) = &mut j {
+            m.insert("sched".into(), Json::obj(vec![("kind", Json::str("async"))]));
+        }
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(
+            back.sched.kind,
+            SchedKind::Async {
+                k: crate::sched::DEFAULT_ASYNC_K,
+                staleness_p: crate::sched::DEFAULT_STALENESS_P
+            }
+        );
+        assert_eq!(back.sched.compute_base_s, 0.0);
+
+        // Garbage kinds are rejected.
+        if let Json::Obj(m) = &mut j {
+            m.insert("sched".into(), Json::obj(vec![("kind", Json::str("warp"))]));
+        }
+        assert!(ExperimentConfig::from_json(&j).is_err());
     }
 
     #[test]

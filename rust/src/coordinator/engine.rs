@@ -54,7 +54,10 @@ use anyhow::{Context, Result};
 
 use super::trainer::{ParallelTrainer, Trainer};
 use super::Client;
-use crate::compress::{CompressStats, LayerUpdate};
+// The `as _` imports bring the lane traits into scope for the
+// `client.compressor.compress(..)` / `client.decompressor.decode(..)`
+// calls below without claiming their names.
+use crate::compress::{CompressStats, Compressor as _, Decompressor as _, LayerUpdate};
 use crate::model::params::ParamStore;
 use crate::net::wire;
 use crate::util::pool::parallel_map;

@@ -92,12 +92,20 @@ pub struct Simulation {
     pub clients: Vec<Client>,
     /// Held-out evaluation data.
     pub test_data: Dataset,
-    trainer: NativeOrXla,
-    sampler: ParticipationSampler,
-    ledger: CommLedger,
-    network: NetworkModel,
-    transport: Box<dyn Transport>,
-    dropout: DropoutModel,
+    // Crate-visible so the scheduler plane (`crate::sched`) can drive the
+    // same stages the legacy loop does — broadcast/upload through the
+    // transport, ledger charges from drained frames, per-lane decode —
+    // without a parallel accessor API.
+    pub(crate) trainer: NativeOrXla,
+    pub(crate) sampler: ParticipationSampler,
+    pub(crate) ledger: CommLedger,
+    pub(crate) network: NetworkModel,
+    pub(crate) transport: Box<dyn Transport>,
+    pub(crate) dropout: DropoutModel,
+    /// Virtual simulation clock, seconds: cumulative `sim_time_s` for the
+    /// sync loop, scheduler-managed for semi-sync/async. Recorded per round
+    /// as [`RoundRecord::sim_clock_s`].
+    pub(crate) vclock: f64,
     /// Per-round records.
     pub recorder: RunRecorder,
     /// Optional per-round callback hook (gradient probes, logging).
@@ -180,6 +188,7 @@ impl Simulation {
     /// artifacts are missing or don't cover the model.
     pub fn build(cfg: ExperimentConfig) -> Result<Simulation> {
         cfg.net.validate().map_err(|e| anyhow!("invalid network config: {e}"))?;
+        cfg.sched.validate().map_err(|e| anyhow!("invalid scheduler config: {e}"))?;
         let meta = layer_table(cfg.model);
         let mut root = Pcg64::new(cfg.seed, 0x51);
 
@@ -224,6 +233,7 @@ impl Simulation {
             network,
             transport: Box::new(Loopback::new()),
             dropout,
+            vclock: 0.0,
             recorder: RunRecorder::new(),
             round_hook: None,
         })
@@ -415,6 +425,8 @@ impl Simulation {
         };
 
         let (up, down) = self.ledger.end_round();
+        let sim_time_s = self.network.round_time(&per_client_up, broadcast_bytes, deadline);
+        self.vclock += sim_time_s;
         let record = RoundRecord {
             round,
             train_loss: loss_sum / survivors.len().max(1) as f64,
@@ -422,7 +434,8 @@ impl Simulation {
             test_loss,
             uplink_bytes: up,
             downlink_bytes: down,
-            sim_time_s: self.network.round_time(&per_client_up, broadcast_bytes, deadline),
+            sim_time_s,
+            sim_clock_s: self.vclock,
             sum_d,
             survivors,
         };
@@ -430,7 +443,11 @@ impl Simulation {
         Ok(record)
     }
 
-    /// Run all configured rounds and produce the summary report.
+    /// Run all configured rounds through the **legacy synchronous loop**
+    /// and produce the summary report. Ignores `cfg.sched` — this is the
+    /// reference the `SyncScheduler` equivalence tests compare against;
+    /// use [`Simulation::run_scheduled`] to honor the configured
+    /// scheduler.
     pub fn run(&mut self) -> Result<RunReport> {
         self.run_with_progress(|_, _| {})
     }
@@ -445,8 +462,35 @@ impl Simulation {
             let rec = self.step(round)?;
             progress(round, &rec);
         }
+        Ok(self.finish_report())
+    }
+
+    /// Run under the scheduler configured in `cfg.sched`
+    /// ([`crate::sched`]): sync reproduces [`Simulation::run`]
+    /// bit-identically; semi-sync and async drive the same transport,
+    /// lanes, and aggregation plane on their own virtual-clock control
+    /// flow. Round hooks fire only under the sync scheduler (the dense
+    /// round-hook view assumes lockstep rounds).
+    pub fn run_scheduled(&mut self) -> Result<RunReport> {
+        self.run_scheduled_with_progress(|_, _| {})
+    }
+
+    /// Like [`Simulation::run_scheduled`] with a per-record progress
+    /// callback.
+    pub fn run_scheduled_with_progress(
+        &mut self,
+        mut progress: impl FnMut(usize, &RoundRecord),
+    ) -> Result<RunReport> {
+        let sched_cfg = self.cfg.sched.clone();
+        let mut sched = crate::sched::build_scheduler(&sched_cfg);
+        sched.run(self, &mut progress)
+    }
+
+    /// End-of-run summary at the configured threshold fraction (shared by
+    /// every scheduler so reports are comparable across control flows).
+    pub(crate) fn finish_report(&self) -> RunReport {
         let threshold = self.cfg.threshold_frac * self.recorder.best_accuracy();
-        Ok(self.recorder.report(threshold))
+        self.recorder.report(threshold)
     }
 }
 

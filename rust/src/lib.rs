@@ -48,6 +48,34 @@
 //! lanes on the coordinator thread (PJRT handles don't cross threads), also
 //! with identical results.
 //!
+//! ## The scheduler plane ([`sched`])
+//!
+//! Round *control flow* is pluggable (`--sched` on the CLI, the `"sched"`
+//! JSON object, `ExperimentConfig::sched`), driven by a deterministic
+//! discrete-event engine — a min-heap keyed `(f64 time, u64 seq)` with
+//! [`f64::total_cmp`] and a push-order tie-break, so replay is
+//! bit-identical at any worker count:
+//!
+//! * `--sched sync` — lockstep FedAvg, bit-identical to the legacy engine
+//!   (it *is* [`coordinator::Simulation::step`]).
+//! * `--sched semisync` — aggregate whatever arrived by the straggler
+//!   deadline; late updates roll into the round open when they land
+//!   instead of being discarded, and are charged exactly once.
+//! * `--sched async:k=8,staleness=0.5` — FedBuff-style buffered
+//!   asynchrony: each arriving update is folded into the
+//!   [`coordinator::ServerAggregator`] as it lands, the model applies
+//!   after every `k` arrivals, and an update `τ` versions stale is
+//!   down-weighted by `1/(1+τ)^p` (`p` = `staleness`).
+//!
+//! Client completion times are `compute draw + LinkProfile round trip`
+//! on the client's own link; the per-dispatch compute draw
+//! ([`sched::ComputeModel`], `--compute-s`/`--compute-spread`) is a pure
+//! function of `(seed, dispatch, cid)` like the dropout model. Every
+//! record carries the virtual clock ([`metrics::RoundRecord::sim_clock_s`],
+//! CSV column `sim_clock_s`) for time-to-accuracy plots;
+//! `gradestc exp async1` compares the three control flows under
+//! heterogeneous links.
+//!
 //! ## The network boundary ([`net`])
 //!
 //! All coordinator↔client traffic crosses the [`net::Transport`] as real
@@ -82,6 +110,9 @@
 //! * [`net`] — wire codec, link/dropout simulation, [`net::Transport`].
 //! * [`nn`] — the native reference trainer.
 //! * [`runtime`] — PJRT/XLA artifact execution (feature-gated).
+//! * [`sched`] — the scheduler plane: deterministic event queue
+//!   ([`sched::EventQueue`]) and the sync / semi-sync / async-buffered
+//!   round control flows on a virtual clock.
 //! * [`util`] — RNG, CLI args, bench harness, property testing, thread pool.
 //!
 //! See `examples/` for runnable end-to-end drivers and `DESIGN.md` for the
@@ -97,6 +128,7 @@ pub mod model;
 pub mod net;
 pub mod nn;
 pub mod runtime;
+pub mod sched;
 pub mod util;
 
 /// Crate-wide result alias (anyhow-backed).

@@ -14,7 +14,7 @@ mod experiments;
 
 use gradestc::config::{
     CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
-    NetConfig,
+    NetConfig, SchedConfig, SchedKind,
 };
 use gradestc::util::args::ArgSpec;
 
@@ -48,7 +48,7 @@ fn usage() -> String {
      USAGE:\n  gradestc train [OPTIONS]      run one experiment\n  \
      gradestc exp <id> [OPTIONS]   regenerate a paper table/figure\n  \
      gradestc info [--artifacts d] inspect the artifact manifest\n\n\
-     exp ids: fig1 fig2 table3 table4 fig7 fig8 fig9\n\
+     exp ids: fig1 fig2 table3 table4 fig7 fig8 fig9 async1\n\
      try: gradestc train --help"
         .to_string()
 }
@@ -166,6 +166,17 @@ fn cmd_train(argv: Vec<String>) -> i32 {
             "0",
             "straggler deadline in seconds (late updates are excluded from the aggregate); 0 = wait for everyone",
         )
+        .opt(
+            "sched",
+            "sync",
+            "round scheduler: sync | semisync | async[:k=8,staleness=0.5] (semisync rolls stragglers into the next round; async folds each arrival and applies every k)",
+        )
+        .opt("compute-s", "0", "mean per-dispatch local-compute latency, seconds (0 = free)")
+        .opt(
+            "compute-spread",
+            "0",
+            "compute heterogeneity: per-dispatch compute scaled by exp(spread*N(0,1)); 0 = constant",
+        )
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("out", "results", "results directory")
         .flag("native", "use the native Rust trainer instead of XLA artifacts")
@@ -189,14 +200,25 @@ fn cmd_train(argv: Vec<String>) -> i32 {
         Ok(c) => c,
         Err(e) => return fail(&e),
     };
+    let sched_kind = match SchedKind::parse(args.str("sched")) {
+        Ok(s) => s,
+        Err(e) => return fail(&e),
+    };
     let model = default_model_for(dataset);
     let use_xla = !args.has_flag("native");
+    // Default-sync runs keep their historical result paths; the scheduler
+    // tag appears only when a non-default control flow is selected.
+    let sched_tag = match sched_kind {
+        SchedKind::Sync => String::new(),
+        other => format!("-{}", other.name()),
+    };
     let cfg = ExperimentConfig {
         name: format!(
-            "train-{}-{}-{}",
+            "train-{}-{}-{}{}",
             args.str("dataset"),
             args.str("dist"),
-            compressor.name()
+            compressor.name(),
+            sched_tag
         ),
         dataset,
         model,
@@ -223,6 +245,11 @@ fn cmd_train(argv: Vec<String>) -> i32 {
             het_spread: args.f64("het-spread"),
             dropout: args.f64("dropout"),
             deadline_s: args.f64("deadline"),
+        },
+        sched: SchedConfig {
+            kind: sched_kind,
+            compute_base_s: args.f64("compute-s"),
+            compute_spread: args.f64("compute-spread"),
         },
     };
     let quiet = args.has_flag("quiet");

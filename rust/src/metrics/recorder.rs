@@ -18,13 +18,23 @@ pub struct RoundRecord {
     pub uplink_bytes: u64,
     /// Downlink bytes charged this round.
     pub downlink_bytes: u64,
-    /// Simulated round wallclock (seconds) under the network model.
+    /// Simulated round wallclock (seconds) under the network model: the
+    /// duration of this round (sync/semi-sync) or of this apply window
+    /// (async).
     pub sim_time_s: f64,
+    /// Virtual simulation clock at the end of this round (seconds since
+    /// the run started) — the x-axis of time-to-accuracy plots. For the
+    /// sync scheduler this is exactly the running sum of `sim_time_s`.
+    pub sim_clock_s: f64,
     /// Sum of rSVD candidate counts `d` across clients/layers this round
     /// (the paper's Table IV computational-overhead proxy; 0 for baselines).
     pub sum_d: u64,
-    /// Clients that survived dropout and actually ran this round (sorted
-    /// ids; equals the sampled participant set when `net.dropout == 0`).
+    /// Clients whose updates this record covers, sorted. Sync: the
+    /// dropout survivors that ran the round (equals the sampled set when
+    /// `net.dropout == 0`). Semi-sync: the clients whose updates this
+    /// round *aggregated* (on-time participants plus rolled-over
+    /// stragglers). Async: the `k` arrivals folded into this apply (a
+    /// fast client may appear more than once).
     pub survivors: Vec<usize>,
 }
 
@@ -122,14 +132,14 @@ impl RunRecorder {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "round,train_loss,test_accuracy,test_loss,uplink_bytes,downlink_bytes,cum_uplink_bytes,sim_time_s,sum_d,n_survivors"
+            "round,train_loss,test_accuracy,test_loss,uplink_bytes,downlink_bytes,cum_uplink_bytes,sim_time_s,sim_clock_s,sum_d,n_survivors"
         )?;
         let mut cum = 0u64;
         for r in &self.rounds {
             cum += r.uplink_bytes;
             writeln!(
                 f,
-                "{},{:.6},{:.6},{:.6},{},{},{},{:.4},{},{}",
+                "{},{:.6},{:.6},{:.6},{},{},{},{:.4},{:.4},{},{}",
                 r.round,
                 r.train_loss,
                 r.test_accuracy,
@@ -138,6 +148,7 @@ impl RunRecorder {
                 r.downlink_bytes,
                 cum,
                 r.sim_time_s,
+                r.sim_clock_s,
                 r.sum_d,
                 r.survivors.len()
             )?;
@@ -164,6 +175,7 @@ mod tests {
             uplink_bytes: up,
             downlink_bytes: 5,
             sim_time_s: 0.1,
+            sim_clock_s: 0.1 * (round + 1) as f64,
             sum_d: 3,
             survivors: vec![0, 1],
         }

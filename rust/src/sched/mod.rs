@@ -1,0 +1,476 @@
+//! The scheduler plane: synchronous, semi-synchronous, and asynchronous
+//! federated rounds on a deterministic virtual clock.
+//!
+//! Everything below PR 4 simulated *what* crosses the network (encoded
+//! frames, per-client links, dropout, straggler deadlines) but only ever
+//! drove it with one control flow: lockstep FedAvg, where the server waits
+//! for every survivor before aggregating. Under heterogeneous links
+//! (`net.het_spread > 0`) that wastes wall-clock — the round is as slow as
+//! its slowest client (Ozfatura et al.'s partial-participation setting;
+//! Edin et al.'s practical-limitations study). This module turns the
+//! per-client [`LinkProfile`](crate::net::LinkProfile) timing model into
+//! an actual simulation clock and makes the control flow pluggable:
+//!
+//! * [`SyncScheduler`] — today's lockstep loop, verbatim: it drives
+//!   [`Simulation::step`], so `--sched sync` is *structurally*
+//!   bit-identical to the legacy engine (and `rust/tests/sched.rs` locks
+//!   the equivalence in anyway).
+//! * [`SemiSyncScheduler`] — aggregate whatever arrived by the straggler
+//!   deadline; a straggler's update is **rolled into the round that is
+//!   open when it lands** instead of discarded, and its uplink bytes are
+//!   charged exactly once, in that round (the round they crossed the
+//!   wire).
+//! * [`AsyncBufferedScheduler`] — FedBuff-style buffered asynchrony: the
+//!   server folds each arriving update into the
+//!   [`ServerAggregator`](crate::coordinator::ServerAggregator) *as it
+//!   lands* and applies after every `k` arrivals, discounting a stale
+//!   update's fold weight by `1 / (1 + τ)^p`, where `τ` is the number of
+//!   server model versions that elapsed between the client's dispatch and
+//!   its arrival and `p` is the `staleness` knob (`0` disables the
+//!   discount).
+//!
+//! # Virtual time
+//!
+//! A client dispatched at virtual time `t` with a `b`-byte broadcast and a
+//! `u`-byte upload completes at
+//!
+//! ```text
+//! t + ComputeModel::draw(dispatch, cid)            // local-SGD latency
+//!   + LinkProfile::round_trip_time(b, u)           // downlink + uplink
+//! ```
+//!
+//! Completions become events in the [`event::EventQueue`] — a min-heap
+//! keyed `(f64 time, u64 seq)` with [`f64::total_cmp`] and a push-order
+//! sequence tie-break — so replay is bit-identical at any worker count:
+//! worker threads parallelize the *handling* of an event (the fanned
+//! client phase), never the order of events.
+//!
+//! # Lockstep under out-of-order arrival
+//!
+//! Each client lane owns its paired compressor/decompressor
+//! ([`Client`](crate::coordinator::Client)), and a lane is never
+//! re-dispatched before its previous upload is decoded, so the per-lane
+//! compress → decode alternation — the temporal-correlation contract — is
+//! preserved no matter how arrivals interleave *across* lanes.
+//! `rust/tests/sched.rs` asserts the paired state fingerprints stay equal
+//! under both semi-sync rollover and async reordering.
+//!
+//! # Knobs
+//!
+//! [`SchedConfig`] rides in `ExperimentConfig::sched` (JSON object
+//! `"sched"`, absent ⇒ sync — byte- and bit-identical to the pre-sched
+//! engine) and on the CLI as
+//! `--sched sync|semisync|async[:k=8,staleness=0.5]` plus
+//! `--compute-s` / `--compute-spread` for the per-client compute-time
+//! draw. The defaults (`sync`, zero compute time) change nothing.
+
+pub mod asyncbuf;
+pub mod event;
+pub mod semisync;
+pub mod sync;
+
+pub use asyncbuf::AsyncBufferedScheduler;
+pub use event::EventQueue;
+pub use semisync::SemiSyncScheduler;
+pub use sync::SyncScheduler;
+
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use crate::compress::Decompressor as _;
+use crate::coordinator::{engine, Simulation};
+use crate::metrics::{RoundRecord, RunReport};
+use crate::net::{wire, Transport as _};
+use crate::util::rng::Pcg64;
+use crate::Result;
+
+/// Which round control flow drives the simulation.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum SchedKind {
+    /// Lockstep FedAvg: every round waits for all survivors (the legacy
+    /// engine, bit-identical).
+    #[default]
+    Sync,
+    /// Deadline-bounded rounds; stragglers roll into the next round.
+    SemiSync,
+    /// FedBuff-style buffered asynchrony.
+    Async {
+        /// Arrivals folded between consecutive model applies.
+        k: usize,
+        /// Staleness-discount exponent `p` in `1/(1+τ)^p`.
+        staleness_p: f64,
+    },
+}
+
+impl SchedKind {
+    /// Stable short name for logs/CSV paths.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedKind::Sync => "sync",
+            SchedKind::SemiSync => "semisync",
+            SchedKind::Async { .. } => "async",
+        }
+    }
+
+    /// Parse a CLI spec: `sync`, `semisync`, `async`,
+    /// `async:k=8,staleness=1.0`.
+    pub fn parse(spec: &str) -> std::result::Result<SchedKind, String> {
+        let (name, kv) = spec.split_once(':').unwrap_or((spec, ""));
+        let mut opts = std::collections::BTreeMap::new();
+        for pair in kv.split(',').filter(|s| !s.is_empty()) {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("bad scheduler option '{pair}' (expect key=value)"))?;
+            opts.insert(k.to_string(), v.to_string());
+        }
+        let reject_opts = |what: &str| -> std::result::Result<(), String> {
+            if opts.is_empty() {
+                Ok(())
+            } else {
+                Err(format!("scheduler '{what}' takes no options"))
+            }
+        };
+        match name {
+            "sync" => {
+                reject_opts("sync")?;
+                Ok(SchedKind::Sync)
+            }
+            "semisync" => {
+                reject_opts("semisync")?;
+                Ok(SchedKind::SemiSync)
+            }
+            "async" => {
+                let mut k = DEFAULT_ASYNC_K;
+                let mut staleness_p = DEFAULT_STALENESS_P;
+                for (key, v) in &opts {
+                    match key.as_str() {
+                        "k" => k = v.parse().map_err(|e| format!("async k: {e}"))?,
+                        "staleness" => {
+                            staleness_p = v.parse().map_err(|e| format!("async staleness: {e}"))?
+                        }
+                        other => return Err(format!("unknown async option '{other}'")),
+                    }
+                }
+                Ok(SchedKind::Async { k, staleness_p })
+            }
+            other => Err(format!("unknown scheduler '{other}' (sync | semisync | async[:k=..,staleness=..])")),
+        }
+    }
+}
+
+/// Default apply buffer size for `async` when `k=` is not given.
+pub const DEFAULT_ASYNC_K: usize = 8;
+/// Default staleness exponent for `async` when `staleness=` is not given.
+pub const DEFAULT_STALENESS_P: f64 = 0.5;
+
+/// Experiment-facing scheduler knobs (`ExperimentConfig::sched`, the
+/// `"sched"` JSON object, and the `--sched`/`--compute-*` CLI flags).
+///
+/// The default — sync control flow, zero compute time — keeps the
+/// simulation byte- and bit-identical to the pre-scheduler engine.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SchedConfig {
+    /// Round control flow.
+    pub kind: SchedKind,
+    /// Mean per-dispatch local-compute latency, seconds. `0` = compute is
+    /// free (completion times are pure link times, the pre-sched model).
+    pub compute_base_s: f64,
+    /// Compute heterogeneity: each dispatch's compute time is scaled by
+    /// `exp(spread · N(0,1))` (log-normal). `0` = every dispatch costs
+    /// exactly `compute_base_s`.
+    pub compute_spread: f64,
+}
+
+impl SchedConfig {
+    /// Range-check the knobs; returns a description of the first problem.
+    /// Called by `Simulation::build` so bad CLI/JSON values surface as
+    /// config errors, not panics.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if let SchedKind::Async { k, staleness_p } = self.kind {
+            if k == 0 {
+                return Err("sched async k must be >= 1".into());
+            }
+            if !(staleness_p.is_finite() && staleness_p >= 0.0) {
+                return Err(format!(
+                    "sched async staleness = {staleness_p} must be finite and non-negative"
+                ));
+            }
+        }
+        for (name, v) in [
+            ("compute_base_s", self.compute_base_s),
+            ("compute_spread", self.compute_spread),
+        ] {
+            if !(v.is_finite() && v >= 0.0) {
+                return Err(format!("sched.{name} = {v} must be finite and non-negative"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-dispatch local-compute latency draws.
+///
+/// `draw(dispatch, cid)` is a pure function of `(seed, dispatch, cid)` —
+/// no shared RNG stream to advance — mirroring
+/// [`DropoutModel`](crate::net::DropoutModel): completion times are
+/// identical at every worker count and independent of evaluation order,
+/// which is what keeps the event order replayable.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeModel {
+    base_s: f64,
+    spread: f64,
+    seed: u64,
+}
+
+impl ComputeModel {
+    /// Build from the sched knobs and the run seed (dedicated stream: the
+    /// draw never perturbs data/model/sampler RNG).
+    pub fn new(cfg: &SchedConfig, seed: u64) -> Self {
+        ComputeModel {
+            base_s: cfg.compute_base_s,
+            spread: cfg.compute_spread,
+            seed: seed ^ 0x5EED_C003_7001,
+        }
+    }
+
+    /// Compute seconds for client `cid`'s `dispatch`-th local run.
+    pub fn draw(&self, dispatch: u64, cid: usize) -> f64 {
+        if self.base_s == 0.0 {
+            return 0.0;
+        }
+        if self.spread == 0.0 {
+            return self.base_s;
+        }
+        let mix = self.seed ^ dispatch.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut r = Pcg64::new(mix, 0xC03D_0000 ^ cid as u64);
+        self.base_s * (self.spread * r.normal()).exp()
+    }
+}
+
+/// One round control flow, driving a [`Simulation`] end to end on the
+/// virtual clock. Implementations own no simulation state — everything
+/// observable (model, ledger, recorder, lane state, `vclock`) lives in the
+/// `Simulation`, so a finished run reads back identically no matter which
+/// scheduler produced it.
+pub trait Scheduler {
+    /// Stable name (matches [`SchedKind::name`]).
+    fn name(&self) -> &'static str;
+
+    /// Run every configured round/apply, invoking `progress` after each
+    /// pushed [`RoundRecord`], and produce the end-of-run report.
+    fn run(
+        &mut self,
+        sim: &mut Simulation,
+        progress: &mut dyn FnMut(usize, &RoundRecord),
+    ) -> Result<RunReport>;
+}
+
+/// Build the scheduler for a config.
+pub fn build_scheduler(cfg: &SchedConfig) -> Box<dyn Scheduler> {
+    match cfg.kind {
+        SchedKind::Sync => Box::new(SyncScheduler),
+        SchedKind::SemiSync => Box::new(SemiSyncScheduler::new(cfg.clone())),
+        SchedKind::Async { k, staleness_p } => {
+            Box::new(AsyncBufferedScheduler::new(k, staleness_p, cfg.clone()))
+        }
+    }
+}
+
+/// One dispatched upload: everything an event-driven scheduler needs to
+/// schedule, charge, decode, and fold it when it lands.
+pub(crate) struct DispatchedUpload {
+    /// Client id.
+    pub cid: usize,
+    /// Wire-encoded compressed update (its length is the uplink charge).
+    pub frame: Vec<u8>,
+    /// Undiscounted FedAvg weight (shard size).
+    pub weight: f64,
+    /// Mean minibatch loss over the dispatch's local training.
+    pub mean_loss: f64,
+    /// rSVD candidate count consumed (Σd proxy).
+    pub sum_d: u64,
+    /// Virtual time the upload finishes crossing the wire:
+    /// `dispatch + compute draw + link round trip` on the client's link.
+    pub arrival_s: f64,
+}
+
+/// The dispatch stage shared by the event-driven schedulers: ship the
+/// encoded broadcast `frame` to `cids` through the transport (downlink
+/// charged from the delivered frames), fan the client phase across
+/// `workers` threads, upload the results, and stamp each drained frame
+/// with its arrival time, consuming one `dispatches[cid]` compute draw
+/// per upload.
+///
+/// The sync path deliberately keeps its own copy of this staging inside
+/// [`Simulation::step`] — that loop is the frozen bit-identity reference
+/// the equivalence tests compare against; this helper exists so the
+/// semi-sync and async control flows share one implementation instead of
+/// drifting copies.
+pub(crate) fn dispatch_uploads(
+    sim: &mut Simulation,
+    frame: &Arc<[u8]>,
+    cids: &[usize],
+    now: f64,
+    workers: usize,
+    compute: &ComputeModel,
+    dispatches: &mut [u64],
+) -> Result<Vec<DispatchedUpload>> {
+    if cids.is_empty() {
+        return Ok(Vec::new());
+    }
+    let broadcast_bytes = frame.len() as u64;
+    for &cid in cids {
+        sim.transport.broadcast(cid, frame)?;
+    }
+    let delivered = sim.transport.drain_broadcasts();
+    for (_, f) in &delivered {
+        sim.ledger.charge_downlink(f.len() as u64);
+    }
+    // Every client received an identical frame: decode one copy and share
+    // it read-only across lanes (bit-exact f32 ↔ LE round trip).
+    let global_rx = match delivered.first() {
+        Some((_, f)) => {
+            wire::decode_params(&sim.meta, f).context("decoding the model broadcast")?
+        }
+        None => sim.global.clone(),
+    };
+    let inputs = engine::RoundInputs {
+        global: &global_rx,
+        local_epochs: sim.cfg.local_epochs,
+        batch_size: sim.cfg.batch_size,
+        lr: sim.cfg.lr,
+    };
+    let lanes = engine::take_lanes(&mut sim.clients, cids);
+    let outcomes = engine::run_client_phase(sim.trainer.plan(workers), inputs, lanes)?;
+
+    let n = dispatches.len();
+    let mut loss_of = vec![0.0f64; n];
+    let mut d_of = vec![0u64; n];
+    let mut weight_of = vec![0.0f64; n];
+    for outcome in outcomes {
+        loss_of[outcome.cid] = outcome.mean_loss;
+        d_of[outcome.cid] = outcome.stats.sum_d;
+        weight_of[outcome.cid] = outcome.weight;
+        sim.transport.upload(outcome.cid, outcome.frame)?;
+    }
+    Ok(sim
+        .transport
+        .drain_uploads()
+        .into_iter()
+        .map(|(cid, frame)| {
+            let attempt = dispatches[cid];
+            dispatches[cid] += 1;
+            let arrival_s = now
+                + compute.draw(attempt, cid)
+                + sim.network.link(cid).round_trip_time(broadcast_bytes, frame.len() as u64);
+            DispatchedUpload {
+                cid,
+                frame,
+                weight: weight_of[cid],
+                mean_loss: loss_of[cid],
+                sum_d: d_of[cid],
+                arrival_s,
+            }
+        })
+        .collect())
+}
+
+/// Charge and decode an upload the run is shutting down on: its bytes
+/// crossed the wire (charged outside any recorded round) and the lane's
+/// paired compressor/decompressor state must still end in lockstep, so
+/// the decode is unconditional even though nothing aggregates the result.
+pub(crate) fn absorb_trailing_upload(
+    sim: &mut Simulation,
+    cid: usize,
+    frame: &[u8],
+) -> Result<()> {
+    sim.ledger.charge_uplink(frame.len() as u64);
+    let payloads = wire::decode(frame)
+        .with_context(|| format!("decoding client {cid}'s trailing upload"))?;
+    let _ = sim.clients[cid].decompressor.decode(payloads);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_every_kind() {
+        assert_eq!(SchedKind::parse("sync").unwrap(), SchedKind::Sync);
+        assert_eq!(SchedKind::parse("semisync").unwrap(), SchedKind::SemiSync);
+        assert_eq!(
+            SchedKind::parse("async").unwrap(),
+            SchedKind::Async { k: DEFAULT_ASYNC_K, staleness_p: DEFAULT_STALENESS_P }
+        );
+        assert_eq!(
+            SchedKind::parse("async:k=4,staleness=1.0").unwrap(),
+            SchedKind::Async { k: 4, staleness_p: 1.0 }
+        );
+        assert_eq!(
+            SchedKind::parse("async:staleness=0").unwrap(),
+            SchedKind::Async { k: DEFAULT_ASYNC_K, staleness_p: 0.0 }
+        );
+    }
+
+    #[test]
+    fn spec_rejects_garbage() {
+        assert!(SchedKind::parse("lockstep").is_err());
+        assert!(SchedKind::parse("sync:k=2").is_err());
+        assert!(SchedKind::parse("async:q=2").is_err());
+        assert!(SchedKind::parse("async:k").is_err());
+        assert!(SchedKind::parse("async:k=zero").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        assert!(SchedConfig::default().validate().is_ok());
+        let bad_k = SchedConfig {
+            kind: SchedKind::Async { k: 0, staleness_p: 0.5 },
+            ..Default::default()
+        };
+        assert!(bad_k.validate().is_err());
+        let bad_p = SchedConfig {
+            kind: SchedKind::Async { k: 4, staleness_p: f64::NAN },
+            ..Default::default()
+        };
+        assert!(bad_p.validate().is_err());
+        let bad_compute =
+            SchedConfig { compute_base_s: -1.0, ..Default::default() };
+        assert!(bad_compute.validate().is_err());
+    }
+
+    #[test]
+    fn compute_model_zero_base_is_free_and_rng_free() {
+        let m = ComputeModel::new(&SchedConfig::default(), 7);
+        for d in 0..5 {
+            for c in 0..5 {
+                assert_eq!(m.draw(d, c), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn compute_model_pure_and_spread() {
+        let cfg = SchedConfig {
+            compute_base_s: 2.0,
+            compute_spread: 0.5,
+            ..Default::default()
+        };
+        let m = ComputeModel::new(&cfg, 11);
+        // Pure: same query twice → same answer.
+        assert_eq!(m.draw(3, 2).to_bits(), m.draw(3, 2).to_bits());
+        // Varies across dispatches and clients.
+        assert_ne!(m.draw(0, 0).to_bits(), m.draw(1, 0).to_bits());
+        assert_ne!(m.draw(0, 0).to_bits(), m.draw(0, 1).to_bits());
+        // Always positive (log-normal).
+        assert!((0..20).all(|d| (0..8).all(|c| m.draw(d, c) > 0.0)));
+        // Zero spread degenerates to the base.
+        let flat = ComputeModel::new(
+            &SchedConfig { compute_base_s: 2.0, ..Default::default() },
+            11,
+        );
+        assert_eq!(flat.draw(9, 9), 2.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! The semi-synchronous scheduler: deadline-bounded rounds with straggler
+//! rollover.
+//!
+//! Each round broadcasts to the sampled survivors that are *free* (not
+//! still uploading a previous round's update), fans the client phase
+//! across workers exactly like the sync engine, and schedules every
+//! upload's arrival on the virtual clock at
+//! `dispatch + compute_draw + link round-trip`. The round closes at the
+//! straggler deadline (`net.deadline_s`) or at the last participant's
+//! arrival, whichever is earlier; **every queued arrival with
+//! `time <= round close` is folded into this round's aggregate** — this
+//! round's on-time participants *and* stragglers rolled over from earlier
+//! rounds. A straggler's update is therefore never discarded (the sync
+//! engine's behaviour), it is aggregated by the round that is open when it
+//! lands, and its uplink bytes are charged exactly once — in that round,
+//! the round they finished crossing the wire. `rust/tests/sched.rs` locks
+//! the single-charge ledger invariant in with a byte-counting transport.
+//!
+//! A straggling client is *busy* until its upload lands: it is skipped by
+//! participation until then (it cannot hear a broadcast mid-upload), and a
+//! round in which every sampled client is busy fast-forwards the clock to
+//! the earliest pending arrival instead of spinning — so rollover can
+//! never deadlock the round loop.
+//!
+//! With no deadline configured (`deadline_s = 0`) the round closes at the
+//! last arrival and semi-sync degenerates to sync-with-compute-times
+//! (folds happen in arrival order rather than participant order, so float
+//! sums may differ in the last bits from the sync engine's
+//! participant-order folds).
+
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use super::{ComputeModel, DispatchedUpload, EventQueue, SchedConfig, Scheduler};
+use crate::compress::{Decompressor as _, LayerUpdate};
+use crate::coordinator::{ServerAggregator, Simulation, Trainer as _};
+use crate::metrics::{RoundRecord, RunReport};
+use crate::net::wire;
+use crate::Result;
+
+/// Deadline-bounded rounds; stragglers roll into the round open at their
+/// arrival. See the module docs.
+pub struct SemiSyncScheduler {
+    conf: SchedConfig,
+}
+
+impl SemiSyncScheduler {
+    /// Build from the scheduler knobs (compute model).
+    pub fn new(conf: SchedConfig) -> Self {
+        SemiSyncScheduler { conf }
+    }
+}
+
+impl Scheduler for SemiSyncScheduler {
+    fn name(&self) -> &'static str {
+        "semisync"
+    }
+
+    fn run(
+        &mut self,
+        sim: &mut Simulation,
+        progress: &mut dyn FnMut(usize, &RoundRecord),
+    ) -> Result<RunReport> {
+        let workers = sim.cfg.resolved_workers();
+        let deadline = sim.cfg.net.deadline();
+        let compute = ComputeModel::new(&self.conf, sim.cfg.seed);
+        let n = sim.clients.len();
+        let mut queue: EventQueue<DispatchedUpload> = EventQueue::new();
+        // Virtual time each client's in-flight upload lands; a client is
+        // dispatchable only once free.
+        let mut busy_until = vec![0.0f64; n];
+        // Per-client dispatch counter feeding the compute-time draw.
+        let mut dispatches = vec![0u64; n];
+
+        for round in 0..sim.cfg.rounds {
+            let t_start = sim.vclock;
+            let sampled = sim.sampler.sample(round);
+            let alive = sim.dropout.filter(round, &sampled);
+            let participants: Vec<usize> =
+                alive.into_iter().filter(|&cid| busy_until[cid] <= t_start).collect();
+
+            let mut loss_sum = 0.0f64;
+            let mut sum_d = 0u64;
+            let mut arrivals_this_round: Vec<f64> = Vec::new();
+            if !participants.is_empty() {
+                // Stages 1–3 (shared with the async scheduler): broadcast,
+                // fanned client phase, upload; each drained frame arrives
+                // at dispatch + compute draw + link round trip.
+                let broadcast: Arc<[u8]> = wire::encode_params(&sim.global).into();
+                let uploads = super::dispatch_uploads(
+                    sim, &broadcast, &participants, t_start, workers, &compute,
+                    &mut dispatches,
+                )?;
+                for up in uploads {
+                    loss_sum += up.mean_loss;
+                    sum_d += up.sum_d;
+                    busy_until[up.cid] = up.arrival_s;
+                    arrivals_this_round.push(up.arrival_s);
+                    queue.push(up.arrival_s, up);
+                }
+            }
+
+            // Round close: the last participant's arrival, capped at the
+            // straggler deadline. A round with nothing dispatched (every
+            // sampled client busy or dropped) fast-forwards to the
+            // earliest pending arrival so rollover cannot deadlock.
+            let latest = arrivals_this_round.iter().fold(t_start, |a, &b| a.max(b));
+            let t_end = if participants.is_empty() {
+                queue.peek_time().map_or(t_start, |t| t.max(t_start))
+            } else {
+                match deadline {
+                    Some(d) => latest.min(t_start + d),
+                    None => latest,
+                }
+            };
+
+            // Stages 4+5: everything that arrived by the close — on-time
+            // participants and rolled-over stragglers alike — is charged
+            // (once: the pop consumes the pending upload), decoded with
+            // its lane's paired decompressor, and folded in arrival order.
+            let mut folds: Vec<(f64, Vec<LayerUpdate>)> = Vec::new();
+            let mut folded_cids: Vec<usize> = Vec::new();
+            while queue.peek_time().is_some_and(|t| t <= t_end) {
+                let (_, _, up) = queue.pop().expect("peeked event");
+                sim.ledger.charge_uplink(up.frame.len() as u64);
+                let payloads = wire::decode(&up.frame)
+                    .with_context(|| format!("decoding client {}'s upload", up.cid))?;
+                let updates = sim.clients[up.cid].decompressor.decode(payloads);
+                folded_cids.push(up.cid);
+                folds.push((up.weight, updates));
+            }
+            let wtotal: f64 = folds.iter().map(|(w, _)| *w).sum();
+            if wtotal > 0.0 {
+                let batch: Vec<(f32, Vec<LayerUpdate>)> = folds
+                    .into_iter()
+                    .map(|(w, updates)| ((w / wtotal) as f32, updates))
+                    .collect();
+                let mut agg = ServerAggregator::new(&sim.meta);
+                agg.fold_batch(workers, batch);
+                sim.global.axpy(1.0, &agg.finish(&sim.meta));
+            }
+
+            // Stage 6: evaluate, record, advance the clock.
+            let (test_loss, test_acc) = if round % sim.cfg.eval_every == 0
+                || round + 1 == sim.cfg.rounds
+            {
+                sim.trainer.evaluate(&sim.global, &sim.test_data)?
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+            let (up_b, down_b) = sim.ledger.end_round();
+            sim.vclock = t_end;
+            folded_cids.sort_unstable();
+            let record = RoundRecord {
+                round,
+                // Mean loss over this round's *dispatched* participants
+                // (they trained this round); `survivors` below instead
+                // lists the clients whose updates this round aggregated,
+                // which under rollover can differ.
+                train_loss: loss_sum / participants.len().max(1) as f64,
+                test_accuracy: test_acc,
+                test_loss,
+                uplink_bytes: up_b,
+                downlink_bytes: down_b,
+                sim_time_s: t_end - t_start,
+                sim_clock_s: t_end,
+                sum_d,
+                survivors: folded_cids,
+            };
+            sim.recorder.push(record.clone());
+            progress(round, &record);
+        }
+
+        // Uploads still in flight when the run ends: charged + decoded so
+        // lane state stays in lockstep (shared shutdown-drain helper).
+        while let Some((_, _, up)) = queue.pop() {
+            super::absorb_trailing_upload(sim, up.cid, &up.frame)?;
+        }
+        Ok(sim.finish_report())
+    }
+}

@@ -1,0 +1,39 @@
+//! The synchronous scheduler: the legacy lockstep loop, verbatim.
+
+use super::Scheduler;
+use crate::coordinator::Simulation;
+use crate::metrics::{RoundRecord, RunReport};
+use crate::Result;
+
+/// Lockstep FedAvg. Each round drives [`Simulation::step`] — the exact
+/// engine the repository ran before the scheduler plane existed — so
+/// `--sched sync` produces bit-identical [`RoundRecord`]s and
+/// byte-identical communication-ledger totals to the legacy engine *by
+/// construction*: there is no second code path to drift. The virtual
+/// clock advances by each round's `sim_time_s` (the slowest surviving
+/// participant's link round trip, deadline-capped), exactly as the legacy
+/// `NetworkModel::round_time` accounting did.
+///
+/// `rust/tests/sched.rs` still locks the equivalence in from outside the
+/// crate (scheduled run vs `Simulation::run_with_progress`, GradESTC and
+/// TopK, with dropout/heterogeneity/deadline enabled), guarding the
+/// plumbing between the config, the scheduler registry, and the engine.
+pub struct SyncScheduler;
+
+impl Scheduler for SyncScheduler {
+    fn name(&self) -> &'static str {
+        "sync"
+    }
+
+    fn run(
+        &mut self,
+        sim: &mut Simulation,
+        progress: &mut dyn FnMut(usize, &RoundRecord),
+    ) -> Result<RunReport> {
+        for round in 0..sim.cfg.rounds {
+            let rec = sim.step(round)?;
+            progress(round, &rec);
+        }
+        Ok(sim.finish_report())
+    }
+}

@@ -1,0 +1,336 @@
+//! Integration tests for the scheduler plane (`gradestc::sched`): sync
+//! bit-equivalence with the legacy engine, async determinism across worker
+//! counts, semi-sync straggler rollover, and the single-charge ledger
+//! invariant (native backend: hermetic, no artifacts needed).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use gradestc::config::{
+    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, NetConfig,
+    SchedConfig, SchedKind,
+};
+use gradestc::coordinator::Simulation;
+use gradestc::metrics::RoundRecord;
+use gradestc::net::{Loopback, Transport};
+
+fn base_cfg(name: &str, comp: CompressorKind) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.into(),
+        dataset: DatasetKind::SynthMnist,
+        model: gradestc::config::ModelKind::LeNet5,
+        distribution: DataDistribution::Iid,
+        num_clients: 8,
+        participation: 1.0,
+        rounds: 5,
+        local_epochs: 1,
+        batch_size: 32,
+        lr: 0.05,
+        samples_per_client: 128,
+        test_samples: 128,
+        eval_every: 1,
+        threshold_frac: 0.9,
+        compressor: comp,
+        seed: 11,
+        use_xla: false,
+        artifacts_dir: "artifacts".into(),
+        workers: 1,
+        net: NetConfig::default(),
+        sched: SchedConfig::default(),
+    }
+}
+
+fn gradestc8() -> CompressorKind {
+    CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() })
+}
+
+/// Assert two round traces are bit-identical (floats compared by bits so
+/// NaN evals also count as equal).
+fn assert_rounds_bitwise_equal(a: &[RoundRecord], b: &[RoundRecord], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: round count");
+    for (x, y) in a.iter().zip(b) {
+        let r = x.round;
+        assert_eq!(x.round, y.round, "{label}");
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{label}: loss, round {r}");
+        assert_eq!(
+            x.test_accuracy.to_bits(),
+            y.test_accuracy.to_bits(),
+            "{label}: accuracy, round {r}"
+        );
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{label}: test_loss, round {r}");
+        assert_eq!(x.uplink_bytes, y.uplink_bytes, "{label}: uplink, round {r}");
+        assert_eq!(x.downlink_bytes, y.downlink_bytes, "{label}: downlink, round {r}");
+        assert_eq!(
+            x.sim_time_s.to_bits(),
+            y.sim_time_s.to_bits(),
+            "{label}: sim_time, round {r}"
+        );
+        assert_eq!(
+            x.sim_clock_s.to_bits(),
+            y.sim_clock_s.to_bits(),
+            "{label}: sim_clock, round {r}"
+        );
+        assert_eq!(x.sum_d, y.sum_d, "{label}: sum_d, round {r}");
+        assert_eq!(x.survivors, y.survivors, "{label}: survivors, round {r}");
+    }
+}
+
+/// Run a config through the scheduler plane at a worker count; returns the
+/// trace, the lane fingerprints at the end, and the ledger uplink total.
+fn run_scheduled(
+    mut cfg: ExperimentConfig,
+    workers: usize,
+) -> (Vec<RoundRecord>, Vec<(u64, u64)>, u64) {
+    cfg.workers = workers;
+    let mut sim = Simulation::build(cfg).unwrap();
+    sim.run_scheduled().unwrap();
+    (sim.recorder.rounds().to_vec(), sim.lane_fingerprints(), sim.total_uplink())
+}
+
+/// Satellite acceptance: `--sched sync` is bit-identical to the legacy
+/// engine — same records (including the virtual clock), same ledger
+/// totals — for the paper's method and a stateless baseline, with
+/// dropout, heterogeneous links, and a straggler deadline all enabled, at
+/// sequential and parallel worker counts.
+#[test]
+fn sync_scheduler_bit_identical_to_legacy_engine() {
+    for (label, comp) in
+        [("gradestc", gradestc8()), ("topk", CompressorKind::TopK { frac: 0.1 })]
+    {
+        let mut cfg = base_cfg(&format!("it-sched-sync-{label}"), comp);
+        cfg.net.dropout = 0.2;
+        cfg.net.het_spread = 0.5;
+        cfg.net.deadline_s = 2.0;
+        for workers in [1usize, 8] {
+            let mut legacy_cfg = cfg.clone();
+            legacy_cfg.workers = workers;
+            let mut legacy = Simulation::build(legacy_cfg).unwrap();
+            legacy.run().unwrap(); // the pre-scheduler lockstep loop
+            let (sched, _, sched_up) = run_scheduled(cfg.clone(), workers);
+            assert_rounds_bitwise_equal(
+                legacy.recorder.rounds(),
+                &sched,
+                &format!("{label} legacy vs sched-sync w{workers}"),
+            );
+            assert_eq!(
+                legacy.total_uplink(),
+                sched_up,
+                "{label} w{workers}: ledger totals diverged"
+            );
+        }
+    }
+}
+
+/// Tentpole determinism bar: the async scheduler's event order, records
+/// (= apply sequence, survivors, virtual clock), and paired lane
+/// fingerprints are bit-identical at workers = 1 vs 8, with dropout and
+/// heterogeneous links on.
+#[test]
+fn async_scheduler_bit_identical_across_workers() {
+    let mut cfg = base_cfg("it-sched-async-det", gradestc8());
+    cfg.rounds = 5; // applies
+    cfg.net.het_spread = 1.0;
+    cfg.net.dropout = 0.1;
+    cfg.sched.kind = SchedKind::Async { k: 3, staleness_p: 0.5 };
+    let (seq, fp_seq, up_seq) = run_scheduled(cfg.clone(), 1);
+    let (par, fp_par, up_par) = run_scheduled(cfg, 8);
+    assert_rounds_bitwise_equal(&seq, &par, "async w1 vs w8");
+    assert_eq!(fp_seq, fp_par, "lane fingerprints diverged across worker counts");
+    assert_eq!(up_seq, up_par, "ledger totals diverged across worker counts");
+    // The apply sequence folded someone every apply.
+    assert!(seq.iter().all(|r| r.survivors.len() == 3), "every apply folds exactly k");
+}
+
+/// Out-of-order arrival must not break the paired compressor/decompressor
+/// lockstep: after an async run every lane's client and server
+/// fingerprints (GradESTC basis bits) are equal, including lanes whose
+/// last upload was still in flight at shutdown.
+#[test]
+fn async_keeps_lane_state_lockstep() {
+    let mut cfg = base_cfg("it-sched-async-lockstep", gradestc8());
+    cfg.rounds = 4;
+    cfg.net.het_spread = 1.5;
+    cfg.sched.kind = SchedKind::Async { k: 2, staleness_p: 1.0 };
+    let mut sim = Simulation::build(cfg).unwrap();
+    sim.run_scheduled().unwrap();
+    for (cid, (client_fp, server_fp)) in sim.lane_fingerprints().iter().enumerate() {
+        assert_eq!(client_fp, server_fp, "client {cid}: lane state diverged");
+        assert_ne!(*client_fp, 0, "client {cid}: fingerprints must cover bases");
+    }
+}
+
+/// Acceptance: under heterogeneous links the async scheduler completes
+/// the same workload in strictly less virtual time than sync — both per
+/// record (sync waits for the slowest of 8 log-normal links every round;
+/// async applies at the pace of the 2 fastest arrivals) and measured as
+/// virtual time-to-target-accuracy.
+#[test]
+fn async_beats_sync_virtual_time_under_heterogeneous_links() {
+    let mut sync_cfg = base_cfg("it-sched-tta-sync", gradestc8());
+    sync_cfg.rounds = 8;
+    sync_cfg.net.het_spread = 1.5;
+    let (sync_recs, _, _) = run_scheduled(sync_cfg.clone(), 1);
+
+    let mut async_cfg = sync_cfg.clone();
+    async_cfg.name = "it-sched-tta-async".into();
+    async_cfg.rounds = 24; // applies are much smaller steps; give parity budget
+    async_cfg.sched.kind = SchedKind::Async { k: 2, staleness_p: 0.5 };
+    let (async_recs, _, _) = run_scheduled(async_cfg, 1);
+
+    // Structural: after the same number of records, the async clock is
+    // strictly behind the sync clock.
+    let n = sync_recs.len().min(async_recs.len());
+    assert!(
+        async_recs[n - 1].sim_clock_s < sync_recs[n - 1].sim_clock_s,
+        "async clock {} !< sync clock {} after {n} records",
+        async_recs[n - 1].sim_clock_s,
+        sync_recs[n - 1].sim_clock_s
+    );
+
+    // Time-to-target-accuracy: both control flows must reach a modest
+    // fixed bar, and async must get there in strictly less virtual time.
+    let target = 0.40f64;
+    let hit = |recs: &[RoundRecord], who: &str| -> f64 {
+        recs.iter()
+            .find(|r| !r.test_accuracy.is_nan() && r.test_accuracy >= target)
+            .unwrap_or_else(|| panic!("{who} never reached {target}"))
+            .sim_clock_s
+    };
+    let t_sync = hit(&sync_recs, "sync");
+    let t_async = hit(&async_recs, "async");
+    assert!(
+        t_async < t_sync,
+        "async time-to-target {t_async}s !< sync {t_sync}s"
+    );
+}
+
+/// A transport wrapper that counts every uploaded byte at the moment it
+/// enters the fabric — the independent ground truth for the ledger.
+struct CountingLoopback {
+    inner: Loopback,
+    uplink_bytes: Arc<AtomicU64>,
+}
+
+impl Transport for CountingLoopback {
+    fn broadcast(&mut self, to: usize, frame: &Arc<[u8]>) -> anyhow::Result<()> {
+        self.inner.broadcast(to, frame)
+    }
+    fn drain_broadcasts(&mut self) -> Vec<(usize, Arc<[u8]>)> {
+        self.inner.drain_broadcasts()
+    }
+    fn upload(&mut self, from: usize, frame: Vec<u8>) -> anyhow::Result<()> {
+        self.uplink_bytes.fetch_add(frame.len() as u64, Ordering::SeqCst);
+        self.inner.upload(from, frame)
+    }
+    fn drain_uploads(&mut self) -> Vec<(usize, Vec<u8>)> {
+        self.inner.drain_uploads()
+    }
+}
+
+/// Satellite bugfix regression: semi-sync straggler accounting never
+/// double-charges. Every uploaded frame's bytes are charged exactly once
+/// — in the round the upload finished crossing the wire (or the trailing
+/// drain for uploads still in flight at shutdown) — so the ledger total
+/// equals the transport's independent byte count exactly.
+#[test]
+fn semisync_ledger_charges_each_rolled_upload_once() {
+    let mut cfg = base_cfg("it-sched-semisync-ledger", gradestc8());
+    cfg.rounds = 5;
+    cfg.net.het_spread = 1.0;
+    cfg.net.deadline_s = 0.15; // tight: the slow tail straggles and rolls over
+    cfg.sched.kind = SchedKind::SemiSync;
+    let mut sim = Simulation::build(cfg).unwrap();
+    let counter = Arc::new(AtomicU64::new(0));
+    sim.set_transport(Box::new(CountingLoopback {
+        inner: Loopback::new(),
+        uplink_bytes: counter.clone(),
+    }));
+    sim.run_scheduled().unwrap();
+    let crossed = counter.load(Ordering::SeqCst);
+    assert!(crossed > 0, "no uplink traffic simulated");
+    assert_eq!(
+        sim.total_uplink(),
+        crossed,
+        "ledger charged {} bytes but {} crossed the transport (double- or un-charged rollover)",
+        sim.total_uplink(),
+        crossed
+    );
+    // Per-round records can sum to less than the ledger (uploads still in
+    // flight at shutdown are charged outside any round) but never more.
+    let recorded: u64 = sim.recorder.rounds().iter().map(|r| r.uplink_bytes).sum();
+    assert!(recorded <= crossed, "records {recorded} exceed crossed bytes {crossed}");
+}
+
+/// Semi-sync rollover semantics: with an impossibly tight deadline no
+/// update is on time, yet — unlike the sync engine, which discards late
+/// updates forever — stragglers are folded by the round open when they
+/// land: the model moves, empty-fold rounds and rollover-fold rounds
+/// alternate, and paired lane state stays in lockstep throughout.
+#[test]
+fn semisync_rolls_stragglers_into_later_rounds() {
+    let mut cfg = base_cfg("it-sched-semisync-rollover", gradestc8());
+    cfg.num_clients = 4;
+    cfg.rounds = 6;
+    cfg.net.deadline_s = 1e-9;
+    cfg.sched.kind = SchedKind::SemiSync;
+    let mut sim = Simulation::build(cfg).unwrap();
+    let before = sim.global.clone();
+    sim.run_scheduled().unwrap();
+    let recs = sim.recorder.rounds();
+    assert!(recs[0].survivors.is_empty(), "round 0 cannot aggregate anyone on time");
+    assert!(
+        recs.iter().any(|r| !r.survivors.is_empty()),
+        "stragglers were never rolled into a later round"
+    );
+    assert_ne!(sim.global, before, "rolled-over updates must move the model");
+    for (cid, (client_fp, server_fp)) in sim.lane_fingerprints().iter().enumerate() {
+        assert_eq!(client_fp, server_fp, "client {cid}: lane state diverged under rollover");
+    }
+    // The virtual clock only moves forward.
+    assert!(
+        recs.windows(2).all(|w| w[0].sim_clock_s <= w[1].sim_clock_s),
+        "virtual clock ran backwards"
+    );
+}
+
+/// Semi-sync without a deadline degenerates to wait-for-everyone and
+/// still learns; a non-zero compute model stretches the virtual clock but
+/// never the byte accounting.
+#[test]
+fn semisync_no_deadline_learns_and_compute_model_only_affects_time() {
+    let mut cfg = base_cfg("it-sched-semisync-plain", gradestc8());
+    cfg.num_clients = 4;
+    cfg.rounds = 4;
+    cfg.sched.kind = SchedKind::SemiSync;
+    let (plain, _, plain_up) = run_scheduled(cfg.clone(), 1);
+
+    cfg.sched.compute_base_s = 0.5;
+    cfg.sched.compute_spread = 0.5;
+    let (slow, _, slow_up) = run_scheduled(cfg, 1);
+
+    assert_eq!(plain_up, slow_up, "compute time must not change bytes");
+    for (a, b) in plain.iter().zip(&slow) {
+        assert_eq!(a.uplink_bytes, b.uplink_bytes);
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert!(b.sim_time_s > a.sim_time_s, "compute time must stretch the round");
+    }
+    let best = slow
+        .iter()
+        .map(|r| r.test_accuracy)
+        .filter(|a| !a.is_nan())
+        .fold(0.0f64, f64::max);
+    assert!(best > 0.35, "semisync stopped learning: best acc {best}");
+}
+
+/// The scheduled sync path is the default: `run_scheduled` on an
+/// untouched config equals `run` on the same config, so callers switching
+/// to the scheduler entry point (the CLI did) change nothing.
+#[test]
+fn default_config_run_scheduled_equals_run() {
+    let cfg = base_cfg("it-sched-default", CompressorKind::TopK { frac: 0.1 });
+    let mut a = Simulation::build(cfg.clone()).unwrap();
+    a.run().unwrap();
+    let (b, _, b_up) = run_scheduled(cfg, 1);
+    assert_rounds_bitwise_equal(a.recorder.rounds(), &b, "run vs run_scheduled");
+    assert_eq!(a.total_uplink(), b_up);
+}

@@ -3,6 +3,7 @@
 
 use gradestc::config::{
     CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, NetConfig,
+    SchedConfig,
 };
 use gradestc::coordinator::{RoundHookView, Simulation};
 use gradestc::metrics::RoundRecord;
@@ -29,6 +30,7 @@ fn base_cfg(name: &str, comp: CompressorKind) -> ExperimentConfig {
         artifacts_dir: "artifacts".into(),
         workers: 1,
         net: NetConfig::default(),
+        sched: SchedConfig::default(),
     }
 }
 
@@ -192,6 +194,11 @@ fn assert_rounds_bitwise_equal(a: &[RoundRecord], b: &[RoundRecord], label: &str
             x.sim_time_s.to_bits(),
             y.sim_time_s.to_bits(),
             "{label}: sim_time, round {r}"
+        );
+        assert_eq!(
+            x.sim_clock_s.to_bits(),
+            y.sim_clock_s.to_bits(),
+            "{label}: sim_clock, round {r}"
         );
         assert_eq!(x.sum_d, y.sum_d, "{label}: sum_d, round {r}");
         assert_eq!(x.survivors, y.survivors, "{label}: survivors, round {r}");
