@@ -1,0 +1,107 @@
+//! Scale-plane trajectory: build + round throughput and resident server
+//! basis memory for large client populations on the shared-basis pool.
+//!
+//! Two readings per control flow (sync / async-buffered) at a population
+//! the per-client lane model could never have held before interning:
+//! wall-clock for `build + run` (the event/dispatch machinery at
+//! population scale), and a memory probe comparing the [`BasisPool`]'s
+//! live bytes against the naive `clients × basis` baseline plus the
+//! process RSS where `/proc/self/statm` exists.
+//!
+//! Besides the usual `BENCHLINE` output this bench writes
+//! `BENCH_scale.json` (package root — `rust/BENCH_scale.json` under CI) so
+//! the scale trajectory is machine-tracked from the pool's first PR. Run
+//! with `cargo bench --bench scale` (`GRADESTC_BENCH_FAST=1` shrinks the
+//! population for the quick CI budget).
+
+use gradestc::compress::gradestc::basis_bytes_per_lane;
+use gradestc::config::{
+    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
+    NetConfig, SchedConfig, SchedKind,
+};
+use gradestc::coordinator::Simulation;
+use gradestc::model::meta::layer_table;
+use gradestc::util::bench::Bencher;
+use std::time::Duration;
+
+fn cfg(clients: usize, kind: SchedKind, rounds: usize) -> ExperimentConfig {
+    let concurrent = 50.min(clients);
+    ExperimentConfig {
+        name: "bench-scale".into(),
+        dataset: DatasetKind::SynthMnist,
+        model: ModelKind::LeNet5,
+        distribution: DataDistribution::Iid,
+        num_clients: clients,
+        participation: concurrent as f64 / clients as f64,
+        rounds,
+        local_epochs: 1,
+        batch_size: 32,
+        lr: 0.03,
+        samples_per_client: 2,
+        test_samples: 32,
+        eval_every: usize::MAX,
+        threshold_frac: 0.95,
+        compressor: CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+        seed: 7,
+        use_xla: false,
+        artifacts_dir: "artifacts".into(),
+        workers: 0,
+        net: NetConfig { het_spread: 1.0, ..NetConfig::default() },
+        sched: SchedConfig { kind, ..SchedConfig::default() },
+    }
+}
+
+/// Process resident set in bytes (Linux; `None` elsewhere).
+fn rss_bytes() -> Option<u64> {
+    let statm = std::fs::read_to_string("/proc/self/statm").ok()?;
+    let pages: u64 = statm.split_whitespace().nth(1)?.parse().ok()?;
+    Some(pages * 4096)
+}
+
+fn main() {
+    let fast = std::env::var("GRADESTC_BENCH_FAST").ok().as_deref() == Some("1");
+    let clients = if fast { 1_000 } else { 10_000 };
+    let mut b = Bencher::new("scale").budget(
+        Duration::from_millis(50),
+        Duration::from_millis(400),
+        3,
+    );
+    let cases: [(&str, SchedKind); 2] = [
+        ("sync", SchedKind::Sync),
+        ("async-k16", SchedKind::Async { k: 16, staleness_p: 0.5 }),
+    ];
+    for (sname, kind) in &cases {
+        b.bench(&format!("{sname}-{clients}c-r2-build+run"), || {
+            let mut sim = Simulation::build(cfg(clients, *kind, 2)).unwrap();
+            let report = sim.run_scheduled().unwrap();
+            std::hint::black_box(report.total_uplink);
+        });
+    }
+
+    // Memory probe: one representative sync run, pool vs naive baseline.
+    let mut sim = Simulation::build(cfg(clients, SchedKind::Sync, 2)).unwrap();
+    sim.run_scheduled().unwrap();
+    let pool = sim.basis_pool_stats();
+    let naive = basis_bytes_per_lane(
+        &layer_table(ModelKind::LeNet5),
+        &GradEstcParams { k: 8, ..Default::default() },
+    ) as u64
+        * clients as u64;
+    let rss = rss_bytes().unwrap_or(0);
+    println!(
+        "MEMLINE scale clients={clients} pool_entries={} pool_bytes={} \
+         naive_basis_bytes={naive} rss_bytes={rss}",
+        pool.entries,
+        pool.bytes()
+    );
+
+    // Machine-readable trajectory file, with the memory probe spliced in.
+    let memory = format!(
+        ",\n  \"memory\": {{\"clients\": {clients}, \"pool_entries\": {}, \
+         \"pool_bytes\": {}, \"naive_basis_bytes\": {naive}, \"rss_bytes\": {rss}}}",
+        pool.entries,
+        pool.bytes()
+    );
+    std::fs::write("BENCH_scale.json", b.to_json(&memory)).expect("writing BENCH_scale.json");
+    println!("wrote BENCH_scale.json ({} benches)", b.results().len());
+}

@@ -64,23 +64,7 @@ fn main() {
         }
     }
 
-    // Machine-readable trajectory file (no serde in the hermetic build:
-    // hand-rolled JSON over the harness stats).
-    let mut json = String::from("{\n  \"suite\": \"sched\",\n  \"benches\": [\n");
-    let results = b.results();
-    for (i, s) in results.iter().enumerate() {
-        json.push_str(&format!(
-            "    {{\"name\": \"{}\", \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \
-             \"stddev_ns\": {:.1}, \"min_ns\": {:.1}}}{}\n",
-            s.name,
-            s.median_ns,
-            s.mean_ns,
-            s.stddev_ns,
-            s.min_ns,
-            if i + 1 == results.len() { "" } else { "," }
-        ));
-    }
-    json.push_str("  ]\n}\n");
-    std::fs::write("BENCH_sched.json", &json).expect("writing BENCH_sched.json");
-    println!("wrote BENCH_sched.json ({} benches)", results.len());
+    // Machine-readable trajectory file.
+    std::fs::write("BENCH_sched.json", b.to_json("")).expect("writing BENCH_sched.json");
+    println!("wrote BENCH_sched.json ({} benches)", b.results().len());
 }

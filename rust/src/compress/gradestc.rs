@@ -16,18 +16,57 @@
 //! 5. uplinks only ℙ (replaced indices), 𝕄 (replacement vectors) and `A`
 //!    — `k·m + d_r·l + d_r` floats instead of `l·m` (Eq. 14).
 //!
-//! The server mirrors the replacement (Alg. 2) and reconstructs
-//! `Ĝ = M·A`. Client and server state evolve in lockstep from identical
-//! updates; a deterministic periodic Gram–Schmidt repair (same round
-//! schedule on both sides) bounds float drift without extra traffic.
+//! The server mirrors the replacement (Alg. 2). Reconstruction `Ĝ = M·A`
+//! is *deferred*: [`GradEstcServer::decode`](crate::compress::Decompressor)
+//! returns the factors as a [`LayerUpdate::LowRank`] and the aggregation
+//! plane ([`crate::coordinator::ServerAggregator`]) fuses `M·A` into the
+//! weighted FedAvg fold — the server never densifies one model per client
+//! (dense materialization is the round-hook probes' opt-in path).
+//!
+//! # Basis ownership and lifecycle
+//!
+//! The basis `M` exists on both ends of a lane, with different ownership:
+//!
+//! * **Client** ([`GradEstcClient`]): owns its `Mat` outright, one per
+//!   compressed layer, lazily initialized on the first compress. This is
+//!   genuinely per-client state — every client's basis evolves from its
+//!   own gradient stream.
+//! * **Server** ([`GradEstcServer`]): holds a
+//!   [`BasisHandle`](crate::compress::BasisHandle) per compressed layer
+//!   into a [`BasisPool`](crate::compress::BasisPool) shared by *every*
+//!   lane of the simulation — per-lane state is a pointer + fingerprint,
+//!   and bit-identical bases across lanes dedupe to one allocation.
+//!
+//! A round **without** a basis change (the temporally-stable steady state
+//! the paper's Fig. 1 motivates: `d_r = 0`, or the GradESTC-first
+//! ablation after init) leaves the handle untouched — no hash, no copy.
+//! A round **with** a change (replacements ℙ/𝕄, or the periodic re-ortho)
+//! runs copy-on-write: take the matrix out of the handle (zero-copy when
+//! this lane is the sole owner; a clone when another lane or an in-flight
+//! [`LayerUpdate::LowRank`] snapshot still shares it), mutate, re-intern.
+//! Snapshots handed to the aggregation plane therefore never observe a
+//! later round's state, exactly like the pre-pool `Arc` copy-on-write.
+//!
+//! # Fingerprint semantics
+//!
+//! [`Compressor::state_fingerprint`] / [`Decompressor::state_fingerprint`]
+//! hash the basis bits (dims + every element, layer order, FNV-1a). The
+//! paired halves of a lane must report equal fingerprints whenever their
+//! states are in lockstep — the invariant the straggler/out-of-order
+//! scheduler tests assert — and the pool's content key is the same hash
+//! over a single matrix, so "two lanes share a pool entry" and "their
+//! per-layer fingerprints agree" coincide by construction.
+//!
+//! Client and server state evolve in lockstep from identical updates; a
+//! deterministic periodic Gram–Schmidt repair (same round schedule on
+//! both sides) bounds float drift without extra traffic.
 //!
 //! Ablation variants (paper §V-E) are flags on [`GradEstcParams`]:
 //! `freeze_after_init` (GradESTC-first), `replace_all` (GradESTC-all),
 //! `fixed_d` (GradESTC-k).
 
-use std::sync::Arc;
-
 use super::codec::Payload;
+use super::intern::{BasisHandle, BasisPool};
 use super::{
     assemble_updates, basis_fingerprint, CompressStats, Compressor, Decompressor, LayerUpdate,
     SegmentGeom,
@@ -370,10 +409,12 @@ impl Compressor for GradEstcClient {
 
 struct ServerLayer {
     geom: LayerGeom,
-    /// Mirrored basis, shared by `Arc` with the [`LayerUpdate::LowRank`]s
-    /// this server hands out; mutated copy-on-write so a snapshot held by
-    /// the aggregation plane can never observe a later round's state.
-    basis: Option<Arc<Mat>>,
+    /// Mirrored basis as a handle into the shared [`BasisPool`]: per-lane
+    /// state is one pointer + fingerprint; bit-identical bases across
+    /// lanes share a single allocation. Updated copy-on-write so a
+    /// snapshot held by the aggregation plane can never observe a later
+    /// round's state (see the module docs' lifecycle section).
+    basis: Option<BasisHandle>,
 }
 
 /// Server-side GradESTC decompressor (paper Algorithm 2).
@@ -381,22 +422,51 @@ pub struct GradEstcServer {
     params: GradEstcParams,
     layers: Vec<ServerLayer>,
     round: usize,
+    pool: BasisPool,
 }
 
 impl GradEstcServer {
-    /// Build the mirror of [`GradEstcClient`] for the same model/params.
+    /// Build the mirror of [`GradEstcClient`] for the same model/params
+    /// with a private single-lane pool (tests, the error-feedback mirror).
+    /// A real server shares one pool across all lanes: [`Self::with_pool`].
     pub fn new(meta: &ModelMeta, params: GradEstcParams) -> Self {
+        Self::with_pool(meta, params, BasisPool::new())
+    }
+
+    /// Build the mirror interning its basis state in `pool` (shared with
+    /// every other lane of the simulation).
+    pub fn with_pool(meta: &ModelMeta, params: GradEstcParams, pool: BasisPool) -> Self {
         let layers = layer_geoms(meta, &params)
             .into_iter()
             .map(|geom| ServerLayer { geom, basis: None })
             .collect();
-        GradEstcServer { params, layers, round: 0 }
+        GradEstcServer { params, layers, round: 0, pool }
     }
+
+    /// Bytes this lane's basis handles *reference* in the shared pool
+    /// (Σ 4·l·k over initialized layers). What the lane would own outright
+    /// without interning; the pool's [`stats`](BasisPool::stats) report
+    /// what is actually resident across all lanes.
+    pub fn referenced_basis_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|s| s.basis.is_some())
+            .map(|s| 4 * s.geom.l * s.geom.k)
+            .sum()
+    }
+}
+
+/// Bytes one lane's fully-initialized GradESTC basis set occupies
+/// (Σ 4·l·k over the compressed layers) — the per-client server cost the
+/// [`BasisPool`] exists to shrink. Used by the scale experiment, bench,
+/// and memory tests to compute the naive `clients × basis` baseline.
+pub fn basis_bytes_per_lane(meta: &ModelMeta, params: &GradEstcParams) -> usize {
+    layer_geoms(meta, params).iter().map(|g| 4 * g.l * g.k).sum()
 }
 
 impl Decompressor for GradEstcServer {
     fn state_fingerprint(&self) -> u64 {
-        basis_fingerprint(self.layers.iter().map(|s| s.basis.as_deref()))
+        basis_fingerprint(self.layers.iter().map(|s| s.basis.as_ref().map(BasisHandle::as_mat)))
     }
 
     fn decode(&mut self, payloads: Vec<Payload>) -> Vec<LayerUpdate> {
@@ -412,25 +482,37 @@ impl Decompressor for GradEstcServer {
                 panic!("GradEstcServer: expected Basis payload for tensor {}", geom.tensor)
             };
             assert_eq!((l, k, m), (geom.l, geom.k, geom.m));
-            let basis =
-                state.basis.get_or_insert_with(|| Arc::new(Mat::zeros(geom.l, geom.k)));
             let reortho_due = round > 0
                 && round % REORTHO_PERIOD == 0
                 && !self.params.freeze_after_init;
-            if reortho_due {
-                // Mirror the client's deterministic repair (same schedule,
-                // same algorithm → bit-identical state).
-                mgs_orthonormalize(Arc::make_mut(basis), 1e-7);
+            // Copy-on-write only when this payload actually changes the
+            // basis; a stable round (d_r = 0, or GradESTC-first after
+            // init) keeps the interned handle untouched — no hash, no
+            // copy, and cross-lane sharing survives.
+            if reortho_due || !replace_idx.is_empty() || state.basis.is_none() {
+                let mut basis = match state.basis.take() {
+                    // Zero-copy when sole owner; clones when another lane
+                    // or an in-flight LowRank snapshot still shares it.
+                    Some(handle) => handle.into_mat(),
+                    None => Mat::zeros(geom.l, geom.k),
+                };
+                if reortho_due {
+                    // Mirror the client's deterministic repair (same
+                    // schedule, same algorithm → bit-identical state).
+                    mgs_orthonormalize(&mut basis, 1e-7);
+                }
+                apply_replacements(&mut basis, &replace_idx, &new_vectors, geom.l);
+                state.basis = Some(self.pool.intern(basis));
             }
-            apply_replacements(Arc::make_mut(basis), &replace_idx, &new_vectors, geom.l);
             // Alg. 2's reconstruction Ĝ = M·A is *deferred*: the aggregate
             // plane either fuses it into the per-layer accumulator
             // (`matmul_acc`) or a probe densifies it explicitly.
+            let handle = state.basis.as_ref().expect("basis initialized above");
             structured.push((
                 geom.tensor,
                 LayerUpdate::LowRank {
                     coeffs: Mat::from_vec(geom.k, geom.m, coeffs),
-                    basis: Arc::clone(basis),
+                    basis: handle.share(),
                     geom: geom.seg(),
                 },
             ));
@@ -666,7 +748,7 @@ mod tests {
         for (cl, sl) in c.layers.iter().zip(&s.layers) {
             assert_eq!(
                 cl.basis.as_ref().unwrap(),
-                sl.basis.as_deref().unwrap(),
+                sl.basis.as_ref().unwrap().as_mat(),
                 "basis diverged"
             );
         }

@@ -1,0 +1,271 @@
+//! Basis interning: one allocation per *distinct* basis, shared across
+//! every server-side lane that holds it.
+//!
+//! GradESTC's whole premise is that the basis `M` is shared structure —
+//! spatially across a layer's segments, temporally across rounds — yet a
+//! naive server stores one full decompressor basis per client lane, so
+//! resident memory is `O(clients × basis)` and a 10⁴–10⁶-client population
+//! (the scheduler plane's headroom) is unreachable. [`BasisPool`] is the
+//! memory lever: a content-addressed pool keyed by the same FNV-1a
+//! fingerprint the lockstep tests already use (the crate-internal
+//! `basis_fingerprint` over dims + element bits), handing out
+//! [`BasisHandle`]s — `Arc<Mat>` plus the content key —
+//! so per-lane state shrinks to a pointer and a fingerprint:
+//!
+//! * **Dedup**: interning bit-identical content returns the *same*
+//!   allocation. N lanes whose clients sent the same basis (SVDFed's
+//!   globally-shared basis, identical shards, a warm-started fleet) cost
+//!   one entry, not N.
+//! * **Copy-on-write**: a lane updating its basis takes the matrix out of
+//!   its handle ([`BasisHandle::into_mat`]) — zero-copy when the lane is
+//!   the only owner, a clone when the allocation is still shared by
+//!   another lane or by an in-flight
+//!   [`LayerUpdate::LowRank`](super::LayerUpdate) snapshot — mutates it,
+//!   and re-interns the result. Divergent updates therefore split shared
+//!   entries; convergent updates re-dedupe.
+//! * **No leak, no retention**: the pool holds only [`Weak`] references.
+//!   Dropping the last handle (a lane being dropped, a basis being
+//!   replaced) frees the matrix immediately; [`BasisPool::stats`] sweeps
+//!   dead entries as it counts.
+//!
+//! The pool is `Send + Sync` (the server decode phase fans lanes across
+//! worker threads) and never affects *values*: interning only decides
+//! which allocation bit-identical content lives in, so round records and
+//! state fingerprints are unchanged at any worker count. Fingerprint
+//! collisions are handled, not assumed away: each key maps to a bucket of
+//! candidates and interning compares full content before sharing.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, Weak};
+
+use super::basis_fingerprint;
+use crate::linalg::Mat;
+
+/// Shared, thread-safe pool of interned basis matrices. Cloning the pool
+/// clones the *handle* (all clones see one underlying store).
+#[derive(Clone, Debug, Default)]
+pub struct BasisPool {
+    inner: Arc<Mutex<HashMap<u64, Vec<Weak<Mat>>>>>,
+}
+
+/// One lane's ownership of an interned basis: the shared allocation plus
+/// its content fingerprint. This — not a `Mat` — is what server-side
+/// decompressor state holds per compressed layer.
+#[derive(Clone, Debug)]
+pub struct BasisHandle {
+    mat: Arc<Mat>,
+    fp: u64,
+}
+
+/// Live-pool summary (after sweeping dead entries).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Distinct live basis matrices.
+    pub entries: usize,
+    /// Total f32 elements across live entries.
+    pub floats: usize,
+}
+
+impl PoolStats {
+    /// Resident bytes of the live entries' element storage.
+    pub fn bytes(&self) -> usize {
+        self.floats * std::mem::size_of::<f32>()
+    }
+}
+
+/// Content key of one matrix: dims word + every element's bit pattern,
+/// FNV-1a — the same stream the lane-lockstep fingerprints hash, so a
+/// pool key and a single-layer state fingerprint agree by construction.
+fn content_key(mat: &Mat) -> u64 {
+    basis_fingerprint(std::iter::once(Some(mat)))
+}
+
+impl BasisPool {
+    /// Fresh empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern a matrix: returns a handle to an existing allocation when
+    /// bit-identical content is already pooled, otherwise adopts `mat` as
+    /// a new entry. Opportunistically sweeps dead entries from the bucket
+    /// it touches.
+    pub fn intern(&self, mat: Mat) -> BasisHandle {
+        let fp = content_key(&mat);
+        let mut inner = self.inner.lock().expect("basis pool poisoned");
+        let bucket = inner.entry(fp).or_default();
+        bucket.retain(|w| w.strong_count() > 0);
+        for weak in bucket.iter() {
+            if let Some(existing) = weak.upgrade() {
+                // Equal fingerprints almost always mean equal content, but
+                // the pool must be correct under collisions too.
+                if *existing == mat {
+                    return BasisHandle { mat: existing, fp };
+                }
+            }
+        }
+        let arc = Arc::new(mat);
+        bucket.push(Arc::downgrade(&arc));
+        BasisHandle { mat: arc, fp }
+    }
+
+    /// Live entry count / element total. Sweeps dead entries first, so a
+    /// dropped lane's bases stop counting the moment the last handle goes.
+    pub fn stats(&self) -> PoolStats {
+        let mut inner = self.inner.lock().expect("basis pool poisoned");
+        let mut entries = 0usize;
+        let mut floats = 0usize;
+        inner.retain(|_, bucket| {
+            bucket.retain(|w| w.strong_count() > 0);
+            for weak in bucket.iter() {
+                if let Some(mat) = weak.upgrade() {
+                    entries += 1;
+                    floats += mat.as_slice().len();
+                }
+            }
+            !bucket.is_empty()
+        });
+        PoolStats { entries, floats }
+    }
+}
+
+impl BasisHandle {
+    /// Borrow the interned matrix.
+    pub fn as_mat(&self) -> &Mat {
+        &self.mat
+    }
+
+    /// Content fingerprint (the pool key).
+    pub fn fingerprint(&self) -> u64 {
+        self.fp
+    }
+
+    /// A shared `Arc` snapshot — what
+    /// [`LayerUpdate::LowRank`](super::LayerUpdate) carries into the
+    /// aggregation plane. O(1); keeps this round's view immutable while
+    /// the lane's next update re-interns a successor.
+    pub fn share(&self) -> Arc<Mat> {
+        Arc::clone(&self.mat)
+    }
+
+    /// Take the matrix out for mutation (the copy-on-write step):
+    /// zero-copy when this handle is the sole owner, a content clone when
+    /// the allocation is still shared by another lane or an in-flight
+    /// aggregate snapshot. The caller mutates and re-interns.
+    pub fn into_mat(self) -> Mat {
+        // The pool holds only Weaks, so "sole owner" is exactly "no other
+        // lane and no in-flight LowRank snapshot".
+        Arc::try_unwrap(self.mat).unwrap_or_else(|shared| (*shared).clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn mat(seed: u64, l: usize, k: usize) -> Mat {
+        Mat::randn(l, k, &mut Pcg64::seeded(seed))
+    }
+
+    #[test]
+    fn identical_content_dedupes_to_one_entry() {
+        let pool = BasisPool::new();
+        let handles: Vec<BasisHandle> =
+            (0..16).map(|_| pool.intern(mat(1, 12, 4))).collect();
+        let stats = pool.stats();
+        assert_eq!(stats.entries, 1, "16 identical basis copies must pool to one");
+        assert_eq!(stats.floats, 12 * 4);
+        // All handles share the same allocation, not just equal content.
+        assert!(handles
+            .iter()
+            .all(|h| Arc::ptr_eq(&h.share(), &handles[0].share())));
+        assert!(handles.iter().all(|h| h.fingerprint() == handles[0].fingerprint()));
+    }
+
+    #[test]
+    fn distinct_content_gets_distinct_entries() {
+        let pool = BasisPool::new();
+        let a = pool.intern(mat(1, 8, 3));
+        let b = pool.intern(mat(2, 8, 3));
+        assert_eq!(pool.stats().entries, 2);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert!(!Arc::ptr_eq(&a.share(), &b.share()));
+    }
+
+    #[test]
+    fn cow_take_is_zero_copy_when_sole_owner() {
+        let pool = BasisPool::new();
+        let h = pool.intern(mat(3, 6, 2));
+        let buf = h.as_mat().as_slice().as_ptr() as usize;
+        let m = h.into_mat(); // sole owner: the element buffer moves, no clone
+        assert_eq!(m.as_slice().as_ptr() as usize, buf);
+        // …and re-interning adopts it as a live entry again.
+        let h2 = pool.intern(m);
+        assert_eq!(h2.as_mat().as_slice().as_ptr() as usize, buf);
+        assert_eq!(pool.stats().entries, 1);
+    }
+
+    #[test]
+    fn divergent_update_splits_shared_entry() {
+        let pool = BasisPool::new();
+        let a = pool.intern(mat(4, 6, 2));
+        let b = pool.intern(mat(4, 6, 2));
+        assert_eq!(pool.stats().entries, 1);
+        // Lane B diverges: COW must clone (A still shares the original).
+        let mut m = b.into_mat();
+        m.as_mut_slice()[0] += 1.0;
+        let b2 = pool.intern(m);
+        assert_eq!(pool.stats().entries, 2, "divergence must split the entry");
+        assert_ne!(a.fingerprint(), b2.fingerprint());
+        assert_ne!(a.as_mat(), b2.as_mat());
+        // A's view never observed B's mutation.
+        assert_eq!(*a.as_mat(), mat(4, 6, 2));
+    }
+
+    #[test]
+    fn reconvergent_update_rededupes() {
+        let pool = BasisPool::new();
+        let a = pool.intern(mat(5, 4, 2));
+        let mut m = pool.intern(mat(5, 4, 2)).into_mat();
+        let orig = m.as_slice()[0];
+        m.as_mut_slice()[0] = 42.0; // diverge…
+        m.as_mut_slice()[0] = orig; // …and come back bit-identically
+        let b = pool.intern(m);
+        assert_eq!(pool.stats().entries, 1);
+        assert!(Arc::ptr_eq(&a.share(), &b.share()));
+    }
+
+    #[test]
+    fn dropping_last_handle_removes_entry() {
+        let pool = BasisPool::new();
+        let a = pool.intern(mat(6, 10, 3));
+        let b = a.clone();
+        drop(a);
+        assert_eq!(pool.stats().entries, 1, "entry lives while any handle does");
+        drop(b);
+        assert_eq!(pool.stats(), PoolStats { entries: 0, floats: 0 });
+    }
+
+    #[test]
+    fn in_flight_snapshot_keeps_entry_alive_and_forces_cow() {
+        let pool = BasisPool::new();
+        let h = pool.intern(mat(7, 5, 2));
+        let snapshot = h.share(); // e.g. a LayerUpdate::LowRank in the aggregate
+        let ptr = Arc::as_ptr(&snapshot) as usize;
+        let mut m = h.into_mat(); // shared ⇒ clone, snapshot untouched
+        m.as_mut_slice()[1] = 42.0;
+        let h2 = pool.intern(m);
+        assert_ne!(Arc::as_ptr(&h2.share()) as usize, ptr);
+        assert_eq!(*snapshot, mat(7, 5, 2), "snapshot must not see the mutation");
+        assert_eq!(pool.stats().entries, 2);
+    }
+
+    #[test]
+    fn pool_clone_shares_one_store() {
+        let pool = BasisPool::new();
+        let view = pool.clone();
+        let _h = pool.intern(mat(8, 3, 3));
+        assert_eq!(view.stats().entries, 1);
+    }
+}

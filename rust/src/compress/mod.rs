@@ -31,10 +31,15 @@
 //! * [`svdfed`] — shared global basis via SVD with error-triggered refresh.
 //! * [`error_feedback`] — local residual accumulation wrapper (paper's
 //!   future-work extension).
+//! * [`intern`] — the [`BasisPool`]: content-addressed interning of
+//!   server-side basis state, one allocation per *distinct* basis across
+//!   all client lanes (the `O(clients × basis)` → `O(distinct bases)`
+//!   memory lever behind the 10⁴+-client scale plane).
 
 pub mod codec;
 pub mod error_feedback;
 pub mod gradestc;
+pub mod intern;
 pub mod quant;
 pub mod svdfed;
 pub mod topk;
@@ -42,6 +47,7 @@ pub mod topk;
 pub use codec::Payload;
 pub use error_feedback::EfWrapper;
 pub use gradestc::{GradEstcClient, GradEstcServer};
+pub use intern::{BasisHandle, BasisPool, PoolStats};
 
 use std::sync::Arc;
 
@@ -151,8 +157,10 @@ pub enum LayerUpdate {
         len: usize,
     },
     /// Low-rank factorization `Ĝ = basis · coeffs` in segment space. The
-    /// basis is an `Arc` view of the decompressor's own state — O(1) to
-    /// hand out, never a per-client copy.
+    /// basis is a shared snapshot of the decompressor's state — an
+    /// [`intern::BasisPool`] entry, O(1) to hand out, never a per-client
+    /// copy; the lane's next basis update copy-on-writes a successor
+    /// instead of mutating what this round's aggregate observes.
     LowRank {
         /// Combination coefficients A, `k × m`.
         coeffs: Mat,
@@ -326,8 +334,25 @@ pub(crate) fn basis_fingerprint<'a>(bases: impl Iterator<Item = Option<&'a Mat>>
     fnv1a_words(words.into_iter())
 }
 
-/// Build the (compressor, decompressor) pair for a config.
+/// Build the (compressor, decompressor) pair for a config with a private
+/// single-lane [`BasisPool`]. Convenience for benches/tests that exercise
+/// one lane; a real server shares one pool across every lane — use
+/// [`build_pair_in`].
 pub fn build_pair(
+    kind: &crate::config::CompressorKind,
+    meta: &ModelMeta,
+    seed: u64,
+) -> (Box<dyn Compressor>, Box<dyn Decompressor>) {
+    build_pair_in(&BasisPool::new(), kind, meta, seed)
+}
+
+/// Build the (compressor, decompressor) pair for a config, interning all
+/// server-side basis state in `pool`. The coordinator calls this once per
+/// client lane with one shared pool, so bit-identical bases across lanes
+/// collapse to one allocation and per-lane server state is a handle, not
+/// a matrix.
+pub fn build_pair_in(
+    pool: &BasisPool,
     kind: &crate::config::CompressorKind,
     meta: &ModelMeta,
     seed: u64,
@@ -361,12 +386,12 @@ pub fn build_pair(
         }
         K::SvdFed { k, gamma } => {
             let c = svdfed::SvdFedCompressor::new(meta, *k, *gamma, seed);
-            let d = svdfed::SvdFedDecompressor::new(meta);
+            let d = svdfed::SvdFedDecompressor::with_pool(meta, pool.clone());
             (Box::new(c), Box::new(d))
         }
         K::GradEstc(p) => {
             let c = GradEstcClient::new(meta, p.clone(), seed);
-            let d = GradEstcServer::new(meta, p.clone());
+            let d = GradEstcServer::with_pool(meta, p.clone(), pool.clone());
             if p.error_feedback {
                 (Box::new(EfWrapper::new(c, meta, p.clone())), Box::new(d))
             } else {

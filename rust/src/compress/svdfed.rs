@@ -5,7 +5,7 @@
 //! combination coefficients, and the basis is re-fit (full re-transmission)
 //! when the fitting quality degrades past a threshold — the γ knob.
 //!
-//! Faithful deviation (documented in DESIGN.md §5): the original fits one
+//! Faithful deviation: the original fits one
 //! basis server-side from all clients' round-1 gradients; this
 //! implementation fits per-client bases from each client's own round-1
 //! gradient. That is the *stronger* variant (a personalized basis fits at
@@ -13,10 +13,27 @@
 //! what it preserves is SVDFed's defining behaviour — a static basis
 //! between expensive refreshes — whose staleness under drift is exactly
 //! what GradESTC's incremental updates fix.
-
-use std::sync::Arc;
+//!
+//! # Basis ownership and lifecycle
+//!
+//! The client owns its `Mat` outright and re-fits it wholesale when the
+//! relative fitting error crosses γ. The server holds a
+//! [`BasisHandle`](crate::compress::BasisHandle) per compressed layer into
+//! the simulation-wide [`BasisPool`](crate::compress::BasisPool):
+//! coefficient-only rounds (SVDFed's steady state between refreshes —
+//! *most* rounds by design) leave the handle untouched, and a refit
+//! payload interns the freshly-received basis, so lanes whose clients
+//! transmit bit-identical bases (SVDFed's original globally-shared-basis
+//! regime, or identical shards) collapse to one allocation. Decoding
+//! returns [`LayerUpdate::LowRank`] factor snapshots — the aggregation
+//! plane fuses `Ĝ = M·A` into the FedAvg fold; nothing densifies here
+//! (the pre-aggregation-plane decode path that inflated `Ĝ` per client is
+//! gone). Fingerprints hash the same basis bits on both ends of the lane,
+//! so client/server lockstep is externally checkable exactly as for
+//! GradESTC.
 
 use super::codec::Payload;
+use super::intern::{BasisHandle, BasisPool};
 use super::{
     assemble_updates, basis_fingerprint, CompressStats, Compressor, Decompressor, LayerUpdate,
     SegmentGeom,
@@ -34,11 +51,12 @@ struct LayerState {
     basis: Option<Mat>,
 }
 
-/// Server-side layer state: the shared basis lives behind an `Arc` so the
-/// decoded [`LayerUpdate::LowRank`]s borrow it at O(1) instead of copying.
+/// Server-side layer state: the basis is a handle into the shared
+/// [`BasisPool`], so decoded [`LayerUpdate::LowRank`]s borrow it at O(1)
+/// and bit-identical bases across lanes share one allocation.
 struct ServerLayerState {
     geom: LayerGeom,
-    basis: Option<Arc<Mat>>,
+    basis: Option<BasisHandle>,
 }
 
 /// Client-side SVDFed compressor.
@@ -125,25 +143,34 @@ impl Compressor for SvdFedCompressor {
 /// Server-side SVDFed decompressor.
 pub struct SvdFedDecompressor {
     layers: Vec<ServerLayerState>,
+    pool: BasisPool,
 }
 
 impl SvdFedDecompressor {
-    /// Build for a model (same geometry as the compressor at any k — the
-    /// payload carries its own dims, geometry only selects tensors).
+    /// Build for a model with a private single-lane pool (same geometry as
+    /// the compressor at any k — the payload carries its own dims,
+    /// geometry only selects tensors). A real server shares one pool
+    /// across all lanes: [`Self::with_pool`].
     pub fn new(meta: &ModelMeta) -> Self {
+        Self::with_pool(meta, BasisPool::new())
+    }
+
+    /// Build for a model, interning received bases in `pool`.
+    pub fn with_pool(meta: &ModelMeta, pool: BasisPool) -> Self {
         let params = GradEstcParams::default();
         SvdFedDecompressor {
             layers: layer_geoms(meta, &params)
                 .into_iter()
                 .map(|geom| ServerLayerState { geom, basis: None })
                 .collect(),
+            pool,
         }
     }
 }
 
 impl Decompressor for SvdFedDecompressor {
     fn state_fingerprint(&self) -> u64 {
-        basis_fingerprint(self.layers.iter().map(|s| s.basis.as_deref()))
+        basis_fingerprint(self.layers.iter().map(|s| s.basis.as_ref().map(BasisHandle::as_mat)))
     }
 
     fn decode(&mut self, payloads: Vec<Payload>) -> Vec<LayerUpdate> {
@@ -157,7 +184,11 @@ impl Decompressor for SvdFedDecompressor {
                 panic!("SvdFedDecompressor: expected SvdCoeffs for {}", geom.tensor)
             };
             if let Some(b) = refit_basis {
-                state.basis = Some(Arc::new(Mat::from_vec(l, k, b)));
+                // A refit replaces the basis wholesale: intern the received
+                // content (deduping against any lane that got the same
+                // bits) and drop the old handle. Coefficient-only rounds —
+                // the steady state — never touch the pool.
+                state.basis = Some(self.pool.intern(Mat::from_vec(l, k, b)));
             }
             let basis = state
                 .basis
@@ -167,7 +198,7 @@ impl Decompressor for SvdFedDecompressor {
                 geom.tensor,
                 LayerUpdate::LowRank {
                     coeffs: Mat::from_vec(k, m, coeffs),
-                    basis: Arc::clone(basis),
+                    basis: basis.share(),
                     // geom was built at default k; the segment dims come
                     // from the payload, the conv mapping from the layer.
                     geom: SegmentGeom { l, m, conv: geom.conv },

@@ -11,7 +11,12 @@
 //!   `Acc_G += α · M·A` via [`matmul_acc`], scaling the k-sized inner loop
 //!   instead of an `l×m` dense gradient, with the accumulator held in
 //!   segment (G) space and converted to the tensor's flat layout once per
-//!   round — not once per client.
+//!   round — not once per client. The basis `M` arrives as an immutable
+//!   `Arc<Mat>` snapshot of the lane's interned
+//!   [`BasisPool`](crate::compress::BasisPool) entry: holding it here is
+//!   what forces a lane's *next* basis update down the copy-on-write path
+//!   instead of mutating state this fold still reads, and N lanes folding
+//!   the same basis reference one allocation.
 //! * [`LayerUpdate::Sparse`] scatter-adds `α·v` at the kept indices.
 //! * [`LayerUpdate::QuantDense`] folds `α·(lo + q·step)` straight from the
 //!   bit-packed codes.

@@ -28,7 +28,13 @@
 //!    [`LayerUpdate`]s, fanned across workers (per-lane state only, so
 //!    order-free). Nothing is densified here: low-rank layers stay as
 //!    `(coeffs, basis)` factors, sparse and quantized layers keep their
-//!    compact forms.
+//!    compact forms. A lane's basis state is a handle into the
+//!    simulation-wide [`BasisPool`](crate::compress::BasisPool): a
+//!    basis-changing payload copy-on-writes and re-interns (the only point
+//!    the fanned lanes touch the shared pool — a brief lock per changed
+//!    layer), while stable rounds never lock at all; interning decides
+//!    allocation sharing only, never values, so worker-count determinism
+//!    is untouched.
 //! 5. **Aggregation** — the on-time updates are folded in participant
 //!    order into the
 //!    [`ServerAggregator`](crate::coordinator::ServerAggregator)'s

@@ -4,7 +4,10 @@
 //! dataset, one client *lane* per client (private shard + RNG + compressor
 //! + the server's paired decompressor), a [`Trainer`] backend (XLA
 //! artifacts or the native reference), the [`Transport`] fabric every byte
-//! crosses, the per-client link model, and the communication ledger.
+//! crosses, the per-client link model, the communication ledger, and the
+//! population-wide [`BasisPool`] in which every lane's decompressor
+//! interns its basis state (per-client server memory is a handle, not a
+//! matrix — see [`crate::compress::intern`]).
 //! `run()` executes the FedAvg round loop of paper §V, staged by the round
 //! engine ([`engine`]):
 //!
@@ -52,7 +55,7 @@ pub use trainer::{NativeOrXla, ParallelTrainer, Trainer, XlaTrainer};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::compress::{build_pair, Compressor, Decompressor, LayerUpdate};
+use crate::compress::{build_pair_in, BasisPool, Compressor, Decompressor, LayerUpdate, PoolStats};
 use crate::config::{DatasetKind, ExperimentConfig, ModelKind};
 use crate::data::corpus::CorpusGenerator;
 use crate::data::synth::{Dataset, SynthGenerator, SynthSpec};
@@ -102,6 +105,11 @@ pub struct Simulation {
     pub(crate) network: NetworkModel,
     pub(crate) transport: Box<dyn Transport>,
     pub(crate) dropout: DropoutModel,
+    /// The basis-interning pool every lane's decompressor shares: one
+    /// allocation per *distinct* server-side basis across the whole
+    /// population ([`crate::compress::intern`]), the memory lever that
+    /// lets the scheduler plane's 10⁴+-client populations fit.
+    pub(crate) basis_pool: BasisPool,
     /// Virtual simulation clock, seconds: cumulative `sim_time_s` for the
     /// sync loop, scheduler-managed for semi-sync/async. Recorded per round
     /// as [`RoundRecord::sim_clock_s`].
@@ -197,10 +205,14 @@ impl Simulation {
         let trainer = NativeOrXla::build(&cfg, &meta)
             .with_context(|| "building trainer backend")?;
 
+        // One basis pool for the whole population: every lane's
+        // decompressor interns its basis state here, so per-client server
+        // memory is a handle, not a matrix, and identical bases dedupe.
+        let basis_pool = BasisPool::new();
         let mut clients = Vec::with_capacity(cfg.num_clients);
         for (id, data) in shards.into_iter().enumerate() {
             let (compressor, decompressor) =
-                build_pair(&cfg.compressor, &meta, cfg.seed ^ (id as u64) << 8);
+                build_pair_in(&basis_pool, &cfg.compressor, &meta, cfg.seed ^ (id as u64) << 8);
             clients.push(Client {
                 id,
                 data,
@@ -233,6 +245,7 @@ impl Simulation {
             network,
             transport: Box::new(Loopback::new()),
             dropout,
+            basis_pool,
             vclock: 0.0,
             recorder: RunRecorder::new(),
             round_hook: None,
@@ -278,6 +291,19 @@ impl Simulation {
     /// Total uplink bytes charged so far.
     pub fn total_uplink(&self) -> u64 {
         self.ledger.total_uplink()
+    }
+
+    /// The shared basis-interning pool (all lanes' server-side basis
+    /// state lives here; see [`crate::compress::intern`]).
+    pub fn basis_pool(&self) -> &BasisPool {
+        &self.basis_pool
+    }
+
+    /// Live interned-basis count and resident floats across the whole
+    /// population — the number the scale experiment/bench/tests compare
+    /// against the naive `clients × basis` baseline.
+    pub fn basis_pool_stats(&self) -> PoolStats {
+        self.basis_pool.stats()
     }
 
     /// Execute one round through the staged engine; returns the round

@@ -2,8 +2,8 @@
 //!
 //! Each experiment builds configs, runs simulations, writes per-round CSVs
 //! under `results/<exp>/`, and prints the same rows/series the paper
-//! reports. DESIGN.md §4 maps experiment ids to modules; EXPERIMENTS.md
-//! records paper-vs-measured numbers for each.
+//! reports. `docs/EXPERIMENTS.md` catalogues every experiment's knobs,
+//! outputs, and how to reproduce the paper's comm-reduction numbers.
 
 use std::path::{Path, PathBuf};
 
@@ -55,7 +55,9 @@ pub fn cmd_exp(argv: Vec<String>) -> i32 {
     let (id, rest) = match argv.split_first() {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
-            eprintln!("usage: gradestc exp <fig1|fig2|table3|table4|fig7|fig8|fig9|async1> [opts]");
+            eprintln!(
+                "usage: gradestc exp <fig1|fig2|table3|table4|fig7|fig8|fig9|async1|scale1> [opts]"
+            );
             return 2;
         }
     };
@@ -72,6 +74,7 @@ pub fn cmd_exp(argv: Vec<String>) -> i32 {
         .opt("samples", "0", "override samples per client (0 = preset default)")
         .opt("eval-every", "1", "evaluate every N rounds")
         .opt("workers", "0", "worker threads for the per-client phase (0 = auto)")
+        .opt("clients", "0", "override the client population (0 = experiment default; scale1: 10000)")
         .flag("native", "use the native trainer instead of XLA artifacts")
         .flag("ef", "include the error-feedback extension in table4");
     let args = match spec.parse(rest) {
@@ -92,6 +95,7 @@ pub fn cmd_exp(argv: Vec<String>) -> i32 {
         samples: args.usize("samples"),
         eval_every: args.usize("eval-every"),
         workers: args.usize("workers"),
+        clients: args.usize("clients"),
     };
     let r = match id.as_str() {
         "fig1" => exp_fig1(&ctx),
@@ -102,6 +106,7 @@ pub fn cmd_exp(argv: Vec<String>) -> i32 {
         "fig8" => exp_fig8(&ctx),
         "fig9" => exp_fig9(&ctx),
         "async1" => exp_async1(&ctx),
+        "scale1" => exp_scale1(&ctx),
         other => {
             eprintln!("unknown experiment '{other}'");
             return 2;
@@ -127,6 +132,7 @@ struct ExpCtx {
     samples: usize,
     eval_every: usize,
     workers: usize,
+    clients: usize,
 }
 
 impl ExpCtx {
@@ -704,6 +710,130 @@ fn exp_async1(ctx: &ExpCtx) -> Result<()> {
         }
     }
     println!("\nper-round CSVs in {} (x-axis: sim_clock_s)", out.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// scale1 — 10⁴-client populations on the shared-basis lane pool
+// ---------------------------------------------------------------------------
+
+/// The basis-pool headline: a 10k-client GradESTC population with sampled
+/// participation (~100 concurrent clients) under the sync and async
+/// control flows. Server-side basis state is interned in the shared
+/// [`BasisPool`](gradestc::compress::BasisPool), so resident basis memory
+/// follows the *participants*, not the population — the dedup factor vs
+/// the naive `clients × basis` baseline is what this experiment reports
+/// (`docs/EXPERIMENTS.md` catalogues the knobs and outputs).
+fn exp_scale1(ctx: &ExpCtx) -> Result<()> {
+    let clients = if ctx.clients > 0 { ctx.clients } else { 10_000 };
+    let concurrent = 100.min(clients);
+    let rounds = ctx.rounds_or(3);
+    println!(
+        "== scale1: {clients} clients, ~{concurrent} concurrent, {rounds} rounds \
+         (sync vs async on the shared-basis pool) =="
+    );
+    let out = PathBuf::from(&ctx.out).join("scale1");
+    std::fs::create_dir_all(&out)?;
+
+    let mk_base = || -> ExperimentConfig {
+        let mut cfg = ctx.base(
+            DatasetKind::SynthMnist,
+            DataDistribution::Iid,
+            CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+            rounds,
+        );
+        cfg.num_clients = clients;
+        cfg.participation = concurrent as f64 / clients as f64;
+        // Tiny shards: the population is the point, not the corpus.
+        cfg.samples_per_client = 2;
+        cfg.test_samples = 64;
+        cfg.net.het_spread = 1.0;
+        cfg
+    };
+    let naive_per_lane = gradestc::compress::gradestc::basis_bytes_per_lane(
+        &layer_table(mk_base().model),
+        &GradEstcParams { k: 8, ..Default::default() },
+    );
+
+    let mut summary = String::from(
+        "sched,clients,concurrent,rounds,pool_entries,pool_mb,naive_mb,dedup_x,\
+         sim_clock_s,total_uplink_mb,build_s,run_s\n",
+    );
+    println!(
+        "\n{:<9} {:>12} {:>10} {:>10} {:>8} {:>12} {:>9} {:>8}",
+        "sched", "pool entry", "pool MB", "naive MB", "dedup", "sim clock", "build s", "run s"
+    );
+    let k_async = 32.min(concurrent.max(1));
+    for (sname, kind) in [
+        ("sync", SchedKind::Sync),
+        ("async", SchedKind::Async { k: k_async, staleness_p: 0.5 }),
+    ] {
+        let mut cfg = mk_base();
+        cfg.name = format!("scale1-{sname}");
+        cfg.sched.kind = kind;
+        let t0 = std::time::Instant::now();
+        let mut sim = Simulation::build(cfg.clone())
+            .with_context(|| format!("building {clients}-client simulation"))?;
+        let build_s = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let rep = sim.run_scheduled_with_progress(|_, _| {})?;
+        let run_s = t1.elapsed().as_secs_f64();
+        sim.recorder.write_csv(&out.join(format!("{}.csv", cfg.name)))?;
+
+        let pool = sim.basis_pool_stats();
+        let naive = naive_per_lane as f64 * clients as f64;
+        let dedup = naive / pool.bytes().max(1) as f64;
+        let clock = sim.recorder.rounds().last().map(|r| r.sim_clock_s).unwrap_or(0.0);
+        println!(
+            "{:<9} {:>12} {:>10.3} {:>10.1} {:>7.0}x {:>11.2}s {:>8.1} {:>8.1}",
+            sname,
+            pool.entries,
+            pool.bytes() as f64 / 1e6,
+            naive / 1e6,
+            dedup,
+            clock,
+            build_s,
+            run_s
+        );
+        summary.push_str(&format!(
+            "{},{},{},{},{},{:.4},{:.4},{:.1},{:.4},{},{:.2},{:.2}\n",
+            sname,
+            clients,
+            concurrent,
+            rounds,
+            pool.entries,
+            pool.bytes() as f64 / 1e6,
+            naive / 1e6,
+            dedup,
+            clock,
+            fmt_mb(rep.total_uplink),
+            build_s,
+            run_s
+        ));
+        // The acceptance bar this experiment exists for: resident basis
+        // state follows the *dispatched lanes*, never the population.
+        // Sync samples `concurrent` lanes per round; async dispatches the
+        // initial cohort plus one refill per arrival. Each distinct lane
+        // contributes at most one lane's worth of live basis bytes when
+        // interning dedupes and stale COW generations are released — so
+        // this bound holds for any `--clients`/`--rounds` override.
+        let max_lanes = match sname {
+            "sync" => concurrent * rounds,
+            _ => concurrent + k_async * rounds,
+        };
+        anyhow::ensure!(
+            pool.bytes() <= max_lanes * naive_per_lane,
+            "basis pool holds {} bytes — more than {max_lanes} dispatched lanes' worth \
+             ({} bytes): interning is not deduping",
+            pool.bytes(),
+            max_lanes * naive_per_lane
+        );
+    }
+    std::fs::write(out.join("summary.csv"), summary)?;
+    println!(
+        "\nper-round CSVs + summary.csv in {} (columns incl. sim_clock_s, n_survivors)",
+        out.display()
+    );
     Ok(())
 }
 

@@ -15,6 +15,12 @@
 //!
 //! Python is build-time only; the round loop is pure Rust + XLA.
 //!
+//! The runtime is organized as five planes — round engine → wire/network
+//! → compressed-domain aggregation → scheduler → basis pool — each with
+//! its own invariants; the top-level `ARCHITECTURE.md` maps them, with
+//! per-scheduler data-flow diagrams and the "where does a byte get
+//! charged" walkthrough.
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -65,7 +71,11 @@
 //!   asynchrony: each arriving update is folded into the
 //!   [`coordinator::ServerAggregator`] as it lands, the model applies
 //!   after every `k` arrivals, and an update `τ` versions stale is
-//!   down-weighted by `1/(1+τ)^p` (`p` = `staleness`).
+//!   down-weighted by `1/(1+τ)^p` (`p` = `staleness`). Async honors
+//!   `ExperimentConfig::participation` as a concurrency bound: only
+//!   `round(participation · n)` clients are in flight at once, freed
+//!   slots refill by uniform draws over the idle pool — so populations
+//!   far larger than the working set are meaningful (see [`sched`]).
 //!
 //! Client completion times are `compute draw + LinkProfile round trip`
 //! on the client's own link; the per-dispatch compute draw
@@ -95,7 +105,9 @@
 //!
 //! * [`compress`] — GradESTC + every baseline compressor
 //!   ([`compress::Payload`] on the wire, [`compress::LayerUpdate`] after
-//!   the server decode).
+//!   the server decode, and [`compress::intern`]'s [`compress::BasisPool`]
+//!   — one allocation per *distinct* server-side basis across the whole
+//!   population).
 //! * [`config`] — typed experiment configs, JSON round-tripping, presets.
 //! * [`coordinator`] — the staged round engine,
 //!   [`coordinator::ServerAggregator`] (compressed-domain FedAvg), and
@@ -115,8 +127,9 @@
 //!   round control flows on a virtual clock.
 //! * [`util`] — RNG, CLI args, bench harness, property testing, thread pool.
 //!
-//! See `examples/` for runnable end-to-end drivers and `DESIGN.md` for the
-//! full system inventory.
+//! See `examples/` for runnable end-to-end drivers, `ARCHITECTURE.md`
+//! (repo root) for the five-plane system map, and `docs/EXPERIMENTS.md`
+//! for the experiment catalogue.
 
 pub mod compress;
 pub mod config;

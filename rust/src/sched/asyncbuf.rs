@@ -1,13 +1,27 @@
 //! The asynchronous buffered scheduler (FedBuff-style).
 //!
-//! Every client runs continuously: it trains on the model version it was
-//! handed, uploads, and is immediately re-dispatched with the newest
-//! global model once its arrival is processed. The server folds each
-//! arriving update into the
-//! [`ServerAggregator`](crate::coordinator::ServerAggregator) **as it
+//! Clients run continuously: a dispatched client trains on the model
+//! version it was handed, uploads, and frees its concurrency slot when
+//! its arrival is processed. The server folds each arriving update into
+//! the [`ServerAggregator`](crate::coordinator::ServerAggregator) **as it
 //! lands** — the streaming compressed-domain fold, `O(model)` memory —
 //! and applies the buffered aggregate after every `k` arrivals, then bumps
 //! the model version.
+//!
+//! # Participation sampling
+//!
+//! `ExperimentConfig::participation` bounds how many clients are in
+//! flight at once: the concurrency target is
+//! `clamp(round(participation · n), 1, n)`. At `participation = 1.0`
+//! (the default) every client is always training, uploading, or about to
+//! be re-dispatched — the original FedBuff regime, preserved bit-exactly
+//! (no sampling RNG is consumed). Below `1.0`, each freed slot is refilled
+//! by drawing uniformly from the *idle* clients on a dedicated seed
+//! stream, so a 10⁴–10⁶-client population is meaningful with only a few
+//! hundred concurrent trainers: the population defines the sampling pool
+//! (and the data distribution), not the steady-state compute. Draws
+//! happen in event order on the single-threaded event loop, so records
+//! stay bit-identical at any worker count.
 //!
 //! # Staleness discount
 //!
@@ -40,9 +54,10 @@
 //!
 //! Arrival and retry events live on the `(time, seq)`-keyed
 //! [`EventQueue`]; event *handling* fans work across threads (the initial
-//! all-client dispatch uses the same parallel client phase as the sync
+//! cohort dispatch uses the same parallel client phase as the sync
 //! engine) but event *order* never depends on the worker count, dropout
-//! and compute draws are pure per `(seed, attempt, cid)`, and folds happen
+//! and compute draws are pure per `(seed, attempt, cid)`, participation
+//! draws happen in event order on a dedicated stream, and folds happen
 //! in arrival order — so `workers = 1` and `workers = N` produce
 //! bit-identical records, apply sequences, and lane fingerprints
 //! (asserted in `rust/tests/sched.rs`).
@@ -56,6 +71,7 @@ use crate::compress::Decompressor as _;
 use crate::coordinator::{ServerAggregator, Simulation, Trainer as _};
 use crate::metrics::{RoundRecord, RunReport};
 use crate::net::wire;
+use crate::util::rng::Pcg64;
 use crate::Result;
 
 /// A scheduled occurrence on the virtual clock.
@@ -76,6 +92,61 @@ pub struct AsyncBufferedScheduler {
     k: usize,
     p: f64,
     conf: SchedConfig,
+}
+
+/// Idle-client pool for participation-sampled dispatch
+/// (`participation < 1.0`): uniform draws from the sorted idle set on a
+/// dedicated seed stream, consumed in event order on the single-threaded
+/// event loop — so the dispatch sequence is bit-identical at any worker
+/// count and never perturbs the data/model/link RNG streams.
+struct SlotSampler {
+    /// Clients not currently in flight. Order is arbitrary (swap_remove
+    /// churn) but deterministic: mutated only from the single-threaded
+    /// event loop, so draws replay bit-identically at any worker count.
+    idle: Vec<usize>,
+    /// `pos[cid]` = cid's index in `idle`, or `IN_FLIGHT`. Keeps release
+    /// and draw O(1) per slot at 10⁴–10⁶-client populations — the event
+    /// loop processes one of each per arrival.
+    pos: Vec<usize>,
+    rng: Pcg64,
+}
+
+const IN_FLIGHT: usize = usize::MAX;
+
+impl SlotSampler {
+    fn new(n: usize, seed: u64) -> Self {
+        SlotSampler {
+            idle: (0..n).collect(),
+            pos: (0..n).collect(),
+            rng: Pcg64::new(seed, 0xA51C_0DE5),
+        }
+    }
+
+    /// Return a client's slot to the idle pool (its arrival or retry was
+    /// just processed).
+    fn release(&mut self, cid: usize) {
+        debug_assert!(self.pos[cid] == IN_FLIGHT, "client {cid} released while already idle");
+        self.pos[cid] = self.idle.len();
+        self.idle.push(cid);
+    }
+
+    /// Draw up to `k` distinct idle clients, uniformly, returned sorted.
+    fn draw(&mut self, k: usize) -> Vec<usize> {
+        let k = k.min(self.idle.len());
+        let mut picked: Vec<usize> = (0..k)
+            .map(|_| {
+                let i = self.rng.index(self.idle.len());
+                let cid = self.idle.swap_remove(i);
+                self.pos[cid] = IN_FLIGHT;
+                if let Some(&moved) = self.idle.get(i) {
+                    self.pos[moved] = i;
+                }
+                cid
+            })
+            .collect();
+        picked.sort_unstable();
+        picked
+    }
 }
 
 impl AsyncBufferedScheduler {
@@ -134,8 +205,8 @@ impl AsyncBufferedScheduler {
         };
         // Stages 1–3 (shared with the semi-sync scheduler): broadcast,
         // fanned client phase, upload, arrival stamping. The initial
-        // all-client dispatch is the parallel case; steady-state
-        // re-dispatches are single lanes.
+        // cohort dispatch is the parallel case; steady-state re-dispatches
+        // are single lanes.
         for up in
             super::dispatch_uploads(sim, &frame, &alive, now, workers, compute, dispatches)?
         {
@@ -163,14 +234,24 @@ impl Scheduler for AsyncBufferedScheduler {
         let mut broadcast: Option<(u64, Arc<[u8]>)> = None;
         let mut version: u64 = 0;
 
-        // Kick-off: every client starts on the initial model at once
-        // (async has no per-round participation sampling — a client is
-        // always training, uploading, or about to be re-dispatched).
-        let all: Vec<usize> = (0..n).collect();
+        // Concurrency target: `participation` bounds how many clients are
+        // in flight at once. At 1.0 (default) the sampler is disabled and
+        // the original all-clients-always-running FedBuff regime runs
+        // bit-exactly (no sampling RNG is consumed).
+        let target = ((n as f64 * sim.cfg.participation).round() as usize).clamp(1, n);
+        let mut sampler = (target < n).then(|| SlotSampler::new(n, sim.cfg.seed));
+
+        // Kick-off: the initial cohort starts on the initial model at
+        // once — everyone without sampling, a uniform draw of `target`
+        // clients with it.
+        let initial: Vec<usize> = match sampler.as_mut() {
+            None => (0..n).collect(),
+            Some(s) => s.draw(target),
+        };
         let t0 = sim.vclock;
         self.dispatch(
-            sim, &compute, &mut queue, &mut dispatches, &mut broadcast, version, &all, t0,
-            workers,
+            sim, &compute, &mut queue, &mut dispatches, &mut broadcast, version, &initial,
+            t0, workers,
         )?;
 
         let mut applies = 0usize;
@@ -192,9 +273,20 @@ impl Scheduler for AsyncBufferedScheduler {
             sim.vclock = t;
             match ev {
                 Event::Retry { cid } => {
+                    // The dropped attempt's slot frees; without sampling
+                    // the same client retries, with sampling the slot is
+                    // refilled by a fresh uniform draw over the idle pool
+                    // (which includes the dropped client).
+                    let next: Vec<usize> = match sampler.as_mut() {
+                        None => vec![cid],
+                        Some(s) => {
+                            s.release(cid);
+                            s.draw(1)
+                        }
+                    };
                     self.dispatch(
                         sim, &compute, &mut queue, &mut dispatches, &mut broadcast, version,
-                        &[cid], t, workers,
+                        &next, t, workers,
                     )?;
                 }
                 Event::Arrival { up, version: v } => {
@@ -255,14 +347,24 @@ impl Scheduler for AsyncBufferedScheduler {
                         sum_d = 0;
                     }
 
-                    // Re-dispatch on the newest model (post-apply if this
-                    // arrival completed a buffer) — unless the workload is
-                    // done: the final apply must not burn one more local
-                    // training pass whose result nothing will ever fold.
+                    // Refill the freed slot on the newest model (post-apply
+                    // if this arrival completed a buffer) — unless the
+                    // workload is done: the final apply must not burn one
+                    // more local training pass whose result nothing will
+                    // ever fold. Without sampling the same client is
+                    // re-dispatched; with it the slot goes to a fresh
+                    // uniform draw over the idle pool.
                     if applies < sim.cfg.rounds {
+                        let next: Vec<usize> = match sampler.as_mut() {
+                            None => vec![cid],
+                            Some(s) => {
+                                s.release(cid);
+                                s.draw(1)
+                            }
+                        };
                         self.dispatch(
                             sim, &compute, &mut queue, &mut dispatches, &mut broadcast,
-                            version, &[cid], t, workers,
+                            version, &next, t, workers,
                         )?;
                     }
                 }

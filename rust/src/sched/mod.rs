@@ -159,6 +159,9 @@ impl SchedKind {
     }
 }
 
+// (The async scheduler additionally honors `ExperimentConfig::
+// participation` as a concurrency bound — see `asyncbuf`'s module docs.)
+
 /// Default apply buffer size for `async` when `k=` is not given.
 pub const DEFAULT_ASYNC_K: usize = 8;
 /// Default staleness exponent for `async` when `staleness=` is not given.

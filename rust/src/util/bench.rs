@@ -164,6 +164,31 @@ impl Bencher {
     pub fn results(&self) -> &[Stats] {
         &self.results
     }
+
+    /// Serialize the suite's results as the `BENCH_<suite>.json`
+    /// trajectory format (hand-rolled — the hermetic build has no serde).
+    /// `extra` is spliced verbatim after the benches array for
+    /// suite-specific sections (e.g. the scale bench's `"memory"` object);
+    /// pass `""` for none, otherwise start it with `,\n  `.
+    pub fn to_json(&self, extra: &str) -> String {
+        let mut json = format!("{{\n  \"suite\": \"{}\",\n  \"benches\": [\n", self.suite);
+        for (i, s) in self.results.iter().enumerate() {
+            json.push_str(&format!(
+                "    {{\"name\": \"{}\", \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \
+                 \"stddev_ns\": {:.1}, \"min_ns\": {:.1}}}{}\n",
+                s.name,
+                s.median_ns,
+                s.mean_ns,
+                s.stddev_ns,
+                s.min_ns,
+                if i + 1 == self.results.len() { "" } else { "," }
+            ));
+        }
+        json.push_str("  ]");
+        json.push_str(extra);
+        json.push_str("\n}\n");
+        json
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,200 @@
+//! Integration tests for the basis-interning plane
+//! (`gradestc::compress::intern`): cross-lane dedup through real
+//! decompressor payload streams, copy-on-write splits on divergence,
+//! entry release on lane drop, and the population-scale memory bound a
+//! 1k-client simulation must satisfy (server basis state ≪ clients ×
+//! basis bytes). Native backend: hermetic, no artifacts needed.
+
+use gradestc::compress::gradestc::basis_bytes_per_lane;
+use gradestc::compress::{
+    BasisPool, Compressor as _, Decompressor as _, GradEstcClient, GradEstcServer,
+};
+use gradestc::config::{
+    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
+    NetConfig, SchedConfig,
+};
+use gradestc::coordinator::Simulation;
+use gradestc::model::meta::{layer_table, ModelMeta};
+use gradestc::util::rng::Pcg64;
+
+fn params(k: usize) -> GradEstcParams {
+    GradEstcParams { k, ..Default::default() }
+}
+
+fn random_update(meta: &ModelMeta, rng: &mut Pcg64) -> Vec<Vec<f32>> {
+    meta.layers.iter().map(|l| rng.normal_vec(l.size())).collect()
+}
+
+/// N server lanes receiving bit-identical payload streams must share one
+/// pool entry per compressed layer — the "shared basis costs one
+/// allocation" half of the tentpole — through init, incremental
+/// replacements, and the COW churn they cause.
+#[test]
+fn lanes_on_identical_payload_streams_share_pool_entries() {
+    let meta = layer_table(ModelKind::LeNet5);
+    let p = params(8);
+    let pool = BasisPool::new();
+    let mut client = GradEstcClient::new(&meta, p.clone(), 3);
+    let mut servers: Vec<GradEstcServer> = (0..16)
+        .map(|_| GradEstcServer::with_pool(&meta, p.clone(), pool.clone()))
+        .collect();
+
+    let mut rng = Pcg64::seeded(41);
+    for _round in 0..3 {
+        let update = random_update(&meta, &mut rng);
+        let (payloads, _) = client.compress(&update);
+        for s in &mut servers {
+            let _ = s.decode(payloads.clone());
+        }
+    }
+
+    let nlayers = client.compressed_tensors().len();
+    assert!(nlayers > 0);
+    let stats = pool.stats();
+    assert_eq!(
+        stats.entries, nlayers,
+        "16 lanes on one payload stream must pool to one entry per layer"
+    );
+    // Memory is one lane's basis set, not sixteen — and stale COW
+    // generations from the replacement rounds were all released.
+    assert_eq!(stats.bytes(), basis_bytes_per_lane(&meta, &p));
+    // Sharing is real lockstep: every lane fingerprints identically to
+    // the client, and references exactly one lane's worth of bytes.
+    for s in &servers {
+        assert_eq!(s.state_fingerprint(), client.state_fingerprint());
+        assert_eq!(s.referenced_basis_bytes(), basis_bytes_per_lane(&meta, &p));
+    }
+}
+
+/// A lane receiving a different update must copy-on-write its own entry
+/// without disturbing lanes still on the shared one.
+#[test]
+fn divergent_update_splits_cow_entry() {
+    let meta = layer_table(ModelKind::LeNet5);
+    // replace_all guarantees every compressed layer's basis changes every
+    // round, so divergence is total and deterministic.
+    let p = GradEstcParams { k: 8, replace_all: true, ..Default::default() };
+    let pool = BasisPool::new();
+    let mut client_a = GradEstcClient::new(&meta, p.clone(), 3);
+    let mut client_b = GradEstcClient::new(&meta, p.clone(), 99);
+    let mut server_a = GradEstcServer::with_pool(&meta, p.clone(), pool.clone());
+    let mut server_b = GradEstcServer::with_pool(&meta, p.clone(), pool.clone());
+
+    let mut rng = Pcg64::seeded(42);
+    // Round 1: identical stream to both lanes — fully shared. (B's client
+    // advances on its own sketch RNG, so it is briefly out of lockstep
+    // with server B; round 2's replace_all overwrites every basis column,
+    // restoring the pairing — the test's final fingerprint checks rely on
+    // that.)
+    let shared = random_update(&meta, &mut rng);
+    let (payloads, _) = client_a.compress(&shared);
+    let _ = client_b.compress(&shared);
+    let _ = server_a.decode(payloads.clone());
+    let _ = server_b.decode(payloads);
+    let nlayers = client_a.compressed_tensors().len();
+    assert_eq!(pool.stats().entries, nlayers, "round 1 must be fully shared");
+
+    // Round 2: B sees a different update — every shared entry must split.
+    let (pa, _) = client_a.compress(&random_update(&meta, &mut rng));
+    let (pb, _) = client_b.compress(&random_update(&meta, &mut rng));
+    let _ = server_a.decode(pa);
+    let _ = server_b.decode(pb);
+    let stats = pool.stats();
+    assert_eq!(stats.entries, 2 * nlayers, "divergence must split every entry");
+    assert_eq!(stats.bytes(), 2 * basis_bytes_per_lane(&meta, &p));
+    assert_ne!(server_a.state_fingerprint(), server_b.state_fingerprint());
+    // Each lane still pairs with its own client.
+    assert_eq!(server_a.state_fingerprint(), client_a.state_fingerprint());
+    assert_eq!(server_b.state_fingerprint(), client_b.state_fingerprint());
+}
+
+/// Dropping a lane must release its pool entries: the pool holds weak
+/// references only, so refcount zero ⇒ entry gone, no retention.
+#[test]
+fn dropping_lanes_releases_pool_entries() {
+    let meta = layer_table(ModelKind::LeNet5);
+    let p = GradEstcParams { k: 8, replace_all: true, ..Default::default() };
+    let pool = BasisPool::new();
+    let mut lanes: Vec<(GradEstcClient, GradEstcServer)> = (0..4)
+        .map(|i| {
+            (
+                GradEstcClient::new(&meta, p.clone(), 7 + i),
+                GradEstcServer::with_pool(&meta, p.clone(), pool.clone()),
+            )
+        })
+        .collect();
+    let mut rng = Pcg64::seeded(43);
+    for (client, server) in &mut lanes {
+        let (payloads, _) = client.compress(&random_update(&meta, &mut rng));
+        let _ = server.decode(payloads);
+    }
+    let nlayers = lanes[0].0.compressed_tensors().len();
+    assert_eq!(pool.stats().entries, 4 * nlayers, "distinct lanes, distinct entries");
+
+    lanes.truncate(1);
+    assert_eq!(pool.stats().entries, nlayers, "dropped lanes must release entries");
+    lanes.clear();
+    assert_eq!(pool.stats().entries, 0, "empty population, empty pool");
+    assert_eq!(pool.stats().bytes(), 0);
+}
+
+/// The population-scale acceptance bar: a 1000-client GradESTC simulation
+/// with sampled participation holds server basis state for the lanes that
+/// actually participated — far below the naive `clients × basis` the
+/// pre-pool per-lane model paid — while per-lane lockstep still holds.
+#[test]
+fn thousand_client_server_state_is_far_below_naive() {
+    let clients = 1000usize;
+    let per_round = 50usize;
+    let rounds = 2usize;
+    let cfg = ExperimentConfig {
+        name: "it-intern-1k".into(),
+        dataset: DatasetKind::SynthMnist,
+        model: ModelKind::LeNet5,
+        distribution: DataDistribution::Iid,
+        num_clients: clients,
+        participation: per_round as f64 / clients as f64,
+        rounds,
+        local_epochs: 1,
+        batch_size: 32,
+        lr: 0.05,
+        samples_per_client: 2,
+        test_samples: 32,
+        eval_every: 1,
+        threshold_frac: 0.9,
+        compressor: CompressorKind::GradEstc(params(8)),
+        seed: 11,
+        use_xla: false,
+        artifacts_dir: "artifacts".into(),
+        workers: 0,
+        net: NetConfig::default(),
+        sched: SchedConfig::default(),
+    };
+    let mut sim = Simulation::build(cfg).unwrap();
+    sim.run().unwrap();
+
+    let per_lane = basis_bytes_per_lane(&layer_table(ModelKind::LeNet5), &params(8));
+    let pool = sim.basis_pool_stats();
+    let naive = clients * per_lane;
+    assert!(pool.entries > 0, "participants must have interned bases");
+    // At most `per_round × rounds` distinct lanes ever decoded a payload,
+    // so resident basis memory is bounded by the participant count…
+    assert!(
+        pool.bytes() <= per_round * rounds * per_lane,
+        "pool holds {} bytes, more than {} participants' worth",
+        pool.bytes(),
+        per_round * rounds
+    );
+    // …which is an order of magnitude under the naive per-client model.
+    assert!(
+        pool.bytes() * 10 <= naive,
+        "pool {} bytes not ≪ naive {} bytes (1000 × {per_lane})",
+        pool.bytes(),
+        naive
+    );
+    // Lockstep is untouched by interning: every lane's paired
+    // fingerprints agree (participants and never-sampled lanes alike).
+    for (cid, (client_fp, server_fp)) in sim.lane_fingerprints().iter().enumerate() {
+        assert_eq!(client_fp, server_fp, "client {cid}: lane state diverged");
+    }
+}

@@ -6,12 +6,14 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use gradestc::compress::gradestc::basis_bytes_per_lane;
 use gradestc::config::{
     CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, NetConfig,
     SchedConfig, SchedKind,
 };
 use gradestc::coordinator::Simulation;
 use gradestc::metrics::RoundRecord;
+use gradestc::model::meta::layer_table;
 use gradestc::net::{Loopback, Transport};
 
 fn base_cfg(name: &str, comp: CompressorKind) -> ExperimentConfig {
@@ -144,19 +146,32 @@ fn async_scheduler_bit_identical_across_workers() {
 /// Out-of-order arrival must not break the paired compressor/decompressor
 /// lockstep: after an async run every lane's client and server
 /// fingerprints (GradESTC basis bits) are equal, including lanes whose
-/// last upload was still in flight at shutdown.
+/// last upload was still in flight at shutdown — and the basis pool's
+/// resident bytes stay bounded by the population's basis set (the COW
+/// churn of out-of-order updates must release every stale generation).
 #[test]
 fn async_keeps_lane_state_lockstep() {
     let mut cfg = base_cfg("it-sched-async-lockstep", gradestc8());
     cfg.rounds = 4;
     cfg.net.het_spread = 1.5;
     cfg.sched.kind = SchedKind::Async { k: 2, staleness_p: 1.0 };
+    let n = cfg.num_clients;
+    let model = cfg.model;
     let mut sim = Simulation::build(cfg).unwrap();
     sim.run_scheduled().unwrap();
     for (cid, (client_fp, server_fp)) in sim.lane_fingerprints().iter().enumerate() {
         assert_eq!(client_fp, server_fp, "client {cid}: lane state diverged");
         assert_ne!(*client_fp, 0, "client {cid}: fingerprints must cover bases");
     }
+    let pool = sim.basis_pool_stats();
+    let per_lane =
+        basis_bytes_per_lane(&layer_table(model), &GradEstcParams { k: 8, ..Default::default() });
+    assert!(pool.entries > 0, "dispatched lanes must intern bases");
+    assert_eq!(
+        pool.bytes(),
+        n * per_lane,
+        "all {n} lanes ran: pool must hold exactly their live bases (no stale COW generations)"
+    );
 }
 
 /// Acceptance: under heterogeneous links the async scheduler completes
@@ -286,6 +301,13 @@ fn semisync_rolls_stragglers_into_later_rounds() {
     for (cid, (client_fp, server_fp)) in sim.lane_fingerprints().iter().enumerate() {
         assert_eq!(client_fp, server_fp, "client {cid}: lane state diverged under rollover");
     }
+    // Rollover decode order must not leak stale basis generations: the
+    // pool holds exactly the 4 live lanes' bases.
+    let per_lane = basis_bytes_per_lane(
+        &layer_table(gradestc::config::ModelKind::LeNet5),
+        &GradEstcParams { k: 8, ..Default::default() },
+    );
+    assert_eq!(sim.basis_pool_stats().bytes(), 4 * per_lane);
     // The virtual clock only moves forward.
     assert!(
         recs.windows(2).all(|w| w[0].sim_clock_s <= w[1].sim_clock_s),
@@ -320,6 +342,68 @@ fn semisync_no_deadline_learns_and_compute_model_only_affects_time() {
         .filter(|a| !a.is_nan())
         .fold(0.0f64, f64::max);
     assert!(best > 0.35, "semisync stopped learning: best acc {best}");
+}
+
+/// Async participation sampling (PR 5): with `participation < 1.0` the
+/// async scheduler keeps only `round(participation · n)` clients in
+/// flight, refilling freed slots by uniform draws over the idle pool on a
+/// dedicated stream — and stays bit-identical across worker counts, with
+/// every lane's paired state in lockstep.
+#[test]
+fn async_sampling_bit_identical_across_workers() {
+    let mut cfg = base_cfg("it-sched-async-sampling-det", gradestc8());
+    cfg.num_clients = 32;
+    cfg.participation = 0.25; // 8 concurrent out of 32
+    cfg.samples_per_client = 32;
+    cfg.rounds = 4;
+    cfg.net.het_spread = 1.0;
+    cfg.net.dropout = 0.1;
+    cfg.sched.kind = SchedKind::Async { k: 4, staleness_p: 0.5 };
+    let (seq, fp_seq, up_seq) = run_scheduled(cfg.clone(), 1);
+    let (par, fp_par, up_par) = run_scheduled(cfg, 8);
+    assert_rounds_bitwise_equal(&seq, &par, "async-sampled w1 vs w8");
+    assert_eq!(fp_seq, fp_par, "lane fingerprints diverged across worker counts");
+    assert_eq!(up_seq, up_par, "ledger totals diverged across worker counts");
+    // Every apply still folds exactly k arrivals.
+    assert!(seq.iter().all(|r| r.survivors.len() == 4));
+    // The population is genuinely larger than the working set: 4 applies
+    // of 4 arrivals can touch at most 16 of the 32 clients.
+    let folded: std::collections::BTreeSet<usize> =
+        seq.iter().flat_map(|r| r.survivors.iter().copied()).collect();
+    assert!(folded.len() < 32, "sampling cannot have folded every client");
+    assert!(!folded.is_empty());
+}
+
+/// Population ≫ concurrent clients is the pool's reason to exist: after a
+/// sampled async run, server basis memory follows the lanes that were
+/// actually dispatched, strictly below the naive `clients × basis`
+/// baseline — while lockstep holds for dispatched and idle lanes alike.
+#[test]
+fn async_sampling_keeps_lockstep_and_bounds_pool_memory() {
+    let mut cfg = base_cfg("it-sched-async-sampling-pool", gradestc8());
+    cfg.num_clients = 32;
+    cfg.participation = 0.25;
+    cfg.samples_per_client = 32;
+    cfg.rounds = 3;
+    cfg.net.het_spread = 1.0;
+    cfg.sched.kind = SchedKind::Async { k: 4, staleness_p: 0.5 };
+    let n = cfg.num_clients;
+    let model = cfg.model;
+    let mut sim = Simulation::build(cfg).unwrap();
+    sim.run_scheduled().unwrap();
+    for (cid, (client_fp, server_fp)) in sim.lane_fingerprints().iter().enumerate() {
+        assert_eq!(client_fp, server_fp, "client {cid}: lane state diverged");
+    }
+    let per_lane =
+        basis_bytes_per_lane(&layer_table(model), &GradEstcParams { k: 8, ..Default::default() });
+    let pool = sim.basis_pool_stats();
+    assert!(pool.entries > 0, "dispatched lanes must intern bases");
+    assert!(
+        pool.bytes() < n * per_lane,
+        "pool {} bytes not below the naive {n}-lane baseline {}",
+        pool.bytes(),
+        n * per_lane
+    );
 }
 
 /// The scheduled sync path is the default: `run_scheduled` on an
