@@ -1,11 +1,19 @@
 //! Micro-benchmarks for the dense linear-algebra substrate — the
-//! compression hot path's building blocks (§Perf L3).
+//! compression hot path's building blocks (§Perf L3) — plus the
+//! scalar-vs-blocked backend sweep the compute-backend plane's speedup
+//! claims rest on.
 //!
-//! Run with `cargo bench --bench linalg`; set `GRADESTC_BENCH_FAST=1` for
-//! a quick pass.
+//! The sweep runs the two kernels the round loop spends its time in —
+//! the fused server fold `C += α·M·A` (`matmul_acc`) and the client
+//! projection `A = MᵀG` (`matmul_at_b`) — on ResNetLite layer geometries
+//! at rank `k ∈ {8, 32, 128}`, once per backend, so the
+//! `BENCH_linalg.json` trajectory file carries the blocked/scalar ratio
+//! per shape. Run with `cargo bench --bench linalg`
+//! (`GRADESTC_BENCH_FAST=1` for a quick pass).
 
 use gradestc::linalg::{
-    householder_qr, matmul, matmul_at_b, randomized_svd, thin_svd, Mat, RsvdOptions,
+    householder_qr, matmul, matmul_at_b, randomized_svd, thin_svd, Backend, BlockedBackend, Mat,
+    RsvdOptions, ScalarBackend,
 };
 use gradestc::util::bench::Bencher;
 use gradestc::util::rng::Pcg64;
@@ -45,6 +53,39 @@ fn main() {
         );
     }
 
+    // Backend sweep: the aggregation plane's fused fold and the
+    // compressor's projection, scalar vs blocked, on the ResNetLite layer
+    // geometries × rank. Names are `<kernel>/<geom>/k<rank>/<backend>` so
+    // the gate/plot tooling can pair the two backends per shape.
+    let backends: [(&str, &dyn Backend); 2] =
+        [("scalar", &ScalarBackend), ("blocked", &BlockedBackend)];
+    for &(geom, l, m) in &[("resnet-stage2", 576usize, 64usize), ("resnet-stage3", 1152, 128)] {
+        for k in [8usize, 32, 128] {
+            let basis = Mat::randn(l, k, &mut rng);
+            let g = Mat::randn(l, m, &mut rng);
+            let coeffs = Mat::randn(k, m, &mut rng);
+            let flops = (2 * l * k * m) as f64;
+            for (bname, bk) in backends {
+                b.bench_with_throughput(
+                    &format!("matmul_acc/{geom}/k{k}/{bname}"),
+                    Some((flops, "FLOP")),
+                    || {
+                        let mut acc = Mat::zeros(l, m);
+                        bk.matmul_acc(&mut acc, 0.5, &basis, &coeffs);
+                        std::hint::black_box(acc);
+                    },
+                );
+                b.bench_with_throughput(
+                    &format!("matmul_at_b/{geom}/k{k}/{bname}"),
+                    Some((flops, "FLOP")),
+                    || {
+                        std::hint::black_box(bk.matmul_at_b(&basis, &g));
+                    },
+                );
+            }
+        }
+    }
+
     // Randomized SVD at the error-matrix geometry (d ≈ 8 typical).
     for &(name, l, m, d) in
         &[("resnet-stage3", 1152usize, 128usize, 8usize), ("alexnet-fc1", 2048, 512, 8)]
@@ -61,4 +102,9 @@ fn main() {
     b.bench("qr_1152x14", || std::hint::black_box(householder_qr(&tall)));
     let sketch = Mat::randn(14, 128, &mut rng);
     b.bench("thin_svd_14x128", || std::hint::black_box(thin_svd(&sketch, 8)));
+
+    // Machine-readable trajectory file (the bench-linalg CI job uploads
+    // it; scripts/bench_gate.py diffs it against the committed baseline).
+    std::fs::write("BENCH_linalg.json", b.to_json("")).expect("writing BENCH_linalg.json");
+    println!("wrote BENCH_linalg.json ({} benches)", b.results().len());
 }

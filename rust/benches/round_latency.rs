@@ -10,8 +10,8 @@
 
 use gradestc::compress::{build_pair, Compressor as _, Decompressor as _, LayerUpdate, Payload};
 use gradestc::config::{
-    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
-    NetConfig, SchedConfig,
+    BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
+    ModelKind, NetConfig, SchedConfig,
 };
 use gradestc::coordinator::{ServerAggregator, Simulation};
 use gradestc::model::meta::layer_table;
@@ -44,6 +44,7 @@ fn cfg(model: ModelKind, dataset: DatasetKind, comp: CompressorKind, xla: bool) 
         workers: 1,
         net: NetConfig::default(),
         sched: SchedConfig::default(),
+        backend: BackendKind::Auto,
     }
 }
 

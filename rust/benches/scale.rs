@@ -16,8 +16,8 @@
 
 use gradestc::compress::gradestc::basis_bytes_per_lane;
 use gradestc::config::{
-    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
-    NetConfig, SchedConfig, SchedKind,
+    BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
+    ModelKind, NetConfig, SchedConfig, SchedKind,
 };
 use gradestc::coordinator::Simulation;
 use gradestc::model::meta::layer_table;
@@ -48,6 +48,7 @@ fn cfg(clients: usize, kind: SchedKind, rounds: usize) -> ExperimentConfig {
         workers: 0,
         net: NetConfig { het_spread: 1.0, ..NetConfig::default() },
         sched: SchedConfig { kind, ..SchedConfig::default() },
+        backend: BackendKind::Auto,
     }
 }
 

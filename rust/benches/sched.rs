@@ -11,8 +11,8 @@
 //! budget).
 
 use gradestc::config::{
-    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
-    NetConfig, SchedConfig, SchedKind,
+    BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
+    ModelKind, NetConfig, SchedConfig, SchedKind,
 };
 use gradestc::coordinator::Simulation;
 use gradestc::util::bench::Bencher;
@@ -41,6 +41,7 @@ fn cfg(kind: SchedKind, workers: usize) -> ExperimentConfig {
         workers,
         net: NetConfig { het_spread: 1.0, ..NetConfig::default() },
         sched: SchedConfig { kind, ..SchedConfig::default() },
+        backend: BackendKind::Auto,
     }
 }
 

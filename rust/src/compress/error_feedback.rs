@@ -31,7 +31,14 @@ impl EfWrapper {
         meta: &crate::model::meta::ModelMeta,
         params: crate::config::GradEstcParams,
     ) -> Self {
-        let mirror = GradEstcServer::new(meta, params);
+        // The mirror must replay the client's arithmetic exactly, so it
+        // runs on the same compute backend.
+        let mirror = GradEstcServer::with_pool_backend(
+            meta,
+            params,
+            super::BasisPool::new(),
+            inner.backend(),
+        );
         EfWrapper { inner, mirror, residual: None }
     }
 }

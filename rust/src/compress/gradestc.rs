@@ -72,7 +72,9 @@ use super::{
     SegmentGeom,
 };
 use crate::config::GradEstcParams;
-use crate::linalg::{matmul, matmul_at_b, mgs_orthonormalize, randomized_svd, Mat, RsvdOptions};
+use crate::linalg::{
+    default_backend, mgs_orthonormalize_in, randomized_svd_in, Backend, Mat, RsvdOptions,
+};
 use crate::model::meta::{LayerRole, ModelMeta};
 use crate::util::rng::Pcg64;
 
@@ -176,11 +178,24 @@ pub struct GradEstcClient {
     layers: Vec<ClientLayer>,
     rng: Pcg64,
     round: usize,
+    backend: &'static dyn Backend,
 }
 
 impl GradEstcClient {
     /// Build for a model; `seed` drives the randomized SVD sketches.
+    /// Uses the process-default compute backend; see [`Self::with_backend`].
     pub fn new(meta: &ModelMeta, params: GradEstcParams, seed: u64) -> Self {
+        Self::with_backend(meta, params, seed, default_backend())
+    }
+
+    /// [`Self::new`] pinned to an explicit compute backend (projection,
+    /// rSVD mining and the periodic MGS repair all run through it).
+    pub fn with_backend(
+        meta: &ModelMeta,
+        params: GradEstcParams,
+        seed: u64,
+        backend: &'static dyn Backend,
+    ) -> Self {
         let layers = layer_geoms(meta, &params)
             .into_iter()
             .map(|geom| ClientLayer { geom, basis: None, d: geom.k })
@@ -191,12 +206,19 @@ impl GradEstcClient {
             layers,
             rng: Pcg64::new(seed, 0xE57C),
             round: 0,
+            backend,
         }
     }
 
     /// Tensor indices being compressed (for tests / instrumentation).
     pub fn compressed_tensors(&self) -> Vec<usize> {
         self.layers.iter().map(|s| s.geom.tensor).collect()
+    }
+
+    /// The compute backend this client runs on (the error-feedback wrapper
+    /// builds its mirror decompressor on the same one).
+    pub fn backend(&self) -> &'static dyn Backend {
+        self.backend
     }
 
     /// Current basis matrices (initialized layers only) — exposed for the
@@ -206,6 +228,7 @@ impl GradEstcClient {
     }
 
     fn compress_layer(
+        bk: &dyn Backend,
         state: &mut ClientLayer,
         params: &GradEstcParams,
         flat: &[f32],
@@ -223,7 +246,7 @@ impl GradEstcClient {
         match &mut state.basis {
             // ---- first round: initialize via rSVD of G (Alg. 1 l.2-8) ----
             None => {
-                let svd = randomized_svd(&g, k, RsvdOptions::default(), rng);
+                let svd = randomized_svd_in(bk, &g, k, RsvdOptions::default(), rng);
                 let rank = svd.s.len();
                 let mut basis = Mat::zeros(l, k);
                 for j in 0..rank {
@@ -238,11 +261,11 @@ impl GradEstcClient {
                 }
                 let ortho_fill = rank < k;
                 if ortho_fill {
-                    mgs_orthonormalize(&mut basis, 1e-7);
+                    mgs_orthonormalize_in(bk, &mut basis, 1e-7);
                 }
                 // A = Σ Vᵀ (equivalently MᵀG; recompute if we touched M).
                 let coeffs = if ortho_fill {
-                    matmul_at_b(&basis, &g)
+                    bk.matmul_at_b(&basis, &g)
                 } else {
                     let mut a = Mat::zeros(k, m);
                     for i in 0..rank {
@@ -269,11 +292,11 @@ impl GradEstcClient {
             // ---- subsequent rounds (Alg. 1 l.10-29) ----
             Some(basis) => {
                 if reortho_due {
-                    mgs_orthonormalize(basis, 1e-7);
+                    mgs_orthonormalize_in(bk, basis, 1e-7);
                 }
                 // GradESTC-first ablation: static basis, only coefficients.
                 if params.freeze_after_init {
-                    let a = matmul_at_b(basis, &g);
+                    let a = bk.matmul_at_b(basis, &g);
                     return Payload::Basis {
                         replace_idx: Vec::new(),
                         new_vectors: Vec::new(),
@@ -285,12 +308,12 @@ impl GradEstcClient {
                 }
                 // GradESTC-all ablation: refresh the whole basis each round.
                 if params.replace_all {
-                    let svd = randomized_svd(&g, k, RsvdOptions::default(), rng);
+                    let svd = randomized_svd_in(bk, &g, k, RsvdOptions::default(), rng);
                     let rank = svd.s.len();
                     for j in 0..rank {
                         basis.set_col(j, &svd.u.col(j));
                     }
-                    let a = matmul_at_b(basis, &g);
+                    let a = bk.matmul_at_b(basis, &g);
                     stats.sum_d += k as u64;
                     stats.replaced += rank as u64;
                     return Payload::Basis {
@@ -307,11 +330,11 @@ impl GradEstcClient {
                 stats.sum_d += d as u64;
 
                 // A = MᵀG ; E = G − MA (the projection kernel).
-                let mut a = matmul_at_b(basis, &g);
-                let e = g.sub(&matmul(basis, &a));
+                let mut a = bk.matmul_at_b(basis, &g);
+                let e = g.sub(&bk.matmul(basis, &a));
 
                 // Candidates from the fitting error.
-                let svd_e = randomized_svd(&e, d, RsvdOptions::default(), rng);
+                let svd_e = randomized_svd_in(bk, &e, d, RsvdOptions::default(), rng);
                 // Keep only genuinely non-zero directions.
                 let d_eff = svd_e.s.iter().take_while(|&&s| s > 1e-7).count();
 
@@ -390,6 +413,7 @@ impl Compressor for GradEstcClient {
         for state in &mut self.layers {
             let tensor = state.geom.tensor;
             payloads[tensor] = Self::compress_layer(
+                self.backend,
                 state,
                 &self.params,
                 &update[tensor],
@@ -423,6 +447,7 @@ pub struct GradEstcServer {
     layers: Vec<ServerLayer>,
     round: usize,
     pool: BasisPool,
+    backend: &'static dyn Backend,
 }
 
 impl GradEstcServer {
@@ -436,11 +461,23 @@ impl GradEstcServer {
     /// Build the mirror interning its basis state in `pool` (shared with
     /// every other lane of the simulation).
     pub fn with_pool(meta: &ModelMeta, params: GradEstcParams, pool: BasisPool) -> Self {
+        Self::with_pool_backend(meta, params, pool, default_backend())
+    }
+
+    /// [`Self::with_pool`] pinned to an explicit compute backend (the
+    /// mirrored MGS repair runs through it — it must match the client's
+    /// backend for the lockstep invariant to hold bit-exactly).
+    pub fn with_pool_backend(
+        meta: &ModelMeta,
+        params: GradEstcParams,
+        pool: BasisPool,
+        backend: &'static dyn Backend,
+    ) -> Self {
         let layers = layer_geoms(meta, &params)
             .into_iter()
             .map(|geom| ServerLayer { geom, basis: None })
             .collect();
-        GradEstcServer { params, layers, round: 0, pool }
+        GradEstcServer { params, layers, round: 0, pool, backend }
     }
 
     /// Bytes this lane's basis handles *reference* in the shared pool
@@ -498,8 +535,9 @@ impl Decompressor for GradEstcServer {
                 };
                 if reortho_due {
                     // Mirror the client's deterministic repair (same
-                    // schedule, same algorithm → bit-identical state).
-                    mgs_orthonormalize(&mut basis, 1e-7);
+                    // schedule, same algorithm, same backend →
+                    // bit-identical state).
+                    mgs_orthonormalize_in(self.backend, &mut basis, 1e-7);
                 }
                 apply_replacements(&mut basis, &replace_idx, &new_vectors, geom.l);
                 state.basis = Some(self.pool.intern(basis));
@@ -525,7 +563,7 @@ impl Decompressor for GradEstcServer {
 mod tests {
     use super::*;
     use crate::config::ModelKind;
-    use crate::linalg::ortho_defect;
+    use crate::linalg::{matmul, ortho_defect};
     use crate::model::meta::layer_table;
 
     fn params(k: usize) -> GradEstcParams {

@@ -357,6 +357,19 @@ pub fn build_pair_in(
     meta: &ModelMeta,
     seed: u64,
 ) -> (Box<dyn Compressor>, Box<dyn Decompressor>) {
+    build_pair_with(pool, kind, meta, seed, crate::linalg::default_backend())
+}
+
+/// [`build_pair_in`] pinned to an explicit compute [`Backend`]. Both ends
+/// of the lane get the same backend — the GradESTC lockstep invariant
+/// (client and server replay the identical MGS repair) requires it.
+pub fn build_pair_with(
+    pool: &BasisPool,
+    kind: &crate::config::CompressorKind,
+    meta: &ModelMeta,
+    seed: u64,
+    backend: &'static dyn crate::linalg::Backend,
+) -> (Box<dyn Compressor>, Box<dyn Decompressor>) {
     use crate::config::CompressorKind as K;
     match kind {
         K::None => {
@@ -385,13 +398,13 @@ pub fn build_pair_in(
             (Box::new(c), Box::new(d))
         }
         K::SvdFed { k, gamma } => {
-            let c = svdfed::SvdFedCompressor::new(meta, *k, *gamma, seed);
+            let c = svdfed::SvdFedCompressor::with_backend(meta, *k, *gamma, seed, backend);
             let d = svdfed::SvdFedDecompressor::with_pool(meta, pool.clone());
             (Box::new(c), Box::new(d))
         }
         K::GradEstc(p) => {
-            let c = GradEstcClient::new(meta, p.clone(), seed);
-            let d = GradEstcServer::with_pool(meta, p.clone(), pool.clone());
+            let c = GradEstcClient::with_backend(meta, p.clone(), seed, backend);
+            let d = GradEstcServer::with_pool_backend(meta, p.clone(), pool.clone(), backend);
             if p.error_feedback {
                 (Box::new(EfWrapper::new(c, meta, p.clone())), Box::new(d))
             } else {

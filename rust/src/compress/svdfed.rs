@@ -39,7 +39,7 @@ use super::{
     SegmentGeom,
 };
 use crate::config::GradEstcParams;
-use crate::linalg::{matmul, matmul_at_b, randomized_svd, Mat, RsvdOptions};
+use crate::linalg::{default_backend, randomized_svd_in, Backend, Mat, RsvdOptions};
 use crate::model::meta::ModelMeta;
 use crate::util::rng::Pcg64;
 
@@ -66,11 +66,24 @@ pub struct SvdFedCompressor {
     /// Relative fitting error that triggers a basis re-fit.
     gamma: f64,
     rng: Pcg64,
+    backend: &'static dyn Backend,
 }
 
 impl SvdFedCompressor {
     /// `k` = basis rank; `gamma` = relative-error refresh threshold.
+    /// Uses the process-default compute backend; see [`Self::with_backend`].
     pub fn new(meta: &ModelMeta, k: usize, gamma: f64, seed: u64) -> Self {
+        Self::with_backend(meta, k, gamma, seed, default_backend())
+    }
+
+    /// [`Self::new`] pinned to an explicit compute backend.
+    pub fn with_backend(
+        meta: &ModelMeta,
+        k: usize,
+        gamma: f64,
+        seed: u64,
+        backend: &'static dyn Backend,
+    ) -> Self {
         let params = GradEstcParams { k, ..Default::default() };
         SvdFedCompressor {
             layers: layer_geoms(meta, &params)
@@ -80,11 +93,12 @@ impl SvdFedCompressor {
             ntensors: meta.layers.len(),
             gamma,
             rng: Pcg64::new(seed, 0x57DF),
+            backend,
         }
     }
 
-    fn fit_basis(g: &Mat, k: usize, rng: &mut Pcg64) -> Mat {
-        let svd = randomized_svd(g, k, RsvdOptions::default(), rng);
+    fn fit_basis(bk: &dyn Backend, g: &Mat, k: usize, rng: &mut Pcg64) -> Mat {
+        let svd = randomized_svd_in(bk, g, k, RsvdOptions::default(), rng);
         let mut basis = Mat::zeros(g.rows(), k);
         for j in 0..svd.s.len() {
             basis.set_col(j, &svd.u.col(j));
@@ -103,6 +117,7 @@ impl Compressor for SvdFedCompressor {
         let mut stats = CompressStats::default();
         let mut payloads: Vec<Payload> =
             update.iter().map(|t| Payload::Raw(t.clone())).collect();
+        let bk = self.backend;
         for state in &mut self.layers {
             let geom = state.geom;
             let g = to_g(&geom, &update[geom.tensor]);
@@ -113,21 +128,21 @@ impl Compressor for SvdFedCompressor {
                 None => true,
                 Some(basis) => {
                     // Relative fitting error against the static basis.
-                    let a = matmul_at_b(basis, &g);
-                    let e = g.sub(&matmul(basis, &a));
+                    let a = bk.matmul_at_b(basis, &g);
+                    let e = g.sub(&bk.matmul(basis, &a));
                     let rel = e.fro_norm() as f64 / (g.fro_norm() as f64).max(1e-20);
                     rel > self.gamma
                 }
             };
             if needs_fit {
-                let basis = Self::fit_basis(&g, k, &mut self.rng);
+                let basis = Self::fit_basis(bk, &g, k, &mut self.rng);
                 refit_basis = Some(basis.as_slice().to_vec());
                 state.basis = Some(basis);
                 stats.sum_d += k as u64;
                 stats.replaced += k as u64;
             }
             let basis = state.basis.as_ref().unwrap();
-            let a = matmul_at_b(basis, &g);
+            let a = bk.matmul_at_b(basis, &g);
             payloads[geom.tensor] = Payload::SvdCoeffs {
                 coeffs: a.as_slice().to_vec(),
                 refit_basis,
@@ -213,6 +228,7 @@ impl Decompressor for SvdFedDecompressor {
 mod tests {
     use super::*;
     use crate::config::ModelKind;
+    use crate::linalg::matmul;
     use crate::model::meta::layer_table;
 
     fn low_rank_update(meta: &ModelMeta, rng: &mut Pcg64, drift: f32) -> Vec<Vec<f32>> {

@@ -6,6 +6,7 @@
 //! results stay self-describing.
 
 use super::json::Json;
+use crate::linalg::BackendKind;
 use crate::net::NetConfig;
 use crate::sched::{SchedConfig, SchedKind};
 
@@ -202,6 +203,13 @@ pub struct ExperimentConfig {
     /// straggler rollover), or async buffered (`k` arrivals per apply,
     /// staleness-discounted), plus the per-dispatch compute-time draw.
     pub sched: SchedConfig,
+    /// Compute backend for the linalg hot path ([`crate::linalg`]):
+    /// `Auto` (blocked unless `GRADESTC_BACKEND` overrides), `Scalar`
+    /// (the frozen reference loops), or `Blocked` (cache-blocked,
+    /// SIMD-friendly kernels). Results are bit-identical at any worker
+    /// count for every choice; scalar vs blocked differ within ≤1e-5
+    /// relative on reassociated reductions.
+    pub backend: BackendKind,
 }
 
 impl ExperimentConfig {
@@ -229,6 +237,7 @@ impl ExperimentConfig {
             workers: 1,
             net: NetConfig::default(),
             sched: SchedConfig::default(),
+            backend: BackendKind::Auto,
         }
     }
 
@@ -272,6 +281,7 @@ impl ExperimentConfig {
             workers: 1,
             net: NetConfig::default(),
             sched: SchedConfig::default(),
+            backend: BackendKind::Auto,
         }
     }
 
@@ -347,6 +357,7 @@ impl ExperimentConfig {
             ("workers", Json::num(self.workers as f64)),
             ("net", net_to_json(&self.net)),
             ("sched", sched_to_json(&self.sched)),
+            ("backend", Json::str(self.backend.name())),
         ])
     }
 
@@ -393,6 +404,16 @@ impl ExperimentConfig {
             // Optional for backward compatibility with pre-scheduler
             // configs: absent means the synchronous lockstep default.
             sched: j.get("sched").map(parse_sched).transpose()?.unwrap_or_default(),
+            // Optional for backward compatibility with pre-backend
+            // configs: absent means Auto (blocked unless the
+            // GRADESTC_BACKEND environment variable overrides).
+            backend: j
+                .get("backend")
+                .map(|v| {
+                    BackendKind::parse(v.as_str().ok_or("backend must be a string")?)
+                })
+                .transpose()?
+                .unwrap_or_default(),
         })
     }
 }
@@ -697,6 +718,30 @@ mod tests {
         // Garbage kinds are rejected.
         if let Json::Obj(m) = &mut j {
             m.insert("sched".into(), Json::obj(vec![("kind", Json::str("warp"))]));
+        }
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn backend_roundtrips_and_defaults() {
+        for b in [BackendKind::Auto, BackendKind::Scalar, BackendKind::Blocked] {
+            let mut cfg = ExperimentConfig::preset_quickstart();
+            cfg.backend = b;
+            let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back, cfg);
+        }
+
+        // Pre-backend configs (no "backend" field) parse as Auto.
+        let mut j = ExperimentConfig::preset_quickstart().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("backend");
+        }
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.backend, BackendKind::Auto);
+
+        // Garbage backends are rejected.
+        if let Json::Obj(m) = &mut j {
+            m.insert("backend".into(), Json::str("abacus"));
         }
         assert!(ExperimentConfig::from_json(&j).is_err());
     }

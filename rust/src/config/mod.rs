@@ -14,8 +14,9 @@ pub use experiment::{
     CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
 };
 pub use json::Json;
-// The network knobs live with the net subsystem and the scheduler knobs
-// with the sched plane; re-exported here because they are part of the
-// experiment schema.
+// The network knobs live with the net subsystem, the scheduler knobs with
+// the sched plane, and the compute-backend selector with linalg;
+// re-exported here because they are part of the experiment schema.
+pub use crate::linalg::BackendKind;
 pub use crate::net::NetConfig;
 pub use crate::sched::{SchedConfig, SchedKind};

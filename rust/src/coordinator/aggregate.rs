@@ -38,7 +38,7 @@
 
 use crate::compress::codec::dequant_values;
 use crate::compress::{LayerUpdate, SegmentGeom};
-use crate::linalg::{axpy, matmul_acc, Mat};
+use crate::linalg::{axpy, default_backend, Backend, Mat};
 use crate::model::meta::ModelMeta;
 use crate::model::params::ParamStore;
 use crate::util::pool::parallel_map;
@@ -80,15 +80,23 @@ impl LayerAcc {
 /// updates — never `survivors × model`.
 pub struct ServerAggregator {
     accs: Vec<LayerAcc>,
+    backend: &'static dyn Backend,
 }
 
 impl ServerAggregator {
-    /// Fresh zero aggregate for a model. Accumulator buffers materialize
-    /// lazily on first fold (flat or segment space, whichever the layer's
-    /// updates call for).
+    /// Fresh zero aggregate for a model on the process-default compute
+    /// backend. Accumulator buffers materialize lazily on first fold (flat
+    /// or segment space, whichever the layer's updates call for).
     pub fn new(meta: &ModelMeta) -> Self {
+        Self::with_backend(meta, default_backend())
+    }
+
+    /// [`Self::new`] pinned to an explicit compute backend — the fused
+    /// low-rank fold (`Acc_G += α·M·A`) runs through its `matmul_acc`.
+    pub fn with_backend(meta: &ModelMeta, backend: &'static dyn Backend) -> Self {
         ServerAggregator {
             accs: meta.layers.iter().map(|_| LayerAcc::Empty).collect(),
+            backend,
         }
     }
 
@@ -97,7 +105,7 @@ impl ServerAggregator {
     pub fn fold(&mut self, scale: f32, updates: Vec<LayerUpdate>) {
         assert_eq!(updates.len(), self.accs.len(), "update tensor count mismatch");
         for (acc, update) in self.accs.iter_mut().zip(updates) {
-            fold_one(acc, scale, update);
+            fold_one(self.backend, acc, scale, update);
         }
     }
 
@@ -117,11 +125,12 @@ impl ServerAggregator {
                 per_tensor[t].push((scale, update));
             }
         }
+        let bk = self.backend;
         let units: Vec<(&mut LayerAcc, Vec<(f32, LayerUpdate)>)> =
             self.accs.iter_mut().zip(per_tensor).collect();
         parallel_map(workers, units, |(acc, folds)| {
             for (scale, update) in folds {
-                fold_one(acc, scale, update);
+                fold_one(bk, acc, scale, update);
             }
         });
     }
@@ -144,7 +153,7 @@ impl ServerAggregator {
     }
 }
 
-fn fold_one(acc: &mut LayerAcc, scale: f32, update: LayerUpdate) {
+fn fold_one(bk: &dyn Backend, acc: &mut LayerAcc, scale: f32, update: LayerUpdate) {
     match update {
         LayerUpdate::Dense(v) => {
             axpy(acc.flat(v.len(), "dense"), scale, &v);
@@ -182,7 +191,7 @@ fn fold_one(acc: &mut LayerAcc, scale: f32, update: LayerUpdate) {
             };
             assert_eq!(*acc_geom, geom, "segment geometry changed mid-round");
             // The fusion: Acc_G += scale · M·A, never materializing Ĝ.
-            matmul_acc(g, scale, &basis, &coeffs);
+            bk.matmul_acc(g, scale, &basis, &coeffs);
         }
     }
 }
@@ -272,8 +281,9 @@ mod tests {
         let mut rng = Pcg64::seeded(5);
         let geom = SegmentGeom { l: 4, m: 4, conv: None };
         let mut acc = LayerAcc::Empty;
-        fold_one(&mut acc, 1.0, LayerUpdate::Dense(vec![1.0; 16]));
+        fold_one(default_backend(), &mut acc, 1.0, LayerUpdate::Dense(vec![1.0; 16]));
         fold_one(
+            default_backend(),
             &mut acc,
             1.0,
             LayerUpdate::LowRank {
@@ -306,8 +316,8 @@ mod tests {
         }
 
         let mut acc = LayerAcc::Empty;
-        fold_one(&mut acc, s1, u1);
-        fold_one(&mut acc, s2, u2);
+        fold_one(default_backend(), &mut acc, s1, u1);
+        fold_one(default_backend(), &mut acc, s2, u2);
         let LayerAcc::Seg { g, geom } = acc else { panic!("accumulator not in G space") };
         let got = geom.segments_to_flat(&g);
         for (a, b) in expect.iter().zip(&got) {

@@ -55,8 +55,9 @@ pub use trainer::{NativeOrXla, ParallelTrainer, Trainer, XlaTrainer};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::compress::{build_pair_in, BasisPool, Compressor, Decompressor, LayerUpdate, PoolStats};
+use crate::compress::{build_pair_with, BasisPool, Compressor, Decompressor, LayerUpdate, PoolStats};
 use crate::config::{DatasetKind, ExperimentConfig, ModelKind};
+use crate::linalg::Backend;
 use crate::data::corpus::CorpusGenerator;
 use crate::data::synth::{Dataset, SynthGenerator, SynthSpec};
 use crate::data::{partition_indices, Partition};
@@ -114,6 +115,9 @@ pub struct Simulation {
     /// sync loop, scheduler-managed for semi-sync/async. Recorded per round
     /// as [`RoundRecord::sim_clock_s`].
     pub(crate) vclock: f64,
+    /// Compute backend resolved from `cfg.backend`: every compressor lane
+    /// and server aggregator in this simulation runs on it.
+    pub(crate) backend: &'static dyn Backend,
     /// Per-round records.
     pub recorder: RunRecorder,
     /// Optional per-round callback hook (gradient probes, logging).
@@ -209,10 +213,16 @@ impl Simulation {
         // decompressor interns its basis state here, so per-client server
         // memory is a handle, not a matrix, and identical bases dedupe.
         let basis_pool = BasisPool::new();
+        let backend = cfg.backend.resolve();
         let mut clients = Vec::with_capacity(cfg.num_clients);
         for (id, data) in shards.into_iter().enumerate() {
-            let (compressor, decompressor) =
-                build_pair_in(&basis_pool, &cfg.compressor, &meta, cfg.seed ^ (id as u64) << 8);
+            let (compressor, decompressor) = build_pair_with(
+                &basis_pool,
+                &cfg.compressor,
+                &meta,
+                cfg.seed ^ (id as u64) << 8,
+                backend,
+            );
             clients.push(Client {
                 id,
                 data,
@@ -247,6 +257,7 @@ impl Simulation {
             dropout,
             basis_pool,
             vclock: 0.0,
+            backend,
             recorder: RunRecorder::new(),
             round_hook: None,
         })
@@ -437,7 +448,7 @@ impl Simulation {
                 .filter(|(_, ot)| **ot)
                 .map(|((cid, updates), _)| ((weight_of[cid] / wtotal) as f32, updates))
                 .collect();
-            let mut agg = ServerAggregator::new(&self.meta);
+            let mut agg = ServerAggregator::with_backend(&self.meta, self.backend);
             agg.fold_batch(workers, folds);
             self.global.axpy(1.0, &agg.finish(&self.meta));
         }

@@ -15,11 +15,11 @@
 //!
 //! Python is build-time only; the round loop is pure Rust + XLA.
 //!
-//! The runtime is organized as five planes — round engine → wire/network
-//! → compressed-domain aggregation → scheduler → basis pool — each with
-//! its own invariants; the top-level `ARCHITECTURE.md` maps them, with
-//! per-scheduler data-flow diagrams and the "where does a byte get
-//! charged" walkthrough.
+//! The runtime is organized as six planes — round engine → wire/network
+//! → compressed-domain aggregation → scheduler → basis pool → compute
+//! backend — each with its own invariants; the top-level
+//! `ARCHITECTURE.md` maps them, with per-scheduler data-flow diagrams and
+//! the "where does a byte get charged" walkthrough.
 //!
 //! ## Quick tour
 //!
@@ -53,6 +53,24 @@
 //! in lockstep no matter the execution order. The XLA backend runs its
 //! lanes on the coordinator thread (PJRT handles don't cross threads), also
 //! with identical results.
+//!
+//! ## The compute-backend plane ([`linalg`])
+//!
+//! The dense kernels under all of the above — the compressor projection
+//! `A = MᵀG`, the fused server fold `Acc += α·M·A`, the QR/MGS/rSVD
+//! panels — dispatch through the pluggable [`linalg::Backend`] trait.
+//! Two CPU implementations ship: [`linalg::ScalarBackend`] (the original
+//! loops, frozen as the bit-identity reference) and
+//! [`linalg::BlockedBackend`] (cache-blocked, register-tiled,
+//! SIMD-friendly — the default). Select per experiment with
+//! `--backend auto|scalar|blocked` (`ExperimentConfig::backend`, JSON
+//! `"backend"`); `auto` resolves to the `GRADESTC_BACKEND` environment
+//! variable if set, else the blocked kernels. Every backend keeps the
+//! same contract as the round engine: its reduction order is a pure
+//! function of problem shape, never of worker count, so w1-vs-wN
+//! determinism holds on any backend (`rust/tests/backend.rs`), and both
+//! ends of a compressor lane always run the same backend so client and
+//! server basis evolution replay identical arithmetic.
 //!
 //! ## The scheduler plane ([`sched`])
 //!
@@ -115,7 +133,8 @@
 //! * [`data`] — synthetic datasets and non-IID partitioning.
 //! * [`linalg`] — dense matrix kernels (rSVD, MGS, fused
 //!   [`linalg::matmul_acc`]) for the compressors and the aggregation
-//!   plane.
+//!   plane, dispatched through the pluggable [`linalg::Backend`]
+//!   compute plane (`--backend`, `GRADESTC_BACKEND`).
 //! * [`metrics`] — round records, CSV sinks, [`metrics::CommLedger`],
 //!   heterogeneous [`metrics::NetworkModel`].
 //! * [`model`] — layer tables and flat parameter stores.

@@ -1,4 +1,4 @@
-//! Cache-blocked, thread-parallel matrix multiplication.
+//! Matrix-multiplication entry points and the scalar reference kernels.
 //!
 //! Four entry points cover every product the compressor and the server
 //! aggregation plane need without materializing transposes:
@@ -8,13 +8,17 @@
 //! * [`matmul_at_b`]  — `C = Aᵀ·B`   (projection `A = MᵀG`)
 //! * [`matmul_a_bt`]  — `C = A·Bᵀ`   (Gram matrices for the small eigsolve)
 //!
-//! plus the scaled-accumulate primitive [`axpy`] they are built from. The
-//! inner kernel is an i-k-j loop over row panels with an unrolled 8-wide
-//! FMA body, parallelized over row blocks with scoped threads
-//! (`matmul_acc` excepted — its callers parallelize over disjoint
-//! accumulators already).
+//! plus the scaled-accumulate primitive [`axpy`] they are built from.
+//! Each entry point dispatches through the process-default
+//! [`Backend`](super::Backend) (see `linalg/backend.rs` — register-tiled
+//! blocked kernels unless `GRADESTC_BACKEND` overrides); the `scalar_*`
+//! kernels in this file are the original loops, kept verbatim as the
+//! [`ScalarBackend`](super::ScalarBackend)'s frozen reference: an i-k-j
+//! loop over row panels with an unrolled 8-wide FMA body, parallelized
+//! over row blocks with scoped threads (`matmul_acc` excepted — its
+//! callers parallelize over disjoint accumulators already).
 
-use super::Mat;
+use super::{default_backend, Mat};
 use crate::util::pool::default_workers;
 
 /// Rows-per-task granularity for the thread fan-out.
@@ -61,7 +65,11 @@ fn mm_panel(a: &Mat, b: &Mat, r0: usize, r1: usize, c_panel: &mut [f32]) {
     }
 }
 
-fn parallel_rows(
+/// Row-parallel driver shared by the scalar and blocked backends: fill
+/// `m × cols` output rows via disjoint contiguous row panels. Safe for
+/// any kernel whose per-element result is independent of the row
+/// partition (each element is produced entirely by one thread).
+pub(super) fn parallel_rows(
     m: usize,
     flops: usize,
     panel: impl Fn(usize, usize, &mut [f32]) + Sync,
@@ -98,8 +106,46 @@ fn parallel_rows(
     out
 }
 
-/// `C = A·B` (shapes `(m,k)·(k,n) -> (m,n)`).
+/// `C = A·B` (shapes `(m,k)·(k,n) -> (m,n)`), on the process-default
+/// backend.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    default_backend().matmul(a, b)
+}
+
+/// `C += α · A·B` in place (shapes `(m,k)·(k,n) += (m,n)`), the fused
+/// reconstruct-and-accumulate kernel of the server aggregation plane, on
+/// the process-default backend.
+///
+/// For a low-rank update `Ĝ = M·A` folded with FedAvg weight α, this
+/// scales the `k`-sized inner loop (one multiply per `(i,k)` pair) instead
+/// of the `l×m` dense product — the whole point of aggregating in the
+/// compressed domain (paper Eq. 14 shapes).
+///
+/// Deliberately single-threaded on every backend: the caller
+/// ([`ServerAggregator`](crate::coordinator::ServerAggregator)) already
+/// fans out over disjoint per-layer accumulators, and each output element
+/// accumulates in a fixed `k`-order, so results are bit-identical at any
+/// outer parallelism.
+pub fn matmul_acc(c: &mut Mat, alpha: f32, a: &Mat, b: &Mat) {
+    default_backend().matmul_acc(c, alpha, a, b);
+}
+
+/// `C = Aᵀ·B` (shapes `(k,m)ᵀ·(k,n) -> (m,n)`), without the caller
+/// forming `Aᵀ`, on the process-default backend.
+///
+/// This is the compressor's projection `A = MᵀG` with `M: l×k`, `G: l×m`.
+pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+    default_backend().matmul_at_b(a, b)
+}
+
+/// `C = A·Bᵀ` (shapes `(m,k)·(n,k)ᵀ -> (m,n)`), without the caller
+/// forming `Bᵀ`, on the process-default backend.
+pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
+    default_backend().matmul_a_bt(a, b)
+}
+
+/// Scalar reference `C = A·B`.
+pub(super) fn scalar_matmul(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.rows(), "matmul: {}x{} · {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
     let (m, n) = (a.rows(), b.cols());
     let flops = 2 * m * n * a.cols();
@@ -107,20 +153,9 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     Mat::from_vec(m, n, out)
 }
 
-/// `C += α · A·B` in place (shapes `(m,k)·(k,n) += (m,n)`), the fused
-/// reconstruct-and-accumulate kernel of the server aggregation plane.
-///
-/// For a low-rank update `Ĝ = M·A` folded with FedAvg weight α, this
-/// scales the `k`-sized inner loop (one multiply per `(i,k)` pair) instead
-/// of the `l×m` dense product — the whole point of aggregating in the
-/// compressed domain (paper Eq. 14 shapes).
-///
-/// Deliberately single-threaded: the caller
-/// ([`ServerAggregator`](crate::coordinator::ServerAggregator)) already
-/// fans out over disjoint per-layer accumulators, and each output element
-/// accumulates in a fixed `k`-order, so results are bit-identical at any
-/// outer parallelism.
-pub fn matmul_acc(c: &mut Mat, alpha: f32, a: &Mat, b: &Mat) {
+/// Scalar reference `C += α·A·B` (single-threaded; each element
+/// accumulates in fixed ascending-`k` order).
+pub(super) fn scalar_matmul_acc(c: &mut Mat, alpha: f32, a: &Mat, b: &Mat) {
     assert_eq!(
         a.cols(),
         b.rows(),
@@ -151,10 +186,15 @@ pub fn matmul_acc(c: &mut Mat, alpha: f32, a: &Mat, b: &Mat) {
     }
 }
 
-/// `C = Aᵀ·B` (shapes `(k,m)ᵀ·(k,n) -> (m,n)`), without forming `Aᵀ`.
+/// Scalar reference `C = Aᵀ·B` without forming `Aᵀ`.
 ///
-/// This is the compressor's projection `A = MᵀG` with `M: l×k`, `G: l×m`.
-pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+/// Historical caveat, frozen with the rest of the reference: the
+/// parallel path splits `k` into per-thread partial accumulators reduced
+/// in chunk order, and the chunk count comes from the *process-wide*
+/// worker default — constant within a process (which the w1-vs-wN
+/// determinism tests rely on) but not a pure function of shape. The
+/// blocked backend replaces this with a shape-pure reduction.
+pub(super) fn scalar_matmul_at_b(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.rows(), b.rows(), "matmul_at_b: {}x{} ᵀ· {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
     let (m, n, kk) = (a.cols(), b.cols(), a.rows());
     // C[i,j] = sum_k A[k,i] * B[k,j]  — accumulate outer products of the
@@ -206,8 +246,8 @@ pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
     Mat::from_vec(m, n, c)
 }
 
-/// `C = A·Bᵀ` (shapes `(m,k)·(n,k)ᵀ -> (m,n)`), without forming `Bᵀ`.
-pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
+/// Scalar reference `C = A·Bᵀ` without forming `Bᵀ` (4-wide grouped dot).
+pub(super) fn scalar_matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.cols(), "matmul_a_bt: {}x{} · {}x{}ᵀ", a.rows(), a.cols(), b.rows(), b.cols());
     let (m, n) = (a.rows(), b.rows());
     let flops = 2 * m * n * a.cols();
@@ -332,6 +372,28 @@ mod tests {
         let a = Mat::zeros(3, 2);
         let b = Mat::zeros(2, 4); // product is 3x4, accumulator 3x3
         matmul_acc(&mut c, 1.0, &a, &b);
+    }
+
+    #[test]
+    fn scalar_kernels_match_naive() {
+        // The dispatching entry points above default to the blocked
+        // backend; pin the frozen scalar reference against the oracle
+        // explicitly so it cannot rot unexercised.
+        let mut rng = Pcg64::seeded(7);
+        let a = Mat::randn(40, 33, &mut rng);
+        let b = Mat::randn(33, 21, &mut rng);
+        assert!(scalar_matmul(&a, &b).max_abs_diff(&naive(&a, &b)) < 1e-3);
+        let c = Mat::randn(33, 40, &mut rng);
+        assert!(scalar_matmul_at_b(&c, &b).max_abs_diff(&naive(&c.transpose(), &b)) < 1e-3);
+        let d = Mat::randn(21, 33, &mut rng);
+        assert!(scalar_matmul_a_bt(&a, &d).max_abs_diff(&naive(&a, &d.transpose())) < 1e-3);
+        let mut acc = Mat::zeros(40, 21);
+        scalar_matmul_acc(&mut acc, 0.5, &a, &b);
+        let mut expect = naive(&a, &b);
+        for x in expect.as_mut_slice() {
+            *x *= 0.5;
+        }
+        assert!(acc.max_abs_diff(&expect) < 1e-3);
     }
 
     #[test]

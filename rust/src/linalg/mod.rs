@@ -9,15 +9,28 @@
 //!
 //! Matrices are row-major [`Mat`] with explicit dimensions; all routines are
 //! deterministic given the caller-provided RNG.
+//!
+//! Kernels dispatch through the pluggable [`Backend`] trait
+//! (`linalg/backend.rs`): register-tiled blocked CPU kernels by default,
+//! the frozen scalar reference on request, selected per experiment via
+//! `ExperimentConfig::backend` / `--backend` / `GRADESTC_BACKEND`. The
+//! `*_in` variants (`randomized_svd_in`, `householder_qr_in`,
+//! `mgs_orthonormalize_in`, `thin_svd_in`) take an explicit backend
+//! handle; the plain names use the process default.
 
+mod backend;
 mod mat;
 mod matmul;
 mod qr;
 mod rsvd;
 mod svd;
 
+pub use backend::{default_backend, Backend, BackendKind, BlockedBackend, ScalarBackend};
+#[cfg(feature = "xla")]
+pub use backend::XlaBackend;
 pub use mat::Mat;
 pub use matmul::{axpy, matmul, matmul_acc, matmul_at_b, matmul_a_bt};
-pub use qr::{householder_qr, mgs_orthonormalize, ortho_defect};
-pub use rsvd::{randomized_svd, RsvdOptions};
-pub use svd::{jacobi_eigh_symmetric, thin_svd, Svd};
+pub use qr::{householder_qr, householder_qr_in, mgs_orthonormalize, mgs_orthonormalize_in,
+    ortho_defect};
+pub use rsvd::{randomized_svd, randomized_svd_in, RsvdOptions};
+pub use svd::{jacobi_eigh_symmetric, thin_svd, thin_svd_in, Svd};

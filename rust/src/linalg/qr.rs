@@ -4,23 +4,39 @@
 //!   reflections; used by the randomized-SVD range finder.
 //! * [`mgs_orthonormalize`] — modified Gram–Schmidt pass used to repair
 //!   float drift in the long-lived GradESTC basis matrix (DESIGN.md §5).
+//!
+//! Both run their panel primitives — reflector/projection dots and the
+//! `dst += a·x` updates — through [`Backend::dot_f64`] and
+//! [`Backend::axpy`] on a transposed working copy, so columns are
+//! contiguous rows and the inner loops autovectorize. On the scalar
+//! backend the per-element arithmetic sequence is identical to the
+//! original strided loops (sequential f64 dots; `x - d·v ≡ x + (-d)·v`
+//! exactly in IEEE), so results are bit-for-bit unchanged; the `_in`
+//! variants take an explicit backend, the plain names use the process
+//! default.
 
-use super::{Mat, matmul};
+use super::{default_backend, matmul, Backend, Mat};
+
+/// Thin QR on the process-default backend; see [`householder_qr_in`].
+pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
+    householder_qr_in(default_backend(), a)
+}
 
 /// Thin QR: returns `(Q, R)` with `Q: m×n` orthonormal columns and
 /// `R: n×n` upper-triangular, for `A: m×n`, `m >= n`.
-pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
+pub fn householder_qr_in(bk: &dyn Backend, a: &Mat) -> (Mat, Mat) {
     let (m, n) = (a.rows(), a.cols());
     assert!(m >= n, "householder_qr expects tall matrix, got {m}x{n}");
-    // Work on a column-major copy of A for contiguous column access.
-    let mut r = a.clone(); // row-major; we index columns explicitly
+    // Work on the transpose so each column of A is a contiguous row: the
+    // reflector dot and update become flat slice kernels.
+    let mut rt = a.transpose();
     // Householder vectors, stored per step.
     let mut vs: Vec<Vec<f32>> = Vec::with_capacity(n);
 
     for j in 0..n {
-        // v = R[j:, j]; compute Householder reflector for this column.
-        let mut v: Vec<f32> = (j..m).map(|i| r[(i, j)]).collect();
-        let norm_x = v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32;
+        // v = R[j:, j]; compute the Householder reflector for this column.
+        let mut v: Vec<f32> = rt.row(j)[j..].to_vec();
+        let norm_x = bk.dot_f64(&v, &v).sqrt() as f32;
         if norm_x == 0.0 {
             // Zero column: skip (reflector = identity). Keep a unit vector
             // so Q stays well-defined.
@@ -31,54 +47,50 @@ pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
         }
         let alpha = if v[0] >= 0.0 { -norm_x } else { norm_x };
         v[0] -= alpha;
-        let vnorm = v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32;
+        let vnorm = bk.dot_f64(&v, &v).sqrt() as f32;
         if vnorm > 0.0 {
             v.iter_mut().for_each(|x| *x /= vnorm);
         } else {
             v[0] = 1.0;
         }
-        // Apply H = I - 2 v vᵀ to R[j:, j:].
+        // Apply H = I - 2 v vᵀ to R[j:, j:], column by contiguous column.
         for col in j..n {
-            let mut dot = 0.0f64;
-            for (bi, i) in (j..m).enumerate() {
-                dot += v[bi] as f64 * r[(i, col)] as f64;
-            }
-            let dot = 2.0 * dot as f32;
-            for (bi, i) in (j..m).enumerate() {
-                r[(i, col)] -= dot * v[bi];
-            }
+            let row = &mut rt.row_mut(col)[j..];
+            let dot = 2.0 * bk.dot_f64(&v, row) as f32;
+            bk.axpy(row, -dot, &v);
         }
         vs.push(v);
     }
 
     // Build thin Q by applying reflectors (in reverse) to the first n
-    // columns of the identity.
-    let mut q = Mat::zeros(m, n);
+    // columns of the identity — also column-contiguous via the transpose.
+    let mut qt = Mat::zeros(n, m);
     for j in 0..n {
-        q[(j, j)] = 1.0;
+        qt[(j, j)] = 1.0;
     }
     for j in (0..n).rev() {
         let v = &vs[j];
         for col in 0..n {
-            let mut dot = 0.0f64;
-            for (bi, i) in (j..m).enumerate() {
-                dot += v[bi] as f64 * q[(i, col)] as f64;
-            }
-            let dot = 2.0 * dot as f32;
-            for (bi, i) in (j..m).enumerate() {
-                q[(i, col)] -= dot * v[bi];
-            }
+            let row = &mut qt.row_mut(col)[j..];
+            let dot = 2.0 * bk.dot_f64(v, row) as f32;
+            bk.axpy(row, -dot, v);
         }
     }
+    let q = qt.transpose();
 
     // Zero R's strictly-lower part and truncate to n×n.
     let mut r_out = Mat::zeros(n, n);
     for i in 0..n {
         for j in i..n {
-            r_out[(i, j)] = r[(i, j)];
+            r_out[(i, j)] = rt[(j, i)];
         }
     }
     (q, r_out)
+}
+
+/// MGS on the process-default backend; see [`mgs_orthonormalize_in`].
+pub fn mgs_orthonormalize(a: &mut Mat, eps: f32) -> Vec<usize> {
+    mgs_orthonormalize_in(default_backend(), a, eps)
 }
 
 /// Modified Gram–Schmidt: orthonormalize the columns of `a` in place.
@@ -87,8 +99,8 @@ pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
 /// zeros and reported in the returned list — callers decide how to refill
 /// them. Two MGS passes are performed ("twice is enough", Kahan/Parlett)
 /// for stability.
-pub fn mgs_orthonormalize(a: &mut Mat, eps: f32) -> Vec<usize> {
-    let (m, n) = (a.rows(), a.cols());
+pub fn mgs_orthonormalize_in(bk: &dyn Backend, a: &mut Mat, eps: f32) -> Vec<usize> {
+    let n = a.cols();
     let mut degenerate = Vec::new();
     for _pass in 0..2 {
         for j in 0..n {
@@ -96,15 +108,10 @@ pub fn mgs_orthonormalize(a: &mut Mat, eps: f32) -> Vec<usize> {
             // Remove projections on previous columns.
             for p in 0..j {
                 let col_p = a.col(p);
-                let dot: f64 =
-                    col_p.iter().zip(&col_j).map(|(&x, &y)| x as f64 * y as f64).sum();
-                let dot = dot as f32;
-                for i in 0..m {
-                    col_j[i] -= dot * col_p[i];
-                }
+                let dot = bk.dot_f64(&col_p, &col_j) as f32;
+                bk.axpy(&mut col_j, -dot, &col_p);
             }
-            let norm =
-                col_j.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32;
+            let norm = bk.dot_f64(&col_j, &col_j).sqrt() as f32;
             if norm < eps {
                 col_j.iter_mut().for_each(|x| *x = 0.0);
                 if _pass == 1 {
@@ -136,6 +143,7 @@ pub fn ortho_defect(q: &Mat) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::{BlockedBackend, ScalarBackend};
     use crate::util::rng::Pcg64;
 
     #[test]
@@ -180,6 +188,16 @@ mod tests {
         assert!(q.as_slice().iter().all(|x| x.is_finite()));
         assert!(r.as_slice().iter().all(|x| x.is_finite()));
         assert!(matmul(&q, &r).max_abs_diff(&a) < 1e-3);
+    }
+
+    #[test]
+    fn qr_agrees_across_backends() {
+        let mut rng = Pcg64::seeded(7);
+        let a = Mat::randn(96, 24, &mut rng);
+        let (qs, rs) = householder_qr_in(&ScalarBackend, &a);
+        let (qb, rb) = householder_qr_in(&BlockedBackend, &a);
+        assert!(qs.max_abs_diff(&qb) < 1e-4);
+        assert!(rs.max_abs_diff(&rb) < 1e-3);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! kernels at L1; this Rust implementation is the request-path twin and is
 //! cross-checked against the jnp oracle in integration tests.
 
-use super::{householder_qr, matmul, thin_svd, Mat, Svd};
+use super::{default_backend, householder_qr_in, thin_svd_in, Backend, Mat, Svd};
 use crate::util::rng::Pcg64;
 
 /// Options for [`randomized_svd`].
@@ -34,6 +34,18 @@ impl Default for RsvdOptions {
 /// Returns factors truncated to `rank` (or `min(p,q)` if smaller). The RNG
 /// drives the Gaussian test matrix, making results deterministic per seed.
 pub fn randomized_svd(a: &Mat, rank: usize, opts: RsvdOptions, rng: &mut Pcg64) -> Svd {
+    randomized_svd_in(default_backend(), a, rank, opts, rng)
+}
+
+/// [`randomized_svd`] on an explicit [`Backend`]; all matmuls, QR panels
+/// and the small SVD run through `bk`.
+pub fn randomized_svd_in(
+    bk: &dyn Backend,
+    a: &Mat,
+    rank: usize,
+    opts: RsvdOptions,
+    rng: &mut Pcg64,
+) -> Svd {
     let (p, q) = (a.rows(), a.cols());
     let r_full = p.min(q);
     let rank = rank.min(r_full).max(1);
@@ -41,27 +53,27 @@ pub fn randomized_svd(a: &Mat, rank: usize, opts: RsvdOptions, rng: &mut Pcg64) 
 
     if sketch >= r_full || r_full <= 8 {
         // Sketching can't beat the exact small SVD here.
-        return truncate(thin_svd(a, rank), rank);
+        return truncate(thin_svd_in(bk, a, rank), rank);
     }
 
     // Y = A Ω, Ω: q×sketch Gaussian.
     let omega = Mat::randn(q, sketch, rng);
-    let mut y = matmul(a, &omega);
+    let mut y = bk.matmul(a, &omega);
 
     // Power iterations with QR stabilization: Y <- A (Aᵀ Y_q).
     let at = a.transpose();
     for _ in 0..opts.power_iters {
-        let (qy, _) = householder_qr(&y);
-        let z = matmul(&at, &qy);
-        let (qz, _) = householder_qr(&z);
-        y = matmul(a, &qz);
+        let (qy, _) = householder_qr_in(bk, &y);
+        let z = bk.matmul(&at, &qy);
+        let (qz, _) = householder_qr_in(bk, &z);
+        y = bk.matmul(a, &qz);
     }
 
-    let (q_range, _) = householder_qr(&y);
+    let (q_range, _) = householder_qr_in(bk, &y);
     // B = Qᵀ A (sketch×q), small.
-    let b = matmul(&q_range.transpose(), a);
-    let svd_b = thin_svd(&b, rank);
-    let u = matmul(&q_range, &svd_b.u);
+    let b = bk.matmul(&q_range.transpose(), a);
+    let svd_b = thin_svd_in(bk, &b, rank);
+    let u = bk.matmul(&q_range, &svd_b.u);
     truncate(Svd { u, s: svd_b.s, vt: svd_b.vt }, rank)
 }
 
@@ -80,6 +92,7 @@ fn truncate(svd: Svd, rank: usize) -> Svd {
 mod tests {
     use super::*;
     use crate::linalg::qr::ortho_defect;
+    use crate::linalg::{matmul, thin_svd};
 
     /// Low-rank + noise test matrix.
     fn low_rank(p: usize, q: usize, r: usize, noise: f32, rng: &mut Pcg64) -> Mat {

@@ -11,7 +11,7 @@
 //! tolerance the compressor needs (validated against the jnp oracle through
 //! `python/tests/test_kernel.py` on identical inputs).
 
-use super::{matmul, matmul_a_bt, matmul_at_b, Mat};
+use super::{default_backend, matmul, Backend, Mat};
 
 /// Thin SVD result: `a ≈ u · diag(s) · vt`.
 #[derive(Clone, Debug)]
@@ -104,18 +104,25 @@ pub fn jacobi_eigh_symmetric(a: &Mat, max_sweeps: usize) -> (Vec<f32>, Mat) {
 /// Thin SVD of an arbitrary `p×q` matrix, keeping at most `rank` components
 /// (all if `rank == 0`). Intended for small/sketched matrices.
 pub fn thin_svd(a: &Mat, rank: usize) -> Svd {
+    thin_svd_in(default_backend(), a, rank)
+}
+
+/// [`thin_svd`] on an explicit [`Backend`]; the Gram product and the
+/// `Σ⁻¹UᵀA` projection run through `bk` (the Jacobi sweeps are scalar f64
+/// on every backend — they dominate neither flops nor tolerance).
+pub fn thin_svd_in(bk: &dyn Backend, a: &Mat, rank: usize) -> Svd {
     let (p, q) = (a.rows(), a.cols());
     let r_full = p.min(q);
     let keep = if rank == 0 { r_full } else { rank.min(r_full) };
 
     if p <= q {
         // Gram on the small side: B Bᵀ (p×p).
-        let g = matmul_a_bt(a, a);
+        let g = bk.matmul_a_bt(a, a);
         let (vals, w) = jacobi_eigh_symmetric(&g, 30);
         let s: Vec<f32> = vals.iter().take(keep).map(|&l| l.max(0.0).sqrt()).collect();
         let u = w.take_cols(keep);
         // Vᵀ = Σ⁻¹ Uᵀ A, guarding σ≈0.
-        let ut_a = matmul_at_b(&u, a);
+        let ut_a = bk.matmul_at_b(&u, a);
         let mut vt = ut_a;
         for (i, &si) in s.iter().enumerate() {
             let inv = if si > 1e-12 { 1.0 / si } else { 0.0 };
@@ -126,7 +133,7 @@ pub fn thin_svd(a: &Mat, rank: usize) -> Svd {
         Svd { u, s, vt }
     } else {
         // Tall matrix: decompose the transpose and swap factors.
-        let svd_t = thin_svd(&a.transpose(), keep);
+        let svd_t = thin_svd_in(bk, &a.transpose(), keep);
         Svd { u: svd_t.vt.transpose(), s: svd_t.s, vt: svd_t.u.transpose() }
     }
 }
@@ -147,6 +154,7 @@ impl Svd {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::matmul_a_bt;
     use crate::linalg::qr::ortho_defect;
     use crate::util::rng::Pcg64;
 

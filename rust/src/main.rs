@@ -13,8 +13,8 @@
 mod experiments;
 
 use gradestc::config::{
-    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
-    NetConfig, SchedConfig, SchedKind,
+    BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
+    ModelKind, NetConfig, SchedConfig, SchedKind,
 };
 use gradestc::util::args::ArgSpec;
 
@@ -171,6 +171,11 @@ fn cmd_train(argv: Vec<String>) -> i32 {
             "sync",
             "round scheduler: sync | semisync | async[:k=8,staleness=0.5] (semisync rolls stragglers into the next round; async folds each arrival and applies every k)",
         )
+        .opt(
+            "backend",
+            "auto",
+            "compute backend for the linalg hot path: auto | scalar | blocked (auto = blocked; env GRADESTC_BACKEND overrides auto)",
+        )
         .opt("compute-s", "0", "mean per-dispatch local-compute latency, seconds (0 = free)")
         .opt(
             "compute-spread",
@@ -202,6 +207,10 @@ fn cmd_train(argv: Vec<String>) -> i32 {
     };
     let sched_kind = match SchedKind::parse(args.str("sched")) {
         Ok(s) => s,
+        Err(e) => return fail(&e),
+    };
+    let backend = match BackendKind::parse(args.str("backend")) {
+        Ok(b) => b,
         Err(e) => return fail(&e),
     };
     let model = default_model_for(dataset);
@@ -251,6 +260,7 @@ fn cmd_train(argv: Vec<String>) -> i32 {
             compute_base_s: args.f64("compute-s"),
             compute_spread: args.f64("compute-spread"),
         },
+        backend,
     };
     let quiet = args.has_flag("quiet");
     match experiments::run_one(&cfg, args.str("out"), !quiet) {

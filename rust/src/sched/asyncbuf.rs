@@ -50,17 +50,34 @@
 //! slowest participant — the time-to-accuracy win `gradestc exp async1`
 //! measures.
 //!
+//! # Event-loop micro-batching
+//!
+//! Events scheduled at the *same* virtual instant (co-temporal arrivals
+//! are the norm under a homogeneous network, where every client's round
+//! trip is identical) are processed as one group: folds, applies, and
+//! sampler draws still happen strictly in event order, but the freed
+//! slots are coalesced into **one** batched re-dispatch at the group's
+//! end — fanning the client phase across workers — instead of one
+//! sequential single-lane dispatch per event. Two deliberate consequences
+//! of batching: every re-dispatch in a group trains on the *post-group*
+//! model version (the pre-batching loop handed versions out mid-group as
+//! applies landed), and a final apply mid-group leaves the instant's
+//! remaining events to the shutdown drain without re-dispatching freed
+//! slots (the pre-batching loop burned one more training pass per slot
+//! whose arrival nothing would ever fold).
+//!
 //! # Determinism
 //!
 //! Arrival and retry events live on the `(time, seq)`-keyed
 //! [`EventQueue`]; event *handling* fans work across threads (the initial
-//! cohort dispatch uses the same parallel client phase as the sync
-//! engine) but event *order* never depends on the worker count, dropout
-//! and compute draws are pure per `(seed, attempt, cid)`, participation
-//! draws happen in event order on a dedicated stream, and folds happen
-//! in arrival order — so `workers = 1` and `workers = N` produce
-//! bit-identical records, apply sequences, and lane fingerprints
-//! (asserted in `rust/tests/sched.rs`).
+//! cohort dispatch and the batched group re-dispatches use the same
+//! parallel client phase as the sync engine) but event *order* never
+//! depends on the worker count, dropout and compute draws are pure per
+//! `(seed, attempt, cid)`, participation draws happen in event order on a
+//! dedicated stream, and folds happen in arrival order — so `workers = 1`
+//! and `workers = N` produce bit-identical records, apply sequences, and
+//! lane fingerprints (asserted in `rust/tests/sched.rs`, including a
+//! co-temporal-arrival case that exercises the batched dispatch).
 
 use std::sync::Arc;
 
@@ -255,7 +272,7 @@ impl Scheduler for AsyncBufferedScheduler {
         )?;
 
         let mut applies = 0usize;
-        let mut agg = ServerAggregator::new(&sim.meta);
+        let mut agg = ServerAggregator::with_backend(&sim.meta, sim.backend);
         let mut wsum = 0.0f64;
         let mut buffered = 0usize;
         let mut folded_cids: Vec<usize> = Vec::new();
@@ -264,110 +281,130 @@ impl Scheduler for AsyncBufferedScheduler {
         let mut t_last_apply = t0;
 
         while applies < sim.cfg.rounds {
-            let Some((t, _seq, ev)) = queue.pop() else {
+            let Some((t, _seq, first)) = queue.pop() else {
                 bail!(
                     "async scheduler event queue drained after {applies} of {} applies",
                     sim.cfg.rounds
                 );
             };
             sim.vclock = t;
-            match ev {
-                Event::Retry { cid } => {
-                    // The dropped attempt's slot frees; without sampling
-                    // the same client retries, with sampling the slot is
-                    // refilled by a fresh uniform draw over the idle pool
-                    // (which includes the dropped client).
-                    let next: Vec<usize> = match sampler.as_mut() {
-                        None => vec![cid],
-                        Some(s) => {
-                            s.release(cid);
-                            s.draw(1)
-                        }
-                    };
-                    self.dispatch(
-                        sim, &compute, &mut queue, &mut dispatches, &mut broadcast, version,
-                        &next, t, workers,
-                    )?;
-                }
-                Event::Arrival { up, version: v } => {
-                    let cid = up.cid;
-                    // The fold-as-it-lands path: charge, decode with the
-                    // lane's paired decompressor (lockstep), fold with the
-                    // staleness-discounted weight.
-                    sim.ledger.charge_uplink(up.frame.len() as u64);
-                    let payloads = wire::decode(&up.frame)
-                        .with_context(|| format!("decoding client {cid}'s upload"))?;
-                    let updates = sim.clients[cid].decompressor.decode(payloads);
-                    let tau = version - v;
-                    let w = up.weight / (1.0 + tau as f64).powf(self.p);
-                    agg.fold(w as f32, updates);
-                    wsum += w;
-                    buffered += 1;
-                    folded_cids.push(cid);
-                    loss_sum += up.mean_loss;
-                    sum_d += up.sum_d;
-
-                    if buffered == self.k {
-                        // Apply: normalize the buffered aggregate by the
-                        // discounted weight sum and bump the version.
-                        let full =
-                            std::mem::replace(&mut agg, ServerAggregator::new(&sim.meta));
-                        if wsum > 0.0 {
-                            sim.global.axpy((1.0 / wsum) as f32, &full.finish(&sim.meta));
-                        }
-                        version += 1;
-                        let (test_loss, test_acc) = if applies % sim.cfg.eval_every == 0
-                            || applies + 1 == sim.cfg.rounds
-                        {
-                            sim.trainer.evaluate(&sim.global, &sim.test_data)?
-                        } else {
-                            (f64::NAN, f64::NAN)
-                        };
-                        let (up_b, down_b) = sim.ledger.end_round();
-                        folded_cids.sort_unstable();
-                        let record = RoundRecord {
-                            round: applies,
-                            train_loss: loss_sum / self.k as f64,
-                            test_accuracy: test_acc,
-                            test_loss,
-                            uplink_bytes: up_b,
-                            downlink_bytes: down_b,
-                            sim_time_s: t - t_last_apply,
-                            sim_clock_s: t,
-                            sum_d,
-                            survivors: std::mem::take(&mut folded_cids),
-                        };
-                        sim.recorder.push(record.clone());
-                        progress(applies, &record);
-                        t_last_apply = t;
-                        applies += 1;
-                        wsum = 0.0;
-                        buffered = 0;
-                        loss_sum = 0.0;
-                        sum_d = 0;
-                    }
-
-                    // Refill the freed slot on the newest model (post-apply
-                    // if this arrival completed a buffer) — unless the
-                    // workload is done: the final apply must not burn one
-                    // more local training pass whose result nothing will
-                    // ever fold. Without sampling the same client is
-                    // re-dispatched; with it the slot goes to a fresh
-                    // uniform draw over the idle pool.
-                    if applies < sim.cfg.rounds {
-                        let next: Vec<usize> = match sampler.as_mut() {
-                            None => vec![cid],
+            // Micro-batched event group: handle this event and every other
+            // event scheduled at exactly `t`, strictly in event order, but
+            // defer the freed slots into `redispatch` so the group ends in
+            // one parallel dispatch instead of per-event single-lane
+            // dispatches (see the module docs). Nothing dispatched here
+            // can land at time `t` again (latencies are positive), so the
+            // deferral never reorders the group.
+            let mut redispatch: Vec<usize> = Vec::new();
+            let mut ev = Some(first);
+            while let Some(e) = ev.take() {
+                match e {
+                    Event::Retry { cid } => {
+                        // The dropped attempt's slot frees; without
+                        // sampling the same client retries, with sampling
+                        // the slot is refilled by a fresh uniform draw
+                        // over the idle pool (which includes the dropped
+                        // client).
+                        match sampler.as_mut() {
+                            None => redispatch.push(cid),
                             Some(s) => {
                                 s.release(cid);
-                                s.draw(1)
+                                redispatch.extend(s.draw(1));
                             }
-                        };
-                        self.dispatch(
-                            sim, &compute, &mut queue, &mut dispatches, &mut broadcast,
-                            version, &next, t, workers,
-                        )?;
+                        }
+                    }
+                    Event::Arrival { up, version: v } => {
+                        let cid = up.cid;
+                        // The fold-as-it-lands path: charge, decode with
+                        // the lane's paired decompressor (lockstep), fold
+                        // with the staleness-discounted weight.
+                        sim.ledger.charge_uplink(up.frame.len() as u64);
+                        let payloads = wire::decode(&up.frame)
+                            .with_context(|| format!("decoding client {cid}'s upload"))?;
+                        let updates = sim.clients[cid].decompressor.decode(payloads);
+                        let tau = version - v;
+                        let w = up.weight / (1.0 + tau as f64).powf(self.p);
+                        agg.fold(w as f32, updates);
+                        wsum += w;
+                        buffered += 1;
+                        folded_cids.push(cid);
+                        loss_sum += up.mean_loss;
+                        sum_d += up.sum_d;
+
+                        if buffered == self.k {
+                            // Apply: normalize the buffered aggregate by
+                            // the discounted weight sum, bump the version.
+                            let full = std::mem::replace(
+                                &mut agg,
+                                ServerAggregator::with_backend(&sim.meta, sim.backend),
+                            );
+                            if wsum > 0.0 {
+                                sim.global
+                                    .axpy((1.0 / wsum) as f32, &full.finish(&sim.meta));
+                            }
+                            version += 1;
+                            let (test_loss, test_acc) = if applies % sim.cfg.eval_every == 0
+                                || applies + 1 == sim.cfg.rounds
+                            {
+                                sim.trainer.evaluate(&sim.global, &sim.test_data)?
+                            } else {
+                                (f64::NAN, f64::NAN)
+                            };
+                            let (up_b, down_b) = sim.ledger.end_round();
+                            folded_cids.sort_unstable();
+                            let record = RoundRecord {
+                                round: applies,
+                                train_loss: loss_sum / self.k as f64,
+                                test_accuracy: test_acc,
+                                test_loss,
+                                uplink_bytes: up_b,
+                                downlink_bytes: down_b,
+                                sim_time_s: t - t_last_apply,
+                                sim_clock_s: t,
+                                sum_d,
+                                survivors: std::mem::take(&mut folded_cids),
+                            };
+                            sim.recorder.push(record.clone());
+                            progress(applies, &record);
+                            t_last_apply = t;
+                            applies += 1;
+                            wsum = 0.0;
+                            buffered = 0;
+                            loss_sum = 0.0;
+                            sum_d = 0;
+                        }
+
+                        // Queue the freed slot for the group's batched
+                        // re-dispatch on the newest model. Without
+                        // sampling the same client goes back out; with it
+                        // the slot goes to a fresh uniform draw over the
+                        // idle pool.
+                        match sampler.as_mut() {
+                            None => redispatch.push(cid),
+                            Some(s) => {
+                                s.release(cid);
+                                redispatch.extend(s.draw(1));
+                            }
+                        }
                     }
                 }
+                // A final apply mid-group ends the run: the instant's
+                // remaining events go to the shutdown drain below, and no
+                // slot is re-dispatched (a training pass whose arrival
+                // nothing would fold).
+                if applies >= sim.cfg.rounds {
+                    redispatch.clear();
+                    break;
+                }
+                if queue.peek_time().is_some_and(|pt| pt.total_cmp(&t).is_eq()) {
+                    ev = queue.pop().map(|(_, _, e)| e);
+                }
+            }
+            if !redispatch.is_empty() {
+                self.dispatch(
+                    sim, &compute, &mut queue, &mut dispatches, &mut broadcast, version,
+                    &redispatch, t, workers,
+                )?;
             }
         }
 

@@ -136,7 +136,7 @@ impl Scheduler for SemiSyncScheduler {
                     .into_iter()
                     .map(|(w, updates)| ((w / wtotal) as f32, updates))
                     .collect();
-                let mut agg = ServerAggregator::new(&sim.meta);
+                let mut agg = ServerAggregator::with_backend(&sim.meta, sim.backend);
                 agg.fold_batch(workers, batch);
                 sim.global.axpy(1.0, &agg.finish(&sim.meta));
             }

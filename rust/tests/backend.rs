@@ -1,0 +1,203 @@
+//! Integration tests for the compute-backend plane (`gradestc::linalg`):
+//! the scalar-vs-blocked numerics contract over ragged shapes, and the
+//! end-to-end determinism bar — every backend must produce bit-identical
+//! `RoundRecord` streams at any worker count (native backend: hermetic,
+//! no artifacts needed).
+//!
+//! Two numeric regimes are locked in (see `linalg/backend.rs` docs):
+//!
+//! * **bit-exact** where the blocked kernel preserves the scalar
+//!   per-element operation sequence (`matmul_acc` — the server fold);
+//! * **≤1e-5 relative** where fixed-lane partial sums reassociate the
+//!   reduction (`matmul`, `matmul_at_b`, `matmul_a_bt`, `dot*`).
+
+use gradestc::config::{
+    BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
+    NetConfig, SchedConfig,
+};
+use gradestc::coordinator::Simulation;
+use gradestc::linalg::{Backend, BlockedBackend, Mat, ScalarBackend};
+use gradestc::metrics::RoundRecord;
+use gradestc::util::rng::Pcg64;
+
+/// Ragged sweep dimensions: 1, small primes, multiples and non-multiples
+/// of the blocked kernel's MR=4 / NR=16 tiles and the 8-lane dot split.
+const DIMS: [usize; 7] = [1, 3, 4, 7, 16, 17, 31];
+
+/// `|a - b| <= tol * max(1, ||b||_F)` everywhere.
+fn rel_close(a: &Mat, b: &Mat, tol: f32) -> bool {
+    a.max_abs_diff(b) <= tol * b.fro_norm().max(1.0)
+}
+
+/// Blocked-vs-scalar over every ragged `(m, k, n)` combination: `matmul`,
+/// `matmul_at_b`, `matmul_a_bt` within 1e-5 relative, `matmul_acc`
+/// bit-exact (same per-element mul-add sequence by construction).
+#[test]
+fn backends_agree_on_ragged_shapes() {
+    let mut rng = Pcg64::seeded(0xBAC0);
+    let (s, bl) = (ScalarBackend, BlockedBackend);
+    for &m in &DIMS {
+        for &k in &DIMS {
+            for &n in &DIMS {
+                let a = Mat::randn(m, k, &mut rng);
+                let b = Mat::randn(k, n, &mut rng);
+                let label = format!("({m},{k},{n})");
+
+                let cs = s.matmul(&a, &b);
+                let cb = bl.matmul(&a, &b);
+                assert!(rel_close(&cb, &cs, 1e-5), "matmul {label}");
+
+                let mut accs = Mat::randn(m, n, &mut rng);
+                let mut accb = accs.clone();
+                s.matmul_acc(&mut accs, 0.73, &a, &b);
+                bl.matmul_acc(&mut accb, 0.73, &a, &b);
+                assert_eq!(accs.as_slice(), accb.as_slice(), "matmul_acc {label} not bit-exact");
+
+                // Aᵀ·B with A stored (k, m): the compressor projection.
+                let at = Mat::randn(k, m, &mut rng);
+                let bt = Mat::randn(k, n, &mut rng);
+                assert!(
+                    rel_close(&bl.matmul_at_b(&at, &bt), &s.matmul_at_b(&at, &bt), 1e-5),
+                    "matmul_at_b {label}"
+                );
+
+                // A·Bᵀ with both (·, k): the Gram-matrix path.
+                let ga = Mat::randn(m, k, &mut rng);
+                let gb = Mat::randn(n, k, &mut rng);
+                assert!(
+                    rel_close(&bl.matmul_a_bt(&ga, &gb), &s.matmul_a_bt(&ga, &gb), 1e-5),
+                    "matmul_a_bt {label}"
+                );
+            }
+        }
+    }
+}
+
+/// The panel hooks agree too: `dot`/`dot_f64` across lengths straddling
+/// the 8- and 4-lane splits, and `axpy` (shared implementation) bit-exact.
+#[test]
+fn panel_hooks_agree_on_ragged_lengths() {
+    let mut rng = Pcg64::seeded(0xBAC1);
+    for n in [0usize, 1, 3, 4, 7, 8, 9, 15, 16, 17, 63, 64, 65, 257] {
+        let x = rng.normal_vec(n);
+        let y = rng.normal_vec(n);
+        let ds = ScalarBackend.dot_f64(&x, &y);
+        let db = BlockedBackend.dot_f64(&x, &y);
+        assert!((ds - db).abs() <= 1e-6 * ds.abs().max(1.0), "dot_f64 n={n}");
+        let fs = ScalarBackend.dot(&x, &y);
+        let fb = BlockedBackend.dot(&x, &y);
+        assert!(((fs - fb) as f64).abs() <= 1e-4 * (fs as f64).abs().max(1.0), "dot n={n}");
+
+        let mut ys = y.clone();
+        let mut yb = y.clone();
+        ScalarBackend.axpy(&mut ys, -0.25, &x);
+        BlockedBackend.axpy(&mut yb, -0.25, &x);
+        assert_eq!(
+            ys.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            yb.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "axpy n={n} must be bit-exact (shared element-wise kernel)"
+        );
+    }
+}
+
+fn base_cfg(name: &str, backend: BackendKind) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.into(),
+        dataset: DatasetKind::SynthMnist,
+        model: gradestc::config::ModelKind::LeNet5,
+        distribution: DataDistribution::Iid,
+        num_clients: 4,
+        participation: 1.0,
+        rounds: 4,
+        local_epochs: 1,
+        batch_size: 32,
+        lr: 0.05,
+        samples_per_client: 128,
+        test_samples: 128,
+        eval_every: 1,
+        threshold_frac: 0.9,
+        compressor: CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+        seed: 11,
+        use_xla: false,
+        artifacts_dir: "artifacts".into(),
+        workers: 1,
+        net: NetConfig::default(),
+        sched: SchedConfig::default(),
+        backend,
+    }
+}
+
+fn assert_rounds_bitwise_equal(a: &[RoundRecord], b: &[RoundRecord], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: round count");
+    for (x, y) in a.iter().zip(b) {
+        let r = x.round;
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{label}: loss, round {r}");
+        assert_eq!(
+            x.test_accuracy.to_bits(),
+            y.test_accuracy.to_bits(),
+            "{label}: accuracy, round {r}"
+        );
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{label}: test_loss, round {r}");
+        assert_eq!(x.uplink_bytes, y.uplink_bytes, "{label}: uplink, round {r}");
+        assert_eq!(x.sum_d, y.sum_d, "{label}: sum_d, round {r}");
+        assert_eq!(x.survivors, y.survivors, "{label}: survivors, round {r}");
+    }
+}
+
+fn run(cfg: ExperimentConfig, workers: usize) -> Vec<RoundRecord> {
+    let mut cfg = cfg;
+    cfg.workers = workers;
+    let mut sim = Simulation::build(cfg).unwrap();
+    sim.run().unwrap();
+    sim.recorder.rounds().to_vec()
+}
+
+/// The engine-wide determinism bar holds *per backend*: pinning the
+/// experiment to `scalar` or to `blocked` must each yield bit-identical
+/// `RoundRecord` streams at workers = 1 vs 8 — the reduction order of a
+/// conforming backend is a pure function of problem shape, never of the
+/// worker count.
+#[test]
+fn each_backend_is_bit_identical_across_worker_counts() {
+    for kind in [BackendKind::Scalar, BackendKind::Blocked] {
+        let cfg = base_cfg(&format!("it-backend-{}", kind.name()), kind);
+        let seq = run(cfg.clone(), 1);
+        let par = run(cfg, 8);
+        assert_rounds_bitwise_equal(&seq, &par, &format!("{} w1 vs w8", kind.name()));
+    }
+}
+
+/// End-to-end tolerance: the two backends run the same experiment to
+/// comparable results — identical survivor sets (float-free), byte
+/// accounting within 10% (GradESTC's rank selection `d` sits on a
+/// coverage threshold, so last-ulp drift may occasionally shift a payload
+/// by a column), losses within a loose tolerance (reassociated reductions
+/// drift a few ulps per round; training amplifies but must not explode
+/// it), and both backends actually learn.
+#[test]
+fn scalar_and_blocked_runs_agree_end_to_end() {
+    let scalar = run(base_cfg("it-backend-xtol-s", BackendKind::Scalar), 1);
+    let blocked = run(base_cfg("it-backend-xtol-b", BackendKind::Blocked), 1);
+    assert_eq!(scalar.len(), blocked.len());
+    for (s, b) in scalar.iter().zip(&blocked) {
+        let (su, bu) = (s.uplink_bytes as f64, b.uplink_bytes as f64);
+        assert!(
+            (su - bu).abs() <= 0.1 * su.max(1.0),
+            "round {}: scalar uplink {su} vs blocked uplink {bu}",
+            s.round
+        );
+        assert_eq!(s.survivors, b.survivors, "round {}: survivors", s.round);
+        assert!(
+            (s.train_loss - b.train_loss).abs() <= 5e-2 * s.train_loss.abs().max(1.0),
+            "round {}: scalar loss {} vs blocked loss {}",
+            s.round,
+            s.train_loss,
+            b.train_loss
+        );
+    }
+    let best = |recs: &[RoundRecord]| {
+        recs.iter().map(|r| r.test_accuracy).filter(|a| !a.is_nan()).fold(0.0f64, f64::max)
+    };
+    assert!(best(&scalar) > 0.5, "scalar stopped learning");
+    assert!(best(&blocked) > 0.5, "blocked stopped learning");
+}

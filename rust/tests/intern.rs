@@ -10,8 +10,8 @@ use gradestc::compress::{
     BasisPool, Compressor as _, Decompressor as _, GradEstcClient, GradEstcServer,
 };
 use gradestc::config::{
-    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
-    NetConfig, SchedConfig,
+    BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
+    ModelKind, NetConfig, SchedConfig,
 };
 use gradestc::coordinator::Simulation;
 use gradestc::model::meta::{layer_table, ModelMeta};
@@ -169,6 +169,7 @@ fn thousand_client_server_state_is_far_below_naive() {
         workers: 0,
         net: NetConfig::default(),
         sched: SchedConfig::default(),
+        backend: BackendKind::Auto,
     };
     let mut sim = Simulation::build(cfg).unwrap();
     sim.run().unwrap();

@@ -8,8 +8,8 @@ use std::sync::Arc;
 
 use gradestc::compress::gradestc::basis_bytes_per_lane;
 use gradestc::config::{
-    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, NetConfig,
-    SchedConfig, SchedKind,
+    BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
+    NetConfig, SchedConfig, SchedKind,
 };
 use gradestc::coordinator::Simulation;
 use gradestc::metrics::RoundRecord;
@@ -39,6 +39,7 @@ fn base_cfg(name: &str, comp: CompressorKind) -> ExperimentConfig {
         workers: 1,
         net: NetConfig::default(),
         sched: SchedConfig::default(),
+        backend: BackendKind::Auto,
     }
 }
 
@@ -404,6 +405,46 @@ fn async_sampling_keeps_lockstep_and_bounds_pool_memory() {
         pool.bytes(),
         n * per_lane
     );
+}
+
+/// Event-loop micro-batching regression (PR 6): with homogeneous links
+/// (`het_spread = 0`, the default) every dispatched cohort's uploads land
+/// at the *same* virtual instant, so the async loop's co-temporal path —
+/// drain the whole instant in event order, coalesce the freed slots into
+/// one batched re-dispatch — is exercised on every apply. The batched
+/// dispatch fans the client phase across workers, so the bar is the same
+/// as everywhere else in the plane: bit-identical records, lane
+/// fingerprints, and ledger totals at workers = 1 vs 8.
+#[test]
+fn async_cotemporal_arrivals_batch_dispatch_deterministically() {
+    let mut cfg = base_cfg("it-sched-async-cotemporal", CompressorKind::None);
+    cfg.rounds = 6; // applies
+    cfg.sched.kind = SchedKind::Async { k: 4, staleness_p: 0.5 };
+    // Deliberately no het_spread / dropout: identical links are what make
+    // all 8 arrivals co-temporal and the micro-batch non-trivial.
+    let (seq, fp_seq, up_seq) = run_scheduled(cfg.clone(), 1);
+    let (par, fp_par, up_par) = run_scheduled(cfg.clone(), 8);
+    assert_rounds_bitwise_equal(&seq, &par, "async co-temporal w1 vs w8");
+    assert_eq!(fp_seq, fp_par, "lane fingerprints diverged across worker counts");
+    assert_eq!(up_seq, up_par, "ledger totals diverged across worker counts");
+    // Every apply folds exactly k co-temporal arrivals…
+    assert!(seq.iter().all(|r| r.survivors.len() == 4), "every apply folds exactly k");
+    // …and the whole 8-client cohort lands in one instant, so consecutive
+    // applies alternate between the two halves of the cohort at the same
+    // virtual clock reading (the batched path, not one-at-a-time refills).
+    assert_eq!(
+        seq[0].sim_clock_s.to_bits(),
+        seq[1].sim_clock_s.to_bits(),
+        "first two applies must drain the same co-temporal instant"
+    );
+    // The same holds with the paper's stateful compressor on the lanes.
+    let mut gcfg = base_cfg("it-sched-async-cotemporal-gradestc", gradestc8());
+    gcfg.rounds = 4;
+    gcfg.sched.kind = SchedKind::Async { k: 4, staleness_p: 0.5 };
+    let (gseq, gfp_seq, _) = run_scheduled(gcfg.clone(), 1);
+    let (gpar, gfp_par, _) = run_scheduled(gcfg, 8);
+    assert_rounds_bitwise_equal(&gseq, &gpar, "async co-temporal gradestc w1 vs w8");
+    assert_eq!(gfp_seq, gfp_par, "gradestc lane fingerprints diverged");
 }
 
 /// The scheduled sync path is the default: `run_scheduled` on an

@@ -2,8 +2,8 @@
 //! no artifacts needed).
 
 use gradestc::config::{
-    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, NetConfig,
-    SchedConfig,
+    BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
+    NetConfig, SchedConfig,
 };
 use gradestc::coordinator::{RoundHookView, Simulation};
 use gradestc::metrics::RoundRecord;
@@ -31,6 +31,7 @@ fn base_cfg(name: &str, comp: CompressorKind) -> ExperimentConfig {
         workers: 1,
         net: NetConfig::default(),
         sched: SchedConfig::default(),
+        backend: BackendKind::Auto,
     }
 }
 

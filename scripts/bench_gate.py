@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""Bench-trajectory regression gate.
+
+Diffs a freshly produced ``BENCH_<suite>.json`` (written by the benches in
+``rust/benches/`` via ``Bencher::to_json``) against the committed baseline
+in ``rust/benches/baselines/`` and fails when any benchmark's median
+regresses by more than the threshold (default 15%).
+
+Usage:
+    bench_gate.py <baseline.json> <current.json> [--threshold=0.15]
+
+Exit codes: 0 = pass (or gate skipped), 1 = regression, 2 = usage/IO error.
+
+The gate skips itself (exit 0) in two cases:
+
+* the baseline carries ``"bootstrap": true`` — a placeholder committed
+  before any reference medians existed (replace it with a real run to arm
+  the gate);
+* the ``HEAD_MSG`` environment variable (CI passes the head commit
+  message) contains the literal tag ``[bench-baseline-reset]`` — the
+  escape hatch for commits that intentionally move a baseline.
+
+Benchmarks present in the baseline but missing from the current run are
+reported as warnings, not failures, so renames only need a baseline
+refresh; improvements are reported but never fail.
+"""
+
+import json
+import os
+import sys
+
+SKIP_TAG = "[bench-baseline-reset]"
+
+
+def load(path):
+    try:
+        with open(path, encoding="utf-8") as fh:
+            return json.load(fh)
+    except (OSError, ValueError) as exc:
+        print(f"bench_gate: cannot read {path}: {exc}", file=sys.stderr)
+        sys.exit(2)
+
+
+def medians(doc):
+    return {b["name"]: float(b["median_ns"]) for b in doc.get("benches", [])}
+
+
+def main(argv):
+    args = [a for a in argv if not a.startswith("--")]
+    threshold = 0.15
+    for a in argv:
+        if a.startswith("--threshold="):
+            threshold = float(a.split("=", 1)[1])
+    if len(args) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    baseline_path, current_path = args
+
+    head_msg = os.environ.get("HEAD_MSG", "")
+    if SKIP_TAG in head_msg:
+        print(f"bench_gate: skipped — commit message carries {SKIP_TAG}")
+        return 0
+
+    baseline = load(baseline_path)
+    current = load(current_path)
+    if baseline.get("bootstrap"):
+        print(
+            f"bench_gate: skipped — {baseline_path} is a bootstrap placeholder "
+            "(no reference medians yet); replace it with a real run to arm the gate"
+        )
+        return 0
+
+    base, cur = medians(baseline), medians(current)
+    regressions = []
+    for name in sorted(base):
+        if name not in cur:
+            print(f"bench_gate: WARNING: '{name}' in baseline but not in current run")
+            continue
+        if base[name] <= 0.0:
+            continue
+        delta = cur[name] / base[name] - 1.0
+        tag = "REGRESSION" if delta > threshold else "ok"
+        print(
+            f"bench_gate: {name}: {base[name]:.0f} ns -> {cur[name]:.0f} ns "
+            f"({delta:+.1%}) [{tag}]"
+        )
+        if delta > threshold:
+            regressions.append((name, delta))
+    for name in sorted(set(cur) - set(base)):
+        print(f"bench_gate: new bench '{name}' (no baseline yet)")
+
+    if regressions:
+        print(
+            f"bench_gate: FAIL — {len(regressions)} bench(es) regressed more than "
+            f"{threshold:.0%} vs {baseline_path}; if intentional, refresh the baseline "
+            f"and include {SKIP_TAG} in the commit message",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"bench_gate: pass ({len(base)} baselines checked, threshold {threshold:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
