@@ -109,6 +109,18 @@ impl BasisPool {
         BasisHandle { mat: arc, fp }
     }
 
+    /// Total weak slots currently resident in the store — live *and* dead
+    /// (a dead slot is a dropped basis whose `Weak` hasn't been swept
+    /// yet). Purely observational: no sweep, no allocation churn. The gap
+    /// `resident_slots() - stats().entries` is exactly the garbage a
+    /// sweep would reclaim; the telemetry plane's per-round snapshot
+    /// calls [`BasisPool::stats`] every round precisely so this gap can't
+    /// grow unboundedly between probes (regression-tested below).
+    pub fn resident_slots(&self) -> usize {
+        let inner = self.inner.lock().expect("basis pool poisoned");
+        inner.values().map(|bucket| bucket.len()).sum()
+    }
+
     /// Live entry count / element total. Sweeps dead entries first, so a
     /// dropped lane's bases stop counting the moment the last handle goes.
     pub fn stats(&self) -> PoolStats {
@@ -259,6 +271,25 @@ mod tests {
         assert_ne!(Arc::as_ptr(&h2.share()) as usize, ptr);
         assert_eq!(*snapshot, mat(7, 5, 2), "snapshot must not see the mutation");
         assert_eq!(pool.stats().entries, 2);
+    }
+
+    #[test]
+    fn stats_sweep_reclaims_dead_slots() {
+        // The sweep only ever ran inside `stats()` / the touched intern
+        // bucket, so a pool that is never *asked* for stats accumulates
+        // dead weak slots without bound. The telemetry round snapshot
+        // drives `stats()` every round; this locks in that one such call
+        // fully reclaims the garbage (and that the reported numbers can't
+        // include freed bases).
+        let pool = BasisPool::new();
+        let handles: Vec<BasisHandle> =
+            (0..8).map(|i| pool.intern(mat(100 + i, 6, 2))).collect();
+        assert_eq!(pool.resident_slots(), 8);
+        drop(handles); // all bases freed — but the weak slots linger…
+        assert_eq!(pool.resident_slots(), 8, "no sweep happens on drop");
+        let stats = pool.stats(); // …until one stats() sweep reclaims them
+        assert_eq!(stats, PoolStats { entries: 0, floats: 0 });
+        assert_eq!(pool.resident_slots(), 0, "stats() must sweep dead slots");
     }
 
     #[test]

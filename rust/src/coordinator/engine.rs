@@ -66,6 +66,7 @@ use super::Client;
 use crate::compress::{CompressStats, Compressor as _, Decompressor as _, LayerUpdate};
 use crate::model::params::ParamStore;
 use crate::net::wire;
+use crate::telemetry::{Phase, Telemetry};
 use crate::util::pool::parallel_map;
 
 /// Immutable inputs shared (`&`) by every client lane in a round.
@@ -167,24 +168,50 @@ fn run_lane(
 /// Frames are returned in `lanes` (participant) order regardless of
 /// scheduling; the first error in that order wins, so failures are
 /// deterministic too.
+///
+/// With telemetry enabled, each lane is timed as a `client_compress` host
+/// span tagged with its client id (`round` is the sync round or the async
+/// model version at dispatch). Recording appends to a tag-sharded buffer
+/// and never feeds back into the lane, so traced runs stay bit-identical
+/// to untraced ones at any worker count.
 pub fn run_client_phase(
     plan: ExecPlan<'_>,
     inputs: RoundInputs<'_>,
     lanes: Vec<(usize, &mut Client)>,
+    tel: Option<&Telemetry>,
+    round: u64,
 ) -> Result<Vec<ClientFrame>> {
     match plan {
         ExecPlan::Parallel { trainer, workers } => {
             parallel_map(workers, lanes, |(cid, client)| {
-                run_lane(trainer.as_trainer(), &inputs, cid, client)
+                timed_lane(trainer.as_trainer(), &inputs, cid, client, tel, round)
             })
             .into_iter()
             .collect()
         }
         ExecPlan::Sequential { trainer } => lanes
             .into_iter()
-            .map(|(cid, client)| run_lane(trainer, &inputs, cid, client))
+            .map(|(cid, client)| timed_lane(trainer, &inputs, cid, client, tel, round))
             .collect(),
     }
+}
+
+/// [`run_lane`] wrapped in a `client_compress` host span when telemetry is
+/// enabled (`tel = None` adds a single branch).
+fn timed_lane(
+    trainer: &dyn Trainer,
+    inputs: &RoundInputs<'_>,
+    cid: usize,
+    client: &mut Client,
+    tel: Option<&Telemetry>,
+    round: u64,
+) -> Result<ClientFrame> {
+    let sp = Telemetry::timer(tel);
+    let out = run_lane(trainer, inputs, cid, client);
+    if let Some(sp) = sp {
+        sp.end(Phase::ClientCompress, round, Some(cid as u32));
+    }
+    out
 }
 
 /// Execute the server decode phase: decode each uploaded frame into
@@ -196,20 +223,35 @@ pub fn run_client_phase(
 /// decompressor state, so the phase fans across `workers` threads with
 /// bit-identical results at any count. Returns `(client_id, updates)` in
 /// lane order. No densification happens here — the dense materialization
-/// is the round hook's opt-in path, and aggregation folds the structured
+/// is the observer's opt-in path, and aggregation folds the structured
 /// forms directly ([`super::ServerAggregator`]).
+///
+/// With telemetry enabled, each lane's decode is a `server_decode` host
+/// span and its payloads are charged to the per-variant byte counters
+/// (`bytes.basis`, `bytes.sparse`, ...) — commutative adds, so traced
+/// results stay worker-count independent.
 pub fn run_server_phase(
     workers: usize,
     lanes: Vec<(usize, &mut Client)>,
     frames: Vec<Vec<u8>>,
+    tel: Option<&Telemetry>,
+    round: u64,
 ) -> Result<Vec<(usize, Vec<LayerUpdate>)>> {
     assert_eq!(lanes.len(), frames.len(), "one frame per lane");
     let units: Vec<((usize, &mut Client), Vec<u8>)> =
         lanes.into_iter().zip(frames).collect();
     parallel_map(workers, units, |((cid, client), frame)| {
+        let sp = Telemetry::timer(tel);
         let payloads = wire::decode(&frame)
             .with_context(|| format!("decoding client {cid}'s upload"))?;
-        Ok((cid, client.decompressor.decode(payloads)))
+        if let Some(t) = tel {
+            t.count_payloads(&payloads);
+        }
+        let updates = client.decompressor.decode(payloads);
+        if let Some(sp) = sp {
+            sp.end(Phase::ServerDecode, round, Some(cid as u32));
+        }
+        Ok((cid, updates))
     })
     .into_iter()
     .collect()

@@ -64,8 +64,12 @@ use crate::data::{partition_indices, Partition};
 use crate::metrics::{CommLedger, NetworkModel, RoundRecord, RunRecorder, RunReport};
 use crate::model::meta::{layer_table, ModelMeta};
 use crate::model::params::ParamStore;
+use crate::net::transport::Instrumented;
 use crate::net::{wire, DropoutModel, Loopback, Transport};
+use crate::telemetry::{ApplyEvent, ArrivalEvent, DispatchEvent, Observer, Phase, Telemetry};
 use crate::util::rng::Pcg64;
+
+use std::sync::Arc;
 
 /// One simulated client *lane*: everything a round's per-client phase
 /// touches, colocated so the engine can move it into a worker task as one
@@ -120,8 +124,14 @@ pub struct Simulation {
     pub(crate) backend: &'static dyn Backend,
     /// Per-round records.
     pub recorder: RunRecorder,
-    /// Optional per-round callback hook (gradient probes, logging).
-    round_hook: Option<Box<dyn FnMut(usize, &RoundHookView)>>,
+    /// Telemetry plane, `None` when disabled — no span buffer, registry,
+    /// or transport wrapper is allocated, and every recording site is one
+    /// pointer test (see [`crate::telemetry`]).
+    pub(crate) telemetry: Option<Arc<Telemetry>>,
+    /// Streaming run probe ([`crate::telemetry::Observer`]), called from
+    /// every scheduler; installed via [`Simulation::set_observer`] or the
+    /// legacy [`Simulation::set_round_hook`] adapter.
+    pub(crate) observer: Option<Box<dyn Observer>>,
 }
 
 /// Read-only view passed to round hooks.
@@ -135,6 +145,30 @@ pub struct RoundHookView<'a> {
     pub updates: &'a [(usize, Vec<Vec<f32>>)],
     /// Model metadata.
     pub meta: &'a ModelMeta,
+}
+
+/// Replays streaming [`Observer`] arrivals as the legacy per-round dense
+/// batch: buffers each arrival densified, hands the batch to the wrapped
+/// hook when the record lands, and clears. This is what makes
+/// `set_round_hook` probes (the Fig. 1 similarity heatmap) work unchanged
+/// under semisync and async, where "round" is whatever the scheduler
+/// records (async: one apply per record).
+struct RoundHookAdapter {
+    hook: Box<dyn FnMut(usize, &RoundHookView)>,
+    meta: ModelMeta,
+    pending: Vec<(usize, Vec<Vec<f32>>)>,
+}
+
+impl Observer for RoundHookAdapter {
+    fn on_arrival(&mut self, ev: &ArrivalEvent) {
+        self.pending.push((ev.cid, ev.dense()));
+    }
+
+    fn on_round(&mut self, round: usize, _rec: &RoundRecord) {
+        let view = RoundHookView { updates: &self.pending, meta: &self.meta };
+        (self.hook)(round, &view);
+        self.pending.clear();
+    }
 }
 
 /// Build the federated dataset for a config: per-client shards + test set.
@@ -259,7 +293,8 @@ impl Simulation {
             vclock: 0.0,
             backend,
             recorder: RunRecorder::new(),
-            round_hook: None,
+            telemetry: None,
+            observer: None,
         })
     }
 
@@ -275,14 +310,63 @@ impl Simulation {
     }
 
     /// Install a per-round hook (used by the Fig. 1 similarity probe).
-    /// This opts the server phase into densifying every survivor's update
+    /// This opts the server phase into densifying every arrival's update
     /// for the hook's [`RoundHookView`]; leave it uninstalled to keep the
-    /// round loop in the compressed domain.
+    /// round loop in the compressed domain. Implemented as an adapter over
+    /// [`Simulation::set_observer`], so hooks now fire under every
+    /// scheduler, not just sync.
     pub fn set_round_hook(
         &mut self,
         hook: Box<dyn FnMut(usize, &RoundHookView)>,
     ) {
-        self.round_hook = Some(hook);
+        self.observer = Some(Box::new(RoundHookAdapter {
+            hook,
+            meta: self.meta.clone(),
+            pending: Vec::new(),
+        }));
+    }
+
+    /// Install a streaming run probe, called from all three schedulers —
+    /// see [`crate::telemetry::Observer`] for the per-scheduler lifecycle.
+    /// Latest installation wins ([`Simulation::set_round_hook`] is an
+    /// adapter over this).
+    pub fn set_observer(&mut self, observer: Box<dyn Observer>) {
+        self.observer = Some(observer);
+    }
+
+    /// Switch telemetry on for this run: allocates the span/metrics store
+    /// and wraps the transport in a counting
+    /// [`crate::net::transport::Instrumented`]. Idempotent; returns the
+    /// live handle (also reachable via [`Simulation::telemetry`]). Without
+    /// this call, the plane's cost is one pointer test per site.
+    pub fn enable_telemetry(&mut self) -> Arc<Telemetry> {
+        if let Some(tel) = &self.telemetry {
+            return Arc::clone(tel);
+        }
+        let tel = Arc::new(Telemetry::new(self.backend.name(), self.cfg.sched.kind.name()));
+        let inner = std::mem::replace(&mut self.transport, Box::new(Loopback::new()));
+        self.transport = Box::new(Instrumented::new(inner, tel.transport_counters()));
+        self.telemetry = Some(Arc::clone(&tel));
+        tel
+    }
+
+    /// The run's telemetry, if [`Simulation::enable_telemetry`] was called.
+    pub fn telemetry(&self) -> Option<&Arc<Telemetry>> {
+        self.telemetry.as_ref()
+    }
+
+    /// Round-end telemetry: drive the basis-pool sweep (`stats()` *is* the
+    /// dead-weak-ref sweep, so the gauges below can never report freed
+    /// bases), gauge pool occupancy, and freeze this round's metrics into
+    /// `record.ext`. No-op when telemetry is disabled.
+    pub(crate) fn telemetry_round_end(&mut self, record: &mut RoundRecord) {
+        if let Some(tel) = &self.telemetry {
+            let pool = self.basis_pool.stats();
+            tel.gauge("pool.entries", pool.entries as f64);
+            tel.gauge("pool.bytes", pool.bytes() as f64);
+            tel.count("sum_d", record.sum_d);
+            record.ext = Some(tel.snapshot_round(record.round as u64));
+        }
     }
 
     /// `(client compressor, server decompressor)` state fingerprints per
@@ -326,12 +410,30 @@ impl Simulation {
         // set is identical at any worker count.
         let survivors = self.dropout.filter(round, &participants);
         let workers = self.cfg.resolved_workers();
+        let tel = self.telemetry.clone();
+        let t_round_start = self.vclock;
+        if let Some(t) = tel.as_deref() {
+            t.count("dispatches", survivors.len() as u64);
+            t.count("dropouts", (participants.len() - survivors.len()) as u64);
+        }
+        if let Some(obs) = self.observer.as_mut() {
+            obs.on_dispatch(&DispatchEvent {
+                round,
+                cids: &survivors,
+                vtime: t_round_start,
+                model_version: round as u64,
+            });
+        }
 
         // Stage 1: broadcast — encode the global model once, ship the
         // frame (one shared allocation) to every survivor through the
         // transport, and charge the downlink from the buffers that
         // actually crossed it.
+        let sp = Telemetry::timer(tel.as_deref());
         let broadcast: std::sync::Arc<[u8]> = wire::encode_params(&self.global).into();
+        if let Some(sp) = sp {
+            sp.end(Phase::BroadcastEncode, round as u64, None);
+        }
         let broadcast_bytes = broadcast.len() as u64;
         for &cid in &survivors {
             self.transport.broadcast(cid, &broadcast)?;
@@ -358,7 +460,13 @@ impl Simulation {
             lr: self.cfg.lr,
         };
         let lanes = engine::take_lanes(&mut self.clients, &survivors);
-        let outcomes = engine::run_client_phase(self.trainer.plan(workers), inputs, lanes)?;
+        let outcomes = engine::run_client_phase(
+            self.trainer.plan(workers),
+            inputs,
+            lanes,
+            tel.as_deref(),
+            round as u64,
+        )?;
 
         // Stage 3: upload every frame through the transport in participant
         // order; the uplink charge is whatever the server drains. Weights
@@ -397,6 +505,30 @@ impl Simulation {
                 None => true,
             })
             .collect();
+        // The round's virtual duration (used again at stage 6): the
+        // slowest on-time transfer, capped at the deadline.
+        let sim_time_s = self.network.round_time(&per_client_up, broadcast_bytes, deadline);
+        if let Some(t) = tel.as_deref() {
+            t.count("stragglers", on_time.iter().filter(|ot| !**ot).count() as u64);
+            // Each survivor's transfer on the virtual clock, from the
+            // round's dispatch instant to its individual arrival — capped
+            // at the round close, because the lockstep loop re-dispatches
+            // every client at the close regardless (no busy model): an
+            // uncapped straggler transit would partially overlap the same
+            // client's next-round span and break per-track nesting.
+            // Semisync/async show the full transfer instead; they never
+            // re-dispatch a client mid-flight.
+            for &(cid, up) in &per_client_up {
+                let rtt = self.network.link(cid).round_trip_time(broadcast_bytes, up);
+                t.virt_span(
+                    Phase::UplinkTransit,
+                    round as u64,
+                    Some(cid as u32),
+                    t_round_start,
+                    t_round_start + rtt.min(sim_time_s),
+                );
+            }
+        }
 
         // Stage 4: server decode — every received frame (stragglers too:
         // paired compressor/decompressor state must advance in lockstep)
@@ -404,24 +536,28 @@ impl Simulation {
         let ids: Vec<usize> = uploads.iter().map(|(cid, _)| *cid).collect();
         let frames: Vec<Vec<u8>> = uploads.into_iter().map(|(_, f)| f).collect();
         let lanes = engine::take_lanes(&mut self.clients, &ids);
-        let decoded = engine::run_server_phase(workers, lanes, frames)?;
+        let decoded = engine::run_server_phase(workers, lanes, frames, tel.as_deref(), round as u64)?;
 
-        // Opt-in dense path: only an installed round hook (the Fig. 1
-        // probe) forces materializing per-client dense updates; the
-        // aggregate below folds the structured forms directly either way.
-        // Deliberate trade-off: with a hook installed, low-rank layers are
-        // reconstructed twice (once here, once fused into the fold) so the
-        // aggregate stays bit-identical whether or not a hook is observing
-        // the round — today's only hook user runs uncompressed (FedAvg),
-        // where the view is a plain buffer clone.
-        if let Some(hook) = self.round_hook.as_mut() {
-            let dense: Vec<(usize, Vec<Vec<f32>>)> = decoded
-                .iter()
-                .map(|(cid, updates)| {
-                    (*cid, updates.iter().map(LayerUpdate::to_dense).collect())
-                })
-                .collect();
-            hook(round, &RoundHookView { updates: &dense, meta: &self.meta });
+        // Streaming probes: every decoded upload (stragglers too, flagged
+        // off-time with weight 0) reaches the observer before the fold —
+        // the legacy dense round-hook adapter sees exactly the batch the
+        // old hook did. Deliberate trade-off: a densifying observer makes
+        // low-rank layers reconstruct twice (once in its view, once fused
+        // into the fold) so the aggregate stays bit-identical whether or
+        // not anything is observing the round.
+        if let Some(obs) = self.observer.as_mut() {
+            for ((cid, updates), ot) in decoded.iter().zip(&on_time) {
+                obs.on_arrival(&ArrivalEvent {
+                    round,
+                    cid: *cid,
+                    updates,
+                    meta: &self.meta,
+                    weight: if *ot { weight_of[*cid] } else { 0.0 },
+                    staleness: 0,
+                    vtime: t_round_start,
+                    on_time: *ot,
+                });
+            }
         }
 
         // Stage 5: streaming compressed-domain aggregation — fold the
@@ -441,6 +577,7 @@ impl Simulation {
         // empty) skips the apply entirely instead of normalizing by 0 —
         // the old dense path would have produced NaN scales there and
         // poisoned the global model.
+        let mut folded = 0usize;
         if wtotal > 0.0 {
             let folds: Vec<(f32, Vec<LayerUpdate>)> = decoded
                 .into_iter()
@@ -448,11 +585,21 @@ impl Simulation {
                 .filter(|(_, ot)| **ot)
                 .map(|((cid, updates), _)| ((weight_of[cid] / wtotal) as f32, updates))
                 .collect();
+            folded = folds.len();
+            let sp = Telemetry::timer(tel.as_deref());
             let mut agg = ServerAggregator::with_backend(&self.meta, self.backend);
             agg.fold_batch(workers, folds);
+            if let Some(sp) = sp {
+                sp.end(Phase::Fold, round as u64, None);
+            }
+            let sp = Telemetry::timer(tel.as_deref());
             self.global.axpy(1.0, &agg.finish(&self.meta));
+            if let Some(sp) = sp {
+                sp.end(Phase::Apply, round as u64, None);
+            }
         }
 
+        let sp = Telemetry::timer(tel.as_deref());
         let (test_loss, test_acc) = if round % self.cfg.eval_every == 0
             || round + 1 == self.cfg.rounds
         {
@@ -460,11 +607,22 @@ impl Simulation {
         } else {
             (f64::NAN, f64::NAN)
         };
+        if let Some(sp) = sp {
+            sp.end(Phase::Eval, round as u64, None);
+        }
 
         let (up, down) = self.ledger.end_round();
-        let sim_time_s = self.network.round_time(&per_client_up, broadcast_bytes, deadline);
         self.vclock += sim_time_s;
-        let record = RoundRecord {
+        if folded > 0 {
+            if let Some(t) = tel.as_deref() {
+                t.count("folds", folded as u64);
+                t.count("applies", 1);
+            }
+            if let Some(obs) = self.observer.as_mut() {
+                obs.on_apply(&ApplyEvent { round, vtime: self.vclock, folded, wtotal });
+            }
+        }
+        let mut record = RoundRecord {
             round,
             train_loss: loss_sum / survivors.len().max(1) as f64,
             test_accuracy: test_acc,
@@ -475,8 +633,13 @@ impl Simulation {
             sim_clock_s: self.vclock,
             sum_d,
             survivors,
+            ext: None,
         };
+        self.telemetry_round_end(&mut record);
         self.recorder.push(record.clone());
+        if let Some(obs) = self.observer.as_mut() {
+            obs.on_round(round, &record);
+        }
         Ok(record)
     }
 
@@ -506,8 +669,8 @@ impl Simulation {
     /// ([`crate::sched`]): sync reproduces [`Simulation::run`]
     /// bit-identically; semi-sync and async drive the same transport,
     /// lanes, and aggregation plane on their own virtual-clock control
-    /// flow. Round hooks fire only under the sync scheduler (the dense
-    /// round-hook view assumes lockstep rounds).
+    /// flow. Observers (and round hooks, via the adapter) fire under every
+    /// scheduler — see [`crate::telemetry::Observer`] for the lifecycle.
     pub fn run_scheduled(&mut self) -> Result<RunReport> {
         self.run_scheduled_with_progress(|_, _| {})
     }

@@ -17,15 +17,79 @@ use gradestc::coordinator::{RoundHookView, Simulation};
 use gradestc::metrics::recorder::fmt_mb;
 use gradestc::metrics::{RunReport, SimilarityProbe};
 use gradestc::model::meta::layer_table;
+use gradestc::telemetry::export;
 use gradestc::util::args::ArgSpec;
+
+/// Where one run's telemetry artifacts go. `default()` (no sink) leaves
+/// telemetry disabled — the span buffers are never allocated and the run
+/// takes the exact pre-telemetry code paths.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSinks {
+    /// Chrome `trace_event` JSON path; the `.jsonl` span stream lands
+    /// alongside it ([`export::jsonl_sibling`]).
+    pub trace: Option<PathBuf>,
+    /// Per-round metrics JSON path.
+    pub metrics: Option<PathBuf>,
+}
+
+impl TraceSinks {
+    /// Whether any sink is configured (telemetry should be enabled).
+    pub fn enabled(&self) -> bool {
+        self.trace.is_some() || self.metrics.is_some()
+    }
+
+    /// Arm telemetry on a freshly built simulation when any sink is set.
+    pub fn arm(&self, sim: &mut Simulation) {
+        if self.enabled() {
+            sim.enable_telemetry();
+        }
+    }
+
+    /// Export the configured artifacts from a finished run (no-op when
+    /// disabled).
+    pub fn export(&self, sim: &Simulation, verbose: bool) -> Result<()> {
+        let Some(tel) = sim.telemetry() else { return Ok(()) };
+        if let Some(path) = &self.trace {
+            export::write_chrome_trace(tel, path)?;
+            export::write_spans_jsonl(tel, &export::jsonl_sibling(path))?;
+            if verbose {
+                println!(
+                    "trace -> {} (+ .jsonl, {} spans)",
+                    path.display(),
+                    tel.span_count()
+                );
+            }
+        }
+        if let Some(path) = &self.metrics {
+            export::write_metrics_json(tel, path)?;
+            if verbose {
+                println!("metrics -> {}", path.display());
+            }
+        }
+        Ok(())
+    }
+}
 
 /// Run one experiment under its configured scheduler (`cfg.sched`; sync by
 /// default — bit-identical to the legacy loop), writing its per-round CSV,
 /// and return the report.
 pub fn run_one(cfg: &ExperimentConfig, out_dir: &str, verbose: bool) -> Result<RunReport> {
+    run_one_traced(cfg, out_dir, verbose, &TraceSinks::default())
+}
+
+/// [`run_one`] with telemetry sinks: arms the tracer before the run and
+/// exports the trace/metrics artifacts after. Traced records are
+/// bit-identical to untraced ones (locked in by `rust/tests/telemetry.rs`).
+pub fn run_one_traced(
+    cfg: &ExperimentConfig,
+    out_dir: &str,
+    verbose: bool,
+    sinks: &TraceSinks,
+) -> Result<RunReport> {
     let t0 = std::time::Instant::now();
     let mut sim = Simulation::build(cfg.clone())
         .with_context(|| format!("building simulation '{}'", cfg.name))?;
+    sinks.arm(&mut sim);
     let report = sim.run_scheduled_with_progress(|round, rec| {
         if verbose {
             println!(
@@ -39,6 +103,7 @@ pub fn run_one(cfg: &ExperimentConfig, out_dir: &str, verbose: bool) -> Result<R
     })?;
     let csv = PathBuf::from(out_dir).join(format!("{}.csv", cfg.name));
     sim.recorder.write_csv(&csv)?;
+    sinks.export(&sim, verbose)?;
     if verbose {
         println!(
             "[{}] done in {:.1}s -> {}",
@@ -75,6 +140,16 @@ pub fn cmd_exp(argv: Vec<String>) -> i32 {
         .opt("eval-every", "1", "evaluate every N rounds")
         .opt("workers", "0", "worker threads for the per-client phase (0 = auto)")
         .opt("clients", "0", "override the client population (0 = experiment default; scale1: 10000)")
+        .opt(
+            "trace",
+            "",
+            "directory for per-run Chrome trace_event JSON (<dir>/<run>.trace.json + .jsonl); empty = telemetry off",
+        )
+        .opt(
+            "metrics",
+            "",
+            "directory for per-run per-round metrics JSON (<dir>/<run>.metrics.json); empty = off",
+        )
         .flag("native", "use the native trainer instead of XLA artifacts")
         .flag("ef", "include the error-feedback extension in table4");
     let args = match spec.parse(rest) {
@@ -96,6 +171,8 @@ pub fn cmd_exp(argv: Vec<String>) -> i32 {
         eval_every: args.usize("eval-every"),
         workers: args.usize("workers"),
         clients: args.usize("clients"),
+        trace_dir: args.str("trace").to_string(),
+        metrics_dir: args.str("metrics").to_string(),
     };
     let r = match id.as_str() {
         "fig1" => exp_fig1(&ctx),
@@ -133,9 +210,22 @@ struct ExpCtx {
     eval_every: usize,
     workers: usize,
     clients: usize,
+    trace_dir: String,
+    metrics_dir: String,
 }
 
 impl ExpCtx {
+    /// Per-run telemetry sinks: `<trace_dir>/<run>.trace.json` and
+    /// `<metrics_dir>/<run>.metrics.json` when the directories are set.
+    fn sinks(&self, name: &str) -> TraceSinks {
+        TraceSinks {
+            trace: (!self.trace_dir.is_empty())
+                .then(|| PathBuf::from(&self.trace_dir).join(format!("{name}.trace.json"))),
+            metrics: (!self.metrics_dir.is_empty())
+                .then(|| PathBuf::from(&self.metrics_dir).join(format!("{name}.metrics.json"))),
+        }
+    }
+
     fn rounds_or(&self, default: usize) -> usize {
         if self.rounds_override > 0 {
             self.rounds_override
@@ -188,7 +278,9 @@ fn exp_fig1(ctx: &ExpCtx) -> Result<()> {
     let probe2 = probe.clone();
     let probed2 = probed.clone();
 
+    let sinks = ctx.sinks(&cfg.name);
     let mut sim = Simulation::build(cfg.clone())?;
+    sinks.arm(&mut sim);
     sim.set_round_hook(Box::new(move |_round, view: &RoundHookView| {
         // Client 0's raw update per layer (FedAvg → decompressed == raw).
         if let Some((_, tensors)) = view.updates.iter().find(|(id, _)| *id == 0) {
@@ -201,6 +293,7 @@ fn exp_fig1(ctx: &ExpCtx) -> Result<()> {
         let rec = sim.step(round)?;
         println!("round {round:>3}: loss {:.4}", rec.train_loss);
     }
+    sinks.export(&sim, false)?;
 
     let out = PathBuf::from(&ctx.out).join("fig1");
     std::fs::create_dir_all(&out)?;
@@ -351,9 +444,12 @@ fn exp_table3(ctx: &ExpCtx) -> Result<()> {
                     dname,
                     mname
                 );
+                let sinks = ctx.sinks(&cfg.name);
                 let mut sim = Simulation::build(cfg.clone())?;
+                sinks.arm(&mut sim);
                 let rep = sim.run_with_progress(|_, _| {})?;
                 sim.recorder.write_csv(&out.join(format!("{}.csv", cfg.name)))?;
+                sinks.export(&sim, false)?;
                 if mname == "fedavg" {
                     threshold = cfg.threshold_frac * rep.best_accuracy;
                 }
@@ -441,9 +537,12 @@ fn exp_table4(ctx: &ExpCtx) -> Result<()> {
         rounds,
     );
     cfg0.name = "table4-fedavg".into();
+    let sinks0 = ctx.sinks(&cfg0.name);
     let mut sim0 = Simulation::build(cfg0.clone())?;
+    sinks0.arm(&mut sim0);
     let rep0 = sim0.run_with_progress(|_, _| {})?;
     sim0.recorder.write_csv(&out.join("table4-fedavg.csv"))?;
+    sinks0.export(&sim0, false)?;
     let threshold = 0.70 * rep0.best_accuracy;
 
     let mut summary =
@@ -460,9 +559,12 @@ fn exp_table4(ctx: &ExpCtx) -> Result<()> {
             rounds,
         );
         cfg.name = format!("table4-{name}");
+        let sinks = ctx.sinks(&cfg.name);
         let mut sim = Simulation::build(cfg.clone())?;
+        sinks.arm(&mut sim);
         sim.run_with_progress(|_, _| {})?;
         sim.recorder.write_csv(&out.join(format!("{}.csv", cfg.name)))?;
+        sinks.export(&sim, false)?;
         let rep = sim.recorder.report(threshold);
         println!(
             "{:<16} {:>8.2}% {:>14} {:>12} {:>10}",
@@ -511,7 +613,7 @@ fn exp_fig7(ctx: &ExpCtx) -> Result<()> {
         cfg.num_clients = 50;
         cfg.participation = 0.2;
         cfg.samples_per_client = 128;
-        let rep = run_one(&cfg, out.to_str().unwrap(), false)?;
+        let rep = run_one_traced(&cfg, out.to_str().unwrap(), false, &ctx.sinks(&cfg.name))?;
         println!(
             "{name:<10} best acc {:.2}% total uplink {} MB",
             rep.best_accuracy * 100.0,
@@ -546,7 +648,7 @@ fn exp_fig8(ctx: &ExpCtx) -> Result<()> {
             );
             cfg.name = format!("fig8-e{epochs}-{name}");
             cfg.local_epochs = epochs;
-            let rep = run_one(&cfg, out.to_str().unwrap(), false)?;
+            let rep = run_one_traced(&cfg, out.to_str().unwrap(), false, &ctx.sinks(&cfg.name))?;
             println!(
                 "epochs {epochs} {name:<10} best acc {:.2}% total uplink {} MB",
                 rep.best_accuracy * 100.0,
@@ -578,7 +680,7 @@ fn exp_fig9(ctx: &ExpCtx) -> Result<()> {
             rounds,
         );
         cfg.name = format!("fig9-k{k}");
-        let rep = run_one(&cfg, out.to_str().unwrap(), false)?;
+        let rep = run_one_traced(&cfg, out.to_str().unwrap(), false, &ctx.sinks(&cfg.name))?;
         println!(
             "{k:<6} {:>8.2}% {:>12} {:>10}",
             rep.best_accuracy * 100.0,
@@ -656,9 +758,12 @@ fn exp_async1(ctx: &ExpCtx) -> Result<()> {
             cfg.name = format!("async1-{mname}-{sname}");
             cfg.net.deadline_s = *dl;
             cfg.sched.kind = *skind;
+            let sinks = ctx.sinks(&cfg.name);
             let mut sim = Simulation::build(cfg.clone())?;
+            sinks.arm(&mut sim);
             let rep = sim.run_scheduled_with_progress(|_, _| {})?;
             sim.recorder.write_csv(&out.join(format!("{}.csv", cfg.name)))?;
+            sinks.export(&sim, false)?;
             if *mname == "fedavg" && *sname == "sync" {
                 target = cfg.threshold_frac * rep.best_accuracy;
             }
@@ -771,14 +876,17 @@ fn exp_scale1(ctx: &ExpCtx) -> Result<()> {
         let mut cfg = mk_base();
         cfg.name = format!("scale1-{sname}");
         cfg.sched.kind = kind;
+        let sinks = ctx.sinks(&cfg.name);
         let t0 = std::time::Instant::now();
         let mut sim = Simulation::build(cfg.clone())
             .with_context(|| format!("building {clients}-client simulation"))?;
+        sinks.arm(&mut sim);
         let build_s = t0.elapsed().as_secs_f64();
         let t1 = std::time::Instant::now();
         let rep = sim.run_scheduled_with_progress(|_, _| {})?;
         let run_s = t1.elapsed().as_secs_f64();
         sim.recorder.write_csv(&out.join(format!("{}.csv", cfg.name)))?;
+        sinks.export(&sim, false)?;
 
         let pool = sim.basis_pool_stats();
         let naive = naive_per_lane as f64 * clients as f64;

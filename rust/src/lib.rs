@@ -15,9 +15,9 @@
 //!
 //! Python is build-time only; the round loop is pure Rust + XLA.
 //!
-//! The runtime is organized as six planes — round engine → wire/network
+//! The runtime is organized as seven planes — round engine → wire/network
 //! → compressed-domain aggregation → scheduler → basis pool → compute
-//! backend — each with its own invariants; the top-level
+//! backend → telemetry — each with its own invariants; the top-level
 //! `ARCHITECTURE.md` maps them, with per-scheduler data-flow diagrams and
 //! the "where does a byte get charged" walkthrough.
 //!
@@ -144,10 +144,15 @@
 //! * [`sched`] — the scheduler plane: deterministic event queue
 //!   ([`sched::EventQueue`]) and the sync / semi-sync / async-buffered
 //!   round control flows on a virtual clock.
+//! * [`telemetry`] — the observability plane: dual-clock span tracing
+//!   ([`telemetry::Telemetry`], Chrome-trace/JSONL/metrics-JSON
+//!   exporters behind `--trace`/`--metrics`) and the streaming
+//!   [`telemetry::Observer`] probe API called from every scheduler.
+//!   Zero-cost when disabled; observation never perturbs results.
 //! * [`util`] — RNG, CLI args, bench harness, property testing, thread pool.
 //!
 //! See `examples/` for runnable end-to-end drivers, `ARCHITECTURE.md`
-//! (repo root) for the five-plane system map, and `docs/EXPERIMENTS.md`
+//! (repo root) for the seven-plane system map, and `docs/EXPERIMENTS.md`
 //! for the experiment catalogue.
 
 pub mod compress;
@@ -161,6 +166,7 @@ pub mod net;
 pub mod nn;
 pub mod runtime;
 pub mod sched;
+pub mod telemetry;
 pub mod util;
 
 /// Crate-wide result alias (anyhow-backed).

@@ -184,6 +184,16 @@ fn cmd_train(argv: Vec<String>) -> i32 {
         )
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("out", "results", "results directory")
+        .opt(
+            "trace",
+            "",
+            "write a Chrome trace_event JSON here (chrome://tracing / Perfetto; a .jsonl span stream lands alongside); empty = telemetry off",
+        )
+        .opt(
+            "metrics",
+            "",
+            "write per-round telemetry metrics JSON here (phase times, payload-variant bytes, staleness histogram, pool gauges); empty = off",
+        )
         .flag("native", "use the native Rust trainer instead of XLA artifacts")
         .flag("quiet", "suppress per-round lines");
     let args = match spec.parse(argv) {
@@ -263,7 +273,12 @@ fn cmd_train(argv: Vec<String>) -> i32 {
         backend,
     };
     let quiet = args.has_flag("quiet");
-    match experiments::run_one(&cfg, args.str("out"), !quiet) {
+    let opt_path = |key: &str| {
+        let p = args.str(key);
+        (!p.is_empty()).then(|| std::path::PathBuf::from(p))
+    };
+    let sinks = experiments::TraceSinks { trace: opt_path("trace"), metrics: opt_path("metrics") };
+    match experiments::run_one_traced(&cfg, args.str("out"), !quiet, &sinks) {
         Ok(report) => {
             println!(
                 "\n{}: best acc {:.2}% | total uplink {:.4} MB | uplink@{:.0}% {}",

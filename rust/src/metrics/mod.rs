@@ -2,6 +2,12 @@
 //! (charged from the encoded frames that cross [`crate::net::Transport`]),
 //! the per-client heterogeneous-link [`NetworkModel`], and the
 //! cosine-similarity probe behind the paper's Fig. 1.
+//!
+//! The similarity probe consumes the telemetry plane's
+//! [`Observer`](crate::telemetry::Observer) stream (via the round-hook
+//! adapter), so it works under every scheduler; the per-round telemetry
+//! snapshot rides along on [`RoundRecord::ext`] without entering any CSV
+//! or report math.
 
 pub mod accounting;
 pub mod recorder;

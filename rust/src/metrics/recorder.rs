@@ -36,6 +36,12 @@ pub struct RoundRecord {
     /// stragglers). Async: the `k` arrivals folded into this apply (a
     /// fast client may appear more than once).
     pub survivors: Vec<usize>,
+    /// Telemetry extension: this round's frozen metrics snapshot
+    /// (per-phase time, payload-variant bytes, staleness histogram, pool
+    /// gauges). `None` when telemetry is disabled — the named scalar
+    /// fields above are the determinism contract; `ext` is observation
+    /// only and never enters CSV or report math.
+    pub ext: Option<std::sync::Arc<crate::telemetry::RoundSnapshot>>,
 }
 
 /// Collects [`RoundRecord`]s and derives the paper's summary metrics.
@@ -178,6 +184,7 @@ mod tests {
             sim_clock_s: 0.1 * (round + 1) as f64,
             sum_d: 3,
             survivors: vec![0, 1],
+            ext: None,
         }
     }
 

@@ -14,6 +14,7 @@
 //! methods and plugs into the engine unchanged.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -79,6 +80,82 @@ impl Transport for Loopback {
     }
 }
 
+/// Frame/byte counters fed by [`Instrumented`], read by the telemetry
+/// plane. Atomic adds are commutative, so the counts are independent of
+/// send interleaving.
+#[derive(Debug, Default)]
+pub struct TransportCounters {
+    broadcast_frames: AtomicU64,
+    broadcast_bytes: AtomicU64,
+    upload_frames: AtomicU64,
+    upload_bytes: AtomicU64,
+}
+
+impl TransportCounters {
+    /// Fresh zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one broadcast frame of `bytes`.
+    pub fn add_broadcast(&self, bytes: u64) {
+        self.broadcast_frames.fetch_add(1, Ordering::Relaxed);
+        self.broadcast_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Record one upload frame of `bytes`.
+    pub fn add_upload(&self, bytes: u64) {
+        self.upload_frames.fetch_add(1, Ordering::Relaxed);
+        self.upload_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// `[broadcast_frames, broadcast_bytes, upload_frames, upload_bytes]`.
+    pub fn snapshot(&self) -> [u64; 4] {
+        [
+            self.broadcast_frames.load(Ordering::Relaxed),
+            self.broadcast_bytes.load(Ordering::Relaxed),
+            self.upload_frames.load(Ordering::Relaxed),
+            self.upload_bytes.load(Ordering::Relaxed),
+        ]
+    }
+}
+
+/// Counting wrapper around any [`Transport`]. Installed by
+/// `Simulation::enable_telemetry`; forwards every call unchanged (same
+/// FIFO order, same shared broadcast allocation) and bumps
+/// [`TransportCounters`] on the send side.
+pub struct Instrumented {
+    inner: Box<dyn Transport>,
+    counters: Arc<TransportCounters>,
+}
+
+impl Instrumented {
+    /// Wrap `inner`, feeding `counters`.
+    pub fn new(inner: Box<dyn Transport>, counters: Arc<TransportCounters>) -> Self {
+        Instrumented { inner, counters }
+    }
+}
+
+impl Transport for Instrumented {
+    fn broadcast(&mut self, to: usize, frame: &Arc<[u8]>) -> Result<()> {
+        self.counters.add_broadcast(frame.len() as u64);
+        self.inner.broadcast(to, frame)
+    }
+
+    fn drain_broadcasts(&mut self) -> Vec<(usize, Arc<[u8]>)> {
+        self.inner.drain_broadcasts()
+    }
+
+    fn upload(&mut self, from: usize, frame: Vec<u8>) -> Result<()> {
+        self.counters.add_upload(frame.len() as u64);
+        self.inner.upload(from, frame)
+    }
+
+    fn drain_uploads(&mut self) -> Vec<(usize, Vec<u8>)> {
+        self.inner.drain_uploads()
+    }
+}
+
 // The coordinator boxes its transport and the box rides inside `Simulation`,
 // which tests move across threads; keep the object-safety + Send contract
 // checked at compile time.
@@ -106,6 +183,23 @@ mod tests {
         assert!(t.drain_broadcasts().is_empty());
         assert_eq!(t.drain_uploads(), vec![(1, vec![9, 9, 9])]);
         assert!(t.drain_uploads().is_empty());
+    }
+
+    #[test]
+    fn instrumented_counts_without_changing_delivery() {
+        let counters = Arc::new(TransportCounters::new());
+        let mut t = Instrumented::new(Box::new(Loopback::new()), Arc::clone(&counters));
+        let frame: Arc<[u8]> = vec![0u8; 10].into();
+        t.broadcast(0, &frame).unwrap();
+        t.broadcast(1, &frame).unwrap();
+        t.upload(1, vec![1, 2, 3]).unwrap();
+        assert_eq!(counters.snapshot(), [2, 20, 1, 3]);
+        let rx = t.drain_broadcasts();
+        assert_eq!(rx.len(), 2);
+        assert!(rx.iter().all(|(_, f)| Arc::ptr_eq(f, &frame)));
+        assert_eq!(t.drain_uploads(), vec![(1, vec![1, 2, 3])]);
+        // Drains don't double-count.
+        assert_eq!(counters.snapshot(), [2, 20, 1, 3]);
     }
 
     #[test]

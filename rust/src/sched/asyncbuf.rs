@@ -88,6 +88,7 @@ use crate::compress::Decompressor as _;
 use crate::coordinator::{ServerAggregator, Simulation, Trainer as _};
 use crate::metrics::{RoundRecord, RunReport};
 use crate::net::wire;
+use crate::telemetry::{ApplyEvent, ArrivalEvent, DispatchEvent, Phase, Telemetry};
 use crate::util::rng::Pcg64;
 use crate::Result;
 
@@ -191,6 +192,7 @@ impl AsyncBufferedScheduler {
         now: f64,
         workers: usize,
     ) -> Result<()> {
+        let tel = sim.telemetry.clone();
         let mut alive: Vec<usize> = Vec::with_capacity(cids.len());
         for &cid in cids {
             let attempt = dispatches[cid];
@@ -203,19 +205,35 @@ impl AsyncBufferedScheduler {
                 let wake =
                     now + compute.draw(attempt, cid) + sim.network.link(cid).round_trip_time(0, 0);
                 dispatches[cid] += 1;
+                if let Some(t) = tel.as_deref() {
+                    t.count("dropouts", 1);
+                }
                 queue.push(wake, Event::Retry { cid });
             }
         }
         if alive.is_empty() {
             return Ok(());
         }
+        if let Some(obs) = sim.observer.as_mut() {
+            obs.on_dispatch(&DispatchEvent {
+                round: version as usize,
+                cids: &alive,
+                vtime: now,
+                model_version: version,
+            });
+        }
 
         // One encoded broadcast per model version (cache shared across
-        // dispatches until the next apply bumps the version).
+        // dispatches until the next apply bumps the version); only the
+        // cache miss pays (and traces) the encode.
         let frame = match broadcast {
             Some((v, f)) if *v == version => f.clone(),
             _ => {
+                let sp = Telemetry::timer(tel.as_deref());
                 let f: Arc<[u8]> = wire::encode_params(&sim.global).into();
+                if let Some(sp) = sp {
+                    sp.end(Phase::BroadcastEncode, version, None);
+                }
                 *broadcast = Some((version, f.clone()));
                 f
             }
@@ -224,9 +242,9 @@ impl AsyncBufferedScheduler {
         // fanned client phase, upload, arrival stamping. The initial
         // cohort dispatch is the parallel case; steady-state re-dispatches
         // are single lanes.
-        for up in
-            super::dispatch_uploads(sim, &frame, &alive, now, workers, compute, dispatches)?
-        {
+        for up in super::dispatch_uploads(
+            sim, &frame, &alive, now, workers, compute, dispatches, version,
+        )? {
             queue.push(up.arrival_s, Event::Arrival { up, version });
         }
         Ok(())
@@ -246,6 +264,7 @@ impl Scheduler for AsyncBufferedScheduler {
         let workers = sim.cfg.resolved_workers();
         let compute = ComputeModel::new(&self.conf, sim.cfg.seed);
         let n = sim.clients.len();
+        let tel = sim.telemetry.clone();
         let mut queue: EventQueue<Event> = EventQueue::new();
         let mut dispatches = vec![0u64; n];
         let mut broadcast: Option<(u64, Arc<[u8]>)> = None;
@@ -319,12 +338,45 @@ impl Scheduler for AsyncBufferedScheduler {
                         // the lane's paired decompressor (lockstep), fold
                         // with the staleness-discounted weight.
                         sim.ledger.charge_uplink(up.frame.len() as u64);
+                        let sp = Telemetry::timer(tel.as_deref());
                         let payloads = wire::decode(&up.frame)
                             .with_context(|| format!("decoding client {cid}'s upload"))?;
+                        if let Some(tl) = tel.as_deref() {
+                            tl.count_payloads(&payloads);
+                        }
                         let updates = sim.clients[cid].decompressor.decode(payloads);
+                        if let Some(sp) = sp {
+                            sp.end(Phase::ServerDecode, v, Some(cid as u32));
+                        }
                         let tau = version - v;
                         let w = up.weight / (1.0 + tau as f64).powf(self.p);
+                        if let Some(tl) = tel.as_deref() {
+                            tl.observe_staleness(tau);
+                            if tau > 0 {
+                                tl.count("stragglers", 1);
+                            }
+                            tl.count("folds", 1);
+                        }
+                        // The observer sees exactly the arrivals that fold
+                        // (the shutdown drain below stays silent), so an
+                        // arrival count equals the fold count.
+                        if let Some(obs) = sim.observer.as_mut() {
+                            obs.on_arrival(&ArrivalEvent {
+                                round: applies,
+                                cid,
+                                updates: &updates,
+                                meta: &sim.meta,
+                                weight: w,
+                                staleness: tau,
+                                vtime: t,
+                                on_time: tau == 0,
+                            });
+                        }
+                        let sp = Telemetry::timer(tel.as_deref());
                         agg.fold(w as f32, updates);
+                        if let Some(sp) = sp {
+                            sp.end(Phase::Fold, applies as u64, Some(cid as u32));
+                        }
                         wsum += w;
                         buffered += 1;
                         folded_cids.push(cid);
@@ -338,11 +390,31 @@ impl Scheduler for AsyncBufferedScheduler {
                                 &mut agg,
                                 ServerAggregator::with_backend(&sim.meta, sim.backend),
                             );
+                            let sp = Telemetry::timer(tel.as_deref());
                             if wsum > 0.0 {
                                 sim.global
                                     .axpy((1.0 / wsum) as f32, &full.finish(&sim.meta));
                             }
+                            if let Some(sp) = sp {
+                                sp.end(Phase::Apply, applies as u64, None);
+                            }
                             version += 1;
+                            if let Some(tl) = tel.as_deref() {
+                                tl.count("applies", 1);
+                                tl.gauge(
+                                    "slots.in_flight",
+                                    sampler.as_ref().map_or(n, |s| n - s.idle.len()) as f64,
+                                );
+                            }
+                            if let Some(obs) = sim.observer.as_mut() {
+                                obs.on_apply(&ApplyEvent {
+                                    round: applies,
+                                    vtime: t,
+                                    folded: self.k,
+                                    wtotal: wsum,
+                                });
+                            }
+                            let sp = Telemetry::timer(tel.as_deref());
                             let (test_loss, test_acc) = if applies % sim.cfg.eval_every == 0
                                 || applies + 1 == sim.cfg.rounds
                             {
@@ -350,9 +422,12 @@ impl Scheduler for AsyncBufferedScheduler {
                             } else {
                                 (f64::NAN, f64::NAN)
                             };
+                            if let Some(sp) = sp {
+                                sp.end(Phase::Eval, applies as u64, None);
+                            }
                             let (up_b, down_b) = sim.ledger.end_round();
                             folded_cids.sort_unstable();
-                            let record = RoundRecord {
+                            let mut record = RoundRecord {
                                 round: applies,
                                 train_loss: loss_sum / self.k as f64,
                                 test_accuracy: test_acc,
@@ -363,8 +438,13 @@ impl Scheduler for AsyncBufferedScheduler {
                                 sim_clock_s: t,
                                 sum_d,
                                 survivors: std::mem::take(&mut folded_cids),
+                                ext: None,
                             };
+                            sim.telemetry_round_end(&mut record);
                             sim.recorder.push(record.clone());
+                            if let Some(obs) = sim.observer.as_mut() {
+                                obs.on_round(applies, &record);
+                            }
                             progress(applies, &record);
                             t_last_apply = t;
                             applies += 1;

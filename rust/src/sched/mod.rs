@@ -82,6 +82,7 @@ use crate::compress::Decompressor as _;
 use crate::coordinator::{engine, Simulation};
 use crate::metrics::{RoundRecord, RunReport};
 use crate::net::{wire, Transport as _};
+use crate::telemetry::Phase;
 use crate::util::rng::Pcg64;
 use crate::Result;
 
@@ -303,7 +304,10 @@ pub(crate) struct DispatchedUpload {
 /// charged from the delivered frames), fan the client phase across
 /// `workers` threads, upload the results, and stamp each drained frame
 /// with its arrival time, consuming one `dispatches[cid]` compute draw
-/// per upload.
+/// per upload. `round` tags telemetry spans (the open round for semisync,
+/// the model version for async); with telemetry enabled, each upload's
+/// compute draw and link transit become `client_compress`/
+/// `uplink_transit` spans on the virtual-clock track.
 ///
 /// The sync path deliberately keeps its own copy of this staging inside
 /// [`Simulation::step`] — that loop is the frozen bit-identity reference
@@ -318,9 +322,14 @@ pub(crate) fn dispatch_uploads(
     workers: usize,
     compute: &ComputeModel,
     dispatches: &mut [u64],
+    round: u64,
 ) -> Result<Vec<DispatchedUpload>> {
     if cids.is_empty() {
         return Ok(Vec::new());
+    }
+    let tel = sim.telemetry.clone();
+    if let Some(t) = tel.as_deref() {
+        t.count("dispatches", cids.len() as u64);
     }
     let broadcast_bytes = frame.len() as u64;
     for &cid in cids {
@@ -345,7 +354,8 @@ pub(crate) fn dispatch_uploads(
         lr: sim.cfg.lr,
     };
     let lanes = engine::take_lanes(&mut sim.clients, cids);
-    let outcomes = engine::run_client_phase(sim.trainer.plan(workers), inputs, lanes)?;
+    let outcomes =
+        engine::run_client_phase(sim.trainer.plan(workers), inputs, lanes, tel.as_deref(), round)?;
 
     let n = dispatches.len();
     let mut loss_of = vec![0.0f64; n];
@@ -364,9 +374,20 @@ pub(crate) fn dispatch_uploads(
         .map(|(cid, frame)| {
             let attempt = dispatches[cid];
             dispatches[cid] += 1;
-            let arrival_s = now
-                + compute.draw(attempt, cid)
-                + sim.network.link(cid).round_trip_time(broadcast_bytes, frame.len() as u64);
+            let compute_s = compute.draw(attempt, cid);
+            let transit_s =
+                sim.network.link(cid).round_trip_time(broadcast_bytes, frame.len() as u64);
+            let arrival_s = now + compute_s + transit_s;
+            if let Some(t) = tel.as_deref() {
+                t.virt_span(Phase::ClientCompress, round, Some(cid as u32), now, now + compute_s);
+                t.virt_span(
+                    Phase::UplinkTransit,
+                    round,
+                    Some(cid as u32),
+                    now + compute_s,
+                    arrival_s,
+                );
+            }
             DispatchedUpload {
                 cid,
                 frame,

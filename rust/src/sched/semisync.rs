@@ -37,6 +37,7 @@ use crate::compress::{Decompressor as _, LayerUpdate};
 use crate::coordinator::{ServerAggregator, Simulation, Trainer as _};
 use crate::metrics::{RoundRecord, RunReport};
 use crate::net::wire;
+use crate::telemetry::{ApplyEvent, ArrivalEvent, DispatchEvent, Phase, Telemetry};
 use crate::Result;
 
 /// Deadline-bounded rounds; stragglers roll into the round open at their
@@ -66,19 +67,36 @@ impl Scheduler for SemiSyncScheduler {
         let deadline = sim.cfg.net.deadline();
         let compute = ComputeModel::new(&self.conf, sim.cfg.seed);
         let n = sim.clients.len();
+        let tel = sim.telemetry.clone();
         let mut queue: EventQueue<DispatchedUpload> = EventQueue::new();
         // Virtual time each client's in-flight upload lands; a client is
         // dispatchable only once free.
         let mut busy_until = vec![0.0f64; n];
         // Per-client dispatch counter feeding the compute-time draw.
         let mut dispatches = vec![0u64; n];
+        // Round each client's in-flight upload was dispatched in, so a
+        // popped arrival knows whether it rolled over (staleness in
+        // rounds).
+        let mut dispatch_round = vec![0usize; n];
 
         for round in 0..sim.cfg.rounds {
             let t_start = sim.vclock;
             let sampled = sim.sampler.sample(round);
             let alive = sim.dropout.filter(round, &sampled);
+            let dropped = (sampled.len() - alive.len()) as u64;
             let participants: Vec<usize> =
                 alive.into_iter().filter(|&cid| busy_until[cid] <= t_start).collect();
+            if let Some(t) = tel.as_deref() {
+                t.count("dropouts", dropped);
+            }
+            if let Some(obs) = sim.observer.as_mut() {
+                obs.on_dispatch(&DispatchEvent {
+                    round,
+                    cids: &participants,
+                    vtime: t_start,
+                    model_version: round as u64,
+                });
+            }
 
             let mut loss_sum = 0.0f64;
             let mut sum_d = 0u64;
@@ -87,15 +105,20 @@ impl Scheduler for SemiSyncScheduler {
                 // Stages 1–3 (shared with the async scheduler): broadcast,
                 // fanned client phase, upload; each drained frame arrives
                 // at dispatch + compute draw + link round trip.
+                let sp = Telemetry::timer(tel.as_deref());
                 let broadcast: Arc<[u8]> = wire::encode_params(&sim.global).into();
+                if let Some(sp) = sp {
+                    sp.end(Phase::BroadcastEncode, round as u64, None);
+                }
                 let uploads = super::dispatch_uploads(
                     sim, &broadcast, &participants, t_start, workers, &compute,
-                    &mut dispatches,
+                    &mut dispatches, round as u64,
                 )?;
                 for up in uploads {
                     loss_sum += up.mean_loss;
                     sum_d += up.sum_d;
                     busy_until[up.cid] = up.arrival_s;
+                    dispatch_round[up.cid] = round;
                     arrivals_this_round.push(up.arrival_s);
                     queue.push(up.arrival_s, up);
                 }
@@ -122,26 +145,74 @@ impl Scheduler for SemiSyncScheduler {
             let mut folds: Vec<(f64, Vec<LayerUpdate>)> = Vec::new();
             let mut folded_cids: Vec<usize> = Vec::new();
             while queue.peek_time().is_some_and(|t| t <= t_end) {
-                let (_, _, up) = queue.pop().expect("peeked event");
+                let (arrival_t, _, up) = queue.pop().expect("peeked event");
                 sim.ledger.charge_uplink(up.frame.len() as u64);
+                let sp = Telemetry::timer(tel.as_deref());
                 let payloads = wire::decode(&up.frame)
                     .with_context(|| format!("decoding client {}'s upload", up.cid))?;
+                if let Some(t) = tel.as_deref() {
+                    t.count_payloads(&payloads);
+                }
                 let updates = sim.clients[up.cid].decompressor.decode(payloads);
+                if let Some(sp) = sp {
+                    sp.end(Phase::ServerDecode, round as u64, Some(up.cid as u32));
+                }
+                // Staleness: rounds between dispatch and fold (0 for
+                // on-time arrivals, ≥1 for rolled-over stragglers).
+                let tau = (round - dispatch_round[up.cid]) as u64;
+                if let Some(t) = tel.as_deref() {
+                    t.observe_staleness(tau);
+                    if tau > 0 {
+                        t.count("stragglers", 1);
+                    }
+                }
+                if let Some(obs) = sim.observer.as_mut() {
+                    obs.on_arrival(&ArrivalEvent {
+                        round,
+                        cid: up.cid,
+                        updates: &updates,
+                        meta: &sim.meta,
+                        weight: up.weight,
+                        staleness: tau,
+                        vtime: arrival_t,
+                        on_time: tau == 0,
+                    });
+                }
                 folded_cids.push(up.cid);
                 folds.push((up.weight, updates));
             }
+            if let Some(t) = tel.as_deref() {
+                t.gauge("queue.pending", queue.len() as f64);
+            }
+            let folded = folds.len();
             let wtotal: f64 = folds.iter().map(|(w, _)| *w).sum();
             if wtotal > 0.0 {
                 let batch: Vec<(f32, Vec<LayerUpdate>)> = folds
                     .into_iter()
                     .map(|(w, updates)| ((w / wtotal) as f32, updates))
                     .collect();
+                let sp = Telemetry::timer(tel.as_deref());
                 let mut agg = ServerAggregator::with_backend(&sim.meta, sim.backend);
                 agg.fold_batch(workers, batch);
+                if let Some(sp) = sp {
+                    sp.end(Phase::Fold, round as u64, None);
+                }
+                let sp = Telemetry::timer(tel.as_deref());
                 sim.global.axpy(1.0, &agg.finish(&sim.meta));
+                if let Some(sp) = sp {
+                    sp.end(Phase::Apply, round as u64, None);
+                }
+                if let Some(t) = tel.as_deref() {
+                    t.count("folds", folded as u64);
+                    t.count("applies", 1);
+                }
+                if let Some(obs) = sim.observer.as_mut() {
+                    obs.on_apply(&ApplyEvent { round, vtime: t_end, folded, wtotal });
+                }
             }
 
             // Stage 6: evaluate, record, advance the clock.
+            let sp = Telemetry::timer(tel.as_deref());
             let (test_loss, test_acc) = if round % sim.cfg.eval_every == 0
                 || round + 1 == sim.cfg.rounds
             {
@@ -149,10 +220,13 @@ impl Scheduler for SemiSyncScheduler {
             } else {
                 (f64::NAN, f64::NAN)
             };
+            if let Some(sp) = sp {
+                sp.end(Phase::Eval, round as u64, None);
+            }
             let (up_b, down_b) = sim.ledger.end_round();
             sim.vclock = t_end;
             folded_cids.sort_unstable();
-            let record = RoundRecord {
+            let mut record = RoundRecord {
                 round,
                 // Mean loss over this round's *dispatched* participants
                 // (they trained this round); `survivors` below instead
@@ -167,8 +241,13 @@ impl Scheduler for SemiSyncScheduler {
                 sim_clock_s: t_end,
                 sum_d,
                 survivors: folded_cids,
+                ext: None,
             };
+            sim.telemetry_round_end(&mut record);
             sim.recorder.push(record.clone());
+            if let Some(obs) = sim.observer.as_mut() {
+                obs.on_round(round, &record);
+            }
             progress(round, &record);
         }
 

@@ -1,0 +1,266 @@
+//! Trace and metrics exporters.
+//!
+//! Three artifacts per traced run:
+//!
+//! * **Chrome `trace_event` JSON** ([`write_chrome_trace`]) — open in
+//!   `chrome://tracing` or <https://ui.perfetto.dev>. Two processes:
+//!   pid 1 is host wall-time (real encode/decode/fold cost), pid 2 is
+//!   the scheduler's virtual clock (simulated compute + transit, 1 s of
+//!   virtual time rendered as 1 s of trace time). On both, tid 0 is the
+//!   coordinator and tid `c+1` is client `c`.
+//! * **JSONL span stream** ([`write_spans_jsonl`]) — one span object per
+//!   line, for ad-hoc `jq`/pandas processing.
+//! * **Metrics JSON** ([`write_metrics_json`]) — the
+//!   [`Telemetry::metrics_json`] document: run identity, run-level
+//!   totals, and one [`super::RoundSnapshot`] per round.
+//!
+//! Validated by `scripts/check_trace.py` (schema, per-track monotonic
+//! timestamps, span nesting) in the CI trace-smoke job.
+
+use std::path::{Path, PathBuf};
+
+use super::{Span, Telemetry};
+use crate::config::Json;
+
+/// Host wall-time track.
+const PID_HOST: u64 = 1;
+/// Virtual-clock track.
+const PID_VIRT: u64 = 2;
+
+fn metadata_event(pid: u64, kind: &str, name: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(0.0)),
+        ("name", Json::str(kind)),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+struct Ev {
+    pid: u64,
+    tid: u64,
+    ts: f64,
+    dur: f64,
+    name: &'static str,
+    cat: &'static str,
+    round: u64,
+    client: Option<u32>,
+}
+
+impl Ev {
+    fn to_json(&self, backend: &str) -> Json {
+        let mut args = vec![
+            ("round", Json::num(self.round as f64)),
+            ("backend", Json::str(backend)),
+        ];
+        if let Some(c) = self.client {
+            args.push(("client", Json::num(c as f64)));
+        }
+        Json::obj(vec![
+            ("ph", Json::str("X")),
+            ("pid", Json::num(self.pid as f64)),
+            ("tid", Json::num(self.tid as f64)),
+            ("ts", Json::num(self.ts)),
+            ("dur", Json::num(self.dur)),
+            ("name", Json::str(self.name)),
+            ("cat", Json::str(self.cat)),
+            ("args", Json::obj(args)),
+        ])
+    }
+}
+
+/// Build the Chrome `trace_event` document for everything recorded so far.
+pub fn chrome_trace_json(tel: &Telemetry) -> Json {
+    let mut evs: Vec<Ev> = Vec::new();
+    for s in tel.spans() {
+        let Span { phase, round, client, host, virt } = s;
+        let tid = client.map(|c| c as u64 + 1).unwrap_or(0);
+        if let Some((start_us, dur_us)) = host {
+            evs.push(Ev {
+                pid: PID_HOST,
+                tid,
+                ts: start_us as f64,
+                dur: dur_us as f64,
+                name: phase.name(),
+                cat: "host",
+                round,
+                client,
+            });
+        }
+        if let Some((start_s, end_s)) = virt {
+            evs.push(Ev {
+                pid: PID_VIRT,
+                tid,
+                ts: start_s * 1e6,
+                dur: (end_s - start_s) * 1e6,
+                name: phase.name(),
+                cat: "virtual",
+                round,
+                client,
+            });
+        }
+    }
+    // Per-track timestamp order; longer span first on ties so containment
+    // nests (parents open before children at the same instant).
+    evs.sort_by(|a, b| {
+        (a.pid, a.tid)
+            .cmp(&(b.pid, b.tid))
+            .then(a.ts.total_cmp(&b.ts))
+            .then(b.dur.total_cmp(&a.dur))
+    });
+
+    let mut events = vec![
+        metadata_event(PID_HOST, "process_name", "host wall-time"),
+        metadata_event(PID_VIRT, "process_name", "virtual clock"),
+        metadata_event(PID_HOST, "thread_name", "coordinator"),
+        metadata_event(PID_VIRT, "thread_name", "coordinator"),
+    ];
+    events.extend(evs.iter().map(|e| e.to_json(tel.backend())));
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("backend", Json::str(tel.backend())),
+                ("sched", Json::str(tel.sched())),
+            ]),
+        ),
+    ])
+}
+
+/// One-span-per-line JSONL stream (absent clocks serialize as `null`).
+pub fn spans_jsonl(tel: &Telemetry) -> String {
+    let mut out = String::new();
+    for s in tel.spans() {
+        let j = Json::obj(vec![
+            ("phase", Json::str(s.phase.name())),
+            ("round", Json::num(s.round as f64)),
+            ("client", s.client.map(|c| Json::num(c as f64)).unwrap_or(Json::Null)),
+            ("host_start_us", s.host.map(|(t, _)| Json::num(t as f64)).unwrap_or(Json::Null)),
+            ("host_dur_us", s.host.map(|(_, d)| Json::num(d as f64)).unwrap_or(Json::Null)),
+            ("virt_start_s", s.virt.map(|(a, _)| Json::num(a)).unwrap_or(Json::Null)),
+            ("virt_end_s", s.virt.map(|(_, b)| Json::num(b)).unwrap_or(Json::Null)),
+        ]);
+        out.push_str(&j.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+fn ensure_parent(path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    Ok(())
+}
+
+/// Write the Chrome trace to `path` (creating parent directories).
+pub fn write_chrome_trace(tel: &Telemetry, path: &Path) -> crate::Result<()> {
+    ensure_parent(path)?;
+    std::fs::write(path, chrome_trace_json(tel).to_string())?;
+    Ok(())
+}
+
+/// Write the JSONL span stream to `path`.
+pub fn write_spans_jsonl(tel: &Telemetry, path: &Path) -> crate::Result<()> {
+    ensure_parent(path)?;
+    std::fs::write(path, spans_jsonl(tel))?;
+    Ok(())
+}
+
+/// Write the metrics document (pretty-printed) to `path`.
+pub fn write_metrics_json(tel: &Telemetry, path: &Path) -> crate::Result<()> {
+    ensure_parent(path)?;
+    std::fs::write(path, tel.metrics_json().to_pretty())?;
+    Ok(())
+}
+
+/// The JSONL sibling of a `--trace` path: `.json` → `.jsonl`, anything
+/// else gets `.jsonl` appended.
+pub fn jsonl_sibling(trace: &Path) -> PathBuf {
+    if trace.extension().and_then(|e| e.to_str()) == Some("json") {
+        trace.with_extension("jsonl")
+    } else {
+        let mut p = trace.as_os_str().to_owned();
+        p.push(".jsonl");
+        PathBuf::from(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Phase;
+
+    fn traced() -> Telemetry {
+        let tel = Telemetry::new("scalar", "semisync");
+        // Round 0: coordinator host work + two client virt timelines.
+        let sp = Telemetry::timer(Some(&tel)).unwrap();
+        sp.end(Phase::BroadcastEncode, 0, None);
+        tel.virt_span(Phase::ClientCompress, 0, Some(0), 0.0, 0.4);
+        tel.virt_span(Phase::UplinkTransit, 0, Some(0), 0.4, 1.0);
+        tel.virt_span(Phase::ClientCompress, 0, Some(1), 0.0, 0.2);
+        tel.virt_span(Phase::UplinkTransit, 0, Some(1), 0.2, 2.0);
+        let sp = Telemetry::timer(Some(&tel)).unwrap();
+        sp.end(Phase::Fold, 0, None);
+        tel
+    }
+
+    #[test]
+    fn chrome_trace_has_both_tracks_and_parses() {
+        let tel = traced();
+        let doc = chrome_trace_json(&tel);
+        let reparsed = Json::parse(&doc.to_string()).unwrap();
+        let events = reparsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let pids: Vec<usize> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .map(|e| e.get("pid").unwrap().as_usize().unwrap())
+            .collect();
+        assert!(pids.contains(&1), "host track present");
+        assert!(pids.contains(&2), "virtual track present");
+    }
+
+    #[test]
+    fn chrome_trace_ts_monotonic_per_track() {
+        let tel = traced();
+        let doc = chrome_trace_json(&tel);
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut last: std::collections::BTreeMap<(usize, usize), f64> = Default::default();
+        for e in events.iter().filter(|e| e.get("ph").unwrap().as_str() == Some("X")) {
+            let key = (
+                e.get("pid").unwrap().as_usize().unwrap(),
+                e.get("tid").unwrap().as_usize().unwrap(),
+            );
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            if let Some(prev) = last.get(&key) {
+                assert!(ts >= *prev, "ts regressed on track {key:?}");
+            }
+            last.insert(key, ts);
+        }
+    }
+
+    #[test]
+    fn jsonl_one_valid_object_per_line() {
+        let tel = traced();
+        let stream = spans_jsonl(&tel);
+        let lines: Vec<&str> = stream.lines().collect();
+        assert_eq!(lines.len(), tel.span_count());
+        for line in lines {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("phase").unwrap().as_str().is_some());
+        }
+    }
+
+    #[test]
+    fn jsonl_sibling_swaps_extension() {
+        assert_eq!(jsonl_sibling(Path::new("out/run.trace.json")), Path::new("out/run.trace.jsonl"));
+        assert_eq!(jsonl_sibling(Path::new("out/trace")), Path::new("out/trace.jsonl"));
+    }
+}

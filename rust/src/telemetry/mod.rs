@@ -1,0 +1,265 @@
+//! Telemetry plane (plane 7): span tracing, metrics, and run probes.
+//!
+//! Everything here *observes* a run without participating in it. The
+//! plane has three surfaces:
+//!
+//! * [`Telemetry`] — the per-run facade: a sharded span [`tracer`] keyed
+//!   by both host wall-time and the scheduler's virtual clock, plus a
+//!   [`MetricsRegistry`] of counters/gauges/histograms snapshotted per
+//!   round into [`RoundSnapshot`]s (riding on
+//!   [`crate::metrics::RoundRecord::ext`]).
+//! * [`export`] — Chrome `trace_event` JSON (two tracks: pid 1 = host
+//!   wall-time, pid 2 = virtual clock; load in `chrome://tracing` or
+//!   Perfetto), a JSONL span stream, and the end-of-run metrics JSON.
+//! * [`Observer`] — the streaming per-arrival probe API called from all
+//!   three schedulers (the successor of the sync-only round hook).
+//!
+//! **Disabled-path cost contract:** a `Simulation` without
+//! `enable_telemetry()` holds `None` — no span buffer, no registry, no
+//! transport wrapper is ever allocated, and every instrumentation site is
+//! one `Option` test. With telemetry *enabled*, recording only appends
+//! tag-sharded data behind short locks and adds commutative counters, so
+//! results stay bit-identical at any worker count — locked in by
+//! `rust/tests/telemetry.rs`.
+
+pub mod export;
+mod observer;
+mod registry;
+mod tracer;
+
+pub use observer::{ApplyEvent, ArrivalEvent, DispatchEvent, Observer};
+pub use registry::{Histogram, MetricsRegistry, RoundSnapshot, STALENESS_BOUNDS};
+pub use tracer::{Phase, Span};
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::compress::Payload;
+use crate::config::Json;
+use crate::net::transport::TransportCounters;
+
+/// Per-run telemetry facade. Created by
+/// [`crate::coordinator::Simulation::enable_telemetry`]; all recording
+/// sites take `Option<&Telemetry>` and are no-ops on `None`.
+pub struct Telemetry {
+    epoch: Instant,
+    backend: &'static str,
+    sched: &'static str,
+    tracer: tracer::Tracer,
+    metrics: MetricsRegistry,
+    transport: Arc<TransportCounters>,
+    prev_transport: Mutex<[u64; 4]>,
+}
+
+/// In-flight host-time span, started via [`Telemetry::timer`].
+pub struct SpanTimer<'a> {
+    tel: &'a Telemetry,
+    start_us: u64,
+}
+
+impl<'a> SpanTimer<'a> {
+    /// Close the span and record it.
+    pub fn end(self, phase: Phase, round: u64, client: Option<u32>) {
+        self.tel.host_span(phase, round, client, self.start_us);
+    }
+}
+
+impl Telemetry {
+    /// Fresh telemetry for one run, tagged with the run's backend and
+    /// scheduler names (they ride into every export).
+    pub fn new(backend: &'static str, sched: &'static str) -> Self {
+        Telemetry {
+            epoch: Instant::now(),
+            backend,
+            sched,
+            tracer: tracer::Tracer::new(),
+            metrics: MetricsRegistry::new(),
+            transport: Arc::new(TransportCounters::new()),
+            prev_transport: Mutex::new([0; 4]),
+        }
+    }
+
+    /// Backend name this run executes on.
+    pub fn backend(&self) -> &'static str {
+        self.backend
+    }
+
+    /// Scheduler name this run executes under.
+    pub fn sched(&self) -> &'static str {
+        self.sched
+    }
+
+    /// Microseconds since this run's telemetry epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Start a host-time span timer; `None` in, `None` out — the disabled
+    /// path is a single branch with no clock read.
+    pub fn timer(tel: Option<&Telemetry>) -> Option<SpanTimer<'_>> {
+        tel.map(|t| SpanTimer { tel: t, start_us: t.now_us() })
+    }
+
+    /// Record a host wall-time span that started at `start_us`.
+    pub fn host_span(&self, phase: Phase, round: u64, client: Option<u32>, start_us: u64) {
+        let dur = self.now_us().saturating_sub(start_us);
+        self.metrics.phase_host(phase.name(), dur);
+        self.tracer.record(Span { phase, round, client, host: Some((start_us, dur)), virt: None });
+    }
+
+    /// Record a virtual-clock span `[start_s, end_s]`.
+    pub fn virt_span(&self, phase: Phase, round: u64, client: Option<u32>, start_s: f64, end_s: f64) {
+        let dur = (end_s - start_s).max(0.0);
+        self.metrics.phase_virt(phase.name(), dur);
+        self.tracer
+            .record(Span { phase, round, client, host: None, virt: Some((start_s, start_s + dur)) });
+    }
+
+    /// Add `delta` to a counter.
+    pub fn count(&self, key: &'static str, delta: u64) {
+        self.metrics.count(key, delta);
+    }
+
+    /// Set a gauge.
+    pub fn gauge(&self, key: &'static str, value: f64) {
+        self.metrics.gauge(key, value);
+    }
+
+    /// Record the staleness (versions/rounds behind) of a folded update.
+    pub fn observe_staleness(&self, tau: u64) {
+        self.metrics.observe_staleness(tau as f64);
+    }
+
+    /// Charge one decoded upload's payloads to the per-variant byte
+    /// counters (`bytes.raw`, `bytes.sparse`, `bytes.quantized`,
+    /// `bytes.signs`, `bytes.basis`, `bytes.svd`).
+    pub fn count_payloads(&self, payloads: &[Payload]) {
+        for p in payloads {
+            let key = match p {
+                Payload::Raw(_) => "bytes.raw",
+                Payload::Sparse { .. } => "bytes.sparse",
+                Payload::Quantized { .. } => "bytes.quantized",
+                Payload::Signs { .. } => "bytes.signs",
+                Payload::Basis { .. } => "bytes.basis",
+                Payload::SvdCoeffs { .. } => "bytes.svd",
+            };
+            self.metrics.count(key, p.wire_bytes());
+        }
+    }
+
+    /// The transport counters the [`crate::net::transport::Instrumented`]
+    /// wrapper feeds.
+    pub fn transport_counters(&self) -> Arc<TransportCounters> {
+        Arc::clone(&self.transport)
+    }
+
+    /// Freeze this round's metrics (folding in transport-frame deltas
+    /// since the previous snapshot) and return the snapshot for
+    /// [`crate::metrics::RoundRecord::ext`].
+    pub fn snapshot_round(&self, round: u64) -> Arc<RoundSnapshot> {
+        let cur = self.transport.snapshot();
+        let mut prev = self.prev_transport.lock().unwrap();
+        const KEYS: [&str; 4] = [
+            "transport.broadcast_frames",
+            "transport.broadcast_bytes",
+            "transport.upload_frames",
+            "transport.upload_bytes",
+        ];
+        for (i, key) in KEYS.iter().enumerate() {
+            let delta = cur[i].saturating_sub(prev[i]);
+            if delta > 0 {
+                self.metrics.count(key, delta);
+            }
+        }
+        *prev = cur;
+        drop(prev);
+        self.metrics.snapshot_round(round)
+    }
+
+    /// The metrics store (counters/gauges/histograms/round snapshots).
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    /// All spans recorded so far, deterministically ordered.
+    pub fn spans(&self) -> Vec<Span> {
+        self.tracer.snapshot()
+    }
+
+    /// Number of spans recorded so far.
+    pub fn span_count(&self) -> usize {
+        self.tracer.len()
+    }
+
+    /// End-of-run metrics document:
+    /// `{"backend", "sched", "run": {...}, "rounds": [...]}`.
+    pub fn metrics_json(&self) -> Json {
+        let mut fields =
+            vec![("backend", Json::str(self.backend)), ("sched", Json::str(self.sched))];
+        fields.extend(self.metrics.to_json_fields());
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_is_none_when_disabled() {
+        assert!(Telemetry::timer(None).is_none());
+    }
+
+    #[test]
+    fn host_and_virt_spans_accrue_phase_totals() {
+        let tel = Telemetry::new("scalar", "sync");
+        let sp = Telemetry::timer(Some(&tel)).unwrap();
+        sp.end(Phase::Fold, 0, None);
+        tel.virt_span(Phase::UplinkTransit, 0, Some(3), 1.0, 2.5);
+        assert_eq!(tel.span_count(), 2);
+        let snap = tel.snapshot_round(0);
+        assert!((snap.phase_virt_s["uplink_transit"] - 1.5).abs() < 1e-12);
+        assert!(snap.phase_host_us.contains_key("fold"));
+    }
+
+    #[test]
+    fn payload_byte_counters_match_wire_bytes() {
+        let tel = Telemetry::new("blocked", "async");
+        let p = Payload::Sparse { indices: vec![1, 2], values: vec![0.5, -0.5], len: 16 };
+        let want = p.wire_bytes();
+        tel.count_payloads(&[p]);
+        assert_eq!(tel.metrics().run_counter("bytes.sparse"), want);
+    }
+
+    #[test]
+    fn transport_deltas_fold_into_round_counters() {
+        let tel = Telemetry::new("scalar", "semisync");
+        let tc = tel.transport_counters();
+        tc.add_broadcast(100);
+        tc.add_upload(40);
+        let s0 = tel.snapshot_round(0);
+        assert_eq!(s0.counters["transport.broadcast_bytes"], 100);
+        assert_eq!(s0.counters["transport.upload_frames"], 1);
+        tc.add_upload(60);
+        let s1 = tel.snapshot_round(1);
+        assert_eq!(s1.counters["transport.upload_bytes"], 60);
+        assert!(!s1.counters.contains_key("transport.broadcast_bytes"));
+    }
+
+    #[test]
+    fn metrics_json_parses_and_carries_identity() {
+        let tel = Telemetry::new("blocked", "async");
+        tel.count("dropouts", 2);
+        tel.observe_staleness(3);
+        tel.snapshot_round(0);
+        let j = tel.metrics_json();
+        assert_eq!(j.get("backend").unwrap().as_str(), Some("blocked"));
+        assert_eq!(j.get("sched").unwrap().as_str(), Some("async"));
+        let reparsed = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(
+            reparsed.get("rounds").unwrap().as_arr().unwrap().len(),
+            1,
+            "one round snapshot"
+        );
+    }
+}

@@ -1,0 +1,100 @@
+//! Streaming per-arrival probe API.
+//!
+//! [`Observer`] replaces the old sync-only `round_hook`: all three
+//! schedulers call it at the same lifecycle points, so probes (similarity
+//! heatmaps, per-arrival logging, experiment instrumentation) work
+//! unchanged under semisync and async. The legacy dense
+//! `RoundHookView` callback survives as an adapter in
+//! [`crate::coordinator`] (`Simulation::set_round_hook`), which buffers
+//! arrivals and replays them as a per-round batch.
+//!
+//! Lifecycle per scheduler:
+//!
+//! * **sync** — `on_dispatch` (the sampled survivors), one `on_arrival`
+//!   per decoded upload (stragglers included, tagged `on_time = false`),
+//!   `on_apply` when the round folds, `on_round` after the record lands.
+//! * **semisync** — `on_dispatch` per round's fresh participants, one
+//!   `on_arrival` per update folded by the deadline (rollovers from
+//!   earlier rounds included, `staleness` = rounds since dispatch),
+//!   `on_apply`/`on_round` as above.
+//! * **async** — `on_dispatch` per slot refill batch, one `on_arrival`
+//!   per folded update (`staleness` = model versions behind), `on_apply`
+//!   and `on_round` at every k-th fold (one "round" = one apply).
+//!
+//! Observers only *watch*: they receive borrowed decoded updates and must
+//! not assume any particular worker count produced them. Everything an
+//! observer is handed is bit-identical at any `--workers` value.
+
+use crate::compress::LayerUpdate;
+use crate::metrics::RoundRecord;
+use crate::model::ModelMeta;
+
+/// A batch of clients entering training.
+pub struct DispatchEvent<'a> {
+    /// Round (sync/semisync) or apply index (async) at dispatch time.
+    pub round: usize,
+    /// Client ids dispatched in this batch.
+    pub cids: &'a [usize],
+    /// Virtual clock at dispatch.
+    pub vtime: f64,
+    /// Global-model version the broadcast was encoded from.
+    pub model_version: u64,
+}
+
+/// One client's decoded update reaching the server.
+pub struct ArrivalEvent<'a> {
+    /// Round (sync/semisync) or in-progress apply index (async).
+    pub round: usize,
+    /// Client id.
+    pub cid: usize,
+    /// The decoded (still compressed-domain) per-layer updates.
+    pub updates: &'a [LayerUpdate],
+    /// Layer table for shaping [`ArrivalEvent::dense`].
+    pub meta: &'a ModelMeta,
+    /// Fold weight (0 for a sync straggler dropped by the deadline;
+    /// staleness-discounted under async).
+    pub weight: f64,
+    /// Versions (async) or rounds (semisync rollover) behind at arrival.
+    pub staleness: u64,
+    /// Virtual clock at arrival.
+    pub vtime: f64,
+    /// False when the update arrived past the sync deadline (charged but
+    /// not folded).
+    pub on_time: bool,
+}
+
+impl ArrivalEvent<'_> {
+    /// Densify the update (one flat `Vec<f32>` per layer) for probes that
+    /// need raw gradients, e.g. [`crate::metrics::SimilarityProbe`].
+    pub fn dense(&self) -> Vec<Vec<f32>> {
+        self.updates.iter().map(|u| u.to_dense()).collect()
+    }
+}
+
+/// The aggregate being applied to the global model.
+pub struct ApplyEvent {
+    /// Round (async: apply index).
+    pub round: usize,
+    /// Virtual clock at apply.
+    pub vtime: f64,
+    /// Updates folded into this aggregate.
+    pub folded: usize,
+    /// Total fold weight (the FedAvg normalizer).
+    pub wtotal: f64,
+}
+
+/// Streaming run probe, called from all three schedulers.
+///
+/// Every method has a no-op default, so probes implement only what they
+/// watch. Calls arrive on the coordinator/event-loop thread in
+/// deterministic order.
+pub trait Observer {
+    /// A batch of clients was dispatched with a fresh broadcast.
+    fn on_dispatch(&mut self, _ev: &DispatchEvent) {}
+    /// A client's update was decoded server-side.
+    fn on_arrival(&mut self, _ev: &ArrivalEvent) {}
+    /// The buffered aggregate was applied to the global model.
+    fn on_apply(&mut self, _ev: &ApplyEvent) {}
+    /// A `RoundRecord` was finalized (after `on_apply` and eval).
+    fn on_round(&mut self, _round: usize, _rec: &RoundRecord) {}
+}

@@ -1,0 +1,317 @@
+//! Counters, gauges, and histograms, snapshotted per round.
+//!
+//! All mutation goes through one `Mutex` with tiny critical sections
+//! (integer adds, map inserts). Counter adds are commutative, so worker
+//! threads bumping the same key in any order produce the same totals —
+//! the registry observes the run without participating in it. Per-phase
+//! *virtual*-time totals are only ever added from the coordinator/event
+//! loop thread in deterministic order, so their `f64` sums are
+//! bit-reproducible too; host-time totals are wall-clock measurements and
+//! inherently jittery.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::config::Json;
+
+/// Bucket upper bounds for the staleness histogram (versions behind).
+pub const STALENESS_BOUNDS: [f64; 7] = [0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+
+/// Fixed-bound histogram (`counts.len() == bounds.len() + 1`; the last
+/// bucket is the overflow bucket).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    n: u64,
+}
+
+impl Histogram {
+    /// New histogram with ascending bucket upper bounds.
+    pub fn new(bounds: &[f64]) -> Self {
+        Histogram { bounds: bounds.to_vec(), counts: vec![0; bounds.len() + 1], sum: 0.0, n: 0 }
+    }
+
+    /// Record one observation.
+    pub fn observe(&mut self, v: f64) {
+        let idx = self.bounds.iter().position(|b| v <= *b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.n += 1;
+    }
+
+    /// Total observations.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Sum of observed values.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Per-bucket counts (last entry = overflow bucket).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Bucket upper bounds.
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    fn reset(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.sum = 0.0;
+        self.n = 0;
+    }
+
+    /// JSON form: `{"bounds": [...], "counts": [...], "sum": x, "n": n}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bounds", Json::Arr(self.bounds.iter().map(|b| Json::num(*b)).collect())),
+            ("counts", Json::Arr(self.counts.iter().map(|c| Json::num(*c as f64)).collect())),
+            ("sum", Json::num(self.sum)),
+            ("n", Json::num(self.n as f64)),
+        ])
+    }
+}
+
+/// One round's worth of metrics, frozen at round end.
+///
+/// Rides on [`crate::metrics::RoundRecord::ext`] (behind an `Arc` so the
+/// record stays cheap to clone) and in the end-of-run metrics JSON.
+#[derive(Clone, Debug)]
+pub struct RoundSnapshot {
+    /// Round index (async: apply index).
+    pub round: u64,
+    /// Monotonic counters scoped to this round (bytes by payload variant,
+    /// straggler/dropout counts, transport frame deltas, ...).
+    pub counters: BTreeMap<&'static str, u64>,
+    /// Point-in-time gauges (basis-pool entries/bytes, slot occupancy, ...).
+    pub gauges: BTreeMap<&'static str, f64>,
+    /// Host wall-time spent per phase this round, microseconds.
+    pub phase_host_us: BTreeMap<&'static str, u64>,
+    /// Virtual-clock time accrued per phase this round, seconds.
+    pub phase_virt_s: BTreeMap<&'static str, f64>,
+    /// Staleness of updates folded this round (versions behind).
+    pub staleness: Histogram,
+}
+
+impl RoundSnapshot {
+    /// JSON form (one element of the metrics file's `rounds` array).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", Json::num(self.round as f64)),
+            ("counters", map_u64_json(&self.counters)),
+            ("gauges", map_f64_json(&self.gauges)),
+            ("phase_host_us", map_u64_json(&self.phase_host_us)),
+            ("phase_virt_s", map_f64_json(&self.phase_virt_s)),
+            ("staleness", self.staleness.to_json()),
+        ])
+    }
+}
+
+fn map_u64_json(m: &BTreeMap<&'static str, u64>) -> Json {
+    Json::obj(m.iter().map(|(k, v)| (*k, Json::num(*v as f64))).collect())
+}
+
+fn map_f64_json(m: &BTreeMap<&'static str, f64>) -> Json {
+    Json::obj(m.iter().map(|(k, v)| (*k, Json::num(*v))).collect())
+}
+
+struct Inner {
+    run_counters: BTreeMap<&'static str, u64>,
+    round_counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    run_phase_host_us: BTreeMap<&'static str, u64>,
+    round_phase_host_us: BTreeMap<&'static str, u64>,
+    run_phase_virt_s: BTreeMap<&'static str, f64>,
+    round_phase_virt_s: BTreeMap<&'static str, f64>,
+    run_staleness: Histogram,
+    round_staleness: Histogram,
+    rounds: Vec<Arc<RoundSnapshot>>,
+}
+
+/// The metrics store behind [`super::Telemetry`].
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        MetricsRegistry {
+            inner: Mutex::new(Inner {
+                run_counters: BTreeMap::new(),
+                round_counters: BTreeMap::new(),
+                gauges: BTreeMap::new(),
+                run_phase_host_us: BTreeMap::new(),
+                round_phase_host_us: BTreeMap::new(),
+                run_phase_virt_s: BTreeMap::new(),
+                round_phase_virt_s: BTreeMap::new(),
+                run_staleness: Histogram::new(&STALENESS_BOUNDS),
+                round_staleness: Histogram::new(&STALENESS_BOUNDS),
+                rounds: Vec::new(),
+            }),
+        }
+    }
+
+    /// Add `delta` to a counter (round- and run-scoped).
+    pub fn count(&self, key: &'static str, delta: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.run_counters.entry(key).or_insert(0) += delta;
+        *g.round_counters.entry(key).or_insert(0) += delta;
+    }
+
+    /// Set a gauge (last write before the round snapshot wins).
+    pub fn gauge(&self, key: &'static str, value: f64) {
+        self.inner.lock().unwrap().gauges.insert(key, value);
+    }
+
+    /// Record one staleness observation (versions behind at fold time).
+    pub fn observe_staleness(&self, tau: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.run_staleness.observe(tau);
+        g.round_staleness.observe(tau);
+    }
+
+    /// Accrue host wall-time against a phase.
+    pub fn phase_host(&self, phase: &'static str, us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.run_phase_host_us.entry(phase).or_insert(0) += us;
+        *g.round_phase_host_us.entry(phase).or_insert(0) += us;
+    }
+
+    /// Accrue virtual-clock time against a phase.
+    pub fn phase_virt(&self, phase: &'static str, s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.run_phase_virt_s.entry(phase).or_insert(0.0) += s;
+        *g.round_phase_virt_s.entry(phase).or_insert(0.0) += s;
+    }
+
+    /// Freeze the round-scoped state into a [`RoundSnapshot`], append it to
+    /// the run's round list, and reset the round accumulators.
+    pub fn snapshot_round(&self, round: u64) -> Arc<RoundSnapshot> {
+        let mut g = self.inner.lock().unwrap();
+        let snap = Arc::new(RoundSnapshot {
+            round,
+            counters: std::mem::take(&mut g.round_counters),
+            gauges: g.gauges.clone(),
+            phase_host_us: std::mem::take(&mut g.round_phase_host_us),
+            phase_virt_s: std::mem::take(&mut g.round_phase_virt_s),
+            staleness: g.round_staleness.clone(),
+        });
+        g.round_staleness.reset();
+        g.rounds.push(Arc::clone(&snap));
+        snap
+    }
+
+    /// All round snapshots taken so far.
+    pub fn rounds(&self) -> Vec<Arc<RoundSnapshot>> {
+        self.inner.lock().unwrap().rounds.clone()
+    }
+
+    /// Current value of a run-scoped counter (0 when never bumped).
+    pub fn run_counter(&self, key: &'static str) -> u64 {
+        self.inner.lock().unwrap().run_counters.get(key).copied().unwrap_or(0)
+    }
+
+    /// The run-level staleness histogram.
+    pub fn run_staleness(&self) -> Histogram {
+        self.inner.lock().unwrap().run_staleness.clone()
+    }
+
+    /// JSON body: `{"run": {...}, "rounds": [...]}` fields as a pair list
+    /// the caller can extend with run identity (backend, sched).
+    pub fn to_json_fields(&self) -> Vec<(&'static str, Json)> {
+        let g = self.inner.lock().unwrap();
+        let run = Json::obj(vec![
+            ("counters", map_u64_json(&g.run_counters)),
+            ("phase_host_us", map_u64_json(&g.run_phase_host_us)),
+            ("phase_virt_s", map_f64_json(&g.run_phase_virt_s)),
+            ("staleness", g.run_staleness.to_json()),
+        ]);
+        let rounds = Json::Arr(g.rounds.iter().map(|r| r.to_json()).collect());
+        vec![("run", run), ("rounds", rounds)]
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let mut h = Histogram::new(&[0.0, 1.0, 4.0]);
+        for v in [0.0, 0.0, 1.0, 3.0, 100.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.counts(), &[2, 1, 1, 1]);
+        assert_eq!(h.n(), 5);
+        assert!((h.sum() - 104.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn counters_scope_to_rounds_and_run() {
+        let r = MetricsRegistry::new();
+        r.count("bytes.sparse", 10);
+        let s0 = r.snapshot_round(0);
+        assert_eq!(s0.counters["bytes.sparse"], 10);
+        r.count("bytes.sparse", 5);
+        let s1 = r.snapshot_round(1);
+        assert_eq!(s1.counters["bytes.sparse"], 5);
+        assert_eq!(r.run_counter("bytes.sparse"), 15);
+        assert_eq!(r.rounds().len(), 2);
+    }
+
+    #[test]
+    fn staleness_resets_per_round_but_accumulates_per_run() {
+        let r = MetricsRegistry::new();
+        r.observe_staleness(0.0);
+        r.observe_staleness(2.0);
+        let s0 = r.snapshot_round(0);
+        assert_eq!(s0.staleness.n(), 2);
+        r.observe_staleness(1.0);
+        let s1 = r.snapshot_round(1);
+        assert_eq!(s1.staleness.n(), 1);
+        assert_eq!(r.run_staleness().n(), 3);
+    }
+
+    #[test]
+    fn counter_adds_commute() {
+        let a = MetricsRegistry::new();
+        let b = MetricsRegistry::new();
+        a.count("x", 3);
+        a.count("y", 1);
+        a.count("x", 4);
+        b.count("x", 4);
+        b.count("x", 3);
+        b.count("y", 1);
+        assert_eq!(a.run_counter("x"), b.run_counter("x"));
+        assert_eq!(a.run_counter("y"), b.run_counter("y"));
+    }
+
+    #[test]
+    fn json_fields_shape() {
+        let r = MetricsRegistry::new();
+        r.count("bytes.basis", 7);
+        r.phase_virt("uplink_transit", 1.5);
+        r.snapshot_round(0);
+        let j = Json::Obj(
+            r.to_json_fields().into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        );
+        let run = j.get("run").unwrap();
+        assert_eq!(run.get("counters").unwrap().get("bytes.basis").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("rounds").unwrap().as_arr().unwrap().len(), 1);
+        // Round-trips through the strict parser.
+        assert!(Json::parse(&j.to_pretty()).is_ok());
+    }
+}

@@ -1,0 +1,188 @@
+//! Sharded span buffers.
+//!
+//! Spans carry *two* clocks: host wall-time (microseconds since the
+//! [`Telemetry`](super::Telemetry) epoch) for real compute cost, and the
+//! scheduler's virtual clock (seconds) for simulated transport/compute
+//! cost. Either side may be absent — a server-side `fold` has no virtual
+//! duration (server work is free in the simulation's time model), and an
+//! `uplink_transit` has no host duration (no real bytes move).
+//!
+//! The buffer is sharded by a key derived from the span itself (client id
+//! when tagged, else round), never from the calling thread, so the same
+//! span lands in the same shard at any worker count. Recording only ever
+//! appends to a `Vec` behind a short-lived shard lock; nothing is read
+//! back during a run, so tracing cannot perturb the computation — the
+//! w1-vs-wN bit-identity tests in `rust/tests/telemetry.rs` lock this in.
+
+use std::sync::Mutex;
+
+/// Number of span shards (power of two; index is `key & (SHARDS-1)`).
+const SHARDS: usize = 16;
+
+/// The fixed span taxonomy, in round-lifecycle order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    /// Server encodes the global model for broadcast (host).
+    BroadcastEncode,
+    /// A client's local-train + compress lane (host), or its simulated
+    /// compute draw (virtual).
+    ClientCompress,
+    /// A client's upload in flight on its link (virtual only).
+    UplinkTransit,
+    /// Server decodes one client's wire frame into `LayerUpdate`s (host).
+    ServerDecode,
+    /// Folding decoded updates into the `ServerAggregator` (host).
+    Fold,
+    /// Materializing the aggregate and stepping the global model (host).
+    Apply,
+    /// Held-out evaluation of the stepped model (host).
+    Eval,
+}
+
+impl Phase {
+    /// All phases, in lifecycle order.
+    pub const ALL: [Phase; 7] = [
+        Phase::BroadcastEncode,
+        Phase::ClientCompress,
+        Phase::UplinkTransit,
+        Phase::ServerDecode,
+        Phase::Fold,
+        Phase::Apply,
+        Phase::Eval,
+    ];
+
+    /// Stable snake_case name (the `name` field in trace exports).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::BroadcastEncode => "broadcast_encode",
+            Phase::ClientCompress => "client_compress",
+            Phase::UplinkTransit => "uplink_transit",
+            Phase::ServerDecode => "server_decode",
+            Phase::Fold => "fold",
+            Phase::Apply => "apply",
+            Phase::Eval => "eval",
+        }
+    }
+}
+
+/// One recorded span.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Which stage of the round lifecycle.
+    pub phase: Phase,
+    /// Round (sync/semisync) or apply/model-version context (async).
+    pub round: u64,
+    /// Client id when the span belongs to one lane; `None` = coordinator.
+    pub client: Option<u32>,
+    /// Host wall-time `(start_us, dur_us)` since the telemetry epoch.
+    pub host: Option<(u64, u64)>,
+    /// Virtual-clock `(start_s, end_s)`.
+    pub virt: Option<(f64, f64)>,
+}
+
+impl Span {
+    /// Deterministic sort key: independent of host timing and worker
+    /// interleaving up to the host timestamps themselves.
+    fn sort_key(&self) -> (u64, u32, Phase, u64, u64) {
+        (
+            self.round,
+            self.client.map(|c| c + 1).unwrap_or(0),
+            self.phase,
+            self.virt.map(|(t, _)| t.to_bits()).unwrap_or(u64::MAX),
+            self.host.map(|(t, _)| t).unwrap_or(u64::MAX),
+        )
+    }
+}
+
+/// Append-only sharded span store.
+pub(crate) struct Tracer {
+    shards: Vec<Mutex<Vec<Span>>>,
+}
+
+impl Tracer {
+    pub(crate) fn new() -> Self {
+        Tracer { shards: (0..SHARDS).map(|_| Mutex::new(Vec::new())).collect() }
+    }
+
+    /// Record one span. Shard choice depends only on the span's own tags.
+    pub(crate) fn record(&self, span: Span) {
+        let key = span.client.map(|c| c as u64).unwrap_or(span.round) as usize;
+        self.shards[key & (SHARDS - 1)].lock().unwrap().push(span);
+    }
+
+    /// All spans so far, in a deterministic order (sorted by round, client,
+    /// phase, then timestamps — host jitter can only reorder identical
+    /// tags, never cross them).
+    pub(crate) fn snapshot(&self) -> Vec<Span> {
+        let mut all: Vec<Span> = Vec::new();
+        for shard in &self.shards {
+            all.extend(shard.lock().unwrap().iter().cloned());
+        }
+        all.sort_by(|a, b| a.sort_key().cmp(&b.sort_key()));
+        all
+    }
+
+    /// Total spans recorded.
+    pub(crate) fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(phase: Phase, round: u64, client: Option<u32>) -> Span {
+        Span { phase, round, client, host: Some((round * 10, 5)), virt: None }
+    }
+
+    #[test]
+    fn shard_choice_is_tag_deterministic() {
+        let a = Tracer::new();
+        let b = Tracer::new();
+        // Same spans recorded in different orders land identically.
+        let spans = vec![
+            span(Phase::Fold, 0, None),
+            span(Phase::ClientCompress, 0, Some(3)),
+            span(Phase::ClientCompress, 0, Some(19)),
+            span(Phase::Eval, 1, None),
+        ];
+        for s in &spans {
+            a.record(s.clone());
+        }
+        for s in spans.iter().rev() {
+            b.record(s.clone());
+        }
+        let (sa, sb) = (a.snapshot(), b.snapshot());
+        assert_eq!(sa.len(), sb.len());
+        for (x, y) in sa.iter().zip(&sb) {
+            assert_eq!(x.phase, y.phase);
+            assert_eq!(x.round, y.round);
+            assert_eq!(x.client, y.client);
+        }
+    }
+
+    #[test]
+    fn snapshot_orders_by_round_then_client() {
+        let t = Tracer::new();
+        t.record(span(Phase::Eval, 1, None));
+        t.record(span(Phase::ClientCompress, 0, Some(7)));
+        t.record(span(Phase::BroadcastEncode, 0, None));
+        let s = t.snapshot();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0].round, 0);
+        assert_eq!(s[0].client, None);
+        assert_eq!(s[1].client, Some(7));
+        assert_eq!(s[2].round, 1);
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn phase_names_are_snake_case() {
+        for p in Phase::ALL {
+            let n = p.name();
+            assert!(!n.is_empty());
+            assert!(n.chars().all(|c| c.is_ascii_lowercase() || c == '_'));
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! Integration tests for the telemetry plane (`gradestc::telemetry`):
+//! tracing never perturbs results (traced w1 / traced w8 / untraced runs
+//! are bit-identical for every scheduler), the disabled path allocates
+//! nothing, round snapshots ride on `RoundRecord::ext` with pool gauges
+//! backed by a real sweep, the async observer sees every folded arrival
+//! exactly once, and the legacy round-hook similarity probe works under
+//! semisync and async via the observer adapter (native backend: hermetic,
+//! no artifacts needed).
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+
+use gradestc::config::{
+    BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
+    NetConfig, SchedConfig, SchedKind,
+};
+use gradestc::coordinator::{RoundHookView, Simulation};
+use gradestc::metrics::{RoundRecord, SimilarityProbe};
+use gradestc::model::meta::layer_table;
+use gradestc::telemetry::{ApplyEvent, ArrivalEvent, DispatchEvent, Observer};
+
+fn base_cfg(name: &str, comp: CompressorKind) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.into(),
+        dataset: DatasetKind::SynthMnist,
+        model: gradestc::config::ModelKind::LeNet5,
+        distribution: DataDistribution::Iid,
+        num_clients: 8,
+        participation: 1.0,
+        rounds: 4,
+        local_epochs: 1,
+        batch_size: 32,
+        lr: 0.05,
+        samples_per_client: 128,
+        test_samples: 128,
+        eval_every: 1,
+        threshold_frac: 0.9,
+        compressor: comp,
+        seed: 11,
+        use_xla: false,
+        artifacts_dir: "artifacts".into(),
+        workers: 1,
+        net: NetConfig::default(),
+        sched: SchedConfig::default(),
+        backend: BackendKind::Auto,
+    }
+}
+
+fn gradestc8() -> CompressorKind {
+    CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() })
+}
+
+/// Bitwise comparison of the scalar record fields (floats by bits so NaN
+/// evals also count as equal). `ext` is deliberately not compared: it is
+/// observation, present only on traced runs.
+fn assert_rounds_bitwise_equal(a: &[RoundRecord], b: &[RoundRecord], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: round count");
+    for (x, y) in a.iter().zip(b) {
+        let r = x.round;
+        assert_eq!(x.round, y.round, "{label}");
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{label}: loss, round {r}");
+        assert_eq!(
+            x.test_accuracy.to_bits(),
+            y.test_accuracy.to_bits(),
+            "{label}: accuracy, round {r}"
+        );
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{label}: test_loss, round {r}");
+        assert_eq!(x.uplink_bytes, y.uplink_bytes, "{label}: uplink, round {r}");
+        assert_eq!(x.downlink_bytes, y.downlink_bytes, "{label}: downlink, round {r}");
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{label}: sim_time, round {r}");
+        assert_eq!(
+            x.sim_clock_s.to_bits(),
+            y.sim_clock_s.to_bits(),
+            "{label}: sim_clock, round {r}"
+        );
+        assert_eq!(x.sum_d, y.sum_d, "{label}: sum_d, round {r}");
+        assert_eq!(x.survivors, y.survivors, "{label}: survivors, round {r}");
+    }
+}
+
+/// Run a config through the scheduler plane, optionally traced; returns
+/// the records, lane fingerprints, ledger uplink total, and span count
+/// (0 when untraced).
+fn run_cfg(
+    mut cfg: ExperimentConfig,
+    workers: usize,
+    traced: bool,
+) -> (Vec<RoundRecord>, Vec<(u64, u64)>, u64, usize) {
+    cfg.workers = workers;
+    let mut sim = Simulation::build(cfg).unwrap();
+    if traced {
+        sim.enable_telemetry();
+    }
+    sim.run_scheduled().unwrap();
+    let spans = sim.telemetry().map_or(0, |t| t.span_count());
+    (sim.recorder.rounds().to_vec(), sim.lane_fingerprints(), sim.total_uplink(), spans)
+}
+
+/// Tentpole acceptance: tracing observes without participating. For every
+/// scheduler × {GradESTC, TopK}, with dropout, heterogeneous links, and a
+/// straggler deadline on, the untraced run, the traced sequential run,
+/// and the traced 8-worker run produce bit-identical records, lane
+/// fingerprints, and ledger totals — and the traced runs actually
+/// recorded spans.
+#[test]
+fn traced_runs_bit_identical_to_untraced_at_any_worker_count() {
+    for kind in [
+        SchedKind::Sync,
+        SchedKind::SemiSync,
+        SchedKind::Async { k: 3, staleness_p: 0.5 },
+    ] {
+        for (label, comp) in
+            [("gradestc", gradestc8()), ("topk", CompressorKind::TopK { frac: 0.1 })]
+        {
+            let mut cfg =
+                base_cfg(&format!("it-tel-{}-{label}", kind.name()), comp);
+            cfg.net.dropout = 0.1;
+            cfg.net.het_spread = 0.5;
+            cfg.net.deadline_s = 2.0;
+            cfg.sched.kind = kind;
+            let tag = format!("{} {label}", kind.name());
+            let (plain, fp_plain, up_plain, spans_plain) = run_cfg(cfg.clone(), 1, false);
+            let (t1, fp1, up1, spans1) = run_cfg(cfg.clone(), 1, true);
+            let (t8, fp8, up8, spans8) = run_cfg(cfg, 8, true);
+            assert_eq!(spans_plain, 0, "{tag}: untraced run recorded spans");
+            assert!(spans1 > 0, "{tag}: traced run recorded no spans");
+            assert_eq!(spans1, spans8, "{tag}: span count depends on workers");
+            assert_rounds_bitwise_equal(&plain, &t1, &format!("{tag}: untraced vs traced w1"));
+            assert_rounds_bitwise_equal(&t1, &t8, &format!("{tag}: traced w1 vs w8"));
+            assert_eq!(fp_plain, fp1, "{tag}: lane fingerprints untraced vs traced");
+            assert_eq!(fp1, fp8, "{tag}: lane fingerprints w1 vs w8");
+            assert_eq!(up_plain, up1, "{tag}: uplink untraced vs traced");
+            assert_eq!(up1, up8, "{tag}: uplink w1 vs w8");
+        }
+    }
+}
+
+/// Disabled-path contract: without `enable_telemetry()` the simulation
+/// holds no telemetry handle and records carry no snapshot.
+#[test]
+fn telemetry_disabled_by_default() {
+    let cfg = base_cfg("it-tel-disabled", gradestc8());
+    let mut sim = Simulation::build(cfg).unwrap();
+    assert!(sim.telemetry().is_none(), "telemetry allocated without opt-in");
+    sim.run_scheduled().unwrap();
+    assert!(sim.telemetry().is_none());
+    for rec in sim.recorder.rounds() {
+        assert!(rec.ext.is_none(), "round {} carries a snapshot untraced", rec.round);
+    }
+}
+
+/// Traced runs freeze one metrics snapshot per record: per-round counters
+/// match the record's own fields, phase timings are populated for both
+/// clocks, transport bytes fold in, and the basis-pool gauges agree with
+/// a live (post-sweep) `basis_pool_stats()` — the regression for the
+/// sweep-on-stats bug, driven here by the telemetry round-end path.
+#[test]
+fn round_snapshots_carry_counters_phases_and_pool_gauges() {
+    let cfg = base_cfg("it-tel-snapshots", gradestc8());
+    let mut sim = Simulation::build(cfg).unwrap();
+    sim.enable_telemetry();
+    sim.run_scheduled().unwrap();
+    let records = sim.recorder.rounds().to_vec();
+    assert!(!records.is_empty());
+    for rec in &records {
+        let ext = rec.ext.as_ref().unwrap_or_else(|| panic!("round {}: no snapshot", rec.round));
+        assert_eq!(ext.round, rec.round as u64);
+        assert_eq!(
+            ext.counters["dispatches"],
+            rec.survivors.len() as u64,
+            "round {}: dispatch counter vs survivors",
+            rec.round
+        );
+        assert_eq!(ext.counters["sum_d"], rec.sum_d, "round {}: sum_d counter", rec.round);
+        assert!(
+            ext.counters["transport.broadcast_bytes"] > 0,
+            "round {}: no transport bytes",
+            rec.round
+        );
+        for phase in ["broadcast_encode", "server_decode", "eval"] {
+            assert!(
+                ext.phase_host_us.contains_key(phase),
+                "round {}: missing host phase {phase}",
+                rec.round
+            );
+        }
+        assert!(
+            ext.phase_virt_s.contains_key("uplink_transit"),
+            "round {}: no virtual-clock transit spans",
+            rec.round
+        );
+        // GradESTC pays per-lane basis bytes on the wire.
+        assert!(ext.counters["bytes.basis"] > 0, "round {}: no basis bytes", rec.round);
+    }
+    // The last snapshot's pool gauges were taken through `stats()` — the
+    // sweep — so they must agree with the live swept stats now.
+    let pool = sim.basis_pool_stats();
+    let last = records.last().unwrap().ext.as_ref().unwrap();
+    assert!(pool.entries > 0, "gradestc run interned no bases");
+    assert_eq!(last.gauges["pool.entries"], pool.entries as f64);
+    assert_eq!(last.gauges["pool.bytes"], pool.bytes() as f64);
+    // End-of-run metrics document: one entry per record.
+    let tel = sim.telemetry().unwrap();
+    let doc = tel.metrics_json();
+    assert_eq!(doc.get("sched").unwrap().as_str(), Some("sync"));
+    assert_eq!(doc.get("rounds").unwrap().as_arr().unwrap().len(), records.len());
+}
+
+/// Counts observer callbacks through shared cells (`Observer` is called
+/// on the event-loop thread only, so no `Send` bound is needed).
+struct CountingObserver {
+    dispatched: Rc<Cell<usize>>,
+    arrivals: Rc<Cell<usize>>,
+    applies: Rc<Cell<usize>>,
+    rounds: Rc<Cell<usize>>,
+}
+
+impl Observer for CountingObserver {
+    fn on_dispatch(&mut self, ev: &DispatchEvent) {
+        self.dispatched.set(self.dispatched.get() + ev.cids.len());
+    }
+    fn on_arrival(&mut self, ev: &ArrivalEvent) {
+        assert!(ev.weight >= 0.0 && ev.weight.is_finite());
+        assert!(!ev.updates.is_empty(), "arrival with no layer updates");
+        self.arrivals.set(self.arrivals.get() + 1);
+    }
+    fn on_apply(&mut self, ev: &ApplyEvent) {
+        assert!(ev.folded >= 1);
+        self.applies.set(self.applies.get() + 1);
+    }
+    fn on_round(&mut self, _round: usize, rec: &RoundRecord) {
+        assert!(rec.ext.is_some(), "traced run: record without snapshot");
+        self.rounds.set(self.rounds.get() + 1);
+    }
+}
+
+/// Satellite acceptance: under async the observer sees every folded
+/// arrival exactly once — the arrival count equals k × applies, equals
+/// the telemetry fold counters, with one apply/round callback per record
+/// (the shutdown drain is silent).
+#[test]
+fn async_observer_sees_every_fold_exactly_once() {
+    let mut cfg = base_cfg("it-tel-async-observer", gradestc8());
+    cfg.net.dropout = 0.1;
+    cfg.net.het_spread = 1.0;
+    cfg.sched.kind = SchedKind::Async { k: 3, staleness_p: 0.5 };
+    let dispatched = Rc::new(Cell::new(0));
+    let arrivals = Rc::new(Cell::new(0));
+    let applies = Rc::new(Cell::new(0));
+    let rounds = Rc::new(Cell::new(0));
+    let mut sim = Simulation::build(cfg.clone()).unwrap();
+    sim.enable_telemetry();
+    sim.set_observer(Box::new(CountingObserver {
+        dispatched: dispatched.clone(),
+        arrivals: arrivals.clone(),
+        applies: applies.clone(),
+        rounds: rounds.clone(),
+    }));
+    sim.run_scheduled().unwrap();
+    let records = sim.recorder.rounds();
+    assert_eq!(records.len(), cfg.rounds);
+    assert_eq!(arrivals.get(), 3 * records.len(), "arrivals != k × applies");
+    assert_eq!(applies.get(), records.len(), "one on_apply per record");
+    assert_eq!(rounds.get(), records.len(), "one on_round per record");
+    assert!(dispatched.get() >= arrivals.get(), "every fold was dispatched first");
+    let folds_counted: u64 = records
+        .iter()
+        .map(|r| r.ext.as_ref().unwrap().counters["folds"])
+        .sum();
+    assert_eq!(folds_counted, arrivals.get() as u64, "fold counters vs observed arrivals");
+}
+
+/// Satellite acceptance: the Fig. 1 similarity probe — installed through
+/// the legacy `set_round_hook` API, now an adapter over the observer
+/// stream — records gradients under semisync *and* async, where the old
+/// sync-only hook never fired.
+#[test]
+fn similarity_probe_runs_under_semisync_and_async() {
+    for kind in [SchedKind::SemiSync, SchedKind::Async { k: 2, staleness_p: 0.5 }] {
+        let mut cfg = base_cfg(
+            &format!("it-tel-probe-{}", kind.name()),
+            CompressorKind::None,
+        );
+        cfg.rounds = 3;
+        cfg.sched.kind = kind;
+        let meta = layer_table(cfg.model);
+        let names: Vec<String> = meta.layers.iter().map(|l| l.name.clone()).collect();
+        let probe = Rc::new(RefCell::new(SimilarityProbe::new(names)));
+        let probe2 = probe.clone();
+        let mut sim = Simulation::build(cfg).unwrap();
+        sim.set_round_hook(Box::new(move |_round, view: &RoundHookView| {
+            if let Some((_, tensors)) = view.updates.iter().find(|(id, _)| *id == 0) {
+                probe2.borrow_mut().record_round(tensors.clone());
+            }
+        }));
+        sim.run_scheduled().unwrap();
+        let recorded = probe.borrow().rounds();
+        assert!(recorded > 0, "{}: probe saw no rounds for client 0", kind.name());
+    }
+}

@@ -1,0 +1,129 @@
+#!/usr/bin/env python3
+"""Chrome ``trace_event`` JSON validator for gradestc traces.
+
+Checks the files written by ``gradestc train --trace`` /
+``gradestc exp --trace`` (see ``rust/src/telemetry/export.rs``):
+
+* top level is an object with a ``traceEvents`` list plus the run
+  identity in ``otherData`` (``backend``, ``sched``);
+* every event is ``ph: "X"`` (complete span) or ``ph: "M"`` (metadata),
+  with the required keys for its kind; ``X`` events carry a numeric
+  ``ts`` and a non-negative ``dur``;
+* both tracks are present: pid 1 (host wall-time) and pid 2 (virtual
+  clock);
+* per ``(pid, tid)`` track, timestamps are monotonically non-decreasing
+  in file order — the order the exporter guarantees;
+* spans on one track nest: a span either starts at-or-after the end of
+  the previous open span (sibling) or ends at-or-before it (child).
+  Partial overlap means the exporter's sort or the recorded intervals
+  are broken.
+
+Usage:
+    check_trace.py <trace.json> [<trace.json> ...]
+
+Exit codes: 0 = all files valid, 1 = validation failure, 2 = usage/IO.
+"""
+
+import json
+import sys
+
+X_KEYS = {"ph", "pid", "tid", "ts", "dur", "name", "cat", "args"}
+M_KEYS = {"ph", "pid", "tid", "name", "args"}
+
+
+def fail(path, msg):
+    print(f"check_trace: {path}: {msg}", file=sys.stderr)
+    return False
+
+
+def check_events(path, events):
+    ok = True
+    last_ts = {}  # (pid, tid) -> last seen ts
+    open_stack = {}  # (pid, tid) -> stack of span end times
+    pids = set()
+    n_spans = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            return fail(path, f"event {i}: not an object")
+        ph = ev.get("ph")
+        if ph == "M":
+            if not M_KEYS.issubset(ev):
+                ok = fail(path, f"event {i}: metadata missing keys {sorted(M_KEYS - set(ev))}")
+            continue
+        if ph != "X":
+            ok = fail(path, f"event {i}: unexpected ph {ph!r} (want X or M)")
+            continue
+        missing = X_KEYS - set(ev)
+        if missing:
+            ok = fail(path, f"event {i}: span missing keys {sorted(missing)}")
+            continue
+        ts, dur = ev["ts"], ev["dur"]
+        if not isinstance(ts, (int, float)) or not isinstance(dur, (int, float)):
+            ok = fail(path, f"event {i}: ts/dur not numeric")
+            continue
+        if dur < 0:
+            ok = fail(path, f"event {i} ({ev['name']}): negative dur {dur}")
+        n_spans += 1
+        pids.add(ev["pid"])
+        key = (ev["pid"], ev["tid"])
+        prev = last_ts.get(key)
+        if prev is not None and ts < prev:
+            ok = fail(path, f"event {i} ({ev['name']}): ts {ts} regressed below {prev} on track {key}")
+        last_ts[key] = ts
+
+        # Nesting: pop every open span this one starts at-or-after the
+        # end of; what remains open must fully contain it.
+        stack = open_stack.setdefault(key, [])
+        while stack and ts >= stack[-1]:
+            stack.pop()
+        end = ts + dur
+        if stack and end > stack[-1]:
+            ok = fail(
+                path,
+                f"event {i} ({ev['name']}): span [{ts}, {end}] partially overlaps "
+                f"the enclosing span ending at {stack[-1]} on track {key}",
+            )
+        stack.append(end)
+
+    if n_spans == 0:
+        ok = fail(path, "no X (span) events at all")
+    for pid, label in ((1, "host wall-time"), (2, "virtual clock")):
+        if pid not in pids:
+            ok = fail(path, f"missing track pid {pid} ({label})")
+    return ok
+
+
+def check_file(path):
+    try:
+        with open(path, encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError) as exc:
+        print(f"check_trace: cannot read {path}: {exc}", file=sys.stderr)
+        sys.exit(2)
+    if not isinstance(doc, dict):
+        return fail(path, "top level is not an object")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return fail(path, "traceEvents missing or not a list")
+    other = doc.get("otherData", {})
+    if not isinstance(other, dict) or "backend" not in other or "sched" not in other:
+        return fail(path, "otherData must carry backend and sched")
+    if not check_events(path, events):
+        return False
+    n_spans = sum(1 for e in events if isinstance(e, dict) and e.get("ph") == "X")
+    print(f"check_trace: {path}: ok ({n_spans} spans, sched={other['sched']}, backend={other['backend']})")
+    return True
+
+
+def main(argv):
+    if not argv:
+        print(__doc__, file=sys.stderr)
+        return 2
+    ok = True
+    for path in argv:
+        ok = check_file(path) and ok
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
