@@ -49,6 +49,8 @@ fn main() -> anyhow::Result<()> {
         workers: 1, // XLA lanes run on the coordinator thread anyway
         net: gradestc::config::NetConfig::default(),
         sched: gradestc::config::SchedConfig::default(),
+        backend: gradestc::config::BackendKind::Auto,
+        lanes: gradestc::config::LaneConfig::default(),
     };
     println!(
         "e2e: TinyTransformer ({} params) on synthetic byte corpus, \

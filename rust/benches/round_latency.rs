@@ -11,7 +11,7 @@
 use gradestc::compress::{build_pair, Compressor as _, Decompressor as _, LayerUpdate, Payload};
 use gradestc::config::{
     BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
-    ModelKind, NetConfig, SchedConfig,
+    LaneConfig, ModelKind, NetConfig, SchedConfig,
 };
 use gradestc::coordinator::{ServerAggregator, Simulation};
 use gradestc::model::meta::layer_table;
@@ -45,6 +45,7 @@ fn cfg(model: ModelKind, dataset: DatasetKind, comp: CompressorKind, xla: bool) 
         net: NetConfig::default(),
         sched: SchedConfig::default(),
         backend: BackendKind::Auto,
+        lanes: LaneConfig::default(),
     }
 }
 

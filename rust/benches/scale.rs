@@ -17,7 +17,7 @@
 use gradestc::compress::gradestc::basis_bytes_per_lane;
 use gradestc::config::{
     BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
-    ModelKind, NetConfig, SchedConfig, SchedKind,
+    LaneConfig, ModelKind, NetConfig, SchedConfig, SchedKind,
 };
 use gradestc::coordinator::Simulation;
 use gradestc::model::meta::layer_table;
@@ -49,6 +49,7 @@ fn cfg(clients: usize, kind: SchedKind, rounds: usize) -> ExperimentConfig {
         net: NetConfig { het_spread: 1.0, ..NetConfig::default() },
         sched: SchedConfig { kind, ..SchedConfig::default() },
         backend: BackendKind::Auto,
+        lanes: LaneConfig::default(),
     }
 }
 
@@ -79,6 +80,43 @@ fn main() {
         });
     }
 
+    // Build-plane probe: eager population materialization at w1 vs w8
+    // (the deterministic `parallel_map` fan-out over cids), and the lazy
+    // build that defers every lane to first dispatch.
+    let build_cfg = |workers: usize, lazy: bool| -> ExperimentConfig {
+        let mut c = cfg(clients, SchedKind::Sync, 2);
+        c.workers = workers;
+        c.lanes = LaneConfig { lazy, max_resident: 0, legacy_shards: false };
+        c
+    };
+    let eager_w1 = b
+        .bench(&format!("build-eager-{clients}c-w1"), || {
+            let sim = Simulation::build(build_cfg(1, false)).unwrap();
+            std::hint::black_box(sim.lanes.resident());
+        })
+        .clone();
+    let eager_w8 = b
+        .bench(&format!("build-eager-{clients}c-w8"), || {
+            let sim = Simulation::build(build_cfg(8, false)).unwrap();
+            std::hint::black_box(sim.lanes.resident());
+        })
+        .clone();
+    b.bench(&format!("build-lazy-{clients}c"), || {
+        let sim = Simulation::build(build_cfg(8, true)).unwrap();
+        std::hint::black_box(sim.lanes.resident());
+    });
+    let speedup = eager_w1.median_ns / eager_w8.median_ns;
+    println!("SPEEDUP build-eager-{clients}c w1/w8 = {speedup:.2}x");
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    if !fast && cores >= 8 {
+        // The acceptance bar for the parallel build: fanning lane
+        // materialization across 8 workers must win ≥4× over one.
+        assert!(
+            speedup >= 4.0,
+            "parallel eager build speedup {speedup:.2}x < 4x at w8 ({cores} cores)"
+        );
+    }
+
     // Memory probe: one representative sync run, pool vs naive baseline.
     let mut sim = Simulation::build(cfg(clients, SchedKind::Sync, 2)).unwrap();
     sim.run_scheduled().unwrap();
@@ -91,17 +129,27 @@ fn main() {
     let rss = rss_bytes().unwrap_or(0);
     println!(
         "MEMLINE scale clients={clients} pool_entries={} pool_bytes={} \
-         naive_basis_bytes={naive} rss_bytes={rss}",
+         naive_basis_bytes={naive} rss_bytes={rss} lanes_resident={} \
+         lanes_materialized={} lane_evictions={}",
         pool.entries,
-        pool.bytes()
+        pool.bytes(),
+        sim.lanes.resident(),
+        sim.lanes.materializations(),
+        sim.lanes.eviction_count()
     );
 
-    // Machine-readable trajectory file, with the memory probe spliced in.
+    // Machine-readable trajectory file, with the memory + lane probes
+    // spliced in.
     let memory = format!(
         ",\n  \"memory\": {{\"clients\": {clients}, \"pool_entries\": {}, \
-         \"pool_bytes\": {}, \"naive_basis_bytes\": {naive}, \"rss_bytes\": {rss}}}",
+         \"pool_bytes\": {}, \"naive_basis_bytes\": {naive}, \"rss_bytes\": {rss}}},\
+         \n  \"lanes\": {{\"resident\": {}, \"materialized\": {}, \
+         \"evictions\": {}, \"build_speedup_w8\": {speedup:.2}}}",
         pool.entries,
-        pool.bytes()
+        pool.bytes(),
+        sim.lanes.resident(),
+        sim.lanes.materializations(),
+        sim.lanes.eviction_count()
     );
     std::fs::write("BENCH_scale.json", b.to_json(&memory)).expect("writing BENCH_scale.json");
     println!("wrote BENCH_scale.json ({} benches)", b.results().len());

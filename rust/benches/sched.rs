@@ -12,7 +12,7 @@
 
 use gradestc::config::{
     BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
-    ModelKind, NetConfig, SchedConfig, SchedKind,
+    LaneConfig, ModelKind, NetConfig, SchedConfig, SchedKind,
 };
 use gradestc::coordinator::Simulation;
 use gradestc::util::bench::Bencher;
@@ -42,6 +42,7 @@ fn cfg(kind: SchedKind, workers: usize) -> ExperimentConfig {
         net: NetConfig { het_spread: 1.0, ..NetConfig::default() },
         sched: SchedConfig { kind, ..SchedConfig::default() },
         backend: BackendKind::Auto,
+        lanes: LaneConfig::default(),
     }
 }
 

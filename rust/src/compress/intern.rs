@@ -121,6 +121,19 @@ impl BasisPool {
         inner.values().map(|bucket| bucket.len()).sum()
     }
 
+    /// Drop dead weak slots without computing stats. The lane pool calls
+    /// this after an eviction batch: evicted lanes release their basis
+    /// handles, and without a sweep the dead `Weak`s would accumulate
+    /// O(lifetime materializations) between the telemetry plane's
+    /// per-round [`BasisPool::stats`] sweeps (or forever, untraced).
+    pub fn sweep(&self) {
+        let mut inner = self.inner.lock().expect("basis pool poisoned");
+        inner.retain(|_, bucket| {
+            bucket.retain(|w| w.strong_count() > 0);
+            !bucket.is_empty()
+        });
+    }
+
     /// Live entry count / element total. Sweeps dead entries first, so a
     /// dropped lane's bases stop counting the moment the last handle goes.
     pub fn stats(&self) -> PoolStats {

@@ -146,6 +146,54 @@ impl CompressorKind {
     }
 }
 
+/// Virtual-lane knobs: lazy materialization, the LRU residency cap, and
+/// the frozen legacy shard path (`"lanes"` JSON object, `--lanes` /
+/// `--lane-cap` / `--legacy-shards` on the CLI).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LaneConfig {
+    /// Materialize a client lane (shard + RNG stream + compressor pair)
+    /// only on first dispatch, derived purely from `(seed, cid)` — so a
+    /// sampled-never client costs ~0 bytes. `false` materializes every
+    /// lane in `Simulation::build` through the same per-client derivation
+    /// (parallelized across `workers`); lazy and eager runs are
+    /// bit-identical.
+    pub lazy: bool,
+    /// Upper bound on *resident* (materialized, not in-flight) lanes;
+    /// least-recently-dispatched lanes beyond the cap are evicted and
+    /// re-materialized on demand from `(seed, cid)`. `0` = unbounded.
+    /// Requires `lazy`. In-flight lanes are pinned and never evicted, so
+    /// the bound is enforced net of pins.
+    pub max_resident: usize,
+    /// Frozen reference: generate shards with the pre-plan sequential
+    /// root-RNG walk (one global pixel walk + index partition). Eager
+    /// only — incompatible with `lazy`/`max_resident`. Kept so the old
+    /// keying stays runnable for regression archaeology.
+    pub legacy_shards: bool,
+}
+
+impl Default for LaneConfig {
+    fn default() -> Self {
+        LaneConfig { lazy: true, max_resident: 0, legacy_shards: false }
+    }
+}
+
+impl LaneConfig {
+    /// Range-check the knobs; returns a description of the first problem.
+    /// Called by `Simulation::build` so bad CLI/JSON values surface as
+    /// config errors, not panics.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.legacy_shards && self.lazy {
+            return Err("lanes.legacy_shards requires eager lanes (lanes.lazy = false)".into());
+        }
+        if self.max_resident > 0 && !self.lazy {
+            return Err(
+                "lanes.max_resident requires lanes.lazy (eviction re-materializes lazily)".into(),
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Complete specification of one simulated FL experiment.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
@@ -210,6 +258,11 @@ pub struct ExperimentConfig {
     /// count for every choice; scalar vs blocked differ within ≤1e-5
     /// relative on reassociated reductions.
     pub backend: BackendKind,
+    /// Virtual client lanes ([`crate::coordinator::lanes`]): lazy
+    /// `(seed, cid)`-derived materialization (the default), the LRU
+    /// residency cap for 10⁶-client populations, and the frozen legacy
+    /// shard walk. Lazy and eager runs are bit-identical.
+    pub lanes: LaneConfig,
 }
 
 impl ExperimentConfig {
@@ -238,6 +291,7 @@ impl ExperimentConfig {
             net: NetConfig::default(),
             sched: SchedConfig::default(),
             backend: BackendKind::Auto,
+            lanes: LaneConfig::default(),
         }
     }
 
@@ -282,6 +336,7 @@ impl ExperimentConfig {
             net: NetConfig::default(),
             sched: SchedConfig::default(),
             backend: BackendKind::Auto,
+            lanes: LaneConfig::default(),
         }
     }
 
@@ -358,6 +413,7 @@ impl ExperimentConfig {
             ("net", net_to_json(&self.net)),
             ("sched", sched_to_json(&self.sched)),
             ("backend", Json::str(self.backend.name())),
+            ("lanes", lanes_to_json(&self.lanes)),
         ])
     }
 
@@ -414,6 +470,10 @@ impl ExperimentConfig {
                 })
                 .transpose()?
                 .unwrap_or_default(),
+            // Optional for backward compatibility with pre-virtual-lane
+            // configs: absent means the lazy default (bit-identical to
+            // the eager build, so old configs replay unchanged).
+            lanes: j.get("lanes").map(parse_lanes).transpose()?.unwrap_or_default(),
         })
     }
 }
@@ -467,6 +527,34 @@ fn parse_sched(j: &Json) -> Result<SchedConfig, String> {
         kind,
         compute_base_s: f("compute_base_s", d.compute_base_s)?,
         compute_spread: f("compute_spread", d.compute_spread)?,
+    })
+}
+
+fn lanes_to_json(l: &LaneConfig) -> Json {
+    Json::obj(vec![
+        ("lazy", Json::Bool(l.lazy)),
+        ("max_resident", Json::num(l.max_resident as f64)),
+        ("legacy_shards", Json::Bool(l.legacy_shards)),
+    ])
+}
+
+fn parse_lanes(j: &Json) -> Result<LaneConfig, String> {
+    let d = LaneConfig::default();
+    let b = |key: &str, dv: bool| -> Result<bool, String> {
+        match j.get(key) {
+            Some(v) => v.as_bool().ok_or_else(|| format!("lanes.{key} must be a bool")),
+            None => Ok(dv),
+        }
+    };
+    Ok(LaneConfig {
+        lazy: b("lazy", d.lazy)?,
+        max_resident: match j.get("max_resident") {
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| "lanes.max_resident must be a non-negative integer".to_string())?,
+            None => d.max_resident,
+        },
+        legacy_shards: b("legacy_shards", d.legacy_shards)?,
     })
 }
 
@@ -678,6 +766,46 @@ mod tests {
         let back = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(back.net.dropout, 0.3);
         assert_eq!(back.net.uplink_mbps, NetConfig::default().uplink_mbps);
+    }
+
+    #[test]
+    fn lanes_roundtrips_and_defaults() {
+        let mut cfg = ExperimentConfig::preset_quickstart();
+        cfg.lanes = LaneConfig { lazy: true, max_resident: 128, legacy_shards: false };
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+
+        cfg.lanes = LaneConfig { lazy: false, max_resident: 0, legacy_shards: true };
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+
+        // Pre-virtual-lane configs (no "lanes" field) parse as the default
+        // lazy/unbounded lane plan.
+        let mut j = ExperimentConfig::preset_quickstart().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("lanes");
+        }
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.lanes, LaneConfig::default());
+
+        // A partial lanes object fills the rest from the default.
+        if let Json::Obj(m) = &mut j {
+            m.insert(
+                "lanes".into(),
+                Json::obj(vec![("max_resident", Json::num(64.0))]),
+            );
+        }
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.lanes.max_resident, 64);
+        assert_eq!(back.lanes.lazy, LaneConfig::default().lazy);
+        assert_eq!(back.lanes.legacy_shards, LaneConfig::default().legacy_shards);
+
+        // Invalid combinations are rejected by validate().
+        assert!(LaneConfig::default().validate().is_ok());
+        let bad = LaneConfig { lazy: true, max_resident: 0, legacy_shards: true };
+        assert!(bad.validate().is_err());
+        let bad = LaneConfig { lazy: false, max_resident: 8, legacy_shards: false };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

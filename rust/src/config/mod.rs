@@ -11,7 +11,8 @@ pub mod experiment;
 pub mod json;
 
 pub use experiment::{
-    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
+    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, LaneConfig,
+    ModelKind,
 };
 pub use json::Json;
 // The network knobs live with the net subsystem, the scheduler knobs with

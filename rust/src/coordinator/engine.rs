@@ -118,20 +118,6 @@ pub struct ClientFrame {
     pub weight: f64,
 }
 
-/// Detach disjoint `&mut Client` lanes for the participant set, in `ids`
-/// order.
-///
-/// Panics if `ids` repeats a client (the sampler returns distinct ids).
-pub fn take_lanes<'a>(
-    clients: &'a mut [Client],
-    ids: &[usize],
-) -> Vec<(usize, &'a mut Client)> {
-    let mut slots: Vec<Option<&'a mut Client>> = clients.iter_mut().map(Some).collect();
-    ids.iter()
-        .map(|&cid| (cid, slots[cid].take().expect("duplicate participant id")))
-        .collect()
-}
-
 /// Run one client lane's uplink side: local SGD from the broadcast model,
 /// compress the pseudo-gradient, encode it to wire bytes. Touches only the
 /// lane's own state plus the shared read-only inputs.

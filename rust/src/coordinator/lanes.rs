@@ -1,0 +1,392 @@
+//! Virtual client lanes: lazy materialization, parallel first-touch, and
+//! LRU residency bounding for million-client populations.
+//!
+//! A [`LanePool`] owns one slot per client in the population, but a slot
+//! holds an actual [`Client`] lane only while that lane is *resident*.
+//! Every lane is a pure function of `(seed, cid)` — shard, RNG stream, and
+//! compressor pair are derived by [`LaneFactory::materialize`] with no
+//! sequential dependency on other clients — so:
+//!
+//! * a sampled-never client costs ~0 bytes (an empty slot);
+//! * first-touch batches materialize in parallel through
+//!   [`crate::util::pool::parallel_map`] in deterministic cid order;
+//! * an evicted lane re-materializes on demand bit-identically, its basis
+//!   re-interned through the shared [`BasisPool`].
+//!
+//! **Seed-derivation contract** (frozen — tests in `tests/lanes.rs` pin
+//! lazy ≡ eager bit-identity on top of it): with `root = Pcg64::new(seed,
+//! 0x51)` and `Pcg64::fork` non-mutating,
+//!
+//! * synth shard labels: one [`ShardPlan`] from `root.fork(0x2_0000_0000)`
+//!   (label draw) + `root.fork(0x2_0000_0001)` (partition);
+//! * synth shard pixels: `root.fork(0x1_0000_0000 + cid)`;
+//! * corpus shard: `root.fork(1000 + cid)` (identical to the pre-plan
+//!   keying, which was already per-client);
+//! * lane RNG: `root.fork(7000 + cid)`;
+//! * compressor pair seed: `seed ^ (cid << 8)`.
+//!
+//! **Residency bound**: `max_resident > 0` caps resident lanes; the
+//! least-recently-touched unpinned lane is evicted past the cap. Lanes
+//! with an upload in flight are *pinned* — their paired compressor/
+//! decompressor state has advanced at dispatch, and a re-materialized
+//! (reset) decompressor would misdecode the in-flight frame — so the
+//! bound is enforced net of pins, and net of the cohort currently being
+//! ensured (a cap below one round's cohort degrades to holding exactly
+//! that cohort rather than breaking dispatch).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::compress::{build_pair_with, BasisPool};
+use crate::config::CompressorKind;
+use crate::data::corpus::CorpusGenerator;
+use crate::data::synth::{Dataset, SynthGenerator};
+use crate::data::ShardPlan;
+use crate::linalg::Backend;
+use crate::model::meta::ModelMeta;
+use crate::telemetry::{Phase, Telemetry};
+use crate::util::pool::parallel_map;
+use crate::util::rng::Pcg64;
+
+use super::Client;
+
+/// Where a materialized lane's shard comes from. Generators are shared
+/// (`Arc`) across worker threads during parallel first-touch.
+pub(crate) enum ShardSource {
+    /// Class-conditional image data: the per-client label slice comes from
+    /// the population-wide [`ShardPlan`], the pixels from the per-client
+    /// stream `root.fork(0x1_0000_0000 + cid)`.
+    Synth {
+        gen: Arc<SynthGenerator>,
+        plan: Arc<ShardPlan>,
+    },
+    /// Token sequences from the per-client stream `root.fork(1000 + cid)`
+    /// — the same keying the eager corpus path always used.
+    Corpus {
+        gen: Arc<CorpusGenerator>,
+        samples: usize,
+        seq: usize,
+    },
+}
+
+/// Derives a full [`Client`] lane from `(seed, cid)` alone. Everything it
+/// holds is `Sync`, so [`LanePool::ensure_resident`] can fan `materialize`
+/// across workers.
+pub(crate) struct LaneFactory {
+    /// The build-time root stream (`Pcg64::new(seed, 0x51)`); never
+    /// advanced, only forked, so materialization order cannot matter.
+    pub(crate) root: Pcg64,
+    /// `cfg.seed`, for the compressor-pair derivation.
+    pub(crate) seed: u64,
+    pub(crate) compressor: CompressorKind,
+    pub(crate) meta: ModelMeta,
+    /// The population-shared basis pool; a re-materialized lane's initial
+    /// basis re-interns here (deduping against any live copy).
+    pub(crate) pool: BasisPool,
+    pub(crate) backend: &'static dyn Backend,
+    pub(crate) source: ShardSource,
+}
+
+impl LaneFactory {
+    /// Materialize lane `cid`: shard + RNG stream + paired compressor/
+    /// decompressor, derived purely from `(seed, cid)`.
+    pub(crate) fn materialize(&self, cid: usize) -> Client {
+        let data = match &self.source {
+            ShardSource::Synth { gen, plan } => {
+                let mut r = self.root.fork(0x1_0000_0000 + cid as u64);
+                gen.generate_with_labels(plan.labels_of(cid), &mut r)
+            }
+            ShardSource::Corpus { gen, samples, seq } => {
+                let mut r = self.root.fork(1000 + cid as u64);
+                let corpus = gen.generate(*samples, *seq, &mut r);
+                Dataset {
+                    x: corpus.tokens.iter().map(|&t| t as f32).collect(),
+                    y: vec![0; corpus.len()],
+                    features: *seq,
+                    classes: 256,
+                }
+            }
+        };
+        let (compressor, decompressor) = build_pair_with(
+            &self.pool,
+            &self.compressor,
+            &self.meta,
+            self.seed ^ ((cid as u64) << 8),
+            self.backend,
+        );
+        Client {
+            id: cid,
+            data,
+            compressor,
+            decompressor,
+            rng: self.root.fork(7000 + cid as u64),
+        }
+    }
+}
+
+/// The population's lane slots: resident lanes, LRU bookkeeping, and the
+/// factory that (re-)materializes missing ones. Replaces the former
+/// `Vec<Client>` on [`super::Simulation`].
+pub struct LanePool {
+    /// One slot per client id; `None` = not resident (never materialized,
+    /// evicted, or currently loaned out via [`LanePool::take`]).
+    slots: Vec<Option<Box<Client>>>,
+    /// In-flight lanes exempt from eviction (see module docs).
+    pinned: Vec<bool>,
+    /// Last touch tick per lane, for invalidating stale heap entries.
+    last_touch: Vec<u64>,
+    /// Monotonic touch counter.
+    clock: u64,
+    /// Min-heap of `(touch tick, cid)`; entries whose tick no longer
+    /// matches `last_touch[cid]` are stale and skipped on pop.
+    lru: BinaryHeap<Reverse<(u64, usize)>>,
+    /// Residency cap; `0` = unbounded.
+    max_resident: usize,
+    /// Current resident-lane count (loaned lanes still count).
+    resident: usize,
+    /// Lifetime materializations (first-touch + re-materializations).
+    materialized: u64,
+    /// Lifetime evictions.
+    evictions: u64,
+    /// `None` for a fixed (pre-built) pool, where every lane is resident
+    /// forever — the frozen legacy-shards path.
+    factory: Option<LaneFactory>,
+}
+
+impl LanePool {
+    /// A fully-materialized pool with no factory: every lane resident for
+    /// the run's lifetime, no eviction. Used by the frozen `legacy_shards`
+    /// reference path.
+    pub(crate) fn fixed(clients: Vec<Client>) -> LanePool {
+        let n = clients.len();
+        LanePool {
+            slots: clients.into_iter().map(|c| Some(Box::new(c))).collect(),
+            pinned: vec![false; n],
+            last_touch: vec![0; n],
+            clock: 0,
+            lru: BinaryHeap::new(),
+            max_resident: 0,
+            resident: n,
+            materialized: n as u64,
+            evictions: 0,
+            factory: None,
+        }
+    }
+
+    /// An all-empty pool of `n` virtual lanes backed by `factory`.
+    pub(crate) fn virtual_lanes(n: usize, factory: LaneFactory, max_resident: usize) -> LanePool {
+        LanePool {
+            slots: (0..n).map(|_| None).collect(),
+            pinned: vec![false; n],
+            last_touch: vec![0; n],
+            clock: 0,
+            lru: BinaryHeap::new(),
+            max_resident,
+            resident: 0,
+            materialized: 0,
+            evictions: 0,
+            factory: Some(factory),
+        }
+    }
+
+    /// Population size (resident or not).
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True for an empty population.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Currently resident lanes (including loaned-out ones).
+    pub fn resident(&self) -> usize {
+        self.resident
+    }
+
+    /// Lifetime lane materializations.
+    pub fn materializations(&self) -> u64 {
+        self.materialized
+    }
+
+    /// Lifetime lane evictions.
+    pub fn eviction_count(&self) -> u64 {
+        self.evictions
+    }
+
+    fn touch(&mut self, cid: usize) {
+        self.clock += 1;
+        self.last_touch[cid] = self.clock;
+        self.lru.push(Reverse((self.clock, cid)));
+    }
+
+    /// Make every lane in `cids` resident, then enforce the residency cap.
+    /// Missing lanes materialize through `parallel_map` in ascending-cid
+    /// order, so the result — and every RNG/compressor state inside —
+    /// is identical at any worker count. Touches all of `cids` (in sorted
+    /// order, again for worker-count independence of the LRU order).
+    pub(crate) fn ensure_resident(
+        &mut self,
+        cids: &[usize],
+        workers: usize,
+        tel: Option<&Telemetry>,
+        round: u64,
+    ) {
+        let mut missing: Vec<usize> = cids
+            .iter()
+            .copied()
+            .filter(|&c| self.slots[c].is_none())
+            .collect();
+        missing.sort_unstable();
+        missing.dedup();
+        if !missing.is_empty() {
+            let factory = self
+                .factory
+                .as_ref()
+                .expect("non-resident lane in a fixed lane pool");
+            let built = parallel_map(workers, missing.clone(), |cid| {
+                let sp = Telemetry::timer(tel);
+                let lane = Box::new(factory.materialize(cid));
+                if let Some(sp) = sp {
+                    sp.end(Phase::LaneMaterialize, round, Some(cid as u32));
+                }
+                lane
+            });
+            for (cid, lane) in missing.into_iter().zip(built) {
+                self.slots[cid] = Some(lane);
+                self.resident += 1;
+                self.materialized += 1;
+            }
+        }
+        let mut touched: Vec<usize> = cids.to_vec();
+        touched.sort_unstable();
+        touched.dedup();
+        for &cid in &touched {
+            self.touch(cid);
+        }
+        // The requested working set is about to be dispatched: exempt it
+        // from this enforcement pass (so a cap below one cohort's size can
+        // never evict a lane that [`LanePool::take`] is about to loan) —
+        // the cap is a floor with respect to the active cohort, like pins.
+        let guard: Vec<usize> =
+            touched.iter().copied().filter(|&c| !self.pinned[c]).collect();
+        for &c in &guard {
+            self.pinned[c] = true;
+        }
+        self.evict_to_cap();
+        for &c in &guard {
+            self.pinned[c] = false;
+        }
+    }
+
+    /// Evict least-recently-touched unpinned lanes until the cap holds.
+    /// Pinned lanes are skipped (and requeued), so the cap is a floor with
+    /// respect to pins: with more in-flight lanes than `max_resident`, the
+    /// pool holds exactly the pinned set. After any eviction the shared
+    /// basis pool is swept, or dead weak refs would accumulate O(lifetime
+    /// materializations) between telemetry's per-round sweeps.
+    fn evict_to_cap(&mut self) {
+        if self.max_resident == 0 {
+            return;
+        }
+        let mut skipped: Vec<Reverse<(u64, usize)>> = Vec::new();
+        let mut evicted = false;
+        while self.resident > self.max_resident {
+            let Some(Reverse((t, cid))) = self.lru.pop() else {
+                break;
+            };
+            if self.last_touch[cid] != t || self.slots[cid].is_none() {
+                continue; // stale entry (re-touched, loaned, or already gone)
+            }
+            if self.pinned[cid] {
+                skipped.push(Reverse((t, cid)));
+                continue;
+            }
+            self.slots[cid] = None;
+            self.resident -= 1;
+            self.evictions += 1;
+            evicted = true;
+        }
+        self.lru.extend(skipped);
+        if evicted {
+            if let Some(f) = &self.factory {
+                f.pool.sweep();
+            }
+        }
+    }
+
+    /// Pin `cid` against eviction (an upload is in flight on it).
+    pub(crate) fn pin(&mut self, cid: usize) {
+        self.pinned[cid] = true;
+    }
+
+    /// Drop the pin and re-enforce the cap (the pin may have been the only
+    /// thing holding the pool above it).
+    pub(crate) fn unpin(&mut self, cid: usize) {
+        self.pinned[cid] = false;
+        self.evict_to_cap();
+    }
+
+    /// Mutable access to one lane, materializing it on the spot if needed
+    /// (single-lane path — arrival decodes; no span, callers on the batch
+    /// path use [`LanePool::ensure_resident`]).
+    pub(crate) fn lane_mut(&mut self, cid: usize) -> &mut Client {
+        if self.slots[cid].is_none() {
+            let factory = self
+                .factory
+                .as_ref()
+                .expect("non-resident lane in a fixed lane pool");
+            self.slots[cid] = Some(Box::new(factory.materialize(cid)));
+            self.resident += 1;
+            self.materialized += 1;
+        }
+        self.touch(cid);
+        self.slots[cid].as_deref_mut().unwrap()
+    }
+
+    /// Loan out the lanes for `ids` (must be distinct and resident — call
+    /// [`LanePool::ensure_resident`] first). The slots go empty but the
+    /// lanes still count as resident; pair with [`LanePool::restore`].
+    /// O(k) in the number of ids, independent of population size.
+    pub(crate) fn take(&mut self, ids: &[usize]) -> Vec<(usize, Box<Client>)> {
+        debug_assert!(
+            {
+                let mut sorted = ids.to_vec();
+                sorted.sort_unstable();
+                sorted.windows(2).all(|w| w[0] != w[1])
+            },
+            "take() ids must be distinct"
+        );
+        ids.iter()
+            .map(|&cid| {
+                let lane = self.slots[cid].take().expect("taking a non-resident lane");
+                (cid, lane)
+            })
+            .collect()
+    }
+
+    /// Return lanes loaned out by [`LanePool::take`].
+    pub(crate) fn restore(&mut self, lanes: Vec<(usize, Box<Client>)>) {
+        for (cid, lane) in lanes {
+            debug_assert!(self.slots[cid].is_none(), "restoring into an occupied slot");
+            self.slots[cid] = Some(lane);
+        }
+    }
+
+    /// `(client compressor, server decompressor)` state fingerprints per
+    /// lane, id order; non-resident lanes report `(0, 0)` (same as a
+    /// stateless compressor).
+    pub fn fingerprints(&self) -> Vec<(u64, u64)> {
+        self.slots
+            .iter()
+            .map(|slot| match slot {
+                Some(c) => (
+                    c.compressor.state_fingerprint(),
+                    c.decompressor.state_fingerprint(),
+                ),
+                None => (0, 0),
+            })
+            .collect()
+    }
+}

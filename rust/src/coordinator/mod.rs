@@ -45,11 +45,13 @@
 
 pub mod aggregate;
 pub mod engine;
+pub mod lanes;
 pub mod sampling;
 pub mod trainer;
 
 pub use aggregate::ServerAggregator;
 pub use engine::{ClientFrame, ExecPlan, RoundInputs};
+pub use lanes::LanePool;
 pub use sampling::ParticipationSampler;
 pub use trainer::{NativeOrXla, ParallelTrainer, Trainer, XlaTrainer};
 
@@ -60,12 +62,12 @@ use crate::config::{DatasetKind, ExperimentConfig, ModelKind};
 use crate::linalg::Backend;
 use crate::data::corpus::CorpusGenerator;
 use crate::data::synth::{Dataset, SynthGenerator, SynthSpec};
-use crate::data::{partition_indices, Partition};
+use crate::data::{partition_indices, plan_shards, Partition};
 use crate::metrics::{CommLedger, NetworkModel, RoundRecord, RunRecorder, RunReport};
 use crate::model::meta::{layer_table, ModelMeta};
 use crate::model::params::ParamStore;
 use crate::net::transport::Instrumented;
-use crate::net::{wire, DropoutModel, Loopback, Transport};
+use crate::net::{wire, BroadcastCache, DropoutModel, Loopback, Transport};
 use crate::telemetry::{ApplyEvent, ArrivalEvent, DispatchEvent, Observer, Phase, Telemetry};
 use crate::util::rng::Pcg64;
 
@@ -96,10 +98,14 @@ pub struct Simulation {
     pub meta: ModelMeta,
     /// Global model parameters.
     pub global: ParamStore,
-    /// Client lanes in id order.
-    pub clients: Vec<Client>,
-    /// Held-out evaluation data.
-    pub test_data: Dataset,
+    /// The population's lane slots: resident client lanes plus the factory
+    /// that (re-)materializes missing ones from `(seed, cid)` — see
+    /// [`lanes`].
+    pub lanes: LanePool,
+    /// Held-out evaluation data. Shared (`Arc`) so experiment grids whose
+    /// cells differ only in shards reuse one test set instead of cloning
+    /// it per cell.
+    pub test_data: Arc<Dataset>,
     // Crate-visible so the scheduler plane (`crate::sched`) can drive the
     // same stages the legacy loop does — broadcast/upload through the
     // transport, ledger charges from drained frames, per-lane decode —
@@ -119,6 +125,13 @@ pub struct Simulation {
     /// sync loop, scheduler-managed for semi-sync/async. Recorded per round
     /// as [`RoundRecord::sim_clock_s`].
     pub(crate) vclock: f64,
+    /// Global-model version: bumped once per scheduler apply. Keys the
+    /// broadcast-encode cache.
+    pub(crate) model_version: u64,
+    /// Model-version-keyed broadcast-encode memo shared by all schedulers
+    /// ([`crate::net::broadcast`]); consult via
+    /// [`Simulation::broadcast_frame`].
+    pub(crate) broadcast_cache: BroadcastCache,
     /// Compute backend resolved from `cfg.backend`: every compressor lane
     /// and server aggregator in this simulation runs on it.
     pub(crate) backend: &'static dyn Backend,
@@ -172,6 +185,14 @@ impl Observer for RoundHookAdapter {
 }
 
 /// Build the federated dataset for a config: per-client shards + test set.
+///
+/// This is the **frozen legacy keying** (`cfg.lanes.legacy_shards`): one
+/// sequential root-RNG walk generates the whole training pool, then an
+/// index partition slices it into shards. The virtual-lane path instead
+/// derives each shard independently from `(seed, cid)` (see [`lanes`]);
+/// the two produce different shard *values* by construction, so this path
+/// is kept runnable as the regression reference. Test sets are identical
+/// across both paths (same `fork(999)`/`fork(503)` streams).
 pub fn build_datasets(
     cfg: &ExperimentConfig,
     rng: &mut Pcg64,
@@ -233,12 +254,23 @@ impl Simulation {
     /// Build everything from a config. Fails if `use_xla` is set but the
     /// artifacts are missing or don't cover the model.
     pub fn build(cfg: ExperimentConfig) -> Result<Simulation> {
+        Simulation::build_with_test_data(cfg, None)
+    }
+
+    /// Like [`Simulation::build`] but reusing a pre-built test set.
+    /// Experiment grids whose cells differ only in shard assignment (same
+    /// dataset kind, `test_samples`, and seed) pass the previous cell's
+    /// [`Simulation::test_data`] here instead of regenerating and cloning
+    /// the full evaluation set per cell. `None` generates it as usual.
+    pub fn build_with_test_data(
+        cfg: ExperimentConfig,
+        shared_test: Option<Arc<Dataset>>,
+    ) -> Result<Simulation> {
         cfg.net.validate().map_err(|e| anyhow!("invalid network config: {e}"))?;
         cfg.sched.validate().map_err(|e| anyhow!("invalid scheduler config: {e}"))?;
+        cfg.lanes.validate().map_err(|e| anyhow!("invalid lane config: {e}"))?;
         let meta = layer_table(cfg.model);
         let mut root = Pcg64::new(cfg.seed, 0x51);
-
-        let (shards, test_data) = build_datasets(&cfg, &mut root);
 
         let trainer = NativeOrXla::build(&cfg, &meta)
             .with_context(|| "building trainer backend")?;
@@ -248,23 +280,99 @@ impl Simulation {
         // memory is a handle, not a matrix, and identical bases dedupe.
         let basis_pool = BasisPool::new();
         let backend = cfg.backend.resolve();
-        let mut clients = Vec::with_capacity(cfg.num_clients);
-        for (id, data) in shards.into_iter().enumerate() {
-            let (compressor, decompressor) = build_pair_with(
-                &basis_pool,
-                &cfg.compressor,
-                &meta,
-                cfg.seed ^ (id as u64) << 8,
+
+        let (lanes, test_data) = if cfg.lanes.legacy_shards {
+            // Frozen reference: the pre-virtual-lane sequential root-RNG
+            // walk, materialized eagerly into a fixed pool.
+            let (shards, test) = build_datasets(&cfg, &mut root);
+            let mut clients = Vec::with_capacity(cfg.num_clients);
+            for (id, data) in shards.into_iter().enumerate() {
+                let (compressor, decompressor) = build_pair_with(
+                    &basis_pool,
+                    &cfg.compressor,
+                    &meta,
+                    cfg.seed ^ ((id as u64) << 8),
+                    backend,
+                );
+                clients.push(Client {
+                    id,
+                    data,
+                    compressor,
+                    decompressor,
+                    rng: root.fork(7000 + id as u64),
+                });
+            }
+            let test = shared_test.unwrap_or_else(|| Arc::new(test));
+            (LanePool::fixed(clients), test)
+        } else {
+            // Virtual lanes: every lane derives from (seed, cid) through
+            // the factory — see `lanes` for the seed-derivation contract.
+            let source = match cfg.dataset {
+                DatasetKind::TinyCorpus => lanes::ShardSource::Corpus {
+                    gen: Arc::new(CorpusGenerator::new(256, 4, cfg.seed ^ 0xC0)),
+                    samples: cfg.samples_per_client,
+                    seq: 64,
+                },
+                kind => {
+                    let spec = SynthSpec::for_kind(kind);
+                    let total = cfg.num_clients * cfg.samples_per_client;
+                    // The population-wide shard plan draws labels and runs
+                    // the partition from dedicated root forks: O(total)
+                    // u32 labels, not O(total) pixels.
+                    let plan = plan_shards(
+                        total,
+                        spec.classes,
+                        cfg.num_clients,
+                        cfg.distribution,
+                        &mut root.fork(0x2_0000_0000),
+                        &mut root.fork(0x2_0000_0001),
+                    );
+                    lanes::ShardSource::Synth {
+                        gen: Arc::new(SynthGenerator::new(spec, cfg.seed ^ 0xDA7A)),
+                        plan: Arc::new(plan),
+                    }
+                }
+            };
+            let test = match shared_test {
+                Some(t) => t,
+                // Same streams the legacy path uses (fork(999)/fork(503)),
+                // so test sets are identical across legacy/plan keying.
+                None => Arc::new(match &source {
+                    lanes::ShardSource::Corpus { gen, seq, .. } => {
+                        let corpus =
+                            gen.generate(cfg.test_samples, *seq, &mut root.fork(999));
+                        Dataset {
+                            x: corpus.tokens.iter().map(|&t| t as f32).collect(),
+                            y: vec![0; corpus.len()],
+                            features: *seq,
+                            classes: 256,
+                        }
+                    }
+                    lanes::ShardSource::Synth { gen, .. } => {
+                        gen.generate(cfg.test_samples, &mut root.fork(503))
+                    }
+                }),
+            };
+            let factory = lanes::LaneFactory {
+                root: root.clone(),
+                seed: cfg.seed,
+                compressor: cfg.compressor.clone(),
+                meta: meta.clone(),
+                pool: basis_pool.clone(),
                 backend,
-            );
-            clients.push(Client {
-                id,
-                data,
-                compressor,
-                decompressor,
-                rng: root.fork(7000 + id as u64),
-            });
-        }
+                source,
+            };
+            let mut pool =
+                LanePool::virtual_lanes(cfg.num_clients, factory, cfg.lanes.max_resident);
+            if !cfg.lanes.lazy {
+                // Eager mode: materialize the whole population now, fanned
+                // across workers in deterministic cid order (telemetry is
+                // enabled post-build, so no spans to record here).
+                let all: Vec<usize> = (0..cfg.num_clients).collect();
+                pool.ensure_resident(&all, cfg.resolved_workers(), None, 0);
+            }
+            (pool, test)
+        };
 
         let global = ParamStore::init(&meta, &Pcg64::new(cfg.seed, 0x6000));
         let sampler = ParticipationSampler::new(
@@ -281,7 +389,7 @@ impl Simulation {
             cfg,
             meta,
             global,
-            clients,
+            lanes,
             test_data,
             trainer,
             sampler,
@@ -291,6 +399,8 @@ impl Simulation {
             dropout,
             basis_pool,
             vclock: 0.0,
+            model_version: 0,
+            broadcast_cache: BroadcastCache::new(),
             backend,
             recorder: RunRecorder::new(),
             telemetry: None,
@@ -364,23 +474,39 @@ impl Simulation {
             let pool = self.basis_pool.stats();
             tel.gauge("pool.entries", pool.entries as f64);
             tel.gauge("pool.bytes", pool.bytes() as f64);
+            tel.gauge("lanes.resident", self.lanes.resident() as f64);
+            tel.gauge("lanes.materialized", self.lanes.materializations() as f64);
+            tel.gauge("lanes.evictions", self.lanes.eviction_count() as f64);
             tel.count("sum_d", record.sum_d);
             record.ext = Some(tel.snapshot_round(record.round as u64));
         }
     }
 
+    /// The encoded broadcast frame for model `version`, memoized in the
+    /// shared [`BroadcastCache`]: all three schedulers encode each version
+    /// at most once. A `BroadcastEncode` span (tagged `span_round`; async
+    /// passes the version) is recorded only when the encode actually runs.
+    pub(crate) fn broadcast_frame(&mut self, version: u64, span_round: u64) -> Arc<[u8]> {
+        if let Some(frame) = self.broadcast_cache.get(version) {
+            return frame;
+        }
+        let tel = self.telemetry.clone();
+        let sp = Telemetry::timer(tel.as_deref());
+        let frame: Arc<[u8]> = wire::encode_params(&self.global).into();
+        if let Some(sp) = sp {
+            sp.end(Phase::BroadcastEncode, span_round, None);
+        }
+        self.broadcast_cache.put(version, Arc::clone(&frame));
+        frame
+    }
+
     /// `(client compressor, server decompressor)` state fingerprints per
     /// client lane, id order. The two halves must be equal whenever the
     /// paired states are in lockstep — the invariant the straggler-decode
-    /// tests assert from outside the crate. Stateless compressors report
-    /// `(0, 0)`.
+    /// tests assert from outside the crate. Stateless compressors and
+    /// non-resident (never-materialized or evicted) lanes report `(0, 0)`.
     pub fn lane_fingerprints(&self) -> Vec<(u64, u64)> {
-        self.clients
-            .iter()
-            .map(|c| {
-                (c.compressor.state_fingerprint(), c.decompressor.state_fingerprint())
-            })
-            .collect()
+        self.lanes.fingerprints()
     }
 
     /// Total uplink bytes charged so far.
@@ -421,19 +547,16 @@ impl Simulation {
                 round,
                 cids: &survivors,
                 vtime: t_round_start,
-                model_version: round as u64,
+                model_version: self.model_version,
             });
         }
 
-        // Stage 1: broadcast — encode the global model once, ship the
-        // frame (one shared allocation) to every survivor through the
-        // transport, and charge the downlink from the buffers that
-        // actually crossed it.
-        let sp = Telemetry::timer(tel.as_deref());
-        let broadcast: std::sync::Arc<[u8]> = wire::encode_params(&self.global).into();
-        if let Some(sp) = sp {
-            sp.end(Phase::BroadcastEncode, round as u64, None);
-        }
+        // Stage 1: broadcast — fetch the encoded global model (cached per
+        // model version; encoded at most once across rounds that don't
+        // apply), ship the frame (one shared allocation) to every survivor
+        // through the transport, and charge the downlink from the buffers
+        // that actually crossed it.
+        let broadcast = self.broadcast_frame(self.model_version, round as u64);
         let broadcast_bytes = broadcast.len() as u64;
         for &cid in &survivors {
             self.transport.broadcast(cid, &broadcast)?;
@@ -459,14 +582,27 @@ impl Simulation {
             batch_size: self.cfg.batch_size,
             lr: self.cfg.lr,
         };
-        let lanes = engine::take_lanes(&mut self.clients, &survivors);
-        let outcomes = engine::run_client_phase(
-            self.trainer.plan(workers),
-            inputs,
-            lanes,
-            tel.as_deref(),
-            round as u64,
-        )?;
+        // Materialize any first-touch lanes (parallel, deterministic cid
+        // order), then loan the survivors' lanes out to the engine. No
+        // pinning needed here: the lockstep loop decodes every upload
+        // within this same step, so nothing can evict a lane between its
+        // dispatch and its decode.
+        self.lanes
+            .ensure_resident(&survivors, workers, tel.as_deref(), round as u64);
+        let mut taken = self.lanes.take(&survivors);
+        let outcomes = {
+            let lane_refs: Vec<(usize, &mut Client)> =
+                taken.iter_mut().map(|(cid, b)| (*cid, &mut **b)).collect();
+            engine::run_client_phase(
+                self.trainer.plan(workers),
+                inputs,
+                lane_refs,
+                tel.as_deref(),
+                round as u64,
+            )
+        };
+        self.lanes.restore(taken);
+        let outcomes = outcomes?;
 
         // Stage 3: upload every frame through the transport in participant
         // order; the uplink charge is whatever the server drains. Weights
@@ -474,7 +610,7 @@ impl Simulation {
         // reorders frames cannot silently mis-weight the aggregate.
         let mut loss_sum = 0.0f64;
         let mut sum_d = 0u64;
-        let mut weight_of: Vec<f64> = vec![0.0; self.clients.len()];
+        let mut weight_of: Vec<f64> = vec![0.0; self.lanes.len()];
         for outcome in outcomes {
             loss_sum += outcome.mean_loss;
             sum_d += outcome.stats.sum_d;
@@ -535,8 +671,14 @@ impl Simulation {
         // becomes structured LayerUpdates, fanned across workers per lane.
         let ids: Vec<usize> = uploads.iter().map(|(cid, _)| *cid).collect();
         let frames: Vec<Vec<u8>> = uploads.into_iter().map(|(_, f)| f).collect();
-        let lanes = engine::take_lanes(&mut self.clients, &ids);
-        let decoded = engine::run_server_phase(workers, lanes, frames, tel.as_deref(), round as u64)?;
+        let mut taken = self.lanes.take(&ids);
+        let decoded = {
+            let lane_refs: Vec<(usize, &mut Client)> =
+                taken.iter_mut().map(|(cid, b)| (*cid, &mut **b)).collect();
+            engine::run_server_phase(workers, lane_refs, frames, tel.as_deref(), round as u64)
+        };
+        self.lanes.restore(taken);
+        let decoded = decoded?;
 
         // Streaming probes: every decoded upload (stragglers too, flagged
         // off-time with weight 0) reaches the observer before the fold —
@@ -597,6 +739,8 @@ impl Simulation {
             if let Some(sp) = sp {
                 sp.end(Phase::Apply, round as u64, None);
             }
+            // The model changed: invalidate the broadcast memo's key.
+            self.model_version += 1;
         }
 
         let sp = Telemetry::timer(tel.as_deref());

@@ -11,5 +11,5 @@ pub mod corpus;
 pub mod partition;
 pub mod synth;
 
-pub use partition::{partition_indices, Partition};
+pub use partition::{partition_indices, plan_shards, Partition, ShardPlan};
 pub use synth::{Dataset, SynthSpec};

@@ -110,6 +110,80 @@ pub fn partition_indices(
     Partition { assignments }
 }
 
+/// A labels-only shard plan: which labels each client's samples carry,
+/// decided up front so per-client *pixel* materialization can happen
+/// lazily, keyed purely by `(seed, cid)`.
+///
+/// The eager path drew the whole population's samples in one sequential
+/// root-RNG walk, which forces every client's shard to exist before any
+/// client can train. The plan keeps the cross-client coupling — the label
+/// draw and the [`partition_indices`] split both need the global view —
+/// but those are O(total) *integers*, not pixels. Everything heavy (the
+/// per-sample mode weights and pixel noise) moves into
+/// [`crate::data::synth::SynthGenerator::generate_with_labels`] on a
+/// per-client RNG stream, so a sampled-never client costs a handful of
+/// label bytes and nothing else, and materialization order cannot change
+/// a shard's bits.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Every client's labels, client-major (client `c`'s labels are
+    /// `labels[offsets[c]..offsets[c + 1]]`, in assignment order).
+    labels: Vec<u32>,
+    /// `num_clients + 1` prefix offsets into `labels`.
+    offsets: Vec<usize>,
+}
+
+impl ShardPlan {
+    /// Number of planned clients.
+    pub fn num_clients(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Client `cid`'s sample labels, in shard order.
+    pub fn labels_of(&self, cid: usize) -> &[u32] {
+        &self.labels[self.offsets[cid]..self.offsets[cid + 1]]
+    }
+
+    /// Client `cid`'s shard size (its FedAvg weight) — available without
+    /// materializing the shard.
+    pub fn shard_len(&self, cid: usize) -> usize {
+        self.offsets[cid + 1] - self.offsets[cid]
+    }
+
+    /// Total planned samples.
+    pub fn total(&self) -> usize {
+        self.labels.len()
+    }
+}
+
+/// Plan the federated label split up front: draw `total` uniform labels
+/// from `label_rng`, split them with [`partition_indices`] on `part_rng`,
+/// and flatten to per-client label runs.
+///
+/// The two RNGs are dedicated streams (the caller forks them off the run
+/// root), so the plan is a pure function of `(seed, total, num_clients,
+/// dist)` — the contract that makes lazily materialized shards
+/// bit-identical to eagerly materialized ones in any order.
+pub fn plan_shards(
+    total: usize,
+    num_classes: usize,
+    num_clients: usize,
+    dist: DataDistribution,
+    label_rng: &mut Pcg64,
+    part_rng: &mut Pcg64,
+) -> ShardPlan {
+    let labels: Vec<u32> = (0..total).map(|_| label_rng.index(num_classes) as u32).collect();
+    let part = partition_indices(&labels, num_classes, num_clients, dist, part_rng);
+    let mut flat = Vec::with_capacity(total);
+    let mut offsets = Vec::with_capacity(num_clients + 1);
+    offsets.push(0);
+    for a in &part.assignments {
+        flat.extend(a.iter().map(|&i| labels[i]));
+        offsets.push(flat.len());
+    }
+    ShardPlan { labels: flat, offsets }
+}
+
 /// Label-distribution skew measure: mean total-variation distance between
 /// each client's label histogram and the global histogram. 0 = IID-like,
 /// →1 = fully disjoint. Used by tests and the fig7/fig8 harnesses to verify
@@ -204,5 +278,59 @@ mod tests {
         let a = partition_indices(&y, 10, 6, DataDistribution::Dirichlet(0.3), &mut r1);
         let b = partition_indices(&y, 10, 6, DataDistribution::Dirichlet(0.3), &mut r2);
         assert_eq!(a.assignments, b.assignments);
+    }
+
+    #[test]
+    fn shard_plan_covers_every_sample_and_is_deterministic() {
+        for dist in [DataDistribution::Iid, DataDistribution::Dirichlet(0.5)] {
+            let plan = plan_shards(
+                400,
+                10,
+                8,
+                dist,
+                &mut Pcg64::seeded(21),
+                &mut Pcg64::seeded(22),
+            );
+            assert_eq!(plan.num_clients(), 8);
+            assert_eq!(plan.total(), 400);
+            let summed: usize = (0..8).map(|c| plan.shard_len(c)).sum();
+            assert_eq!(summed, 400, "{dist:?}");
+            assert!((0..8).all(|c| plan.shard_len(c) >= 1));
+            let again = plan_shards(
+                400,
+                10,
+                8,
+                dist,
+                &mut Pcg64::seeded(21),
+                &mut Pcg64::seeded(22),
+            );
+            for c in 0..8 {
+                assert_eq!(plan.labels_of(c), again.labels_of(c), "{dist:?} client {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_plan_matches_partition_of_same_labels() {
+        // The plan must be exactly "partition_indices over the drawn
+        // labels, flattened" — the frozen reference relationship.
+        let mut lrng = Pcg64::seeded(31);
+        let mut prng = Pcg64::seeded(32);
+        let plan =
+            plan_shards(200, 10, 5, DataDistribution::Dirichlet(0.3), &mut lrng, &mut prng);
+        // Re-derive with fresh RNGs at the same seeds.
+        let mut lrng2 = Pcg64::seeded(31);
+        let drawn: Vec<u32> = (0..200).map(|_| lrng2.index(10) as u32).collect();
+        let part = partition_indices(
+            &drawn,
+            10,
+            5,
+            DataDistribution::Dirichlet(0.3),
+            &mut Pcg64::seeded(32),
+        );
+        for c in 0..5 {
+            let want: Vec<u32> = part.assignments[c].iter().map(|&i| drawn[i]).collect();
+            assert_eq!(plan.labels_of(c), &want[..]);
+        }
     }
 }

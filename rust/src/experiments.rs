@@ -6,12 +6,13 @@
 //! outputs, and how to reproduce the paper's comm-reduction numbers.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use gradestc::config::{
-    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, ModelKind,
-    SchedKind,
+    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, LaneConfig,
+    ModelKind, SchedKind,
 };
 use gradestc::coordinator::{RoundHookView, Simulation};
 use gradestc::metrics::recorder::fmt_mb;
@@ -121,7 +122,7 @@ pub fn cmd_exp(argv: Vec<String>) -> i32 {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
             eprintln!(
-                "usage: gradestc exp <fig1|fig2|table3|table4|fig7|fig8|fig9|async1|scale1> [opts]"
+                "usage: gradestc exp <fig1|fig2|table3|table4|fig7|fig8|fig9|async1|scale1|scale2> [opts]"
             );
             return 2;
         }
@@ -139,7 +140,11 @@ pub fn cmd_exp(argv: Vec<String>) -> i32 {
         .opt("samples", "0", "override samples per client (0 = preset default)")
         .opt("eval-every", "1", "evaluate every N rounds")
         .opt("workers", "0", "worker threads for the per-client phase (0 = auto)")
-        .opt("clients", "0", "override the client population (0 = experiment default; scale1: 10000)")
+        .opt(
+            "clients",
+            "0",
+            "override the client population (0 = experiment default; scale1: 10000, scale2: 1000000)",
+        )
         .opt(
             "trace",
             "",
@@ -184,6 +189,7 @@ pub fn cmd_exp(argv: Vec<String>) -> i32 {
         "fig9" => exp_fig9(&ctx),
         "async1" => exp_async1(&ctx),
         "scale1" => exp_scale1(&ctx),
+        "scale2" => exp_scale2(&ctx),
         other => {
             eprintln!("unknown experiment '{other}'");
             return 2;
@@ -248,6 +254,37 @@ impl ExpCtx {
         // reproducible regardless of this knob.
         cfg.workers = self.workers;
         cfg
+    }
+}
+
+/// One held-out test set per `(dataset, test_samples, seed)` triple, shared
+/// across an experiment grid's cells. Cells in one grid differ in
+/// compressor, scheduler, or shard distribution — none of which touch the
+/// evaluation set — so the first cell's [`Simulation::test_data`] is handed
+/// to every later build instead of being regenerated (and its samples
+/// cloned) per run.
+struct TestSetCache {
+    entries: Vec<((DatasetKind, usize, u64), Arc<gradestc::data::Dataset>)>,
+}
+
+impl TestSetCache {
+    fn new() -> Self {
+        TestSetCache { entries: Vec::new() }
+    }
+
+    /// [`Simulation::build`], reusing the cached test set on a key hit and
+    /// caching this build's on a miss.
+    fn build(&mut self, cfg: &ExperimentConfig) -> Result<Simulation> {
+        let key = (cfg.dataset, cfg.test_samples, cfg.seed);
+        let shared =
+            self.entries.iter().find(|(k, _)| *k == key).map(|(_, t)| Arc::clone(t));
+        let hit = shared.is_some();
+        let sim = Simulation::build_with_test_data(cfg.clone(), shared)
+            .with_context(|| format!("building simulation '{}'", cfg.name))?;
+        if !hit {
+            self.entries.push((key, Arc::clone(&sim.test_data)));
+        }
+        Ok(sim)
     }
 }
 
@@ -430,6 +467,9 @@ fn exp_table3(ctx: &ExpCtx) -> Result<()> {
         "\n{:<14} {:<7} {:<10} {:>14} {:>12} {:>9}",
         "dataset", "dist", "method", "up@thresh MB", "total MB", "best acc"
     );
+    // Grid cells share one held-out test set per dataset (shards differ
+    // between cells; the evaluation set never does).
+    let mut tests = TestSetCache::new();
     for &dataset in &datasets {
         for (dname, dist) in dists {
             // FedAvg first: its best accuracy anchors the threshold all
@@ -445,7 +485,7 @@ fn exp_table3(ctx: &ExpCtx) -> Result<()> {
                     mname
                 );
                 let sinks = ctx.sinks(&cfg.name);
-                let mut sim = Simulation::build(cfg.clone())?;
+                let mut sim = tests.build(&cfg)?;
                 sinks.arm(&mut sim);
                 let rep = sim.run_with_progress(|_, _| {})?;
                 sim.recorder.write_csv(&out.join(format!("{}.csv", cfg.name)))?;
@@ -537,8 +577,10 @@ fn exp_table4(ctx: &ExpCtx) -> Result<()> {
         rounds,
     );
     cfg0.name = "table4-fedavg".into();
+    // Every ablation cell evaluates on the anchor's test set.
+    let mut tests = TestSetCache::new();
     let sinks0 = ctx.sinks(&cfg0.name);
-    let mut sim0 = Simulation::build(cfg0.clone())?;
+    let mut sim0 = tests.build(&cfg0)?;
     sinks0.arm(&mut sim0);
     let rep0 = sim0.run_with_progress(|_, _| {})?;
     sim0.recorder.write_csv(&out.join("table4-fedavg.csv"))?;
@@ -560,7 +602,7 @@ fn exp_table4(ctx: &ExpCtx) -> Result<()> {
         );
         cfg.name = format!("table4-{name}");
         let sinks = ctx.sinks(&cfg.name);
-        let mut sim = Simulation::build(cfg.clone())?;
+        let mut sim = tests.build(&cfg)?;
         sinks.arm(&mut sim);
         sim.run_with_progress(|_, _| {})?;
         sim.recorder.write_csv(&out.join(format!("{}.csv", cfg.name)))?;
@@ -752,6 +794,7 @@ fn exp_async1(ctx: &ExpCtx) -> Result<()> {
         "method", "sched", "t→target (s)", "rounds", "total vtime", "best acc", "uplink MB"
     );
     let mut times: Vec<(String, String, Option<f64>)> = Vec::new();
+    let mut tests = TestSetCache::new();
     for (mname, comp) in &methods {
         for (sname, skind, dl) in &scheds {
             let mut cfg = mk_base(comp.clone());
@@ -759,7 +802,7 @@ fn exp_async1(ctx: &ExpCtx) -> Result<()> {
             cfg.net.deadline_s = *dl;
             cfg.sched.kind = *skind;
             let sinks = ctx.sinks(&cfg.name);
-            let mut sim = Simulation::build(cfg.clone())?;
+            let mut sim = tests.build(&cfg)?;
             sinks.arm(&mut sim);
             let rep = sim.run_scheduled_with_progress(|_, _| {})?;
             sim.recorder.write_csv(&out.join(format!("{}.csv", cfg.name)))?;
@@ -943,6 +986,167 @@ fn exp_scale1(ctx: &ExpCtx) -> Result<()> {
         out.display()
     );
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// scale2 — 10⁶-client populations on virtual lanes with bounded residency
+// ---------------------------------------------------------------------------
+
+/// The virtual-lane headline: a million-client GradESTC population at ~10²
+/// concurrency, run with lazy lanes and an LRU residency cap of
+/// 2× the concurrent cohort. Sampled-never clients cost ~0 bytes (a lane
+/// materializes from `(seed, cid)` only on first dispatch), evicted lanes
+/// re-materialize bit-identically on their next dispatch, and the hard
+/// `ensure!` below fails the run if resident lanes ever exceed the cap —
+/// the residency bound holds for any `--clients`/`--rounds` override.
+/// `docs/EXPERIMENTS.md` catalogues the knobs and the summary.csv columns.
+fn exp_scale2(ctx: &ExpCtx) -> Result<()> {
+    let clients = if ctx.clients > 0 { ctx.clients } else { 1_000_000 };
+    let concurrent = 100.min(clients);
+    let cap = 2 * concurrent;
+    let rounds = ctx.rounds_or(3);
+    println!(
+        "== scale2: {clients} clients, ~{concurrent} concurrent, lane cap {cap}, \
+         {rounds} rounds (lazy virtual lanes, sync vs async) =="
+    );
+    let out = PathBuf::from(&ctx.out).join("scale2");
+    std::fs::create_dir_all(&out)?;
+
+    let mk_base = || -> ExperimentConfig {
+        let mut cfg = ctx.base(
+            DatasetKind::SynthMnist,
+            DataDistribution::Iid,
+            CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+            rounds,
+        );
+        cfg.num_clients = clients;
+        cfg.participation = concurrent as f64 / clients as f64;
+        // Tiny shards: the population is the point, not the corpus.
+        cfg.samples_per_client = 2;
+        cfg.test_samples = 64;
+        cfg.net.het_spread = 1.0;
+        cfg.lanes = LaneConfig { lazy: true, max_resident: cap, legacy_shards: false };
+        cfg
+    };
+    let naive_per_lane = gradestc::compress::gradestc::basis_bytes_per_lane(
+        &layer_table(mk_base().model),
+        &GradEstcParams { k: 8, ..Default::default() },
+    );
+
+    let mut summary = String::from(
+        "sched,clients,concurrent,cap,rounds,resident,materialized,evictions,\
+         resident_mb,pool_mb,naive_mb,rss_peak_mb,sim_clock_s,total_uplink_mb,\
+         build_s,run_s\n",
+    );
+    println!(
+        "\n{:<9} {:>9} {:>13} {:>9} {:>12} {:>9} {:>12} {:>8} {:>8}",
+        "sched", "resident", "materialized", "evicted", "resident MB", "naive MB",
+        "peak RSS MB", "build s", "run s"
+    );
+    let k_async = 32.min(concurrent.max(1));
+    // The two runs share one held-out test set (only shards and the
+    // scheduler differ between the cells).
+    let mut tests = TestSetCache::new();
+    for (sname, kind) in [
+        ("sync", SchedKind::Sync),
+        ("async", SchedKind::Async { k: k_async, staleness_p: 0.5 }),
+    ] {
+        let mut cfg = mk_base();
+        cfg.name = format!("scale2-{sname}");
+        cfg.sched.kind = kind;
+        let sinks = ctx.sinks(&cfg.name);
+        let t0 = std::time::Instant::now();
+        let mut sim = tests
+            .build(&cfg)
+            .with_context(|| format!("building {clients}-client simulation"))?;
+        sinks.arm(&mut sim);
+        let build_s = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let rep = sim.run_scheduled_with_progress(|_, _| {})?;
+        let run_s = t1.elapsed().as_secs_f64();
+        sim.recorder.write_csv(&out.join(format!("{}.csv", cfg.name)))?;
+        sinks.export(&sim, false)?;
+
+        // Per-lane resident-byte estimate: the shard (x as f32 + y as u32)
+        // plus one lane's worth of basis state. Lane RNG/handles are O(1).
+        let feat = sim.test_data.features;
+        let lane_bytes =
+            cfg.samples_per_client * (feat * 4 + 4) + naive_per_lane;
+        let resident = sim.lanes.resident();
+        let materialized = sim.lanes.materializations();
+        let evictions = sim.lanes.eviction_count();
+        let pool = sim.basis_pool_stats();
+        let naive = lane_bytes as f64 * clients as f64;
+        let rss_peak = peak_rss_mb();
+        let clock =
+            sim.recorder.rounds().last().map(|r| r.sim_clock_s).unwrap_or(0.0);
+        println!(
+            "{:<9} {:>9} {:>13} {:>9} {:>12.2} {:>9.0} {:>12.1} {:>8.1} {:>8.1}",
+            sname,
+            resident,
+            materialized,
+            evictions,
+            resident as f64 * lane_bytes as f64 / 1e6,
+            naive / 1e6,
+            rss_peak,
+            build_s,
+            run_s
+        );
+        summary.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{:.4},{:.4},{:.1},{:.1},{:.4},{},{:.2},{:.2}\n",
+            sname,
+            clients,
+            concurrent,
+            cap,
+            rounds,
+            resident,
+            materialized,
+            evictions,
+            resident as f64 * lane_bytes as f64 / 1e6,
+            pool.bytes() as f64 / 1e6,
+            naive / 1e6,
+            rss_peak,
+            clock,
+            fmt_mb(rep.total_uplink),
+            build_s,
+            run_s
+        ));
+        // The acceptance bar this experiment exists for: resident lane
+        // bytes are bounded by the eviction cap, never the population.
+        anyhow::ensure!(
+            resident <= cap,
+            "{resident} lanes resident after the run — the LRU cap is {cap}: \
+             eviction is not holding the residency bound"
+        );
+        // And materialization follows dispatches, not the population:
+        // sampled-never clients must have cost nothing.
+        anyhow::ensure!(
+            (materialized as usize) < clients || clients <= cap,
+            "materialized {materialized} lanes out of {clients} clients — \
+             lazy lanes materialized the whole population"
+        );
+    }
+    std::fs::write(out.join("summary.csv"), summary)?;
+    println!(
+        "\nper-round CSVs + summary.csv in {} (resident lanes vs cap, peak RSS)",
+        out.display()
+    );
+    Ok(())
+}
+
+/// Peak resident-set size of this process in MB (`VmHWM` from
+/// `/proc/self/status`); 0 on platforms without procfs.
+fn peak_rss_mb() -> f64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|kb| kb.parse::<f64>().ok())
+        })
+        .map(|kb| kb / 1024.0)
+        .unwrap_or(0.0)
 }
 
 /// Ensure `results/` exists relative to the repo root even when invoked

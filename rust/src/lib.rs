@@ -15,11 +15,12 @@
 //!
 //! Python is build-time only; the round loop is pure Rust + XLA.
 //!
-//! The runtime is organized as seven planes — round engine → wire/network
+//! The runtime is organized as eight planes — round engine → wire/network
 //! → compressed-domain aggregation → scheduler → basis pool → compute
-//! backend → telemetry — each with its own invariants; the top-level
-//! `ARCHITECTURE.md` maps them, with per-scheduler data-flow diagrams and
-//! the "where does a byte get charged" walkthrough.
+//! backend → telemetry → virtual lanes — each with its own invariants;
+//! the top-level `ARCHITECTURE.md` maps them, with per-scheduler
+//! data-flow diagrams and the "where does a byte get charged"
+//! walkthrough.
 //!
 //! ## Quick tour
 //!
@@ -128,8 +129,11 @@
 //!   population).
 //! * [`config`] — typed experiment configs, JSON round-tripping, presets.
 //! * [`coordinator`] — the staged round engine,
-//!   [`coordinator::ServerAggregator`] (compressed-domain FedAvg), and
-//!   [`coordinator::Simulation`].
+//!   [`coordinator::ServerAggregator`] (compressed-domain FedAvg),
+//!   [`coordinator::Simulation`], and the virtual-lane plane
+//!   ([`coordinator::LanePool`] — lanes derived from `(seed, cid)` on
+//!   first dispatch, LRU-bounded via `--lane-cap`, lazy ≡ eager
+//!   bit-identically).
 //! * [`data`] — synthetic datasets and non-IID partitioning.
 //! * [`linalg`] — dense matrix kernels (rSVD, MGS, fused
 //!   [`linalg::matmul_acc`]) for the compressors and the aggregation
@@ -138,7 +142,9 @@
 //! * [`metrics`] — round records, CSV sinks, [`metrics::CommLedger`],
 //!   heterogeneous [`metrics::NetworkModel`].
 //! * [`model`] — layer tables and flat parameter stores.
-//! * [`net`] — wire codec, link/dropout simulation, [`net::Transport`].
+//! * [`net`] — wire codec, link/dropout simulation, [`net::Transport`],
+//!   and the per-model-version [`net::BroadcastCache`] every scheduler
+//!   fetches broadcast frames through.
 //! * [`nn`] — the native reference trainer.
 //! * [`runtime`] — PJRT/XLA artifact execution (feature-gated).
 //! * [`sched`] — the scheduler plane: deterministic event queue
@@ -152,7 +158,7 @@
 //! * [`util`] — RNG, CLI args, bench harness, property testing, thread pool.
 //!
 //! See `examples/` for runnable end-to-end drivers, `ARCHITECTURE.md`
-//! (repo root) for the seven-plane system map, and `docs/EXPERIMENTS.md`
+//! (repo root) for the eight-plane system map, and `docs/EXPERIMENTS.md`
 //! for the experiment catalogue.
 
 pub mod compress;

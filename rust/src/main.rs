@@ -14,7 +14,7 @@ mod experiments;
 
 use gradestc::config::{
     BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
-    ModelKind, NetConfig, SchedConfig, SchedKind,
+    LaneConfig, ModelKind, NetConfig, SchedConfig, SchedKind,
 };
 use gradestc::util::args::ArgSpec;
 
@@ -48,7 +48,7 @@ fn usage() -> String {
      USAGE:\n  gradestc train [OPTIONS]      run one experiment\n  \
      gradestc exp <id> [OPTIONS]   regenerate a paper table/figure\n  \
      gradestc info [--artifacts d] inspect the artifact manifest\n\n\
-     exp ids: fig1 fig2 table3 table4 fig7 fig8 fig9 async1\n\
+     exp ids: fig1 fig2 table3 table4 fig7 fig8 fig9 async1 scale1 scale2\n\
      try: gradestc train --help"
         .to_string()
 }
@@ -182,6 +182,16 @@ fn cmd_train(argv: Vec<String>) -> i32 {
             "0",
             "compute heterogeneity: per-dispatch compute scaled by exp(spread*N(0,1)); 0 = constant",
         )
+        .opt(
+            "lanes",
+            "lazy",
+            "client-lane materialization: lazy (on first dispatch) | eager (all at build); bit-identical either way",
+        )
+        .opt(
+            "lane-cap",
+            "0",
+            "max resident (materialized) client lanes; LRU-evicted past the cap and re-materialized on demand; 0 = unbounded; requires --lanes lazy",
+        )
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("out", "results", "results directory")
         .opt(
@@ -195,6 +205,10 @@ fn cmd_train(argv: Vec<String>) -> i32 {
             "write per-round telemetry metrics JSON here (phase times, payload-variant bytes, staleness histogram, pool gauges); empty = off",
         )
         .flag("native", "use the native Rust trainer instead of XLA artifacts")
+        .flag(
+            "legacy-shards",
+            "frozen reference: shards from the pre-virtual-lane sequential RNG walk (implies eager)",
+        )
         .flag("quiet", "suppress per-round lines");
     let args = match spec.parse(argv) {
         Ok(a) => a,
@@ -222,6 +236,16 @@ fn cmd_train(argv: Vec<String>) -> i32 {
     let backend = match BackendKind::parse(args.str("backend")) {
         Ok(b) => b,
         Err(e) => return fail(&e),
+    };
+    let legacy_shards = args.has_flag("legacy-shards");
+    let lanes = LaneConfig {
+        lazy: match args.str("lanes") {
+            "lazy" => !legacy_shards,
+            "eager" => false,
+            other => return fail(&format!("--lanes must be lazy|eager, got '{other}'")),
+        },
+        max_resident: args.usize("lane-cap"),
+        legacy_shards,
     };
     let model = default_model_for(dataset);
     let use_xla = !args.has_flag("native");
@@ -271,6 +295,7 @@ fn cmd_train(argv: Vec<String>) -> i32 {
             compute_spread: args.f64("compute-spread"),
         },
         backend,
+        lanes,
     };
     let quiet = args.has_flag("quiet");
     let opt_path = |key: &str| {

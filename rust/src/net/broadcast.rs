@@ -1,0 +1,79 @@
+//! Model-version-keyed broadcast-encode cache, shared by all schedulers.
+//!
+//! Encoding the dense global model is the broadcast path's only O(model)
+//! CPU cost, and between applies the model does not change: sync rounds
+//! that fold nothing, semi-sync rounds whose whole cohort missed the
+//! deadline, and async dispatch groups between buffer flushes all re-ship
+//! the *same* frame. The async scheduler used to keep a private
+//! `(version, frame)` memo for exactly this reason; [`BroadcastCache`]
+//! lifts it to the net layer so every scheduler encodes each model version
+//! at most once.
+//!
+//! One entry suffices (no map): the model version only moves forward, and
+//! a scheduler never re-broadcasts an old version after applying a new
+//! one. The coordinator owns the instance and bumps its version counter at
+//! each apply — see `Simulation::broadcast_frame`.
+
+use std::sync::Arc;
+
+/// Single-entry `(model version → encoded frame)` memo with hit/miss
+/// counters for telemetry.
+#[derive(Default)]
+pub struct BroadcastCache {
+    entry: Option<(u64, Arc<[u8]>)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl BroadcastCache {
+    /// An empty cache.
+    pub fn new() -> BroadcastCache {
+        BroadcastCache::default()
+    }
+
+    /// The cached frame for `version`, if the last `put` stored exactly
+    /// that version. Counts a hit or a miss.
+    pub fn get(&mut self, version: u64) -> Option<Arc<[u8]>> {
+        match &self.entry {
+            Some((v, frame)) if *v == version => {
+                self.hits += 1;
+                Some(Arc::clone(frame))
+            }
+            _ => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store the frame encoded for `version`, displacing any older entry.
+    pub fn put(&mut self, version: u64, frame: Arc<[u8]>) {
+        self.entry = Some((version, frame));
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caches_one_version_and_counts() {
+        let mut c = BroadcastCache::new();
+        assert!(c.get(0).is_none());
+        let f: Arc<[u8]> = vec![1u8, 2, 3].into();
+        c.put(0, Arc::clone(&f));
+        let got = c.get(0).unwrap();
+        assert!(Arc::ptr_eq(&got, &f));
+        // A new version displaces the old entry.
+        assert!(c.get(1).is_none());
+        c.put(1, vec![4u8].into());
+        assert!(c.get(0).is_none());
+        assert_eq!(c.get(1).unwrap().as_ref(), &[4u8]);
+        assert_eq!(c.counters(), (2, 3));
+    }
+}

@@ -21,6 +21,9 @@
 //! * [`transport`] — the [`Transport`] trait every broadcast/upload crosses
 //!   as real byte buffers, with the in-memory [`Loopback`] implementation
 //!   the simulator uses. A future distributed backend plugs in here.
+//! * [`broadcast`] — the model-version-keyed [`BroadcastCache`]: all three
+//!   schedulers encode each global-model version at most once, instead of
+//!   re-encoding an unchanged dense broadcast every round/dispatch.
 //!
 //! The round engine ([`crate::coordinator::engine`]) encodes on the client
 //! lane, ships frames through the transport, and decodes server-side; the
@@ -29,9 +32,11 @@
 //! dropout, no deadline) the simulation is byte-for-byte and bit-for-bit
 //! identical to the pre-transport accounting.
 
+pub mod broadcast;
 pub mod link;
 pub mod transport;
 pub mod wire;
 
+pub use broadcast::BroadcastCache;
 pub use link::{DropoutModel, LinkProfile, NetConfig};
 pub use transport::{Loopback, Transport};

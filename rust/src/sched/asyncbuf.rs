@@ -186,7 +186,6 @@ impl AsyncBufferedScheduler {
         compute: &ComputeModel,
         queue: &mut EventQueue<Event>,
         dispatches: &mut [u64],
-        broadcast: &mut Option<(u64, Arc<[u8]>)>,
         version: u64,
         cids: &[usize],
         now: f64,
@@ -223,21 +222,11 @@ impl AsyncBufferedScheduler {
             });
         }
 
-        // One encoded broadcast per model version (cache shared across
-        // dispatches until the next apply bumps the version); only the
-        // cache miss pays (and traces) the encode.
-        let frame = match broadcast {
-            Some((v, f)) if *v == version => f.clone(),
-            _ => {
-                let sp = Telemetry::timer(tel.as_deref());
-                let f: Arc<[u8]> = wire::encode_params(&sim.global).into();
-                if let Some(sp) = sp {
-                    sp.end(Phase::BroadcastEncode, version, None);
-                }
-                *broadcast = Some((version, f.clone()));
-                f
-            }
-        };
+        // One encoded broadcast per model version — now the shared
+        // simulation-level cache ([`crate::net::BroadcastCache`]), which
+        // every scheduler consults; only the cache miss pays (and traces)
+        // the encode.
+        let frame: Arc<[u8]> = sim.broadcast_frame(version, version);
         // Stages 1–3 (shared with the semi-sync scheduler): broadcast,
         // fanned client phase, upload, arrival stamping. The initial
         // cohort dispatch is the parallel case; steady-state re-dispatches
@@ -263,12 +252,10 @@ impl Scheduler for AsyncBufferedScheduler {
     ) -> Result<RunReport> {
         let workers = sim.cfg.resolved_workers();
         let compute = ComputeModel::new(&self.conf, sim.cfg.seed);
-        let n = sim.clients.len();
+        let n = sim.lanes.len();
         let tel = sim.telemetry.clone();
         let mut queue: EventQueue<Event> = EventQueue::new();
         let mut dispatches = vec![0u64; n];
-        let mut broadcast: Option<(u64, Arc<[u8]>)> = None;
-        let mut version: u64 = 0;
 
         // Concurrency target: `participation` bounds how many clients are
         // in flight at once. At 1.0 (default) the sampler is disabled and
@@ -285,10 +272,8 @@ impl Scheduler for AsyncBufferedScheduler {
             Some(s) => s.draw(target),
         };
         let t0 = sim.vclock;
-        self.dispatch(
-            sim, &compute, &mut queue, &mut dispatches, &mut broadcast, version, &initial,
-            t0, workers,
-        )?;
+        let v0 = sim.model_version;
+        self.dispatch(sim, &compute, &mut queue, &mut dispatches, v0, &initial, t0, workers)?;
 
         let mut applies = 0usize;
         let mut agg = ServerAggregator::with_backend(&sim.meta, sim.backend);
@@ -344,11 +329,14 @@ impl Scheduler for AsyncBufferedScheduler {
                         if let Some(tl) = tel.as_deref() {
                             tl.count_payloads(&payloads);
                         }
-                        let updates = sim.clients[cid].decompressor.decode(payloads);
+                        // The dispatched lane was pinned in flight;
+                        // decoding its arrival releases it for eviction.
+                        let updates = sim.lanes.lane_mut(cid).decompressor.decode(payloads);
+                        sim.lanes.unpin(cid);
                         if let Some(sp) = sp {
                             sp.end(Phase::ServerDecode, v, Some(cid as u32));
                         }
-                        let tau = version - v;
+                        let tau = sim.model_version - v;
                         let w = up.weight / (1.0 + tau as f64).powf(self.p);
                         if let Some(tl) = tel.as_deref() {
                             tl.observe_staleness(tau);
@@ -398,7 +386,7 @@ impl Scheduler for AsyncBufferedScheduler {
                             if let Some(sp) = sp {
                                 sp.end(Phase::Apply, applies as u64, None);
                             }
-                            version += 1;
+                            sim.model_version += 1;
                             if let Some(tl) = tel.as_deref() {
                                 tl.count("applies", 1);
                                 tl.gauge(
@@ -481,9 +469,9 @@ impl Scheduler for AsyncBufferedScheduler {
                 }
             }
             if !redispatch.is_empty() {
+                let v = sim.model_version;
                 self.dispatch(
-                    sim, &compute, &mut queue, &mut dispatches, &mut broadcast, version,
-                    &redispatch, t, workers,
+                    sim, &compute, &mut queue, &mut dispatches, v, &redispatch, t, workers,
                 )?;
             }
         }

@@ -74,6 +74,7 @@ pub use event::EventQueue;
 pub use semisync::SemiSyncScheduler;
 pub use sync::SyncScheduler;
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::Context;
@@ -353,18 +354,31 @@ pub(crate) fn dispatch_uploads(
         batch_size: sim.cfg.batch_size,
         lr: sim.cfg.lr,
     };
-    let lanes = engine::take_lanes(&mut sim.clients, cids);
-    let outcomes =
-        engine::run_client_phase(sim.trainer.plan(workers), inputs, lanes, tel.as_deref(), round)?;
+    // Materialize first-touch lanes (parallel, deterministic cid order),
+    // then loan the lanes out to the engine. Every dispatched lane is
+    // *pinned* until its upload is decoded: its paired compressor state
+    // advanced at dispatch, so an eviction + re-materialization (which
+    // resets the decompressor) would misdecode the in-flight frame. The
+    // arrival paths unpin.
+    sim.lanes.ensure_resident(cids, workers, tel.as_deref(), round);
+    let mut taken = sim.lanes.take(cids);
+    let outcomes = {
+        let lane_refs: Vec<(usize, &mut crate::coordinator::Client)> =
+            taken.iter_mut().map(|(cid, b)| (*cid, &mut **b)).collect();
+        let plan = sim.trainer.plan(workers);
+        engine::run_client_phase(plan, inputs, lane_refs, tel.as_deref(), round)
+    };
+    sim.lanes.restore(taken);
+    let outcomes = outcomes?;
+    for &cid in cids {
+        sim.lanes.pin(cid);
+    }
 
-    let n = dispatches.len();
-    let mut loss_of = vec![0.0f64; n];
-    let mut d_of = vec![0u64; n];
-    let mut weight_of = vec![0.0f64; n];
+    // Keyed by cid (not a population-sized table): dispatch batches are
+    // O(concurrency) while the population can be 10⁶.
+    let mut outcome_of: HashMap<usize, (f64, u64, f64)> = HashMap::with_capacity(cids.len());
     for outcome in outcomes {
-        loss_of[outcome.cid] = outcome.mean_loss;
-        d_of[outcome.cid] = outcome.stats.sum_d;
-        weight_of[outcome.cid] = outcome.weight;
+        outcome_of.insert(outcome.cid, (outcome.mean_loss, outcome.stats.sum_d, outcome.weight));
         sim.transport.upload(outcome.cid, outcome.frame)?;
     }
     Ok(sim
@@ -388,14 +402,8 @@ pub(crate) fn dispatch_uploads(
                     arrival_s,
                 );
             }
-            DispatchedUpload {
-                cid,
-                frame,
-                weight: weight_of[cid],
-                mean_loss: loss_of[cid],
-                sum_d: d_of[cid],
-                arrival_s,
-            }
+            let (mean_loss, sum_d, weight) = outcome_of[&cid];
+            DispatchedUpload { cid, frame, weight, mean_loss, sum_d, arrival_s }
         })
         .collect())
 }
@@ -412,7 +420,8 @@ pub(crate) fn absorb_trailing_upload(
     sim.ledger.charge_uplink(frame.len() as u64);
     let payloads = wire::decode(frame)
         .with_context(|| format!("decoding client {cid}'s trailing upload"))?;
-    let _ = sim.clients[cid].decompressor.decode(payloads);
+    let _ = sim.lanes.lane_mut(cid).decompressor.decode(payloads);
+    sim.lanes.unpin(cid);
     Ok(())
 }
 

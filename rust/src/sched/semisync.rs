@@ -66,7 +66,7 @@ impl Scheduler for SemiSyncScheduler {
         let workers = sim.cfg.resolved_workers();
         let deadline = sim.cfg.net.deadline();
         let compute = ComputeModel::new(&self.conf, sim.cfg.seed);
-        let n = sim.clients.len();
+        let n = sim.lanes.len();
         let tel = sim.telemetry.clone();
         let mut queue: EventQueue<DispatchedUpload> = EventQueue::new();
         // Virtual time each client's in-flight upload lands; a client is
@@ -102,14 +102,13 @@ impl Scheduler for SemiSyncScheduler {
             let mut sum_d = 0u64;
             let mut arrivals_this_round: Vec<f64> = Vec::new();
             if !participants.is_empty() {
-                // Stages 1–3 (shared with the async scheduler): broadcast,
-                // fanned client phase, upload; each drained frame arrives
-                // at dispatch + compute draw + link round trip.
-                let sp = Telemetry::timer(tel.as_deref());
-                let broadcast: Arc<[u8]> = wire::encode_params(&sim.global).into();
-                if let Some(sp) = sp {
-                    sp.end(Phase::BroadcastEncode, round as u64, None);
-                }
+                // Stages 1–3 (shared with the async scheduler): broadcast
+                // (memoized per model version in the shared cache — rounds
+                // between applies re-ship one frame), fanned client phase,
+                // upload; each drained frame arrives at dispatch + compute
+                // draw + link round trip.
+                let broadcast: Arc<[u8]> =
+                    sim.broadcast_frame(sim.model_version, round as u64);
                 let uploads = super::dispatch_uploads(
                     sim, &broadcast, &participants, t_start, workers, &compute,
                     &mut dispatches, round as u64,
@@ -153,7 +152,10 @@ impl Scheduler for SemiSyncScheduler {
                 if let Some(t) = tel.as_deref() {
                     t.count_payloads(&payloads);
                 }
-                let updates = sim.clients[up.cid].decompressor.decode(payloads);
+                // The dispatched lane was pinned in flight; decoding this
+                // arrival is what releases it for eviction.
+                let updates = sim.lanes.lane_mut(up.cid).decompressor.decode(payloads);
+                sim.lanes.unpin(up.cid);
                 if let Some(sp) = sp {
                     sp.end(Phase::ServerDecode, round as u64, Some(up.cid as u32));
                 }
@@ -202,6 +204,8 @@ impl Scheduler for SemiSyncScheduler {
                 if let Some(sp) = sp {
                     sp.end(Phase::Apply, round as u64, None);
                 }
+                // The model changed: next round's broadcast re-encodes.
+                sim.model_version += 1;
                 if let Some(t) = tel.as_deref() {
                     t.count("folds", folded as u64);
                     t.count("applies", 1);

@@ -22,6 +22,10 @@ const SHARDS: usize = 16;
 /// The fixed span taxonomy, in round-lifecycle order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Phase {
+    /// Materializing a virtual client lane — shard + RNG + compressor
+    /// pair derived from `(seed, cid)` on first touch or after eviction
+    /// (host).
+    LaneMaterialize,
     /// Server encodes the global model for broadcast (host).
     BroadcastEncode,
     /// A client's local-train + compress lane (host), or its simulated
@@ -41,7 +45,8 @@ pub enum Phase {
 
 impl Phase {
     /// All phases, in lifecycle order.
-    pub const ALL: [Phase; 7] = [
+    pub const ALL: [Phase; 8] = [
+        Phase::LaneMaterialize,
         Phase::BroadcastEncode,
         Phase::ClientCompress,
         Phase::UplinkTransit,
@@ -54,6 +59,7 @@ impl Phase {
     /// Stable snake_case name (the `name` field in trace exports).
     pub fn name(self) -> &'static str {
         match self {
+            Phase::LaneMaterialize => "lane_materialize",
             Phase::BroadcastEncode => "broadcast_encode",
             Phase::ClientCompress => "client_compress",
             Phase::UplinkTransit => "uplink_transit",

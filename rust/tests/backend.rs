@@ -13,7 +13,7 @@
 
 use gradestc::config::{
     BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
-    NetConfig, SchedConfig,
+    LaneConfig, NetConfig, SchedConfig,
 };
 use gradestc::coordinator::Simulation;
 use gradestc::linalg::{Backend, BlockedBackend, Mat, ScalarBackend};
@@ -124,6 +124,7 @@ fn base_cfg(name: &str, backend: BackendKind) -> ExperimentConfig {
         net: NetConfig::default(),
         sched: SchedConfig::default(),
         backend,
+        lanes: LaneConfig::default(),
     }
 }
 

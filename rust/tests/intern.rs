@@ -11,7 +11,7 @@ use gradestc::compress::{
 };
 use gradestc::config::{
     BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
-    ModelKind, NetConfig, SchedConfig,
+    LaneConfig, ModelKind, NetConfig, SchedConfig,
 };
 use gradestc::coordinator::Simulation;
 use gradestc::model::meta::{layer_table, ModelMeta};
@@ -170,6 +170,7 @@ fn thousand_client_server_state_is_far_below_naive() {
         net: NetConfig::default(),
         sched: SchedConfig::default(),
         backend: BackendKind::Auto,
+        lanes: LaneConfig::default(),
     };
     let mut sim = Simulation::build(cfg).unwrap();
     sim.run().unwrap();

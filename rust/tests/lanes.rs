@@ -1,0 +1,267 @@
+//! Integration tests for the virtual-lane plane
+//! ([`gradestc::coordinator::LanePool`]): lazy ≡ eager bit-identity across
+//! schedulers, compressors, and worker counts; LRU eviction with
+//! bit-identical re-materialization under a residency cap; and the ~0-cost
+//! guarantee for sampled-never clients (native backend: hermetic, no
+//! artifacts needed).
+
+use gradestc::compress::gradestc::basis_bytes_per_lane;
+use gradestc::config::{
+    BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
+    LaneConfig, NetConfig, SchedConfig, SchedKind,
+};
+use gradestc::coordinator::Simulation;
+use gradestc::metrics::RoundRecord;
+use gradestc::model::meta::layer_table;
+
+fn base_cfg(name: &str, comp: CompressorKind) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.into(),
+        dataset: DatasetKind::SynthMnist,
+        model: gradestc::config::ModelKind::LeNet5,
+        distribution: DataDistribution::Iid,
+        num_clients: 8,
+        participation: 1.0,
+        rounds: 4,
+        local_epochs: 1,
+        batch_size: 32,
+        lr: 0.05,
+        samples_per_client: 64,
+        test_samples: 64,
+        eval_every: 2,
+        threshold_frac: 0.9,
+        compressor: comp,
+        seed: 11,
+        use_xla: false,
+        artifacts_dir: "artifacts".into(),
+        workers: 1,
+        net: NetConfig::default(),
+        sched: SchedConfig::default(),
+        backend: BackendKind::Auto,
+        lanes: LaneConfig::default(),
+    }
+}
+
+fn gradestc8() -> CompressorKind {
+    CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() })
+}
+
+/// Assert two round traces are bit-identical (floats compared by bits so
+/// NaN evals also count as equal).
+fn assert_rounds_bitwise_equal(a: &[RoundRecord], b: &[RoundRecord], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: round count");
+    for (x, y) in a.iter().zip(b) {
+        let r = x.round;
+        assert_eq!(x.round, y.round, "{label}");
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{label}: loss, round {r}");
+        assert_eq!(
+            x.test_accuracy.to_bits(),
+            y.test_accuracy.to_bits(),
+            "{label}: accuracy, round {r}"
+        );
+        assert_eq!(x.uplink_bytes, y.uplink_bytes, "{label}: uplink, round {r}");
+        assert_eq!(x.downlink_bytes, y.downlink_bytes, "{label}: downlink, round {r}");
+        assert_eq!(
+            x.sim_clock_s.to_bits(),
+            y.sim_clock_s.to_bits(),
+            "{label}: sim_clock, round {r}"
+        );
+        assert_eq!(x.sum_d, y.sum_d, "{label}: sum_d, round {r}");
+        assert_eq!(x.survivors, y.survivors, "{label}: survivors, round {r}");
+    }
+}
+
+/// Build + run under the scheduler plane; returns the finished simulation.
+fn run_sim(mut cfg: ExperimentConfig, workers: usize) -> Simulation {
+    cfg.workers = workers;
+    let mut sim = Simulation::build(cfg).unwrap();
+    sim.run_scheduled().unwrap();
+    sim
+}
+
+/// Tentpole acceptance: lazy materialization is unobservable. For the
+/// paper's method and a stateless baseline, under dropout, heterogeneous
+/// links, and (for semi-sync) a straggler deadline, across all three
+/// control flows and at sequential and parallel worker counts, a lazy run
+/// and an eager run produce bit-identical round records, ledger totals,
+/// and paired lane fingerprints on every lane the lazy run materialized.
+#[test]
+fn lazy_and_eager_runs_are_bit_identical() {
+    let scheds: [(&str, SchedKind, f64); 3] = [
+        ("sync", SchedKind::Sync, 0.0),
+        ("semisync", SchedKind::SemiSync, 2.0),
+        ("async", SchedKind::Async { k: 3, staleness_p: 0.5 }, 0.0),
+    ];
+    for (label, comp) in
+        [("gradestc", gradestc8()), ("topk", CompressorKind::TopK { frac: 0.1 })]
+    {
+        for (sname, kind, deadline) in &scheds {
+            let mut cfg = base_cfg(&format!("it-lanes-{label}-{sname}"), comp.clone());
+            cfg.net.dropout = 0.2;
+            cfg.net.het_spread = 0.5;
+            cfg.net.deadline_s = *deadline;
+            cfg.sched.kind = *kind;
+            for workers in [1usize, 8] {
+                let mut lazy_cfg = cfg.clone();
+                lazy_cfg.lanes.lazy = true;
+                let mut eager_cfg = cfg.clone();
+                eager_cfg.lanes.lazy = false;
+                let lazy = run_sim(lazy_cfg, workers);
+                let eager = run_sim(eager_cfg, workers);
+                let tag = format!("{label} {sname} w{workers}");
+                assert_rounds_bitwise_equal(
+                    lazy.recorder.rounds(),
+                    eager.recorder.rounds(),
+                    &tag,
+                );
+                assert_eq!(
+                    lazy.total_uplink(),
+                    eager.total_uplink(),
+                    "{tag}: ledger totals diverged"
+                );
+                // Fingerprints must agree wherever the lazy run holds a
+                // lane; never-materialized slots report (0, 0), which a
+                // stateless (TopK) lane also legitimately reports.
+                let lf = lazy.lane_fingerprints();
+                let ef = eager.lane_fingerprints();
+                let mut checked = 0usize;
+                for (cid, (l, e)) in lf.iter().zip(&ef).enumerate() {
+                    if *l != (0, 0) {
+                        assert_eq!(l, e, "{tag}: lane {cid} fingerprints diverged");
+                        checked += 1;
+                    }
+                }
+                if label == "gradestc" {
+                    assert!(checked > 0, "{tag}: no stateful lane ever materialized");
+                }
+            }
+        }
+    }
+}
+
+/// A residency cap below the steady working set forces evictions, and an
+/// evicted lane re-materializes bit-identically: paired client/server
+/// fingerprints stay in lockstep through evict → re-dispatch cycles, and
+/// the whole capped run is bit-identical at workers = 1 vs 8.
+#[test]
+fn capped_pool_evicts_and_rematerializes_in_lockstep() {
+    let mut cfg = base_cfg("it-lanes-evict", gradestc8());
+    cfg.num_clients = 16;
+    cfg.participation = 0.5; // 8-lane cohorts
+    cfg.rounds = 6;
+    cfg.net.het_spread = 1.0;
+    cfg.lanes = LaneConfig { lazy: true, max_resident: 4, legacy_shards: false };
+
+    let seq = run_sim(cfg.clone(), 1);
+    assert!(
+        seq.lanes.eviction_count() > 0,
+        "cap 4 against 8-lane cohorts must evict"
+    );
+    assert!(
+        seq.lanes.materializations() > seq.lanes.resident() as u64,
+        "evicted lanes must have re-materialized on later dispatches"
+    );
+    for (cid, (client_fp, server_fp)) in seq.lane_fingerprints().iter().enumerate() {
+        assert_eq!(
+            client_fp, server_fp,
+            "client {cid}: lane state diverged across evict/re-materialize"
+        );
+    }
+
+    let par = run_sim(cfg, 8);
+    assert_rounds_bitwise_equal(
+        seq.recorder.rounds(),
+        par.recorder.rounds(),
+        "capped lazy w1 vs w8",
+    );
+    assert_eq!(
+        seq.lane_fingerprints(),
+        par.lane_fingerprints(),
+        "capped fingerprints diverged across worker counts"
+    );
+    assert_eq!(seq.total_uplink(), par.total_uplink());
+    assert_eq!(seq.lanes.eviction_count(), par.lanes.eviction_count());
+    assert_eq!(seq.lanes.materializations(), par.lanes.materializations());
+}
+
+/// With a cap that clears the per-round cohort, the resident count ends at
+/// or below the cap while the population is far larger — the `exp scale2`
+/// bound in miniature.
+#[test]
+fn residency_cap_bounds_resident_lanes() {
+    let mut cfg = base_cfg("it-lanes-cap", gradestc8());
+    cfg.num_clients = 32;
+    cfg.participation = 0.25; // 8 concurrent
+    cfg.samples_per_client = 16;
+    cfg.rounds = 5;
+    cfg.lanes = LaneConfig { lazy: true, max_resident: 12, legacy_shards: false };
+    let sim = run_sim(cfg, 1);
+    assert!(
+        sim.lanes.resident() <= 12,
+        "{} lanes resident — the LRU cap is 12",
+        sim.lanes.resident()
+    );
+    assert!(sim.lanes.eviction_count() > 0, "5 sampled rounds must overflow cap 12");
+    assert!(
+        sim.lanes.materializations() > 12,
+        "materializations follow dispatches, not the cap"
+    );
+}
+
+/// Sampled-never clients cost ~0: a lazy run over a population much larger
+/// than the dispatched set leaves most slots empty, and server basis
+/// memory follows the materialized lanes, strictly below the naive
+/// `clients × basis` baseline.
+#[test]
+fn sampled_never_lanes_cost_nothing() {
+    let mut cfg = base_cfg("it-lanes-never", gradestc8());
+    cfg.num_clients = 64;
+    cfg.participation = 0.125; // 8 concurrent
+    cfg.samples_per_client = 16;
+    cfg.rounds = 3;
+    let model = cfg.model;
+    let sim = run_sim(cfg, 1);
+    let n = sim.lanes.len();
+    assert_eq!(n, 64);
+    // 3 rounds of 8 sampled clients touch at most 24 of the 64.
+    assert!(
+        (sim.lanes.materializations() as usize) < n,
+        "lazy lanes materialized the whole population"
+    );
+    assert!(sim.lanes.resident() < n);
+    let fps = sim.lane_fingerprints();
+    assert!(
+        fps.iter().any(|&f| f == (0, 0)),
+        "some lane must never have materialized"
+    );
+    let per_lane = basis_bytes_per_lane(
+        &layer_table(model),
+        &GradEstcParams { k: 8, ..Default::default() },
+    );
+    let pool = sim.basis_pool_stats();
+    assert!(pool.entries > 0);
+    assert!(
+        pool.bytes() < n * per_lane,
+        "pool {} bytes not below the naive {n}-lane baseline {}",
+        pool.bytes(),
+        n * per_lane
+    );
+}
+
+/// The frozen reference path: `legacy_shards` still builds the population
+/// eagerly from the pre-virtual-lane sequential RNG walk, with every lane
+/// resident for the run's lifetime and no eviction machinery engaged.
+#[test]
+fn legacy_shards_reference_path_runs_fully_materialized() {
+    let mut cfg = base_cfg("it-lanes-legacy", gradestc8());
+    cfg.rounds = 2;
+    cfg.lanes = LaneConfig { lazy: false, max_resident: 0, legacy_shards: true };
+    let sim = run_sim(cfg, 1);
+    assert_eq!(sim.lanes.resident(), 8);
+    assert_eq!(sim.lanes.materializations(), 8);
+    assert_eq!(sim.lanes.eviction_count(), 0);
+    for (cid, (client_fp, server_fp)) in sim.lane_fingerprints().iter().enumerate() {
+        assert_eq!(client_fp, server_fp, "client {cid}: lane state diverged");
+        assert_ne!(*client_fp, 0, "client {cid}: legacy lanes are all materialized");
+    }
+}

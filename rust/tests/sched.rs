@@ -9,7 +9,7 @@ use std::sync::Arc;
 use gradestc::compress::gradestc::basis_bytes_per_lane;
 use gradestc::config::{
     BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
-    NetConfig, SchedConfig, SchedKind,
+    LaneConfig, NetConfig, SchedConfig, SchedKind,
 };
 use gradestc::coordinator::Simulation;
 use gradestc::metrics::RoundRecord;
@@ -40,6 +40,7 @@ fn base_cfg(name: &str, comp: CompressorKind) -> ExperimentConfig {
         net: NetConfig::default(),
         sched: SchedConfig::default(),
         backend: BackendKind::Auto,
+        lanes: LaneConfig::default(),
     }
 }
 

@@ -3,7 +3,7 @@
 
 use gradestc::config::{
     BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
-    NetConfig, SchedConfig,
+    LaneConfig, NetConfig, SchedConfig,
 };
 use gradestc::coordinator::{RoundHookView, Simulation};
 use gradestc::metrics::RoundRecord;
@@ -32,6 +32,7 @@ fn base_cfg(name: &str, comp: CompressorKind) -> ExperimentConfig {
         net: NetConfig::default(),
         sched: SchedConfig::default(),
         backend: BackendKind::Auto,
+        lanes: LaneConfig::default(),
     }
 }
 

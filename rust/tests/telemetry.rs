@@ -12,7 +12,7 @@ use std::rc::Rc;
 
 use gradestc::config::{
     BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
-    NetConfig, SchedConfig, SchedKind,
+    LaneConfig, NetConfig, SchedConfig, SchedKind,
 };
 use gradestc::coordinator::{RoundHookView, Simulation};
 use gradestc::metrics::{RoundRecord, SimilarityProbe};
@@ -43,6 +43,7 @@ fn base_cfg(name: &str, comp: CompressorKind) -> ExperimentConfig {
         net: NetConfig::default(),
         sched: SchedConfig::default(),
         backend: BackendKind::Auto,
+        lanes: LaneConfig::default(),
     }
 }
 

@@ -18,8 +18,13 @@ Checks the files written by ``gradestc train --trace`` /
   Partial overlap means the exporter's sort or the recorded intervals
   are broken.
 
+``--expect <phase>`` (repeatable) additionally asserts that at least one
+span with that name is present in each file — CI uses it to pin phases a
+change introduced (e.g. ``--expect lane_materialize`` for the virtual-lane
+plane's first-touch spans).
+
 Usage:
-    check_trace.py <trace.json> [<trace.json> ...]
+    check_trace.py [--expect <phase>]... <trace.json> [<trace.json> ...]
 
 Exit codes: 0 = all files valid, 1 = validation failure, 2 = usage/IO.
 """
@@ -93,7 +98,7 @@ def check_events(path, events):
     return ok
 
 
-def check_file(path):
+def check_file(path, expect=()):
     try:
         with open(path, encoding="utf-8") as fh:
             doc = json.load(fh)
@@ -110,18 +115,37 @@ def check_file(path):
         return fail(path, "otherData must carry backend and sched")
     if not check_events(path, events):
         return False
+    names = {e.get("name") for e in events if isinstance(e, dict) and e.get("ph") == "X"}
+    ok = True
+    for phase in expect:
+        if phase not in names:
+            ok = fail(path, f"expected at least one {phase!r} span, found none")
+    if not ok:
+        return False
     n_spans = sum(1 for e in events if isinstance(e, dict) and e.get("ph") == "X")
     print(f"check_trace: {path}: ok ({n_spans} spans, sched={other['sched']}, backend={other['backend']})")
     return True
 
 
 def main(argv):
-    if not argv:
+    expect = []
+    paths = []
+    it = iter(argv)
+    for arg in it:
+        if arg == "--expect":
+            phase = next(it, None)
+            if phase is None:
+                print("check_trace: --expect needs a phase name", file=sys.stderr)
+                return 2
+            expect.append(phase)
+        else:
+            paths.append(arg)
+    if not paths:
         print(__doc__, file=sys.stderr)
         return 2
     ok = True
-    for path in argv:
-        ok = check_file(path) and ok
+    for path in paths:
+        ok = check_file(path, expect) and ok
     return 0 if ok else 1
 
 
