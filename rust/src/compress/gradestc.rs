@@ -491,6 +491,17 @@ impl GradEstcServer {
             .map(|s| 4 * s.geom.l * s.geom.k)
             .sum()
     }
+
+    /// Snapshot of the server-side bases as `(tensor index, basis)` pairs,
+    /// one per compressed layer, `None` until that layer first initializes.
+    /// The `Arc` shares the pool allocation (no copy); the diagnostics
+    /// plane diffs consecutive snapshots for subspace drift.
+    pub fn layer_bases(&self) -> Vec<(usize, Option<std::sync::Arc<Mat>>)> {
+        self.layers
+            .iter()
+            .map(|s| (s.geom.tensor, s.basis.as_ref().map(BasisHandle::share)))
+            .collect()
+    }
 }
 
 /// Bytes one lane's fully-initialized GradESTC basis set occupies

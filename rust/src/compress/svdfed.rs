@@ -181,6 +181,17 @@ impl SvdFedDecompressor {
             pool,
         }
     }
+
+    /// Snapshot of the server-side bases as `(tensor index, basis)` pairs,
+    /// one per compressed layer, `None` before the warm-up fit lands. The
+    /// `Arc` shares the pool allocation (no copy); the diagnostics plane
+    /// diffs consecutive snapshots for subspace drift.
+    pub fn layer_bases(&self) -> Vec<(usize, Option<std::sync::Arc<Mat>>)> {
+        self.layers
+            .iter()
+            .map(|s| (s.geom.tensor, s.basis.as_ref().map(BasisHandle::share)))
+            .collect()
+    }
 }
 
 impl Decompressor for SvdFedDecompressor {

@@ -1,0 +1,91 @@
+//! Live communication-efficiency estimator: uplink bytes per unit of
+//! training-loss decrease.
+//!
+//! The paper's headline claim is a comms-vs-quality trade: GradESTC
+//! should reach a given loss for fewer uplink bytes than SVDFed or dense
+//! FedAvg. This estimator turns that into a per-round running number —
+//! cumulative uplink bytes divided by how far the training loss has
+//! fallen from its first observed value. Lower is better; `None` until
+//! the loss has actually decreased (a ratio against a zero or negative
+//! drop would be noise, not signal).
+//!
+//! Memory: O(1) — a byte counter and the first finite loss.
+
+/// One round's communication-efficiency reading.
+#[derive(Clone, Copy, Debug)]
+pub struct CommsSample {
+    /// Running uplink total after this round (monotone by construction).
+    pub cum_uplink_bytes: u64,
+    /// First-round train loss minus this round's; `None` until a finite
+    /// baseline loss exists.
+    pub loss_drop: Option<f64>,
+    /// `cum_uplink_bytes / loss_drop`, defined only once the loss has
+    /// decreased (`loss_drop > 0`).
+    pub bytes_per_loss: Option<f64>,
+}
+
+/// Streaming bytes-per-loss tracker.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommsEfficiency {
+    cum_bytes: u64,
+    first_loss: Option<f64>,
+}
+
+impl CommsEfficiency {
+    /// Fresh tracker.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one finished round's uplink bytes and train loss.
+    pub fn observe_round(&mut self, uplink_bytes: u64, train_loss: f64) -> CommsSample {
+        self.cum_bytes += uplink_bytes;
+        if self.first_loss.is_none() && train_loss.is_finite() {
+            self.first_loss = Some(train_loss);
+        }
+        let loss_drop = self.first_loss.map(|f| f - train_loss);
+        let bytes_per_loss = loss_drop
+            .filter(|&d| d > 0.0)
+            .map(|d| self.cum_bytes as f64 / d);
+        CommsSample { cum_uplink_bytes: self.cum_bytes, loss_drop, bytes_per_loss }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cumulative_bytes_are_monotone() {
+        let mut c = CommsEfficiency::new();
+        let mut last = 0;
+        for (bytes, loss) in [(100, 2.0), (50, 1.5), (0, 1.2), (75, 1.1)] {
+            let s = c.observe_round(bytes, loss);
+            assert!(s.cum_uplink_bytes >= last);
+            last = s.cum_uplink_bytes;
+        }
+        assert_eq!(last, 225);
+    }
+
+    #[test]
+    fn ratio_waits_for_improvement() {
+        let mut c = CommsEfficiency::new();
+        let s = c.observe_round(100, 2.0);
+        assert_eq!(s.loss_drop, Some(0.0), "baseline round: zero drop");
+        assert!(s.bytes_per_loss.is_none(), "no decrease yet");
+        let s = c.observe_round(100, 2.5);
+        assert!(s.bytes_per_loss.is_none(), "loss went up: still undefined");
+        let s = c.observe_round(100, 1.0);
+        assert_eq!(s.loss_drop, Some(1.0));
+        assert!((s.bytes_per_loss.unwrap() - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_loss_never_becomes_the_baseline() {
+        let mut c = CommsEfficiency::new();
+        let s = c.observe_round(10, f64::NAN);
+        assert!(s.loss_drop.is_none());
+        let s = c.observe_round(10, 3.0);
+        assert_eq!(s.loss_drop, Some(0.0), "first finite loss is the baseline");
+    }
+}

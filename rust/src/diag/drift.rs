@@ -1,0 +1,159 @@
+//! Subspace-drift estimator: how fast does the compression basis move?
+//!
+//! GradESTC replaces a few basis columns per round (`d_r ≪ k`); SVDFed
+//! keeps a frozen basis between wholesale refits. Both behaviours show up
+//! directly in the principal angles between a layer's consecutive
+//! server-side bases: near-zero angles mean the subspace is temporally
+//! stable (the reuse premise holds), angles near π/2 mean the mined
+//! directions are orthogonal to everything the basis knew (the premise is
+//! breaking — e.g. under staleness or heterogeneity).
+//!
+//! The estimator keeps one pool-shared `Arc<Mat>` per tracked layer (the
+//! previous snapshot) and compares on change: an unchanged `Arc` (the
+//! `d_r = 0` steady state, or SVDFed between refits) is recognized by
+//! pointer identity and reported as exact-zero drift without touching the
+//! linalg plane at all.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::linalg::{chordal_distance, principal_angles_in, Backend, Mat};
+
+/// One layer's drift measurement between consecutive basis snapshots.
+#[derive(Clone, Debug)]
+pub struct DriftSample {
+    /// Tensor index the basis belongs to.
+    pub tensor: usize,
+    /// Mean principal angle, radians, in `[0, π/2]`.
+    pub mean_angle: f64,
+    /// Largest principal angle, radians.
+    pub max_angle: f64,
+    /// Chordal distance `sqrt(Σ sin²θᵢ)`.
+    pub chordal: f64,
+    /// Columns whose bits changed — the observed `d_r` (includes re-ortho
+    /// repairs, which the wire-level `sum_d` does not count).
+    pub churn: u64,
+}
+
+/// Streaming basis-drift tracker for one reference lane.
+pub struct SubspaceDrift {
+    backend: &'static dyn Backend,
+    prev: BTreeMap<usize, Arc<Mat>>,
+}
+
+impl SubspaceDrift {
+    /// Tracker running its small SVDs through `backend`.
+    pub fn new(backend: &'static dyn Backend) -> Self {
+        SubspaceDrift { backend, prev: BTreeMap::new() }
+    }
+
+    /// Observe the basis that arrived for `tensor`. Returns `None` on the
+    /// first sighting (nothing to diff against) or on a geometry change;
+    /// afterwards, one [`DriftSample`] per call.
+    pub fn observe(&mut self, tensor: usize, basis: &Arc<Mat>) -> Option<DriftSample> {
+        let prev = self.prev.insert(tensor, Arc::clone(basis))?;
+        if Arc::ptr_eq(&prev, basis) {
+            // Steady state: the lane kept its pool entry, so the subspace
+            // is bit-identical — exact zero, no linalg.
+            return Some(DriftSample {
+                tensor,
+                mean_angle: 0.0,
+                max_angle: 0.0,
+                chordal: 0.0,
+                churn: 0,
+            });
+        }
+        if prev.rows() != basis.rows() || prev.cols() != basis.cols() {
+            return None;
+        }
+        let k = basis.cols();
+        let mut churn = 0u64;
+        for j in 0..k {
+            let same = prev
+                .col(j)
+                .iter()
+                .zip(basis.col(j).iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            if !same {
+                churn += 1;
+            }
+        }
+        let angles = principal_angles_in(self.backend, &prev, basis);
+        if angles.is_empty() {
+            return None;
+        }
+        let mean = angles.iter().sum::<f64>() / angles.len() as f64;
+        let max = angles.iter().fold(0.0f64, |m, &a| m.max(a));
+        Some(DriftSample {
+            tensor,
+            mean_angle: mean,
+            max_angle: max,
+            chordal: chordal_distance(&angles),
+            churn,
+        })
+    }
+
+    /// Number of layers currently tracked.
+    pub fn tracked(&self) -> usize {
+        self.prev.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{default_backend, mgs_orthonormalize};
+    use crate::util::rng::Pcg64;
+
+    fn ortho(seed: u64, l: usize, k: usize) -> Arc<Mat> {
+        let mut rng = Pcg64::seeded(seed);
+        Arc::new(mgs_orthonormalize(&Mat::randn(l, k, &mut rng)))
+    }
+
+    #[test]
+    fn first_sighting_yields_nothing_then_tracks() {
+        let mut d = SubspaceDrift::new(default_backend());
+        let b = ortho(1, 20, 4);
+        assert!(d.observe(0, &b).is_none());
+        assert_eq!(d.tracked(), 1);
+        let s = d.observe(0, &b).expect("second sighting measures");
+        assert_eq!(s.churn, 0);
+        assert_eq!(s.mean_angle, 0.0);
+        assert_eq!(s.chordal, 0.0);
+    }
+
+    #[test]
+    fn identical_content_distinct_arcs_show_zero_angles() {
+        let mut d = SubspaceDrift::new(default_backend());
+        let b = ortho(2, 24, 4);
+        let b2 = Arc::new((*b).clone());
+        d.observe(3, &b);
+        let s = d.observe(3, &b2).unwrap();
+        assert_eq!(s.churn, 0, "identical bits, no churn");
+        assert!(s.mean_angle < 1e-3, "angles ~0, got {}", s.mean_angle);
+    }
+
+    #[test]
+    fn column_swap_is_counted_and_measured() {
+        let mut d = SubspaceDrift::new(default_backend());
+        let b = ortho(3, 30, 4);
+        d.observe(0, &b);
+        // Replace one column with a fresh orthogonal-ish direction.
+        let mut m = (*b).clone();
+        let repl = ortho(4, 30, 4);
+        for i in 0..30 {
+            m[(i, 2)] = repl[(i, 2)];
+        }
+        let s = d.observe(0, &Arc::new(m)).unwrap();
+        assert_eq!(s.churn, 1, "exactly one column changed");
+        assert!(s.max_angle > 0.1, "a replaced column must move an angle");
+        assert!(s.chordal > 0.0);
+    }
+
+    #[test]
+    fn geometry_change_resets_cleanly() {
+        let mut d = SubspaceDrift::new(default_backend());
+        d.observe(0, &ortho(5, 20, 4));
+        assert!(d.observe(0, &ortho(6, 20, 6)).is_none(), "k changed: no sample");
+    }
+}

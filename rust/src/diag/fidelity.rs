@@ -1,0 +1,228 @@
+//! Compression-fidelity estimator for sampled arrivals.
+//!
+//! What "reconstruction NRMSE `‖G − Ĝ‖/‖G‖`" can honestly mean on the
+//! server: the decoded update `Ĝ` is all the server ever has — the
+//! pre-compression gradient `G` never crosses the wire for a lossy
+//! compressor. Two cases are exactly measurable:
+//!
+//! * **Lossless dense decodes** (the Raw/FedAvg baseline): `Ĝ = G` by
+//!   construction, so NRMSE is exactly 0 — reported as such (the
+//!   `scripts/check_diag.py` gate pins this).
+//! * **Low-rank decodes** (GradESTC/SVDFed): the update is measured
+//!   against the *previous* round's basis for the same lane —
+//!   `‖Ĝ − M_prev M_prevᵀ Ĝ‖ / ‖Ĝ‖`. That is the reconstruction error
+//!   the scheme would have paid had it reused the stale basis
+//!   wholesale, i.e. the quantity GradESTC's temporal-correlation bet
+//!   is about: near 0 while the premise holds, rising toward 1 as the
+//!   gradient subspace outruns the basis. The energy-coverage ratio is
+//!   its complement, `‖M_prevᵀĜ‖²/‖Ĝ‖² = 1 − NRMSE²`.
+//!
+//! Sparse and quantized decodes carry no basis, so their NRMSE cell is
+//! absent (empty in `diag.csv`), never faked.
+//!
+//! Alongside: the **stable rank** `Σσᵢ²/σ₁²` of the update's coefficient
+//! matrix (the basis is orthonormal, so these are the singular values of
+//! `Ĝ` itself — a direct low-rankness reading), and **bytes per unit
+//! energy** (stored-float bytes ÷ `‖Ĝ‖²` — what a unit of gradient
+//! energy costs on the wire under each compressor).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::compress::LayerUpdate;
+use crate::linalg::{thin_svd_in, Backend, Mat};
+
+/// One layer's fidelity measurement for one sampled arrival.
+#[derive(Clone, Debug)]
+pub struct FidelitySample {
+    /// Tensor index.
+    pub tensor: usize,
+    /// Reconstruction NRMSE (see module docs); `None` when not defined
+    /// for the payload variant or no previous basis exists yet.
+    pub nrmse: Option<f64>,
+    /// `1 − NRMSE²` where NRMSE is defined.
+    pub energy_coverage: Option<f64>,
+    /// Stable rank of the coefficient matrix (low-rank updates only).
+    pub stable_rank: Option<f64>,
+    /// Stored-float bytes of this layer's update.
+    pub bytes: u64,
+    /// Squared Frobenius energy of the decoded update.
+    pub energy: f64,
+}
+
+/// Streaming fidelity tracker over the sampled clients.
+pub struct Fidelity {
+    backend: &'static dyn Backend,
+    /// `(cid, tensor) ->` previous basis snapshot for that lane/layer.
+    prev_basis: BTreeMap<(usize, usize), Arc<Mat>>,
+}
+
+impl Fidelity {
+    /// Tracker running its small products through `backend`.
+    pub fn new(backend: &'static dyn Backend) -> Self {
+        Fidelity { backend, prev_basis: BTreeMap::new() }
+    }
+
+    /// Measure one layer of one sampled arrival.
+    pub fn observe_layer(
+        &mut self,
+        cid: usize,
+        tensor: usize,
+        update: &LayerUpdate,
+    ) -> FidelitySample {
+        let bytes = 4 * update.stored_floats() as u64;
+        match update {
+            LayerUpdate::Dense(v) => FidelitySample {
+                tensor,
+                // Lossless decode: Ĝ = G exactly.
+                nrmse: Some(0.0),
+                energy_coverage: Some(1.0),
+                stable_rank: None,
+                bytes,
+                energy: sumsq(v),
+            },
+            LayerUpdate::Sparse { values, .. } => FidelitySample {
+                tensor,
+                nrmse: None,
+                energy_coverage: None,
+                stable_rank: None,
+                bytes,
+                energy: sumsq(values),
+            },
+            LayerUpdate::QuantDense { .. } => FidelitySample {
+                tensor,
+                nrmse: None,
+                energy_coverage: None,
+                stable_rank: None,
+                bytes,
+                energy: sumsq(&update.to_dense()),
+            },
+            LayerUpdate::LowRank { coeffs, basis, .. } => {
+                // M orthonormal ⇒ ‖Ĝ‖² = ‖A‖² and σ(Ĝ) = σ(A).
+                let energy = sumsq(coeffs.as_slice());
+                let stable_rank = {
+                    let s = thin_svd_in(self.backend, coeffs, 0).s;
+                    let top = s.first().map(|&x| x as f64).unwrap_or(0.0);
+                    (top * top > 0.0).then(|| {
+                        s.iter().map(|&x| x as f64 * x as f64).sum::<f64>() / (top * top)
+                    })
+                };
+                let prev = self.prev_basis.insert((cid, tensor), Arc::clone(basis));
+                let (nrmse, energy_coverage) = match prev {
+                    None => (None, None),
+                    Some(ref mp) if Arc::ptr_eq(mp, basis) => {
+                        // Unchanged basis: span identical, projection exact.
+                        (Some(0.0), Some(1.0))
+                    }
+                    Some(ref mp)
+                        if mp.rows() == basis.rows() && energy > 0.0 =>
+                    {
+                        let c = self.backend.matmul_at_b(mp, basis);
+                        let p = self.backend.matmul(&c, coeffs);
+                        let captured = sumsq(p.as_slice());
+                        let ratio = (captured / energy).clamp(0.0, 1.0);
+                        (Some((1.0 - ratio).sqrt()), Some(ratio))
+                    }
+                    Some(_) => (None, None),
+                };
+                FidelitySample { tensor, nrmse, energy_coverage, stable_rank, bytes, energy }
+            }
+        }
+    }
+
+    /// Layers currently holding a previous-basis snapshot.
+    pub fn tracked(&self) -> usize {
+        self.prev_basis.len()
+    }
+}
+
+fn sumsq(v: &[f32]) -> f64 {
+    v.iter().map(|&x| x as f64 * x as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::SegmentGeom;
+    use crate::linalg::{default_backend, mgs_orthonormalize};
+    use crate::util::rng::Pcg64;
+
+    fn lowrank(seed: u64, l: usize, k: usize, m: usize) -> LayerUpdate {
+        let mut rng = Pcg64::seeded(seed);
+        LayerUpdate::LowRank {
+            coeffs: Mat::randn(k, m, &mut rng),
+            basis: Arc::new(mgs_orthonormalize(&Mat::randn(l, k, &mut rng))),
+            geom: SegmentGeom { l, m, conv: None },
+        }
+    }
+
+    #[test]
+    fn dense_is_exactly_lossless() {
+        let mut f = Fidelity::new(default_backend());
+        let s = f.observe_layer(0, 0, &LayerUpdate::Dense(vec![1.0, -2.0, 2.0]));
+        assert_eq!(s.nrmse, Some(0.0));
+        assert_eq!(s.energy_coverage, Some(1.0));
+        assert!((s.energy - 9.0).abs() < 1e-12);
+        assert_eq!(s.bytes, 12);
+    }
+
+    #[test]
+    fn lowrank_unchanged_basis_has_zero_nrmse() {
+        let mut f = Fidelity::new(default_backend());
+        let u = lowrank(1, 20, 4, 6);
+        assert!(f.observe_layer(2, 0, &u).nrmse.is_none(), "no previous basis yet");
+        let s = f.observe_layer(2, 0, &u);
+        assert_eq!(s.nrmse, Some(0.0), "same Arc: exact zero");
+        assert_eq!(s.energy_coverage, Some(1.0));
+        let sr = s.stable_rank.unwrap();
+        assert!(sr >= 1.0 - 1e-9 && sr <= 4.0 + 1e-9, "stable rank in [1,k]: {sr}");
+    }
+
+    #[test]
+    fn lowrank_rotated_basis_lands_in_unit_interval() {
+        let mut f = Fidelity::new(default_backend());
+        f.observe_layer(0, 0, &lowrank(2, 24, 4, 5));
+        let s = f.observe_layer(0, 0, &lowrank(3, 24, 4, 5));
+        let n = s.nrmse.unwrap();
+        assert!((0.0..=1.0).contains(&n), "nrmse {n}");
+        let cov = s.energy_coverage.unwrap();
+        assert!((cov - (1.0 - n * n)).abs() < 1e-9, "coverage complements nrmse");
+    }
+
+    #[test]
+    fn orthogonal_prev_basis_gives_nrmse_one() {
+        // Basis in span{e0..e3}, previous in span{e4..e7}: zero coverage.
+        let mk = |off: usize| {
+            let mut m = Mat::zeros(16, 4);
+            for j in 0..4 {
+                m[(off + j, j)] = 1.0;
+            }
+            Arc::new(m)
+        };
+        let mut rng = Pcg64::seeded(4);
+        let coeffs = Mat::randn(4, 5, &mut rng);
+        let geom = SegmentGeom { l: 16, m: 5, conv: None };
+        let mut f = Fidelity::new(default_backend());
+        f.observe_layer(
+            0,
+            0,
+            &LayerUpdate::LowRank { coeffs: coeffs.clone(), basis: mk(4), geom },
+        );
+        let s = f.observe_layer(0, 0, &LayerUpdate::LowRank { coeffs, basis: mk(0), geom });
+        assert!((s.nrmse.unwrap() - 1.0).abs() < 1e-6);
+        assert!(s.energy_coverage.unwrap() < 1e-9);
+    }
+
+    #[test]
+    fn sparse_and_quant_report_energy_without_nrmse() {
+        let mut f = Fidelity::new(default_backend());
+        let s = f.observe_layer(
+            0,
+            0,
+            &LayerUpdate::Sparse { indices: vec![0, 4], values: vec![3.0, 4.0], len: 8 },
+        );
+        assert!(s.nrmse.is_none());
+        assert!((s.energy - 25.0).abs() < 1e-12);
+        assert_eq!(s.bytes, 16, "indices + values stored floats");
+    }
+}

@@ -1,0 +1,215 @@
+//! Diagnostics plane (plane 9): streaming estimators of the gradient
+//! structure GradESTC *assumes*.
+//!
+//! The paper's premise is empirical — gradients are low-rank in space
+//! and correlated in time, so a mostly-reused basis plus fresh
+//! coefficients suffices. This module measures that premise continuously
+//! while a run executes, instead of asserting it offline:
+//!
+//! * [`SubspaceDrift`] — principal angles and chordal distance between a
+//!   layer's consecutive server-side bases (GradESTC/SVDFed), plus the
+//!   observed basis churn `d_r`. Memory: one `Arc<Mat>` per tracked
+//!   layer (a pool-shared pointer, never a copy).
+//! * [`StreamingCosine`] — adjacent-round cosine similarity per layer
+//!   for a small deterministically-sampled client subset. Memory:
+//!   O(sample × model) — the previous round's dense update per sampled
+//!   client, never the full history the Fig. 1
+//!   [`SimilarityProbe`](crate::metrics::SimilarityProbe) keeps, so it
+//!   runs at `exp scale2` populations.
+//! * [`Fidelity`] — per sampled arrival: reconstruction NRMSE of the
+//!   update under the *previous* basis (the streaming-measurable form of
+//!   `‖G − Ĝ‖/‖G‖`: the server never sees the pre-compression gradient,
+//!   so fidelity is measured against the reused basis — exactly the
+//!   quantity GradESTC's temporal-reuse bet rides on; exactly 0 for
+//!   lossless dense decodes), the energy-coverage ratio (its square
+//!   complement), the stable rank of the update's coefficient matrix,
+//!   and bytes per unit of gradient energy. Memory: one `Arc<Mat>` per
+//!   (sampled client, layer).
+//! * [`CommsEfficiency`] — cumulative uplink bytes per unit of training
+//!   loss decrease. Memory: O(1).
+//!
+//! Estimator outputs accumulate into a [`DiagState`] of per-round,
+//! per-layer [`DiagRow`]s, exported as `diag.csv` and a metrics-JSON
+//! section by [`crate::telemetry::export`]. The driver is
+//! [`DiagProbe`](crate::telemetry::DiagProbe), an
+//! [`Observer`](crate::telemetry::Observer) — so the same estimators
+//! stream from the sync, semi-sync, and async schedulers.
+//!
+//! **Observation, never result:** estimators only read decoded updates
+//! and pool-shared basis snapshots handed to the observer; all sampling
+//! draws from a dedicated seed stream at construction, and every
+//! computation happens on copies — a diag-on run is bit-identical to a
+//! diag-off run at any worker count (`rust/tests/diag.rs`).
+
+mod comms;
+mod drift;
+mod fidelity;
+mod stream;
+
+pub use comms::{CommsEfficiency, CommsSample};
+pub use drift::{DriftSample, SubspaceDrift};
+pub use fidelity::{Fidelity, FidelitySample};
+pub use stream::StreamingCosine;
+
+use crate::util::rng::Pcg64;
+
+/// Dedicated seed-stream tag for the diagnostics plane's client sampling
+/// (never shared with simulation streams, so arming diag perturbs no
+/// simulation draw).
+const DIAG_STREAM: u64 = 0xD1A6;
+
+/// Knobs for the diagnostics plane.
+#[derive(Clone, Copy, Debug)]
+pub struct DiagConfig {
+    /// Sampled-client subset size for the streaming-correlation and
+    /// fidelity estimators (clamped to the population).
+    pub sample: usize,
+}
+
+impl Default for DiagConfig {
+    fn default() -> Self {
+        DiagConfig { sample: 4 }
+    }
+}
+
+/// Deterministically sample `want` distinct client ids from `0..n` on a
+/// dedicated `(seed, DIAG_STREAM)` Pcg64 stream, returned sorted. Draws
+/// happen once, at probe construction, in a fixed order — never during
+/// the event loop — so the subset is a pure function of `(seed, n, want)`.
+pub fn sample_clients(seed: u64, n: usize, want: usize) -> Vec<usize> {
+    let want = want.min(n);
+    if want == 0 || n == 0 {
+        return Vec::new();
+    }
+    // Dense request: take the prefix (rejection sampling would thrash).
+    if want * 2 >= n {
+        return (0..want).collect();
+    }
+    let mut rng = Pcg64::new(seed, DIAG_STREAM);
+    let mut picked = Vec::with_capacity(want);
+    while picked.len() < want {
+        let c = rng.below(n as u64) as usize;
+        if !picked.contains(&c) {
+            picked.push(c);
+        }
+    }
+    picked.sort_unstable();
+    picked
+}
+
+/// One diagnostics observation: a `(round, layer)` cell, or the round
+/// aggregate when `layer == "*"`. Absent metrics (`None`) mean the
+/// estimator had nothing to measure there (e.g. no basis on a TopK run,
+/// no previous arrival yet) and serialize as empty CSV cells.
+#[derive(Clone, Debug, Default)]
+pub struct DiagRow {
+    /// Round index (async: apply index), matching the run's `RoundRecord`s.
+    pub round: usize,
+    /// Layer name from the model's layer table, or `"*"` for the
+    /// round-aggregate row.
+    pub layer: String,
+    /// Mean principal angle (radians) between this round's and the
+    /// previous round's basis for the reference client's lane.
+    pub drift_mean_angle: Option<f64>,
+    /// Largest principal angle (radians).
+    pub drift_max_angle: Option<f64>,
+    /// Chordal distance `sqrt(Σ sin²θᵢ)` between consecutive bases.
+    pub drift_chordal: Option<f64>,
+    /// Observed basis churn: columns whose bits changed since the
+    /// previous basis snapshot (the streaming view of the paper's `d_r`).
+    pub churn_dr: Option<u64>,
+    /// `‖M_prevᵀĜ‖²/‖Ĝ‖²` — fraction of update energy the previous
+    /// basis still captures (1 − NRMSE²).
+    pub energy_coverage: Option<f64>,
+    /// Mean adjacent-arrival cosine similarity over the sampled clients.
+    pub cosine: Option<f64>,
+    /// Reconstruction NRMSE under the previous basis (0 for lossless
+    /// dense decodes; see [`Fidelity`]).
+    pub nrmse: Option<f64>,
+    /// Stable rank `Σσᵢ²/σ₁²` of the update's coefficient matrix.
+    pub stable_rank: Option<f64>,
+    /// Stored-float bytes per unit of update energy (`Σ‖·‖²`), over the
+    /// sampled arrivals.
+    pub bytes_per_unit_energy: Option<f64>,
+    /// Running uplink total after this round (aggregate row only).
+    pub cum_uplink_bytes: Option<u64>,
+    /// First-round train loss minus this round's (aggregate row only).
+    pub loss_drop: Option<f64>,
+    /// `cum_uplink_bytes / loss_drop` when the loss has decreased
+    /// (aggregate row only).
+    pub bytes_per_loss: Option<f64>,
+}
+
+/// Everything the diagnostics plane accumulated over one run. Shared
+/// `Rc<RefCell<_>>` between the installed
+/// [`DiagProbe`](crate::telemetry::DiagProbe) and the caller that
+/// exports it after the run.
+#[derive(Clone, Debug, Default)]
+pub struct DiagState {
+    /// Per-round rows, layer rows first, then the `"*"` aggregate, in
+    /// round order.
+    pub rows: Vec<DiagRow>,
+    /// The sampled client subset (sorted).
+    pub sample: Vec<usize>,
+    /// Layer names in tensor order (filled on the first arrival).
+    pub layer_names: Vec<String>,
+    /// Run-level adjacent-cosine sums per layer (summed in arrival
+    /// order) and the number of adjacent pairs observed — the streaming
+    /// equivalent of
+    /// [`SimilarityProbe::adjacent_similarity`](crate::metrics::SimilarityProbe::adjacent_similarity)
+    /// (bitwise-equal on a single-client sample).
+    pub run_adj_sum: Vec<f64>,
+    /// Adjacent pairs behind `run_adj_sum`.
+    pub run_adj_pairs: u64,
+}
+
+impl DiagState {
+    /// Mean adjacent-arrival cosine per layer over the whole run
+    /// (`NaN`-free: zeros when no pair was ever observed).
+    pub fn adjacent_mean_per_layer(&self) -> Vec<f64> {
+        if self.run_adj_pairs == 0 {
+            return vec![0.0; self.run_adj_sum.len()];
+        }
+        self.run_adj_sum.iter().map(|s| s / self.run_adj_pairs as f64).collect()
+    }
+
+    /// Rows for one round, aggregate row last.
+    pub fn rows_for_round(&self, round: usize) -> Vec<&DiagRow> {
+        self.rows.iter().filter(|r| r.round == round).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_deterministic_sorted_distinct() {
+        let a = sample_clients(7, 1000, 4);
+        let b = sample_clients(7, 1000, 4);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted distinct: {a:?}");
+        assert!(a.iter().all(|&c| c < 1000));
+        let c = sample_clients(8, 1000, 4);
+        assert_ne!(a, c, "different seeds should (generically) differ");
+    }
+
+    #[test]
+    fn sampling_clamps_and_degenerates() {
+        assert_eq!(sample_clients(1, 4, 8), vec![0, 1, 2, 3]);
+        assert_eq!(sample_clients(1, 5, 3), vec![0, 1, 2], "dense request takes the prefix");
+        assert!(sample_clients(1, 0, 3).is_empty());
+        assert!(sample_clients(1, 10, 0).is_empty());
+    }
+
+    #[test]
+    fn adjacent_mean_handles_empty() {
+        let st = DiagState::default();
+        assert!(st.adjacent_mean_per_layer().is_empty());
+        let st = DiagState { run_adj_sum: vec![1.5, 3.0], run_adj_pairs: 3, ..Default::default() };
+        let m = st.adjacent_mean_per_layer();
+        assert!((m[0] - 0.5).abs() < 1e-12);
+        assert!((m[1] - 1.0).abs() < 1e-12);
+    }
+}

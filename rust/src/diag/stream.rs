@@ -1,0 +1,120 @@
+//! Streaming temporal-correlation estimator.
+//!
+//! The Fig. 1 [`SimilarityProbe`](crate::metrics::SimilarityProbe) keeps
+//! every round's dense gradient for its client — O(rounds × model)
+//! memory, fine for a 40-round figure, fatal at `exp scale2`
+//! populations. This estimator keeps only the *previous* arrival per
+//! sampled client and folds each adjacent-pair cosine into running sums
+//! as arrivals stream in: O(sample × model) memory, O(model) work per
+//! sampled arrival.
+//!
+//! Equivalence contract: with a single-client sample and one arrival per
+//! round, the run-level mean per layer is bitwise-equal to
+//! `SimilarityProbe::adjacent_similarity` on the same gradient stream —
+//! same [`cosine`] kernel, same f64 summation order (increasing round),
+//! same divisor. `rust/tests/diag.rs` locks this in end to end.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::cosine;
+
+/// Per-client previous-arrival store + adjacent-cosine computation.
+pub struct StreamingCosine {
+    /// Sorted sampled client ids; arrivals from anyone else are ignored.
+    sample: Vec<usize>,
+    /// `cid ->` the previous arrival's dense per-layer update.
+    prev: BTreeMap<usize, Vec<Vec<f32>>>,
+}
+
+impl StreamingCosine {
+    /// Estimator over a sorted sampled-client subset.
+    pub fn new(sample: Vec<usize>) -> Self {
+        debug_assert!(sample.windows(2).all(|w| w[0] < w[1]));
+        StreamingCosine { sample, prev: BTreeMap::new() }
+    }
+
+    /// Is `cid` in the sampled subset?
+    pub fn is_sampled(&self, cid: usize) -> bool {
+        self.sample.binary_search(&cid).is_ok()
+    }
+
+    /// The sampled subset.
+    pub fn sample(&self) -> &[usize] {
+        &self.sample
+    }
+
+    /// Observe one sampled client's dense update. Returns the per-layer
+    /// cosines against that client's previous arrival (`None` on its
+    /// first arrival). The dense buffers are retained as the new
+    /// previous-round state, replacing the old ones — memory stays at
+    /// one model per sampled client.
+    pub fn observe(&mut self, cid: usize, dense: Vec<Vec<f32>>) -> Option<Vec<f64>> {
+        debug_assert!(self.is_sampled(cid));
+        let prev = self.prev.insert(cid, dense);
+        let prev = prev?;
+        let cur = &self.prev[&cid];
+        if prev.len() != cur.len() {
+            return None;
+        }
+        Some(prev.iter().zip(cur.iter()).map(|(a, b)| cosine(a, b)).collect())
+    }
+
+    /// Bytes currently held (the O(prev-round) bound the docs promise).
+    pub fn resident_bytes(&self) -> usize {
+        self.prev
+            .values()
+            .map(|layers| layers.iter().map(|v| 4 * v.len()).sum::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_arrival_primes_then_pairs() {
+        let mut s = StreamingCosine::new(vec![0, 3]);
+        assert!(s.is_sampled(0) && s.is_sampled(3) && !s.is_sampled(1));
+        assert!(s.observe(0, vec![vec![1.0, 0.0]]).is_none());
+        let c = s.observe(0, vec![vec![2.0, 0.0]]).unwrap();
+        assert!((c[0] - 1.0).abs() < 1e-12, "parallel vectors: {c:?}");
+        let c = s.observe(0, vec![vec![0.0, 5.0]]).unwrap();
+        assert!(c[0].abs() < 1e-12, "orthogonal vectors: {c:?}");
+    }
+
+    #[test]
+    fn memory_stays_one_model_per_client() {
+        let mut s = StreamingCosine::new(vec![1]);
+        for r in 0..50 {
+            s.observe(1, vec![vec![r as f32; 128], vec![1.0; 64]]);
+            assert_eq!(s.resident_bytes(), 4 * (128 + 64));
+        }
+    }
+
+    #[test]
+    fn matches_lazy_adjacent_similarity_bitwise() {
+        use crate::metrics::SimilarityProbe;
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::seeded(9);
+        let mut probe = SimilarityProbe::new(vec!["a".into(), "b".into()]);
+        let mut stream = StreamingCosine::new(vec![0]);
+        let mut sum = [0.0f64; 2];
+        let mut pairs = 0u64;
+        for _ in 0..12 {
+            let grads = vec![rng.normal_vec(96), rng.normal_vec(33)];
+            probe.record_round(grads.clone());
+            if let Some(c) = stream.observe(0, grads) {
+                sum[0] += c[0];
+                sum[1] += c[1];
+                pairs += 1;
+            }
+        }
+        let lazy = probe.adjacent_similarity();
+        assert_eq!(pairs, 11);
+        for l in 0..2 {
+            let mean = sum[l] / pairs as f64;
+            assert_eq!(mean.to_bits(), lazy[l].to_bits(), "layer {l} diverged");
+        }
+    }
+}

@@ -5,7 +5,9 @@
 //! reports. `docs/EXPERIMENTS.md` catalogues every experiment's knobs,
 //! outputs, and how to reproduce the paper's comm-reduction numbers.
 
+use std::cell::RefCell;
 use std::path::{Path, PathBuf};
+use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
@@ -15,10 +17,12 @@ use gradestc::config::{
     ModelKind, SchedKind,
 };
 use gradestc::coordinator::{RoundHookView, Simulation};
+use gradestc::diag::{DiagConfig, DiagState};
 use gradestc::metrics::recorder::fmt_mb;
 use gradestc::metrics::{RunReport, SimilarityProbe};
 use gradestc::model::meta::layer_table;
 use gradestc::telemetry::export;
+use gradestc::telemetry::DiagProbe;
 use gradestc::util::args::ArgSpec;
 
 /// Where one run's telemetry artifacts go. `default()` (no sink) leaves
@@ -31,12 +35,15 @@ pub struct TraceSinks {
     pub trace: Option<PathBuf>,
     /// Per-round metrics JSON path.
     pub metrics: Option<PathBuf>,
+    /// Diagnostics-plane CSV path (`--diag`); arming it installs a
+    /// [`DiagProbe`] and adds a `"diag"` section to the metrics JSON.
+    pub diag: Option<PathBuf>,
 }
 
 impl TraceSinks {
     /// Whether any sink is configured (telemetry should be enabled).
     pub fn enabled(&self) -> bool {
-        self.trace.is_some() || self.metrics.is_some()
+        self.trace.is_some() || self.metrics.is_some() || self.diag.is_some()
     }
 
     /// Arm telemetry on a freshly built simulation when any sink is set.
@@ -46,9 +53,44 @@ impl TraceSinks {
         }
     }
 
+    /// Install a [`DiagProbe`] on the simulation when the diag sink is
+    /// set, returning the shared state to export after the run. Must run
+    /// after [`TraceSinks::arm`] (the probe publishes `diag.*` gauges and
+    /// `Phase::Diag` spans through the run's telemetry).
+    pub fn arm_diag(
+        &self,
+        sim: &mut Simulation,
+        cfg: &ExperimentConfig,
+    ) -> Option<Rc<RefCell<DiagState>>> {
+        self.diag.as_ref()?;
+        let tel = sim.enable_telemetry();
+        let probe = DiagProbe::new(cfg, DiagConfig::default()).with_telemetry(tel);
+        let state = probe.state();
+        sim.set_observer(Box::new(probe));
+        Some(state)
+    }
+
     /// Export the configured artifacts from a finished run (no-op when
     /// disabled).
     pub fn export(&self, sim: &Simulation, verbose: bool) -> Result<()> {
+        self.export_with_diag(sim, None, verbose)
+    }
+
+    /// [`TraceSinks::export`] plus the diagnostics artifacts: the
+    /// `diag.csv` table and a `"diag"` section inside the metrics JSON
+    /// when both a diag sink and a state are present.
+    pub fn export_with_diag(
+        &self,
+        sim: &Simulation,
+        diag: Option<&DiagState>,
+        verbose: bool,
+    ) -> Result<()> {
+        if let (Some(path), Some(state)) = (&self.diag, diag) {
+            export::write_diag_csv(state, path)?;
+            if verbose {
+                println!("diag -> {} ({} rows)", path.display(), state.rows.len());
+            }
+        }
         let Some(tel) = sim.telemetry() else { return Ok(()) };
         if let Some(path) = &self.trace {
             export::write_chrome_trace(tel, path)?;
@@ -62,7 +104,7 @@ impl TraceSinks {
             }
         }
         if let Some(path) = &self.metrics {
-            export::write_metrics_json(tel, path)?;
+            export::write_metrics_json_with_diag(tel, diag, path)?;
             if verbose {
                 println!("metrics -> {}", path.display());
             }
@@ -91,6 +133,7 @@ pub fn run_one_traced(
     let mut sim = Simulation::build(cfg.clone())
         .with_context(|| format!("building simulation '{}'", cfg.name))?;
     sinks.arm(&mut sim);
+    let diag = sinks.arm_diag(&mut sim, cfg);
     let report = sim.run_scheduled_with_progress(|round, rec| {
         if verbose {
             println!(
@@ -104,7 +147,8 @@ pub fn run_one_traced(
     })?;
     let csv = PathBuf::from(out_dir).join(format!("{}.csv", cfg.name));
     sim.recorder.write_csv(&csv)?;
-    sinks.export(&sim, verbose)?;
+    let diag = diag.as_ref().map(|s| s.borrow());
+    sinks.export_with_diag(&sim, diag.as_deref(), verbose)?;
     if verbose {
         println!(
             "[{}] done in {:.1}s -> {}",
@@ -122,7 +166,7 @@ pub fn cmd_exp(argv: Vec<String>) -> i32 {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
             eprintln!(
-                "usage: gradestc exp <fig1|fig2|table3|table4|fig7|fig8|fig9|async1|scale1|scale2> [opts]"
+                "usage: gradestc exp <fig1|fig2|table3|table4|fig7|fig8|fig9|async1|scale1|scale2|diag1> [opts]"
             );
             return 2;
         }
@@ -155,6 +199,11 @@ pub fn cmd_exp(argv: Vec<String>) -> i32 {
             "",
             "directory for per-run per-round metrics JSON (<dir>/<run>.metrics.json); empty = off",
         )
+        .opt(
+            "diag",
+            "",
+            "directory for per-run diagnostics CSV (<dir>/<run>.diag.csv, plus a 'diag' metrics-JSON section); empty = off (diag1 always arms it)",
+        )
         .flag("native", "use the native trainer instead of XLA artifacts")
         .flag("ef", "include the error-feedback extension in table4");
     let args = match spec.parse(rest) {
@@ -178,6 +227,7 @@ pub fn cmd_exp(argv: Vec<String>) -> i32 {
         clients: args.usize("clients"),
         trace_dir: args.str("trace").to_string(),
         metrics_dir: args.str("metrics").to_string(),
+        diag_dir: args.str("diag").to_string(),
     };
     let r = match id.as_str() {
         "fig1" => exp_fig1(&ctx),
@@ -190,6 +240,7 @@ pub fn cmd_exp(argv: Vec<String>) -> i32 {
         "async1" => exp_async1(&ctx),
         "scale1" => exp_scale1(&ctx),
         "scale2" => exp_scale2(&ctx),
+        "diag1" => exp_diag1(&ctx),
         other => {
             eprintln!("unknown experiment '{other}'");
             return 2;
@@ -218,6 +269,7 @@ struct ExpCtx {
     clients: usize,
     trace_dir: String,
     metrics_dir: String,
+    diag_dir: String,
 }
 
 impl ExpCtx {
@@ -229,6 +281,8 @@ impl ExpCtx {
                 .then(|| PathBuf::from(&self.trace_dir).join(format!("{name}.trace.json"))),
             metrics: (!self.metrics_dir.is_empty())
                 .then(|| PathBuf::from(&self.metrics_dir).join(format!("{name}.metrics.json"))),
+            diag: (!self.diag_dir.is_empty())
+                .then(|| PathBuf::from(&self.diag_dir).join(format!("{name}.diag.csv"))),
         }
     }
 
@@ -487,9 +541,11 @@ fn exp_table3(ctx: &ExpCtx) -> Result<()> {
                 let sinks = ctx.sinks(&cfg.name);
                 let mut sim = tests.build(&cfg)?;
                 sinks.arm(&mut sim);
+                let diag = sinks.arm_diag(&mut sim, &cfg);
                 let rep = sim.run_with_progress(|_, _| {})?;
                 sim.recorder.write_csv(&out.join(format!("{}.csv", cfg.name)))?;
-                sinks.export(&sim, false)?;
+                let diag = diag.as_ref().map(|s| s.borrow());
+                sinks.export_with_diag(&sim, diag.as_deref(), false)?;
                 if mname == "fedavg" {
                     threshold = cfg.threshold_frac * rep.best_accuracy;
                 }
@@ -604,9 +660,11 @@ fn exp_table4(ctx: &ExpCtx) -> Result<()> {
         let sinks = ctx.sinks(&cfg.name);
         let mut sim = tests.build(&cfg)?;
         sinks.arm(&mut sim);
+        let diag = sinks.arm_diag(&mut sim, &cfg);
         sim.run_with_progress(|_, _| {})?;
         sim.recorder.write_csv(&out.join(format!("{}.csv", cfg.name)))?;
-        sinks.export(&sim, false)?;
+        let diag = diag.as_ref().map(|s| s.borrow());
+        sinks.export_with_diag(&sim, diag.as_deref(), false)?;
         let rep = sim.recorder.report(threshold);
         println!(
             "{:<16} {:>8.2}% {:>14} {:>12} {:>10}",
@@ -804,9 +862,11 @@ fn exp_async1(ctx: &ExpCtx) -> Result<()> {
             let sinks = ctx.sinks(&cfg.name);
             let mut sim = tests.build(&cfg)?;
             sinks.arm(&mut sim);
+            let diag = sinks.arm_diag(&mut sim, &cfg);
             let rep = sim.run_scheduled_with_progress(|_, _| {})?;
             sim.recorder.write_csv(&out.join(format!("{}.csv", cfg.name)))?;
-            sinks.export(&sim, false)?;
+            let diag = diag.as_ref().map(|s| s.borrow());
+            sinks.export_with_diag(&sim, diag.as_deref(), false)?;
             if *mname == "fedavg" && *sname == "sync" {
                 target = cfg.threshold_frac * rep.best_accuracy;
             }
@@ -924,12 +984,14 @@ fn exp_scale1(ctx: &ExpCtx) -> Result<()> {
         let mut sim = Simulation::build(cfg.clone())
             .with_context(|| format!("building {clients}-client simulation"))?;
         sinks.arm(&mut sim);
+        let diag = sinks.arm_diag(&mut sim, &cfg);
         let build_s = t0.elapsed().as_secs_f64();
         let t1 = std::time::Instant::now();
         let rep = sim.run_scheduled_with_progress(|_, _| {})?;
         let run_s = t1.elapsed().as_secs_f64();
         sim.recorder.write_csv(&out.join(format!("{}.csv", cfg.name)))?;
-        sinks.export(&sim, false)?;
+        let diag = diag.as_ref().map(|s| s.borrow());
+        sinks.export_with_diag(&sim, diag.as_deref(), false)?;
 
         let pool = sim.basis_pool_stats();
         let naive = naive_per_lane as f64 * clients as f64;
@@ -1060,12 +1122,14 @@ fn exp_scale2(ctx: &ExpCtx) -> Result<()> {
             .build(&cfg)
             .with_context(|| format!("building {clients}-client simulation"))?;
         sinks.arm(&mut sim);
+        let diag = sinks.arm_diag(&mut sim, &cfg);
         let build_s = t0.elapsed().as_secs_f64();
         let t1 = std::time::Instant::now();
         let rep = sim.run_scheduled_with_progress(|_, _| {})?;
         let run_s = t1.elapsed().as_secs_f64();
         sim.recorder.write_csv(&out.join(format!("{}.csv", cfg.name)))?;
-        sinks.export(&sim, false)?;
+        let diag = diag.as_ref().map(|s| s.borrow());
+        sinks.export_with_diag(&sim, diag.as_deref(), false)?;
 
         // Per-lane resident-byte estimate: the shard (x as f32 + y as u32)
         // plus one lane's worth of basis state. Lane RNG/handles are O(1).
@@ -1129,6 +1193,171 @@ fn exp_scale2(ctx: &ExpCtx) -> Result<()> {
     std::fs::write(out.join("summary.csv"), summary)?;
     println!(
         "\nper-round CSVs + summary.csv in {} (resident lanes vs cap, peak RSS)",
+        out.display()
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// diag1 — the gradient-structure observatory
+// ---------------------------------------------------------------------------
+
+/// Mean of the `Some` values of `f` over the aggregate (`layer == "*"`)
+/// rows of a run's diagnostics.
+fn diag_agg_mean(state: &DiagState, f: impl Fn(&gradestc::diag::DiagRow) -> Option<f64>) -> Option<f64> {
+    let vals: Vec<f64> =
+        state.rows.iter().filter(|r| r.layer == "*").filter_map(&f).collect();
+    (!vals.is_empty()).then(|| vals.iter().sum::<f64>() / vals.len() as f64)
+}
+
+/// The diagnostics-plane headline: run GradESTC vs SVDFed vs TopK under
+/// sync, semi-sync, and async control flows with the [`DiagProbe`] armed,
+/// and report how the structural premises respond to staleness — basis
+/// drift (principal angles / chordal distance / churn), adjacent-arrival
+/// cosine, reconstruction NRMSE under the previous basis, and cumulative
+/// uplink bytes per unit of loss decrease. Every cell writes
+/// `<out>/diag1/<run>.diag.csv` plus a metrics JSON with the `"diag"`
+/// section (validated by `scripts/check_diag.py` in the diag-smoke CI
+/// job); `--diag`/`--trace` directories add the usual artifacts on top.
+fn exp_diag1(ctx: &ExpCtx) -> Result<()> {
+    println!(
+        "== diag1: gradient-structure observatory — drift/cosine/NRMSE vs scheduler =="
+    );
+    let rounds = ctx.rounds_or(12);
+    let out = PathBuf::from(&ctx.out).join("diag1");
+    std::fs::create_dir_all(&out)?;
+
+    let mk_base = |comp: CompressorKind| -> ExperimentConfig {
+        let mut cfg = ctx.base(DatasetKind::SynthMnist, DataDistribution::Iid, comp, rounds);
+        cfg.num_clients = 8;
+        cfg.samples_per_client = 128;
+        // Heterogeneous links: the staleness regime the probe is for.
+        cfg.net.het_spread = 1.0;
+        cfg
+    };
+    // Same deadline recipe as async1: 1.5× the mean link's dense round trip.
+    let anchor = mk_base(CompressorKind::None);
+    let meta = layer_table(anchor.model);
+    let model_bytes = 4 * meta.total_params() as u64;
+    let deadline =
+        1.5 * anchor.net.base_profile().round_trip_time(model_bytes, model_bytes);
+    let k_async = (anchor.num_clients / 2).max(1);
+
+    let scheds: Vec<(&str, SchedKind, f64)> = vec![
+        ("sync", SchedKind::Sync, 0.0),
+        ("semisync", SchedKind::SemiSync, deadline),
+        ("async", SchedKind::Async { k: k_async, staleness_p: 0.5 }, 0.0),
+    ];
+    let methods: Vec<(&str, CompressorKind)> = vec![
+        (
+            "gradestc",
+            CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+        ),
+        ("svdfed", CompressorKind::SvdFed { k: 8, gamma: 0.5 }),
+        ("topk", CompressorKind::TopK { frac: 0.1 }),
+    ];
+
+    let mut summary = String::from(
+        "method,sched,mean_drift_angle,mean_drift_chordal,mean_churn_dr,\
+         adjacent_cosine,mean_nrmse,mean_energy_coverage,final_bytes_per_loss,\
+         best_acc,total_uplink_mb\n",
+    );
+    println!(
+        "\n{:<10} {:<9} {:>11} {:>9} {:>7} {:>8} {:>8} {:>14}",
+        "method", "sched", "drift(rad)", "chordal", "churn", "adj cos", "nrmse", "bytes/loss"
+    );
+    let fmt_opt = |v: Option<f64>| v.map(|x| format!("{x:.4}")).unwrap_or_else(|| "-".into());
+    // (method, sched) -> headline numbers, for the staleness-response print.
+    let mut cells: Vec<(String, String, Option<f64>, Option<f64>)> = Vec::new();
+    let mut tests = TestSetCache::new();
+    for (mname, comp) in &methods {
+        for (sname, skind, dl) in &scheds {
+            let mut cfg = mk_base(comp.clone());
+            cfg.name = format!("diag1-{mname}-{sname}");
+            cfg.net.deadline_s = *dl;
+            cfg.sched.kind = *skind;
+            // diag1 always arms the probe and the metrics JSON — its CSV
+            // and "diag" section *are* the experiment's output. --diag /
+            // --trace / --metrics directories override the defaults.
+            let mut sinks = ctx.sinks(&cfg.name);
+            sinks.diag =
+                Some(sinks.diag.unwrap_or_else(|| out.join(format!("{}.diag.csv", cfg.name))));
+            sinks.metrics = Some(
+                sinks
+                    .metrics
+                    .unwrap_or_else(|| out.join(format!("{}.metrics.json", cfg.name))),
+            );
+            let mut sim = tests.build(&cfg)?;
+            sinks.arm(&mut sim);
+            let diag = sinks
+                .arm_diag(&mut sim, &cfg)
+                .expect("diag1 always sets a diag sink");
+            let rep = sim.run_scheduled_with_progress(|_, _| {})?;
+            sim.recorder.write_csv(&out.join(format!("{}.csv", cfg.name)))?;
+            let state = diag.borrow();
+            sinks.export_with_diag(&sim, Some(&state), false)?;
+
+            let drift = diag_agg_mean(&state, |r| r.drift_mean_angle);
+            let chordal = diag_agg_mean(&state, |r| r.drift_chordal);
+            let churn = diag_agg_mean(&state, |r| r.churn_dr.map(|c| c as f64));
+            let cos = diag_agg_mean(&state, |r| r.cosine);
+            let nrmse = diag_agg_mean(&state, |r| r.nrmse);
+            let cover = diag_agg_mean(&state, |r| r.energy_coverage);
+            let bpl = state
+                .rows
+                .iter()
+                .filter(|r| r.layer == "*")
+                .filter_map(|r| r.bytes_per_loss)
+                .last();
+            println!(
+                "{:<10} {:<9} {:>11} {:>9} {:>7} {:>8} {:>8} {:>14}",
+                mname,
+                sname,
+                fmt_opt(drift),
+                fmt_opt(chordal),
+                fmt_opt(churn),
+                fmt_opt(cos),
+                fmt_opt(nrmse),
+                bpl.map(|b| format!("{b:.0}")).unwrap_or_else(|| "-".into()),
+            );
+            summary.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{:.4},{}\n",
+                mname,
+                sname,
+                fmt_opt(drift),
+                fmt_opt(chordal),
+                fmt_opt(churn),
+                fmt_opt(cos),
+                fmt_opt(nrmse),
+                fmt_opt(cover),
+                bpl.map(|b| format!("{b:.2}")).unwrap_or_default(),
+                rep.best_accuracy,
+                fmt_mb(rep.total_uplink),
+            ));
+            cells.push((mname.to_string(), sname.to_string(), drift, cos));
+        }
+    }
+    std::fs::write(out.join("summary.csv"), summary)?;
+    // The headline: does staleness erode the paper's premises? Compare
+    // each method's drift/correlation under async vs sync.
+    for (mname, _) in &methods {
+        let get = |s: &str| cells.iter().find(|(m, sc, _, _)| m == mname && sc == s);
+        if let (Some((_, _, ds, cs)), Some((_, _, da, ca))) = (get("sync"), get("async")) {
+            if let (Some(ds), Some(da)) = (ds, da) {
+                println!(
+                    "  -> {mname}: basis drift {ds:.4} rad (sync) vs {da:.4} rad (async, \
+                     staleness-discounted folds)"
+                );
+            }
+            if let (Some(cs), Some(ca)) = (cs, ca) {
+                println!(
+                    "  -> {mname}: adjacent cosine {cs:.4} (sync) vs {ca:.4} (async)"
+                );
+            }
+        }
+    }
+    println!(
+        "\nper-run diag.csv + metrics JSON in {} (checked by scripts/check_diag.py)",
         out.display()
     );
     Ok(())

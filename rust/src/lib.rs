@@ -15,9 +15,10 @@
 //!
 //! Python is build-time only; the round loop is pure Rust + XLA.
 //!
-//! The runtime is organized as eight planes — round engine → wire/network
+//! The runtime is organized as nine planes — round engine → wire/network
 //! → compressed-domain aggregation → scheduler → basis pool → compute
-//! backend → telemetry → virtual lanes — each with its own invariants;
+//! backend → telemetry → virtual lanes → diagnostics — each with its own
+//! invariants;
 //! the top-level `ARCHITECTURE.md` maps them, with per-scheduler
 //! data-flow diagrams and the "where does a byte get charged"
 //! walkthrough.
@@ -135,6 +136,11 @@
 //!   first dispatch, LRU-bounded via `--lane-cap`, lazy ≡ eager
 //!   bit-identically).
 //! * [`data`] — synthetic datasets and non-IID partitioning.
+//! * [`diag`] — the diagnostics plane: streaming estimators of the
+//!   gradient structure the paper assumes (subspace drift via principal
+//!   angles, adjacent-round cosine, compression-fidelity NRMSE,
+//!   bytes-per-loss), driven by [`telemetry::DiagProbe`] and exported
+//!   as `diag.csv` / a metrics-JSON section behind `--diag`.
 //! * [`linalg`] — dense matrix kernels (rSVD, MGS, fused
 //!   [`linalg::matmul_acc`]) for the compressors and the aggregation
 //!   plane, dispatched through the pluggable [`linalg::Backend`]
@@ -158,13 +164,14 @@
 //! * [`util`] — RNG, CLI args, bench harness, property testing, thread pool.
 //!
 //! See `examples/` for runnable end-to-end drivers, `ARCHITECTURE.md`
-//! (repo root) for the eight-plane system map, and `docs/EXPERIMENTS.md`
+//! (repo root) for the nine-plane system map, and `docs/EXPERIMENTS.md`
 //! for the experiment catalogue.
 
 pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod diag;
 pub mod linalg;
 pub mod metrics;
 pub mod model;

@@ -33,4 +33,5 @@ pub use matmul::{axpy, matmul, matmul_acc, matmul_at_b, matmul_a_bt};
 pub use qr::{householder_qr, householder_qr_in, mgs_orthonormalize, mgs_orthonormalize_in,
     ortho_defect};
 pub use rsvd::{randomized_svd, randomized_svd_in, RsvdOptions};
-pub use svd::{jacobi_eigh_symmetric, thin_svd, thin_svd_in, Svd};
+pub use svd::{chordal_distance, jacobi_eigh_symmetric, principal_angles_in, thin_svd,
+    thin_svd_in, Svd};

@@ -138,6 +138,34 @@ pub fn thin_svd_in(bk: &dyn Backend, a: &Mat, rank: usize) -> Svd {
     }
 }
 
+/// Principal angles between the column spans of two orthonormal bases
+/// `a: l×k₁` and `b: l×k₂` (same `l`), ascending, in radians.
+///
+/// Standard Björck–Golub small-`k` route: the singular values of
+/// `C = AᵀB` (a `k₁×k₂` product through `bk`) are the cosines of the
+/// principal angles, clamped into `[0, 1]` before `acos` so f32
+/// round-off near a shared direction cannot produce NaN. The angle
+/// vector has `min(k₁, k₂)` entries in `[0, π/2]`: identical spans give
+/// all-zero angles, orthogonal spans give all-`π/2`. Cost is one small
+/// matmul plus a `k×k` Jacobi SVD — this is the diagnostics plane's
+/// subspace-drift primitive, not a hot-path kernel.
+pub fn principal_angles_in(bk: &dyn Backend, a: &Mat, b: &Mat) -> Vec<f64> {
+    assert_eq!(a.rows(), b.rows(), "principal_angles: bases live in different spaces");
+    if a.cols() == 0 || b.cols() == 0 {
+        return Vec::new();
+    }
+    let c = bk.matmul_at_b(a, b);
+    let svd = thin_svd_in(bk, &c, 0);
+    svd.s.iter().map(|&s| (s as f64).clamp(0.0, 1.0).acos()).collect()
+}
+
+/// Chordal (projection-Frobenius) distance from a principal-angle vector:
+/// `sqrt(Σ sin²θᵢ)` — 0 for identical spans, `sqrt(k)` for orthogonal
+/// `k`-dimensional ones.
+pub fn chordal_distance(angles: &[f64]) -> f64 {
+    angles.iter().map(|t| t.sin() * t.sin()).sum::<f64>().sqrt()
+}
+
 impl Svd {
     /// Reconstruct `u · diag(s) · vt`.
     pub fn reconstruct(&self) -> Mat {
@@ -246,5 +274,61 @@ mod tests {
         let svd = thin_svd(&a, 3);
         assert!(svd.s.iter().all(|&s| s == 0.0));
         assert!(svd.reconstruct().fro_norm() == 0.0);
+    }
+
+    #[test]
+    fn principal_angles_identical_basis_are_zero() {
+        let mut rng = Pcg64::seeded(6);
+        let a = Mat::randn(24, 4, &mut rng);
+        let q = crate::linalg::mgs_orthonormalize(&a);
+        let angles = principal_angles_in(default_backend(), &q, &q);
+        assert_eq!(angles.len(), 4);
+        for t in &angles {
+            assert!(t.abs() < 1e-3, "identical basis angle {t}");
+        }
+        assert!(chordal_distance(&angles) < 1e-3);
+    }
+
+    #[test]
+    fn principal_angles_orthogonal_bases_are_right_angles() {
+        // Disjoint coordinate subspaces: span{e0,e1} vs span{e2,e3}.
+        let mut a = Mat::zeros(8, 2);
+        let mut b = Mat::zeros(8, 2);
+        a[(0, 0)] = 1.0;
+        a[(1, 1)] = 1.0;
+        b[(2, 0)] = 1.0;
+        b[(3, 1)] = 1.0;
+        let angles = principal_angles_in(default_backend(), &a, &b);
+        assert_eq!(angles.len(), 2);
+        let half_pi = std::f64::consts::FRAC_PI_2;
+        for t in &angles {
+            assert!((t - half_pi).abs() < 1e-5, "orthogonal basis angle {t}");
+        }
+        assert!((chordal_distance(&angles) - 2f64.sqrt()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn principal_angles_are_bounded_and_rotation_invariant() {
+        let mut rng = Pcg64::seeded(7);
+        let q1 = crate::linalg::mgs_orthonormalize(&Mat::randn(30, 5, &mut rng));
+        let q2 = crate::linalg::mgs_orthonormalize(&Mat::randn(30, 5, &mut rng));
+        let angles = principal_angles_in(default_backend(), &q1, &q2);
+        assert_eq!(angles.len(), 5);
+        let half_pi = std::f64::consts::FRAC_PI_2;
+        for t in &angles {
+            assert!(*t >= 0.0 && *t <= half_pi + 1e-9, "angle out of range: {t}");
+        }
+        // Angles measure the spans, not the particular orthonormal
+        // representatives: a column permutation leaves them unchanged.
+        let mut perm = Mat::zeros(30, 5);
+        for j in 0..5 {
+            for i in 0..30 {
+                perm[(i, j)] = q2[(i, (j + 2) % 5)];
+            }
+        }
+        let angles_p = principal_angles_in(default_backend(), &q1, &perm);
+        for (x, y) in angles.iter().zip(&angles_p) {
+            assert!((x - y).abs() < 1e-4, "permutation moved angle {x} -> {y}");
+        }
     }
 }

@@ -48,7 +48,7 @@ fn usage() -> String {
      USAGE:\n  gradestc train [OPTIONS]      run one experiment\n  \
      gradestc exp <id> [OPTIONS]   regenerate a paper table/figure\n  \
      gradestc info [--artifacts d] inspect the artifact manifest\n\n\
-     exp ids: fig1 fig2 table3 table4 fig7 fig8 fig9 async1 scale1 scale2\n\
+     exp ids: fig1 fig2 table3 table4 fig7 fig8 fig9 async1 scale1 scale2 diag1\n\
      try: gradestc train --help"
         .to_string()
 }
@@ -204,6 +204,11 @@ fn cmd_train(argv: Vec<String>) -> i32 {
             "",
             "write per-round telemetry metrics JSON here (phase times, payload-variant bytes, staleness histogram, pool gauges); empty = off",
         )
+        .opt(
+            "diag",
+            "",
+            "write gradient-structure diagnostics CSV here (subspace drift, adjacent-round cosine, reconstruction NRMSE, bytes-per-loss; a 'diag' section lands in --metrics too); empty = off",
+        )
         .flag("native", "use the native Rust trainer instead of XLA artifacts")
         .flag(
             "legacy-shards",
@@ -302,7 +307,11 @@ fn cmd_train(argv: Vec<String>) -> i32 {
         let p = args.str(key);
         (!p.is_empty()).then(|| std::path::PathBuf::from(p))
     };
-    let sinks = experiments::TraceSinks { trace: opt_path("trace"), metrics: opt_path("metrics") };
+    let sinks = experiments::TraceSinks {
+        trace: opt_path("trace"),
+        metrics: opt_path("metrics"),
+        diag: opt_path("diag"),
+    };
     match experiments::run_one_traced(&cfg, args.str("out"), !quiet, &sinks) {
         Ok(report) => {
             println!(

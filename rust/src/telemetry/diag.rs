@@ -1,0 +1,378 @@
+//! [`DiagProbe`]: the diagnostics plane's [`Observer`].
+//!
+//! One probe drives all four [`crate::diag`] estimators from the
+//! streaming observer callbacks, so the same diagnostics flow from the
+//! sync, semi-sync, and async schedulers without scheduler-specific
+//! code:
+//!
+//! * `on_arrival` — for sampled clients only: fidelity per layer,
+//!   adjacent-arrival cosine on the densified update, and (for the
+//!   reference client, `sample[0]`) subspace drift on any low-rank
+//!   basis the update carries.
+//! * `on_apply` — flushes the round's estimator means into `diag.*`
+//!   gauges; `on_apply` runs *before* the round snapshot is frozen, so
+//!   the gauges land in the same round's
+//!   [`RoundSnapshot`](crate::telemetry::RoundSnapshot).
+//! * `on_round` — folds the finished record into the comms-efficiency
+//!   tracker, appends the round's per-layer and aggregate
+//!   [`DiagRow`]s to the shared [`DiagState`], and records one
+//!   [`Phase::Diag`] host span.
+//!
+//! The bytes-per-loss gauge is the one value only computable *after*
+//! the record exists, so it is set in `on_round` and appears in the
+//! *next* round's snapshot; `diag.csv` rows (built in `on_round`) carry
+//! it for the correct round.
+//!
+//! Determinism: the probe never touches a simulation RNG stream (the
+//! client sample is drawn at construction on the dedicated diag
+//! stream), never mutates anything it observes, and densifies borrowed
+//! updates into its own buffers — diag-on, diag-off, and any
+//! `--workers` value produce bit-identical records (`rust/tests/diag.rs`).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use crate::compress::LayerUpdate;
+use crate::config::ExperimentConfig;
+use crate::diag::{
+    sample_clients, CommsEfficiency, DiagConfig, DiagRow, DiagState, DriftSample, Fidelity,
+    StreamingCosine, SubspaceDrift,
+};
+use crate::metrics::RoundRecord;
+use crate::telemetry::{ApplyEvent, ArrivalEvent, Observer, Phase, Telemetry};
+
+/// One layer's running sums for the round in flight.
+#[derive(Clone, Debug, Default)]
+struct LayerAcc {
+    drift: Option<DriftSample>,
+    cos_sum: f64,
+    cos_n: u64,
+    nrmse_sum: f64,
+    nrmse_n: u64,
+    cover_sum: f64,
+    cover_n: u64,
+    srank_sum: f64,
+    srank_n: u64,
+    bytes: u64,
+    energy: f64,
+}
+
+fn mean(sum: f64, n: u64) -> Option<f64> {
+    (n > 0).then(|| sum / n as f64)
+}
+
+/// Streaming diagnostics probe. Install with
+/// [`Simulation::set_observer`](crate::coordinator::Simulation::set_observer);
+/// read results from the shared [`DiagState`] after the run.
+pub struct DiagProbe {
+    state: Rc<RefCell<DiagState>>,
+    tel: Option<Arc<Telemetry>>,
+    drift: SubspaceDrift,
+    stream: StreamingCosine,
+    fidelity: Fidelity,
+    comms: CommsEfficiency,
+    /// Per-layer accumulators for the round in flight, indexed by tensor.
+    acc: Vec<LayerAcc>,
+}
+
+impl DiagProbe {
+    /// Probe for one run: the client sample is a pure function of
+    /// `(cfg.seed, cfg.num_clients, dcfg.sample)` on the dedicated diag
+    /// seed stream; estimator linalg runs on the run's backend.
+    pub fn new(cfg: &ExperimentConfig, dcfg: DiagConfig) -> Self {
+        let sample = sample_clients(cfg.seed, cfg.num_clients, dcfg.sample);
+        let backend = cfg.backend.resolve();
+        let state = DiagState { sample: sample.clone(), ..Default::default() };
+        DiagProbe {
+            state: Rc::new(RefCell::new(state)),
+            tel: None,
+            drift: SubspaceDrift::new(backend),
+            stream: StreamingCosine::new(sample),
+            fidelity: Fidelity::new(backend),
+            comms: CommsEfficiency::new(),
+            acc: Vec::new(),
+        }
+    }
+
+    /// Attach the run's telemetry so the probe can publish `diag.*`
+    /// gauges and [`Phase::Diag`] spans. Without it the probe still
+    /// fills the [`DiagState`].
+    pub fn with_telemetry(mut self, tel: Arc<Telemetry>) -> Self {
+        self.tel = Some(tel);
+        self
+    }
+
+    /// Shared handle to the accumulated diagnostics; clone before
+    /// installing the probe.
+    pub fn state(&self) -> Rc<RefCell<DiagState>> {
+        Rc::clone(&self.state)
+    }
+
+    /// The reference client whose lane the drift estimator tracks.
+    fn ref_client(&self) -> Option<usize> {
+        self.stream.sample().first().copied()
+    }
+
+    fn layer_acc(&mut self, tensor: usize) -> &mut LayerAcc {
+        if self.acc.len() <= tensor {
+            self.acc.resize_with(tensor + 1, LayerAcc::default);
+        }
+        &mut self.acc[tensor]
+    }
+
+    /// Round aggregate across the per-layer accumulators, `None`-safe.
+    fn aggregate(&self, round: usize) -> DiagRow {
+        let mut row = DiagRow { round, layer: "*".into(), ..Default::default() };
+        let drifts: Vec<&DriftSample> =
+            self.acc.iter().filter_map(|l| l.drift.as_ref()).collect();
+        if !drifts.is_empty() {
+            row.drift_mean_angle =
+                Some(drifts.iter().map(|d| d.mean_angle).sum::<f64>() / drifts.len() as f64);
+            row.drift_max_angle =
+                Some(drifts.iter().fold(0.0f64, |m, d| m.max(d.max_angle)));
+            // Chordal distances add in quadrature across the layer-wise
+            // direct sum of subspaces.
+            row.drift_chordal =
+                Some(drifts.iter().map(|d| d.chordal * d.chordal).sum::<f64>().sqrt());
+            row.churn_dr = Some(drifts.iter().map(|d| d.churn).sum());
+        }
+        let fold = |f: fn(&LayerAcc) -> (f64, u64)| {
+            let (s, n) = self
+                .acc
+                .iter()
+                .map(f)
+                .fold((0.0, 0), |(s, n), (ls, ln)| (s + ls, n + ln));
+            mean(s, n)
+        };
+        row.cosine = fold(|l| (l.cos_sum, l.cos_n));
+        row.nrmse = fold(|l| (l.nrmse_sum, l.nrmse_n));
+        row.energy_coverage = fold(|l| (l.cover_sum, l.cover_n));
+        row.stable_rank = fold(|l| (l.srank_sum, l.srank_n));
+        let bytes: u64 = self.acc.iter().map(|l| l.bytes).sum();
+        let energy: f64 = self.acc.iter().map(|l| l.energy).sum();
+        if energy > 0.0 {
+            row.bytes_per_unit_energy = Some(bytes as f64 / energy);
+        }
+        row
+    }
+}
+
+impl Observer for DiagProbe {
+    fn on_arrival(&mut self, ev: &ArrivalEvent) {
+        {
+            let mut st = self.state.borrow_mut();
+            if st.layer_names.is_empty() {
+                st.layer_names = ev.meta.layers.iter().map(|l| l.name.clone()).collect();
+                st.run_adj_sum = vec![0.0; st.layer_names.len()];
+            }
+        }
+        if !self.stream.is_sampled(ev.cid) {
+            return;
+        }
+        let is_ref = self.ref_client() == Some(ev.cid);
+        for (tensor, update) in ev.updates.iter().enumerate() {
+            let s = self.fidelity.observe_layer(ev.cid, tensor, update);
+            if is_ref {
+                if let LayerUpdate::LowRank { basis, .. } = update {
+                    if let Some(d) = self.drift.observe(tensor, basis) {
+                        self.layer_acc(tensor).drift = Some(d);
+                    }
+                }
+            }
+            let acc = self.layer_acc(tensor);
+            if let Some(n) = s.nrmse {
+                acc.nrmse_sum += n;
+                acc.nrmse_n += 1;
+            }
+            if let Some(c) = s.energy_coverage {
+                acc.cover_sum += c;
+                acc.cover_n += 1;
+            }
+            if let Some(r) = s.stable_rank {
+                acc.srank_sum += r;
+                acc.srank_n += 1;
+            }
+            acc.bytes += s.bytes;
+            acc.energy += s.energy;
+        }
+        if let Some(cos) = self.stream.observe(ev.cid, ev.dense()) {
+            let mut st = self.state.borrow_mut();
+            for (l, &c) in cos.iter().enumerate() {
+                self.acc[l].cos_sum += c;
+                self.acc[l].cos_n += 1;
+                if l < st.run_adj_sum.len() {
+                    st.run_adj_sum[l] += c;
+                }
+            }
+            st.run_adj_pairs += 1;
+        }
+    }
+
+    fn on_apply(&mut self, _ev: &ApplyEvent) {
+        // Publish this round's estimator means before the snapshot
+        // freezes (gauges are last-write-wins, so absent values simply
+        // carry the previous round forward).
+        let Some(tel) = self.tel.as_deref() else { return };
+        let agg = self.aggregate(0);
+        let pairs: [(&'static str, Option<f64>); 7] = [
+            ("diag.drift.mean_angle", agg.drift_mean_angle),
+            ("diag.drift.chordal", agg.drift_chordal),
+            ("diag.cosine.adjacent", agg.cosine),
+            ("diag.fidelity.nrmse", agg.nrmse),
+            ("diag.fidelity.energy_coverage", agg.energy_coverage),
+            ("diag.fidelity.stable_rank", agg.stable_rank),
+            ("diag.bytes_per_unit_energy", agg.bytes_per_unit_energy),
+        ];
+        for (key, v) in pairs {
+            if let Some(v) = v {
+                tel.gauge(key, v);
+            }
+        }
+    }
+
+    fn on_round(&mut self, round: usize, rec: &RoundRecord) {
+        let timer = Telemetry::timer(self.tel.as_deref());
+        let comms = self.comms.observe_round(rec.uplink_bytes, rec.train_loss);
+        let mut agg = self.aggregate(round);
+        agg.cum_uplink_bytes = Some(comms.cum_uplink_bytes);
+        agg.loss_drop = comms.loss_drop;
+        agg.bytes_per_loss = comms.bytes_per_loss;
+        {
+            let mut st = self.state.borrow_mut();
+            let names = st.layer_names.clone();
+            for (tensor, acc) in self.acc.iter().enumerate() {
+                let touched = acc.drift.is_some()
+                    || acc.cos_n > 0
+                    || acc.nrmse_n > 0
+                    || acc.bytes > 0;
+                if !touched {
+                    continue;
+                }
+                let layer = names
+                    .get(tensor)
+                    .cloned()
+                    .unwrap_or_else(|| format!("t{tensor}"));
+                st.rows.push(DiagRow {
+                    round,
+                    layer,
+                    drift_mean_angle: acc.drift.as_ref().map(|d| d.mean_angle),
+                    drift_max_angle: acc.drift.as_ref().map(|d| d.max_angle),
+                    drift_chordal: acc.drift.as_ref().map(|d| d.chordal),
+                    churn_dr: acc.drift.as_ref().map(|d| d.churn),
+                    energy_coverage: mean(acc.cover_sum, acc.cover_n),
+                    cosine: mean(acc.cos_sum, acc.cos_n),
+                    nrmse: mean(acc.nrmse_sum, acc.nrmse_n),
+                    stable_rank: mean(acc.srank_sum, acc.srank_n),
+                    bytes_per_unit_energy: (acc.energy > 0.0)
+                        .then(|| acc.bytes as f64 / acc.energy),
+                    cum_uplink_bytes: None,
+                    loss_drop: None,
+                    bytes_per_loss: None,
+                });
+            }
+            st.rows.push(agg);
+        }
+        if let Some(tel) = self.tel.as_deref() {
+            if let Some(bpl) = comms.bytes_per_loss {
+                tel.gauge("diag.comms.bytes_per_loss", bpl);
+            }
+        }
+        for acc in &mut self.acc {
+            *acc = LayerAcc::default();
+        }
+        if let Some(t) = timer {
+            t.end(Phase::Diag, round as u64, None);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelKind;
+    use crate::model::layer_table;
+
+    fn record(round: usize, uplink: u64, loss: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: loss,
+            test_accuracy: f64::NAN,
+            test_loss: f64::NAN,
+            uplink_bytes: uplink,
+            downlink_bytes: 0,
+            sim_time_s: 0.0,
+            sim_clock_s: 0.0,
+            sum_d: 0,
+            survivors: vec![0],
+            ext: None,
+        }
+    }
+
+    fn arrive(probe: &mut DiagProbe, meta: &crate::model::ModelMeta, cid: usize, scale: f32) {
+        let updates: Vec<LayerUpdate> = meta
+            .layers
+            .iter()
+            .map(|l| LayerUpdate::Dense(vec![scale; l.size().min(8)]))
+            .collect();
+        probe.on_arrival(&ArrivalEvent {
+            round: 0,
+            cid,
+            updates: &updates,
+            meta,
+            weight: 1.0,
+            staleness: 0,
+            vtime: 0.0,
+            on_time: true,
+        });
+    }
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::preset_quickstart();
+        cfg.num_clients = 6;
+        cfg.seed = 5;
+        cfg
+    }
+
+    #[test]
+    fn rows_accumulate_per_round_with_aggregate_last() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let mut probe = DiagProbe::new(&tiny_cfg(), DiagConfig { sample: 2 });
+        let state = probe.state();
+        let cid = state.borrow().sample[0];
+        arrive(&mut probe, &meta, cid, 1.0);
+        probe.on_round(0, &record(0, 100, 2.0));
+        arrive(&mut probe, &meta, cid, 0.5);
+        probe.on_round(1, &record(1, 100, 1.0));
+        let st = state.borrow();
+        assert_eq!(st.layer_names.len(), meta.layers.len());
+        let r0 = st.rows_for_round(0);
+        assert_eq!(r0.last().unwrap().layer, "*", "aggregate row last");
+        assert_eq!(r0.last().unwrap().cum_uplink_bytes, Some(100));
+        let r1 = st.rows_for_round(1);
+        let agg = r1.last().unwrap();
+        assert_eq!(agg.cum_uplink_bytes, Some(200), "cumulative bytes");
+        assert!((agg.bytes_per_loss.unwrap() - 200.0).abs() < 1e-9);
+        // Dense arrivals: exact-zero NRMSE, full coverage, and an
+        // adjacent pair on round 1.
+        assert_eq!(agg.nrmse, Some(0.0));
+        assert_eq!(agg.energy_coverage, Some(1.0));
+        assert!(agg.cosine.unwrap() > 0.99, "parallel updates");
+        assert_eq!(st.run_adj_pairs, 1);
+    }
+
+    #[test]
+    fn unsampled_clients_leave_no_trace() {
+        let meta = layer_table(ModelKind::LeNet5);
+        let mut probe = DiagProbe::new(&tiny_cfg(), DiagConfig { sample: 1 });
+        let state = probe.state();
+        let outsider = (0..6).find(|c| !state.borrow().sample.contains(c)).unwrap();
+        arrive(&mut probe, &meta, outsider, 1.0);
+        probe.on_round(0, &record(0, 50, 2.0));
+        let st = state.borrow();
+        let rows = st.rows_for_round(0);
+        assert_eq!(rows.len(), 1, "only the aggregate row");
+        assert!(rows[0].nrmse.is_none());
+        assert_eq!(rows[0].cum_uplink_bytes, Some(50), "comms still tracked");
+    }
+}

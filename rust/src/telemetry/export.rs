@@ -14,13 +14,21 @@
 //!   [`Telemetry::metrics_json`] document: run identity, run-level
 //!   totals, and one [`super::RoundSnapshot`] per round.
 //!
+//! A diag-armed run (`--diag`) adds a fourth artifact: the
+//! [`write_diag_csv`] table of per-round, per-layer estimator rows, and
+//! a `"diag"` section ([`diag_json`]) inside the metrics document when
+//! both exports are armed ([`write_metrics_json_with_diag`]).
+//!
 //! Validated by `scripts/check_trace.py` (schema, per-track monotonic
-//! timestamps, span nesting) in the CI trace-smoke job.
+//! timestamps, span nesting) and `scripts/check_diag.py` (estimator
+//! ranges, monotone byte totals) in the CI trace-smoke and diag-smoke
+//! jobs.
 
 use std::path::{Path, PathBuf};
 
 use super::{Span, Telemetry};
 use crate::config::Json;
+use crate::diag::{DiagRow, DiagState};
 
 /// Host wall-time track.
 const PID_HOST: u64 = 1;
@@ -180,6 +188,119 @@ pub fn write_metrics_json(tel: &Telemetry, path: &Path) -> crate::Result<()> {
     Ok(())
 }
 
+/// `diag.csv` header, in the order [`diag_csv`] emits the fields.
+/// Absent metrics serialize as empty cells, never as fake zeros.
+pub const DIAG_CSV_HEADER: &str = "round,layer,drift_mean_angle,drift_max_angle,\
+drift_chordal,churn_dr,energy_coverage,cosine,nrmse,stable_rank,\
+bytes_per_unit_energy,cum_uplink_bytes,loss_drop,bytes_per_loss";
+
+fn cell_f(v: Option<f64>) -> String {
+    v.map(|x| x.to_string()).unwrap_or_default()
+}
+
+fn cell_u(v: Option<u64>) -> String {
+    v.map(|x| x.to_string()).unwrap_or_default()
+}
+
+/// Render the diagnostics table as CSV (header + one line per
+/// [`DiagRow`], layer rows before each round's `*` aggregate).
+pub fn diag_csv(state: &DiagState) -> String {
+    let mut out = String::from(DIAG_CSV_HEADER);
+    out.push('\n');
+    for r in &state.rows {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            r.round,
+            r.layer,
+            cell_f(r.drift_mean_angle),
+            cell_f(r.drift_max_angle),
+            cell_f(r.drift_chordal),
+            cell_u(r.churn_dr),
+            cell_f(r.energy_coverage),
+            cell_f(r.cosine),
+            cell_f(r.nrmse),
+            cell_f(r.stable_rank),
+            cell_f(r.bytes_per_unit_energy),
+            cell_u(r.cum_uplink_bytes),
+            cell_f(r.loss_drop),
+            cell_f(r.bytes_per_loss),
+        ));
+    }
+    out
+}
+
+/// Write the diagnostics table to `path` (creating parent directories).
+pub fn write_diag_csv(state: &DiagState, path: &Path) -> crate::Result<()> {
+    ensure_parent(path)?;
+    std::fs::write(path, diag_csv(state))?;
+    Ok(())
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    v.map(Json::num).unwrap_or(Json::Null)
+}
+
+fn diag_row_json(r: &DiagRow) -> Json {
+    Json::obj(vec![
+        ("round", Json::num(r.round as f64)),
+        ("drift_mean_angle", opt_num(r.drift_mean_angle)),
+        ("drift_max_angle", opt_num(r.drift_max_angle)),
+        ("drift_chordal", opt_num(r.drift_chordal)),
+        ("churn_dr", opt_num(r.churn_dr.map(|c| c as f64))),
+        ("energy_coverage", opt_num(r.energy_coverage)),
+        ("cosine", opt_num(r.cosine)),
+        ("nrmse", opt_num(r.nrmse)),
+        ("stable_rank", opt_num(r.stable_rank)),
+        ("bytes_per_unit_energy", opt_num(r.bytes_per_unit_energy)),
+        ("cum_uplink_bytes", opt_num(r.cum_uplink_bytes.map(|b| b as f64))),
+        ("loss_drop", opt_num(r.loss_drop)),
+        ("bytes_per_loss", opt_num(r.bytes_per_loss)),
+    ])
+}
+
+/// The metrics-JSON `"diag"` section: the sampled clients, the layer
+/// table, the run-level adjacent-cosine means, and the per-round
+/// aggregate (`layer == "*"`) rows. Per-layer detail stays in the CSV.
+pub fn diag_json(state: &DiagState) -> Json {
+    Json::obj(vec![
+        (
+            "sample",
+            Json::Arr(state.sample.iter().map(|&c| Json::num(c as f64)).collect()),
+        ),
+        (
+            "layers",
+            Json::Arr(state.layer_names.iter().map(|n| Json::str(n)).collect()),
+        ),
+        (
+            "run_adjacent_cosine",
+            Json::Arr(state.adjacent_mean_per_layer().into_iter().map(Json::num).collect()),
+        ),
+        ("adjacent_pairs", Json::num(state.run_adj_pairs as f64)),
+        (
+            "rounds",
+            Json::Arr(
+                state.rows.iter().filter(|r| r.layer == "*").map(diag_row_json).collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write the metrics document with the diagnostics section attached
+/// (falls back to the plain document when `diag` is `None`).
+pub fn write_metrics_json_with_diag(
+    tel: &Telemetry,
+    diag: Option<&DiagState>,
+    path: &Path,
+) -> crate::Result<()> {
+    ensure_parent(path)?;
+    let mut doc = tel.metrics_json();
+    if let (Some(state), Json::Obj(fields)) = (diag, &mut doc) {
+        fields.insert("diag".to_string(), diag_json(state));
+    }
+    std::fs::write(path, doc.to_pretty())?;
+    Ok(())
+}
+
 /// The JSONL sibling of a `--trace` path: `.json` → `.jsonl`, anything
 /// else gets `.jsonl` appended.
 pub fn jsonl_sibling(trace: &Path) -> PathBuf {
@@ -256,6 +377,74 @@ mod tests {
             let j = Json::parse(line).unwrap();
             assert!(j.get("phase").unwrap().as_str().is_some());
         }
+    }
+
+    fn diag_state() -> DiagState {
+        DiagState {
+            rows: vec![
+                DiagRow {
+                    round: 0,
+                    layer: "conv1.kernel".into(),
+                    nrmse: Some(0.25),
+                    cosine: Some(0.9),
+                    ..Default::default()
+                },
+                DiagRow {
+                    round: 0,
+                    layer: "*".into(),
+                    nrmse: Some(0.25),
+                    cum_uplink_bytes: Some(1024),
+                    bytes_per_loss: Some(2048.0),
+                    ..Default::default()
+                },
+            ],
+            sample: vec![0, 3],
+            layer_names: vec!["conv1.kernel".into()],
+            run_adj_sum: vec![1.8],
+            run_adj_pairs: 2,
+        }
+    }
+
+    #[test]
+    fn diag_csv_has_header_and_empty_cells() {
+        let csv = diag_csv(&diag_state());
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        assert_eq!(header, DIAG_CSV_HEADER);
+        assert_eq!(header.split(',').count(), 14);
+        let layer_row = lines.next().unwrap();
+        assert!(layer_row.starts_with("0,conv1.kernel,"));
+        assert_eq!(layer_row.split(',').count(), 14, "absent metrics stay as empty cells");
+        let agg = lines.next().unwrap();
+        assert!(agg.contains(",1024,"), "aggregate carries cumulative bytes");
+        assert!(lines.next().is_none());
+    }
+
+    #[test]
+    fn diag_json_carries_aggregates_and_parses() {
+        let j = diag_json(&diag_state());
+        let reparsed = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(reparsed.get("sample").unwrap().as_arr().unwrap().len(), 2);
+        let cos = reparsed.get("run_adjacent_cosine").unwrap().as_arr().unwrap();
+        assert!((cos[0].as_f64().unwrap() - 0.9).abs() < 1e-12);
+        let rounds = reparsed.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 1, "aggregate rows only");
+        assert!(rounds[0].get("nrmse").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn metrics_json_with_diag_gains_the_section() {
+        let tel = traced();
+        let dir = std::env::temp_dir().join("gradestc_diag_export_test");
+        let path = dir.join("metrics.json");
+        write_metrics_json_with_diag(&tel, Some(&diag_state()), &path).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(doc.get("diag").is_some(), "diag section attached");
+        assert_eq!(doc.get("backend").unwrap().as_str(), Some("scalar"));
+        write_metrics_json_with_diag(&tel, None, &path).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(doc.get("diag").is_none(), "plain document without state");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

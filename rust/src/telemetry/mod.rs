@@ -14,6 +14,10 @@
 //! * [`Observer`] — the streaming per-arrival probe API called from all
 //!   three schedulers (the successor of the sync-only round hook).
 //!
+//! The diagnostics plane rides on the third surface: [`DiagProbe`] is an
+//! `Observer` that drives the [`crate::diag`] estimators and publishes
+//! `diag.*` gauges and [`Phase::Diag`] spans into the first two.
+//!
 //! **Disabled-path cost contract:** a `Simulation` without
 //! `enable_telemetry()` holds `None` — no span buffer, no registry, no
 //! transport wrapper is ever allocated, and every instrumentation site is
@@ -22,11 +26,13 @@
 //! results stay bit-identical at any worker count — locked in by
 //! `rust/tests/telemetry.rs`.
 
+mod diag;
 pub mod export;
 mod observer;
 mod registry;
 mod tracer;
 
+pub use diag::DiagProbe;
 pub use observer::{ApplyEvent, ArrivalEvent, DispatchEvent, Observer};
 pub use registry::{Histogram, MetricsRegistry, RoundSnapshot, STALENESS_BOUNDS};
 pub use tracer::{Phase, Span};

@@ -41,11 +41,14 @@ pub enum Phase {
     Apply,
     /// Held-out evaluation of the stepped model (host).
     Eval,
+    /// The diagnostics plane's per-round estimator pass — subspace
+    /// drift, streaming correlation, fidelity, bytes-per-loss (host).
+    Diag,
 }
 
 impl Phase {
     /// All phases, in lifecycle order.
-    pub const ALL: [Phase; 8] = [
+    pub const ALL: [Phase; 9] = [
         Phase::LaneMaterialize,
         Phase::BroadcastEncode,
         Phase::ClientCompress,
@@ -54,6 +57,7 @@ impl Phase {
         Phase::Fold,
         Phase::Apply,
         Phase::Eval,
+        Phase::Diag,
     ];
 
     /// Stable snake_case name (the `name` field in trace exports).
@@ -67,6 +71,7 @@ impl Phase {
             Phase::Fold => "fold",
             Phase::Apply => "apply",
             Phase::Eval => "eval",
+            Phase::Diag => "diag",
         }
     }
 }

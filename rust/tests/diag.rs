@@ -1,0 +1,296 @@
+//! Integration tests for the diagnostics plane (`gradestc::diag` +
+//! `gradestc::telemetry::DiagProbe`): arming diagnostics never perturbs
+//! results (diag-off / diag-on w1 / diag-on w8 runs are bit-identical for
+//! every scheduler × compressor, with dropout, heterogeneous links, and a
+//! straggler deadline on), the diagnostics themselves are
+//! worker-count-invariant, lossless dense decodes report exactly-zero
+//! NRMSE, the streaming adjacent-cosine estimator reproduces the Fig. 1
+//! probe's `adjacent_similarity` bitwise on a live run, and every
+//! exported metric respects its mathematical range (native backend:
+//! hermetic, no artifacts needed).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use gradestc::config::{
+    BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
+    LaneConfig, NetConfig, SchedConfig, SchedKind,
+};
+use gradestc::coordinator::{RoundHookView, Simulation};
+use gradestc::diag::{sample_clients, DiagConfig, DiagState};
+use gradestc::metrics::{RoundRecord, SimilarityProbe};
+use gradestc::model::meta::layer_table;
+use gradestc::telemetry::DiagProbe;
+
+fn base_cfg(name: &str, comp: CompressorKind) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.into(),
+        dataset: DatasetKind::SynthMnist,
+        model: gradestc::config::ModelKind::LeNet5,
+        distribution: DataDistribution::Iid,
+        num_clients: 8,
+        participation: 1.0,
+        rounds: 4,
+        local_epochs: 1,
+        batch_size: 32,
+        lr: 0.05,
+        samples_per_client: 128,
+        test_samples: 128,
+        eval_every: 1,
+        threshold_frac: 0.9,
+        compressor: comp,
+        seed: 11,
+        use_xla: false,
+        artifacts_dir: "artifacts".into(),
+        workers: 1,
+        net: NetConfig::default(),
+        sched: SchedConfig::default(),
+        backend: BackendKind::Auto,
+        lanes: LaneConfig::default(),
+    }
+}
+
+fn gradestc8() -> CompressorKind {
+    CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() })
+}
+
+/// Bitwise comparison of the scalar record fields (floats by bits so NaN
+/// evals also count as equal). `ext` is deliberately not compared: it is
+/// observation, present only on armed runs.
+fn assert_rounds_bitwise_equal(a: &[RoundRecord], b: &[RoundRecord], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: round count");
+    for (x, y) in a.iter().zip(b) {
+        let r = x.round;
+        assert_eq!(x.round, y.round, "{label}");
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{label}: loss, round {r}");
+        assert_eq!(
+            x.test_accuracy.to_bits(),
+            y.test_accuracy.to_bits(),
+            "{label}: accuracy, round {r}"
+        );
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{label}: test_loss, round {r}");
+        assert_eq!(x.uplink_bytes, y.uplink_bytes, "{label}: uplink, round {r}");
+        assert_eq!(x.downlink_bytes, y.downlink_bytes, "{label}: downlink, round {r}");
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{label}: sim_time, round {r}");
+        assert_eq!(
+            x.sim_clock_s.to_bits(),
+            y.sim_clock_s.to_bits(),
+            "{label}: sim_clock, round {r}"
+        );
+        assert_eq!(x.sum_d, y.sum_d, "{label}: sum_d, round {r}");
+        assert_eq!(x.survivors, y.survivors, "{label}: survivors, round {r}");
+    }
+}
+
+fn bits(v: Option<f64>) -> Option<u64> {
+    v.map(f64::to_bits)
+}
+
+/// The diagnostics themselves must also be worker-count-invariant:
+/// arrivals are replayed to the observer in a deterministic order, so two
+/// armed runs of the same config must accumulate identical state.
+fn assert_diag_states_bitwise_equal(a: &DiagState, b: &DiagState, label: &str) {
+    assert_eq!(a.sample, b.sample, "{label}: sampled clients");
+    assert_eq!(a.layer_names, b.layer_names, "{label}: layer names");
+    assert_eq!(a.run_adj_pairs, b.run_adj_pairs, "{label}: adjacent pairs");
+    let (sa, sb): (Vec<u64>, Vec<u64>) = (
+        a.run_adj_sum.iter().map(|v| v.to_bits()).collect(),
+        b.run_adj_sum.iter().map(|v| v.to_bits()).collect(),
+    );
+    assert_eq!(sa, sb, "{label}: run adjacent-cosine sums");
+    assert_eq!(a.rows.len(), b.rows.len(), "{label}: row count");
+    for (x, y) in a.rows.iter().zip(&b.rows) {
+        let tag = format!("{label}: round {} layer {}", x.round, x.layer);
+        assert_eq!(x.round, y.round, "{tag}");
+        assert_eq!(x.layer, y.layer, "{tag}");
+        assert_eq!(bits(x.drift_mean_angle), bits(y.drift_mean_angle), "{tag}: mean angle");
+        assert_eq!(bits(x.drift_max_angle), bits(y.drift_max_angle), "{tag}: max angle");
+        assert_eq!(bits(x.drift_chordal), bits(y.drift_chordal), "{tag}: chordal");
+        assert_eq!(x.churn_dr, y.churn_dr, "{tag}: churn");
+        assert_eq!(bits(x.energy_coverage), bits(y.energy_coverage), "{tag}: coverage");
+        assert_eq!(bits(x.cosine), bits(y.cosine), "{tag}: cosine");
+        assert_eq!(bits(x.nrmse), bits(y.nrmse), "{tag}: nrmse");
+        assert_eq!(bits(x.stable_rank), bits(y.stable_rank), "{tag}: stable rank");
+        assert_eq!(
+            bits(x.bytes_per_unit_energy),
+            bits(y.bytes_per_unit_energy),
+            "{tag}: bytes/energy"
+        );
+        assert_eq!(x.cum_uplink_bytes, y.cum_uplink_bytes, "{tag}: cum bytes");
+        assert_eq!(bits(x.loss_drop), bits(y.loss_drop), "{tag}: loss drop");
+        assert_eq!(bits(x.bytes_per_loss), bits(y.bytes_per_loss), "{tag}: bytes/loss");
+    }
+}
+
+/// Run a config bare (no telemetry, no observer).
+fn run_plain(
+    mut cfg: ExperimentConfig,
+    workers: usize,
+) -> (Vec<RoundRecord>, Vec<(u64, u64)>, u64) {
+    cfg.workers = workers;
+    let mut sim = Simulation::build(cfg).unwrap();
+    sim.run_scheduled().unwrap();
+    (sim.recorder.rounds().to_vec(), sim.lane_fingerprints(), sim.total_uplink())
+}
+
+/// Run a config with telemetry + the diagnostics probe armed.
+fn run_diag(
+    mut cfg: ExperimentConfig,
+    workers: usize,
+    dcfg: DiagConfig,
+) -> (Vec<RoundRecord>, Vec<(u64, u64)>, u64, DiagState) {
+    cfg.workers = workers;
+    let mut sim = Simulation::build(cfg.clone()).unwrap();
+    let tel = sim.enable_telemetry();
+    let probe = DiagProbe::new(&cfg, dcfg).with_telemetry(tel);
+    let state = probe.state();
+    sim.set_observer(Box::new(probe));
+    sim.run_scheduled().unwrap();
+    let out = state.borrow().clone();
+    (sim.recorder.rounds().to_vec(), sim.lane_fingerprints(), sim.total_uplink(), out)
+}
+
+/// Tentpole acceptance: diagnostics observe without participating. For
+/// every scheduler × {GradESTC, TopK}, with dropout, heterogeneous links,
+/// and a straggler deadline on, the diag-off run, the armed sequential
+/// run, and the armed 8-worker run produce bit-identical records, lane
+/// fingerprints, and ledger totals — and the two armed runs accumulated
+/// bitwise-identical diagnostics.
+#[test]
+fn diag_runs_bit_identical_to_plain_at_any_worker_count() {
+    for kind in [
+        SchedKind::Sync,
+        SchedKind::SemiSync,
+        SchedKind::Async { k: 3, staleness_p: 0.5 },
+    ] {
+        for (label, comp) in
+            [("gradestc", gradestc8()), ("topk", CompressorKind::TopK { frac: 0.1 })]
+        {
+            let mut cfg = base_cfg(&format!("it-diag-{}-{label}", kind.name()), comp);
+            cfg.net.dropout = 0.1;
+            cfg.net.het_spread = 0.5;
+            cfg.net.deadline_s = 2.0;
+            cfg.sched.kind = kind;
+            let tag = format!("{} {label}", kind.name());
+            let (plain, fp_plain, up_plain) = run_plain(cfg.clone(), 1);
+            let (d1, fp1, up1, st1) = run_diag(cfg.clone(), 1, DiagConfig::default());
+            let (d8, fp8, up8, st8) = run_diag(cfg, 8, DiagConfig::default());
+            assert!(!st1.rows.is_empty(), "{tag}: probe accumulated nothing");
+            assert_rounds_bitwise_equal(&plain, &d1, &format!("{tag}: diag-off vs diag-on w1"));
+            assert_rounds_bitwise_equal(&d1, &d8, &format!("{tag}: diag-on w1 vs w8"));
+            assert_eq!(fp_plain, fp1, "{tag}: lane fingerprints diag-off vs diag-on");
+            assert_eq!(fp1, fp8, "{tag}: lane fingerprints w1 vs w8");
+            assert_eq!(up_plain, up1, "{tag}: uplink diag-off vs diag-on");
+            assert_eq!(up1, up8, "{tag}: uplink w1 vs w8");
+            assert_diag_states_bitwise_equal(&st1, &st8, &tag);
+        }
+    }
+}
+
+/// Fidelity contract: a lossless (uncompressed) run reports NRMSE of
+/// exactly 0.0 and energy coverage of exactly 1.0 wherever the estimator
+/// had something to measure — the invariant `scripts/check_diag.py`
+/// gates on for raw runs.
+#[test]
+fn lossless_runs_report_exactly_zero_nrmse() {
+    let cfg = base_cfg("it-diag-lossless", CompressorKind::None);
+    let (_, _, _, st) = run_diag(cfg, 1, DiagConfig::default());
+    let measured = st.rows.iter().filter(|r| r.nrmse.is_some()).count();
+    assert!(measured > 0, "no fidelity measurements on a dense run");
+    for row in &st.rows {
+        if let Some(n) = row.nrmse {
+            assert_eq!(n.to_bits(), 0.0f64.to_bits(), "round {} layer {}", row.round, row.layer);
+        }
+        if let Some(c) = row.energy_coverage {
+            assert_eq!(c.to_bits(), 1.0f64.to_bits(), "round {} layer {}", row.round, row.layer);
+        }
+    }
+}
+
+/// Equivalence contract: the streaming adjacent-cosine estimator
+/// reproduces the Fig. 1 probe's `adjacent_similarity` bitwise on a live
+/// run — same gradient stream (two identical deterministic runs; the
+/// simulation holds one observer slot), same kernel, same summation
+/// order, same divisor.
+#[test]
+fn streaming_cosine_matches_fig1_probe_bitwise() {
+    let mut cfg = base_cfg("it-diag-equiv", CompressorKind::None);
+    cfg.rounds = 5;
+    let sample = sample_clients(cfg.seed, cfg.num_clients, 1);
+    assert_eq!(sample.len(), 1);
+    let cid = sample[0];
+
+    // Run 1: the legacy Fig. 1 probe fed every tensor of the sampled
+    // client through the round hook.
+    let meta = layer_table(cfg.model);
+    let names: Vec<String> = meta.layers.iter().map(|l| l.name.clone()).collect();
+    let probe = Rc::new(RefCell::new(SimilarityProbe::new(names)));
+    let probe2 = probe.clone();
+    let mut sim = Simulation::build(cfg.clone()).unwrap();
+    sim.set_round_hook(Box::new(move |_round, view: &RoundHookView| {
+        if let Some((_, tensors)) = view.updates.iter().find(|(id, _)| *id == cid) {
+            probe2.borrow_mut().record_round(tensors.clone());
+        }
+    }));
+    sim.run_scheduled().unwrap();
+    let lazy = probe.borrow().adjacent_similarity();
+
+    // Run 2: the streaming estimator, sampling the same single client.
+    let (_, _, _, st) = run_diag(cfg, 1, DiagConfig { sample: 1 });
+    assert_eq!(st.sample, sample, "diag sampled a different client");
+    let streaming = st.adjacent_mean_per_layer();
+    assert_eq!(streaming.len(), lazy.len(), "layer count");
+    assert_eq!(st.run_adj_pairs as usize, probe.borrow().rounds() - 1, "pair count");
+    for (l, (s, z)) in streaming.iter().zip(&lazy).enumerate() {
+        assert_eq!(s.to_bits(), z.to_bits(), "layer {l} diverged");
+    }
+}
+
+/// Range sanity over a real GradESTC run, sync and async: principal
+/// angles live in [0, π/2] with max ≥ mean, cosines in [−1, 1], NRMSE in
+/// [0, 1], cumulative uplink bytes are monotone over the aggregate rows,
+/// and the drift estimator actually fired (GradESTC ships low-rank
+/// bases).
+#[test]
+fn diag_metrics_respect_ranges_and_monotonicity() {
+    for kind in [SchedKind::Sync, SchedKind::Async { k: 3, staleness_p: 0.5 }] {
+        let mut cfg = base_cfg(&format!("it-diag-sanity-{}", kind.name()), gradestc8());
+        cfg.rounds = 5;
+        cfg.sched.kind = kind;
+        let (_, _, _, st) = run_diag(cfg, 1, DiagConfig::default());
+        let half_pi = std::f64::consts::FRAC_PI_2 + 1e-9;
+        let mut drift_rows = 0usize;
+        let mut prev_cum = 0u64;
+        for row in &st.rows {
+            let tag = format!("{} round {} layer {}", kind.name(), row.round, row.layer);
+            if let (Some(mean), Some(max)) = (row.drift_mean_angle, row.drift_max_angle) {
+                drift_rows += 1;
+                assert!((0.0..=half_pi).contains(&mean), "{tag}: mean angle {mean}");
+                assert!((0.0..=half_pi).contains(&max), "{tag}: max angle {max}");
+                assert!(max >= mean - 1e-12, "{tag}: max {max} < mean {mean}");
+                let chordal = row.drift_chordal.expect("chordal rides with angles");
+                assert!(chordal >= 0.0, "{tag}: chordal {chordal}");
+            }
+            if let Some(c) = row.cosine {
+                assert!((-1.0 - 1e-9..=1.0 + 1e-9).contains(&c), "{tag}: cosine {c}");
+            }
+            if let Some(n) = row.nrmse {
+                assert!((0.0..=1.0 + 1e-9).contains(&n), "{tag}: nrmse {n}");
+            }
+            if let Some(cov) = row.energy_coverage {
+                assert!((0.0..=1.0 + 1e-9).contains(&cov), "{tag}: coverage {cov}");
+            }
+            if let Some(b) = row.bytes_per_unit_energy {
+                assert!(b > 0.0, "{tag}: bytes/energy {b}");
+            }
+            if row.layer == "*" {
+                let cum = row.cum_uplink_bytes.expect("aggregate rows carry cum bytes");
+                assert!(cum >= prev_cum, "{tag}: cum bytes regressed {prev_cum} -> {cum}");
+                prev_cum = cum;
+            }
+        }
+        if matches!(kind, SchedKind::Sync) {
+            assert!(drift_rows > 0, "sync gradestc run produced no drift samples");
+        }
+    }
+}

@@ -1,0 +1,257 @@
+#!/usr/bin/env python3
+"""Diagnostics-plane validator for gradestc ``diag.csv`` exports.
+
+Checks the files written by ``gradestc train --diag`` /
+``gradestc exp --diag`` / ``gradestc exp diag1`` (see
+``rust/src/telemetry/export.rs``):
+
+* the header matches the exporter's column order exactly
+  (``round,layer,drift_mean_angle,...,bytes_per_loss``);
+* every row parses — ``round`` an integer, metric cells either empty
+  (estimator had nothing to measure) or finite numbers;
+* principal angles live in [0, pi/2], with ``drift_max_angle >=
+  drift_mean_angle`` per row;
+* cosines live in [-1, 1]; NRMSE and energy coverage in [0, 1];
+* ``churn_dr`` is a non-negative integer; ``stable_rank`` >= 1 and
+  ``bytes_per_unit_energy`` > 0 where present;
+* each round's rows end with exactly one ``layer = "*"`` aggregate row,
+  and over those aggregate rows ``cum_uplink_bytes`` is present and
+  monotonically non-decreasing;
+* with ``--raw`` (uncompressed / lossless runs), every present NRMSE is
+  exactly 0 and every present energy coverage exactly 1 — the fidelity
+  estimator's lossless contract;
+* ``--metrics <file>`` (repeatable) additionally validates a metrics
+  JSON: it must carry a ``"diag"`` section with the sampled clients,
+  layer names, run-level adjacent cosines (in [-1, 1], one per layer),
+  the adjacent-pair count, and per-round aggregate rows.
+
+Usage:
+    check_diag.py [--raw] [--metrics <metrics.json>]... <diag.csv> [<diag.csv> ...]
+
+Exit codes: 0 = all files valid, 1 = validation failure, 2 = usage/IO.
+"""
+
+import json
+import math
+import sys
+
+EXPECTED_HEADER = (
+    "round,layer,drift_mean_angle,drift_max_angle,drift_chordal,churn_dr,"
+    "energy_coverage,cosine,nrmse,stable_rank,bytes_per_unit_energy,"
+    "cum_uplink_bytes,loss_drop,bytes_per_loss"
+)
+COLUMNS = EXPECTED_HEADER.split(",")
+EPS = 1e-9
+HALF_PI = math.pi / 2
+
+
+def fail(path, msg):
+    print(f"check_diag: {path}: {msg}", file=sys.stderr)
+    return False
+
+
+def parse_cell(path, lineno, name, cell):
+    """Empty cell -> None; otherwise a finite float (or raise via fail)."""
+    if cell == "":
+        return None, True
+    try:
+        v = float(cell)
+    except ValueError:
+        return None, fail(path, f"line {lineno}: {name} {cell!r} is not numeric")
+    if not math.isfinite(v):
+        return None, fail(path, f"line {lineno}: {name} {cell!r} is not finite")
+    return v, True
+
+
+def in_range(path, lineno, name, v, lo, hi):
+    if v is None:
+        return True
+    if not (lo - EPS <= v <= hi + EPS):
+        return fail(path, f"line {lineno}: {name} {v} outside [{lo}, {hi}]")
+    return True
+
+
+def check_csv(path, raw=False):
+    try:
+        with open(path, encoding="utf-8") as fh:
+            lines = fh.read().splitlines()
+    except OSError as exc:
+        print(f"check_diag: cannot read {path}: {exc}", file=sys.stderr)
+        sys.exit(2)
+    if not lines:
+        return fail(path, "empty file")
+    if lines[0] != EXPECTED_HEADER:
+        return fail(path, f"header mismatch:\n  got  {lines[0]}\n  want {EXPECTED_HEADER}")
+
+    ok = True
+    n_rows = 0
+    prev_cum = None  # last aggregate row's cum_uplink_bytes
+    round_has_agg = {}  # round -> bool (aggregate row seen)
+    for lineno, line in enumerate(lines[1:], start=2):
+        if not line:
+            continue
+        cells = line.split(",")
+        if len(cells) != len(COLUMNS):
+            ok = fail(path, f"line {lineno}: {len(cells)} cells, want {len(COLUMNS)}")
+            continue
+        row = dict(zip(COLUMNS, cells))
+        n_rows += 1
+        try:
+            rnd = int(row["round"])
+        except ValueError:
+            ok = fail(path, f"line {lineno}: round {row['round']!r} is not an integer")
+            continue
+        layer = row["layer"]
+        if not layer:
+            ok = fail(path, f"line {lineno}: empty layer name")
+        if round_has_agg.get(rnd):
+            ok = fail(path, f"line {lineno}: row after round {rnd}'s aggregate")
+
+        vals = {}
+        for name in COLUMNS[2:]:
+            vals[name], good = parse_cell(path, lineno, name, row[name])
+            ok = good and ok
+
+        ok = in_range(path, lineno, "drift_mean_angle", vals["drift_mean_angle"], 0, HALF_PI) and ok
+        ok = in_range(path, lineno, "drift_max_angle", vals["drift_max_angle"], 0, HALF_PI) and ok
+        mean_a, max_a = vals["drift_mean_angle"], vals["drift_max_angle"]
+        if mean_a is not None and max_a is not None and max_a < mean_a - EPS:
+            ok = fail(path, f"line {lineno}: max angle {max_a} < mean angle {mean_a}")
+        if vals["drift_chordal"] is not None and vals["drift_chordal"] < -EPS:
+            ok = fail(path, f"line {lineno}: negative chordal distance {vals['drift_chordal']}")
+        churn = vals["churn_dr"]
+        if churn is not None and (churn < 0 or churn != int(churn)):
+            ok = fail(path, f"line {lineno}: churn_dr {churn} is not a non-negative integer")
+        ok = in_range(path, lineno, "energy_coverage", vals["energy_coverage"], 0, 1) and ok
+        ok = in_range(path, lineno, "cosine", vals["cosine"], -1, 1) and ok
+        ok = in_range(path, lineno, "nrmse", vals["nrmse"], 0, 1) and ok
+        if vals["stable_rank"] is not None and vals["stable_rank"] < 1 - EPS:
+            ok = fail(path, f"line {lineno}: stable_rank {vals['stable_rank']} < 1")
+        bpe = vals["bytes_per_unit_energy"]
+        if bpe is not None and bpe <= 0:
+            ok = fail(path, f"line {lineno}: bytes_per_unit_energy {bpe} not positive")
+
+        if raw:
+            if vals["nrmse"] not in (None, 0.0):
+                ok = fail(path, f"line {lineno}: raw run but nrmse {vals['nrmse']} != 0")
+            if vals["energy_coverage"] not in (None, 1.0):
+                ok = fail(
+                    path,
+                    f"line {lineno}: raw run but energy_coverage "
+                    f"{vals['energy_coverage']} != 1",
+                )
+
+        if layer == "*":
+            round_has_agg[rnd] = True
+            cum = vals["cum_uplink_bytes"]
+            if cum is None:
+                ok = fail(path, f"line {lineno}: aggregate row without cum_uplink_bytes")
+            else:
+                if prev_cum is not None and cum < prev_cum:
+                    ok = fail(
+                        path,
+                        f"line {lineno}: cum_uplink_bytes regressed {prev_cum} -> {cum}",
+                    )
+                prev_cum = cum
+        else:
+            round_has_agg.setdefault(rnd, False)
+            for name in ("cum_uplink_bytes", "loss_drop", "bytes_per_loss"):
+                if vals[name] is not None:
+                    ok = fail(path, f"line {lineno}: {name} set on a per-layer row")
+
+    if n_rows == 0:
+        ok = fail(path, "no data rows")
+    missing = sorted(r for r, has in round_has_agg.items() if not has)
+    if missing:
+        ok = fail(path, f"rounds without an aggregate row: {missing}")
+    if ok:
+        print(f"check_diag: {path}: ok ({n_rows} rows, {len(round_has_agg)} rounds)")
+    return ok
+
+
+def check_metrics(path):
+    try:
+        with open(path, encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError) as exc:
+        print(f"check_diag: cannot read {path}: {exc}", file=sys.stderr)
+        sys.exit(2)
+    if not isinstance(doc, dict):
+        return fail(path, "top level is not an object")
+    diag = doc.get("diag")
+    if not isinstance(diag, dict):
+        return fail(path, "no 'diag' section (was the run armed with --diag?)")
+    ok = True
+    sample = diag.get("sample")
+    if not isinstance(sample, list) or not all(isinstance(c, (int, float)) for c in sample):
+        ok = fail(path, "diag.sample missing or not a numeric list")
+    layers = diag.get("layers")
+    if not isinstance(layers, list) or not all(isinstance(n, str) for n in layers):
+        ok = fail(path, "diag.layers missing or not a string list")
+    cosines = diag.get("run_adjacent_cosine")
+    if not isinstance(cosines, list):
+        ok = fail(path, "diag.run_adjacent_cosine missing or not a list")
+    else:
+        if isinstance(layers, list) and len(cosines) != len(layers):
+            ok = fail(path, f"{len(cosines)} run cosines for {len(layers)} layers")
+        for i, c in enumerate(cosines):
+            if not isinstance(c, (int, float)) or not (-1 - EPS <= c <= 1 + EPS):
+                ok = fail(path, f"diag.run_adjacent_cosine[{i}] = {c!r} outside [-1, 1]")
+    pairs = diag.get("adjacent_pairs")
+    if not isinstance(pairs, (int, float)) or pairs < 0:
+        ok = fail(path, f"diag.adjacent_pairs {pairs!r} is not a non-negative number")
+    rounds = diag.get("rounds")
+    if not isinstance(rounds, list) or not rounds:
+        ok = fail(path, "diag.rounds missing or empty")
+    else:
+        prev_cum = None
+        for i, row in enumerate(rounds):
+            if not isinstance(row, dict) or "round" not in row:
+                ok = fail(path, f"diag.rounds[{i}] malformed")
+                continue
+            cum = row.get("cum_uplink_bytes")
+            if isinstance(cum, (int, float)):
+                if prev_cum is not None and cum < prev_cum:
+                    ok = fail(path, f"diag.rounds[{i}]: cum bytes regressed {prev_cum} -> {cum}")
+                prev_cum = cum
+            n = row.get("nrmse")
+            if isinstance(n, (int, float)) and not (-EPS <= n <= 1 + EPS):
+                ok = fail(path, f"diag.rounds[{i}]: nrmse {n} outside [0, 1]")
+            c = row.get("cosine")
+            if isinstance(c, (int, float)) and not (-1 - EPS <= c <= 1 + EPS):
+                ok = fail(path, f"diag.rounds[{i}]: cosine {c} outside [-1, 1]")
+    if ok:
+        n_rounds = len(rounds) if isinstance(rounds, list) else 0
+        print(f"check_diag: {path}: ok (diag section, {n_rounds} round aggregates)")
+    return ok
+
+
+def main(argv):
+    raw = False
+    metrics = []
+    paths = []
+    it = iter(argv)
+    for arg in it:
+        if arg == "--raw":
+            raw = True
+        elif arg == "--metrics":
+            m = next(it, None)
+            if m is None:
+                print("check_diag: --metrics needs a file path", file=sys.stderr)
+                return 2
+            metrics.append(m)
+        else:
+            paths.append(arg)
+    if not paths and not metrics:
+        print(__doc__, file=sys.stderr)
+        return 2
+    ok = True
+    for path in paths:
+        ok = check_csv(path, raw=raw) and ok
+    for path in metrics:
+        ok = check_metrics(path) and ok
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
