@@ -8,7 +8,7 @@
 use super::json::Json;
 use crate::linalg::BackendKind;
 use crate::net::NetConfig;
-use crate::sched::{SchedConfig, SchedKind};
+use crate::sched::{AvailConfig, SchedConfig, SchedKind};
 
 /// Which synthetic dataset family to train on (DESIGN.md §2.1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -497,7 +497,35 @@ fn sched_to_json(s: &SchedConfig) -> Json {
     }
     fields.push(("compute_base_s", Json::num(s.compute_base_s)));
     fields.push(("compute_spread", Json::num(s.compute_spread)));
+    fields.push((
+        "avail",
+        Json::obj(vec![
+            ("duty", Json::num(s.avail.duty)),
+            ("period_s", Json::num(s.avail.period_s)),
+            ("churn_per_s", Json::num(s.avail.churn_per_s)),
+            ("outage_s", Json::num(s.avail.outage_s)),
+        ]),
+    ));
+    fields.push(("concurrency", Json::num(s.concurrency as f64)));
+    fields.push(("adaptive_k", Json::Bool(s.adaptive_k)));
+    fields.push(("lr_tau", Json::num(s.lr_tau)));
     Json::obj(fields)
+}
+
+fn parse_avail(j: &Json) -> Result<AvailConfig, String> {
+    let d = AvailConfig::default();
+    let f = |key: &str, dv: f64| -> Result<f64, String> {
+        match j.get(key) {
+            Some(v) => v.as_f64().ok_or_else(|| format!("sched.avail.{key} must be a number")),
+            None => Ok(dv),
+        }
+    };
+    Ok(AvailConfig {
+        duty: f("duty", d.duty)?,
+        period_s: f("period_s", d.period_s)?,
+        churn_per_s: f("churn_per_s", d.churn_per_s)?,
+        outage_s: f("outage_s", d.outage_s)?,
+    })
 }
 
 fn parse_sched(j: &Json) -> Result<SchedConfig, String> {
@@ -527,6 +555,20 @@ fn parse_sched(j: &Json) -> Result<SchedConfig, String> {
         kind,
         compute_base_s: f("compute_base_s", d.compute_base_s)?,
         compute_spread: f("compute_spread", d.compute_spread)?,
+        // Optional for backward compatibility with pre-plane-10 configs:
+        // absent means always-on, concurrency 1, adaptive features off.
+        avail: j.get("avail").map(parse_avail).transpose()?.unwrap_or_default(),
+        concurrency: j
+            .get("concurrency")
+            .map(|v| v.as_usize().ok_or("sched.concurrency must be a positive integer"))
+            .transpose()?
+            .unwrap_or(d.concurrency),
+        adaptive_k: j
+            .get("adaptive_k")
+            .map(|v| v.as_bool().ok_or("sched.adaptive_k must be a bool"))
+            .transpose()?
+            .unwrap_or(d.adaptive_k),
+        lr_tau: f("lr_tau", d.lr_tau)?,
     })
 }
 
@@ -816,10 +858,29 @@ mod tests {
             SchedKind::Async { k: 4, staleness_p: 1.0 },
         ] {
             let mut cfg = ExperimentConfig::preset_quickstart();
-            cfg.sched = SchedConfig { kind, compute_base_s: 0.5, compute_spread: 0.3 };
+            cfg.sched = SchedConfig {
+                kind,
+                compute_base_s: 0.5,
+                compute_spread: 0.3,
+                ..Default::default()
+            };
             let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
             assert_eq!(back, cfg);
         }
+
+        // The plane-10 knobs round-trip too (availability, concurrency,
+        // adaptive server).
+        let mut cfg = ExperimentConfig::preset_quickstart();
+        cfg.sched = SchedConfig {
+            kind: SchedKind::Async { k: 4, staleness_p: 0.5 },
+            avail: AvailConfig { duty: 0.6, period_s: 12.0, churn_per_s: 0.02, outage_s: 3.0 },
+            concurrency: 2,
+            adaptive_k: true,
+            lr_tau: 0.5,
+            ..Default::default()
+        };
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
 
         // Pre-scheduler configs (no "sched" field) parse as lockstep sync.
         let mut j = ExperimentConfig::preset_quickstart().to_json();

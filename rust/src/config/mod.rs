@@ -20,4 +20,4 @@ pub use json::Json;
 // re-exported here because they are part of the experiment schema.
 pub use crate::linalg::BackendKind;
 pub use crate::net::NetConfig;
-pub use crate::sched::{SchedConfig, SchedKind};
+pub use crate::sched::{AvailConfig, SchedConfig, SchedKind};

@@ -132,8 +132,12 @@ pub struct LanePool {
     /// One slot per client id; `None` = not resident (never materialized,
     /// evicted, or currently loaned out via [`LanePool::take`]).
     slots: Vec<Option<Box<Client>>>,
-    /// In-flight lanes exempt from eviction (see module docs).
-    pinned: Vec<bool>,
+    /// In-flight pin *count* per lane, exempting it from eviction while
+    /// positive (see module docs). A count, not a flag: with per-client
+    /// concurrency > 1 the async scheduler can have several uploads of the
+    /// same lane in flight, and the lane must stay pinned until the last
+    /// one is decoded.
+    pinned: Vec<u32>,
     /// Last touch tick per lane, for invalidating stale heap entries.
     last_touch: Vec<u64>,
     /// Monotonic touch counter.
@@ -149,6 +153,8 @@ pub struct LanePool {
     materialized: u64,
     /// Lifetime evictions.
     evictions: u64,
+    /// Lifetime availability-fault discards (see [`LanePool::discard`]).
+    discards: u64,
     /// `None` for a fixed (pre-built) pool, where every lane is resident
     /// forever — the frozen legacy-shards path.
     factory: Option<LaneFactory>,
@@ -162,7 +168,7 @@ impl LanePool {
         let n = clients.len();
         LanePool {
             slots: clients.into_iter().map(|c| Some(Box::new(c))).collect(),
-            pinned: vec![false; n],
+            pinned: vec![0; n],
             last_touch: vec![0; n],
             clock: 0,
             lru: BinaryHeap::new(),
@@ -170,6 +176,7 @@ impl LanePool {
             resident: n,
             materialized: n as u64,
             evictions: 0,
+            discards: 0,
             factory: None,
         }
     }
@@ -178,7 +185,7 @@ impl LanePool {
     pub(crate) fn virtual_lanes(n: usize, factory: LaneFactory, max_resident: usize) -> LanePool {
         LanePool {
             slots: (0..n).map(|_| None).collect(),
-            pinned: vec![false; n],
+            pinned: vec![0; n],
             last_touch: vec![0; n],
             clock: 0,
             lru: BinaryHeap::new(),
@@ -186,6 +193,7 @@ impl LanePool {
             resident: 0,
             materialized: 0,
             evictions: 0,
+            discards: 0,
             factory: Some(factory),
         }
     }
@@ -213,6 +221,11 @@ impl LanePool {
     /// Lifetime lane evictions.
     pub fn eviction_count(&self) -> u64 {
         self.evictions
+    }
+
+    /// Lifetime availability-fault discards.
+    pub fn discard_count(&self) -> u64 {
+        self.discards
     }
 
     fn touch(&mut self, cid: usize) {
@@ -270,13 +283,13 @@ impl LanePool {
         // never evict a lane that [`LanePool::take`] is about to loan) —
         // the cap is a floor with respect to the active cohort, like pins.
         let guard: Vec<usize> =
-            touched.iter().copied().filter(|&c| !self.pinned[c]).collect();
+            touched.iter().copied().filter(|&c| self.pinned[c] == 0).collect();
         for &c in &guard {
-            self.pinned[c] = true;
+            self.pinned[c] += 1;
         }
         self.evict_to_cap();
         for &c in &guard {
-            self.pinned[c] = false;
+            self.pinned[c] -= 1;
         }
     }
 
@@ -299,7 +312,7 @@ impl LanePool {
             if self.last_touch[cid] != t || self.slots[cid].is_none() {
                 continue; // stale entry (re-touched, loaned, or already gone)
             }
-            if self.pinned[cid] {
+            if self.pinned[cid] > 0 {
                 skipped.push(Reverse((t, cid)));
                 continue;
             }
@@ -316,16 +329,42 @@ impl LanePool {
         }
     }
 
-    /// Pin `cid` against eviction (an upload is in flight on it).
+    /// Pin `cid` against eviction (an upload is in flight on it). Pins
+    /// nest: every dispatch pins and every decoded (or faulted) arrival
+    /// unpins, so under concurrency > 1 the lane stays pinned until its
+    /// last in-flight frame resolves.
     pub(crate) fn pin(&mut self, cid: usize) {
-        self.pinned[cid] = true;
+        self.pinned[cid] += 1;
     }
 
-    /// Drop the pin and re-enforce the cap (the pin may have been the only
+    /// Drop one pin and re-enforce the cap (the pin may have been the only
     /// thing holding the pool above it).
     pub(crate) fn unpin(&mut self, cid: usize) {
-        self.pinned[cid] = false;
+        self.pinned[cid] = self.pinned[cid].saturating_sub(1);
         self.evict_to_cap();
+    }
+
+    /// Drop lane `cid` entirely — the availability-fault path. The
+    /// client departed with an upload in flight: its client-side
+    /// compressor advanced at dispatch with no decode to match, so the
+    /// paired state is unrecoverable and the lane must not stay resident
+    /// (or pinned). A later [`LanePool::lane_mut`]/
+    /// [`LanePool::ensure_resident`] re-materializes the lane bit-exactly
+    /// from `(seed, cid)` via the factory, re-interning its basis through
+    /// the shared [`BasisPool`] — which is precisely how a
+    /// departed-then-returning client re-enters fingerprint lockstep.
+    /// Requires a factory (the fixed legacy-shards pool cannot rebuild a
+    /// dropped lane; `Simulation::build` rejects that combination).
+    pub(crate) fn discard(&mut self, cid: usize) {
+        debug_assert!(self.factory.is_some(), "discarding a lane from a fixed pool");
+        self.pinned[cid] = 0;
+        if self.slots[cid].take().is_some() {
+            self.resident -= 1;
+            self.discards += 1;
+            if let Some(f) = &self.factory {
+                f.pool.sweep();
+            }
+        }
     }
 
     /// Mutable access to one lane, materializing it on the spot if needed

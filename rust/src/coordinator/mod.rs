@@ -269,6 +269,16 @@ impl Simulation {
         cfg.net.validate().map_err(|e| anyhow!("invalid network config: {e}"))?;
         cfg.sched.validate().map_err(|e| anyhow!("invalid scheduler config: {e}"))?;
         cfg.lanes.validate().map_err(|e| anyhow!("invalid lane config: {e}"))?;
+        // Cross-plane coherence: a fault discards the departed client's
+        // lane, and only the virtual-lane factory can re-materialize it
+        // from (seed, cid) — the fixed legacy-shards pool cannot.
+        if cfg.sched.avail.armed() && cfg.lanes.legacy_shards {
+            return Err(anyhow!(
+                "availability/churn (--avail < 1 or --churn > 0) is incompatible with \
+                 --legacy-shards: a faulted client's lane is discarded and must be \
+                 re-materialized from (seed, cid), which the fixed legacy pool cannot do"
+            ));
+        }
         let meta = layer_table(cfg.model);
         let mut root = Pcg64::new(cfg.seed, 0x51);
 
@@ -477,6 +487,7 @@ impl Simulation {
             tel.gauge("lanes.resident", self.lanes.resident() as f64);
             tel.gauge("lanes.materialized", self.lanes.materializations() as f64);
             tel.gauge("lanes.evictions", self.lanes.eviction_count() as f64);
+            tel.gauge("lanes.discarded", self.lanes.discard_count() as f64);
             tel.count("sum_d", record.sum_d);
             record.ext = Some(tel.snapshot_round(record.round as u64));
         }

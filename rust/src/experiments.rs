@@ -13,8 +13,8 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use gradestc::config::{
-    CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams, LaneConfig,
-    ModelKind, SchedKind,
+    AvailConfig, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
+    LaneConfig, ModelKind, SchedKind,
 };
 use gradestc::coordinator::{RoundHookView, Simulation};
 use gradestc::diag::{DiagConfig, DiagState};
@@ -166,7 +166,7 @@ pub fn cmd_exp(argv: Vec<String>) -> i32 {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
             eprintln!(
-                "usage: gradestc exp <fig1|fig2|table3|table4|fig7|fig8|fig9|async1|scale1|scale2|diag1> [opts]"
+                "usage: gradestc exp <fig1|fig2|table3|table4|fig7|fig8|fig9|async1|scale1|scale2|diag1|churn1> [opts]"
             );
             return 2;
         }
@@ -241,6 +241,7 @@ pub fn cmd_exp(argv: Vec<String>) -> i32 {
         "scale1" => exp_scale1(&ctx),
         "scale2" => exp_scale2(&ctx),
         "diag1" => exp_diag1(&ctx),
+        "churn1" => exp_churn1(&ctx),
         other => {
             eprintln!("unknown experiment '{other}'");
             return 2;
@@ -1358,6 +1359,175 @@ fn exp_diag1(ctx: &ExpCtx) -> Result<()> {
     }
     println!(
         "\nper-run diag.csv + metrics JSON in {} (checked by scripts/check_diag.py)",
+        out.display()
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// churn1 — availability & churn under the async buffer
+// ---------------------------------------------------------------------------
+
+/// The availability-plane headline: sweep client availability (always-on
+/// anchor, diurnal duty cycle, diurnal + Poisson churn) against the
+/// compressor family under the async k-buffered server, and report virtual
+/// time-to-target versus the always-on anchor alongside the run's fault
+/// count (mid-flight departures, from the `faults` run counter) and the
+/// basis-drift diagnostics (mean principal angle, adjacent-arrival cosine).
+/// Every cell arms the metrics JSON and the [`DiagProbe`] — the fault
+/// counter and drift columns *are* the experiment's output — and the
+/// always-on cells double as a live assertion that unarmed availability
+/// never faults. `summary.csv` lands in `<out>/churn1/`; the churn-smoke
+/// CI job runs this at 3 rounds and gates it with `scripts/check_diag.py`.
+fn exp_churn1(ctx: &ExpCtx) -> Result<()> {
+    println!(
+        "== churn1: availability × compressor under the async buffer =="
+    );
+    let rounds = ctx.rounds_or(12);
+    let out = PathBuf::from(&ctx.out).join("churn1");
+    std::fs::create_dir_all(&out)?;
+
+    let mk_base = |comp: CompressorKind| -> ExperimentConfig {
+        let mut cfg = ctx.base(DatasetKind::SynthMnist, DataDistribution::Iid, comp, rounds);
+        cfg.num_clients = 8;
+        cfg.samples_per_client = 128;
+        // Heterogeneous links: the regime where departures hurt most.
+        cfg.net.het_spread = 1.0;
+        cfg
+    };
+    let anchor = mk_base(CompressorKind::None);
+    let k_async = (anchor.num_clients / 2).max(1);
+
+    // Availability cells. The 2 s period keeps the on-window
+    // (duty × period = 1.2 s) longer than a typical compressed round trip,
+    // so armed cells fault visibly without livelocking; churn adds Poisson
+    // departures (~1 − e^{−0.1} ≈ 10% per client per window) on top.
+    let avails: Vec<(&str, AvailConfig)> = vec![
+        ("always-on", AvailConfig::default()),
+        ("diurnal", AvailConfig { duty: 0.6, period_s: 2.0, ..Default::default() }),
+        (
+            "churn",
+            AvailConfig { duty: 0.6, period_s: 2.0, churn_per_s: 0.05, outage_s: 1.0 },
+        ),
+    ];
+    let methods: Vec<(&str, CompressorKind)> = vec![
+        ("fedavg", CompressorKind::None),
+        ("topk", CompressorKind::TopK { frac: 0.1 }),
+        (
+            "gradestc",
+            CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+        ),
+    ];
+
+    // Anchor: every cell chases threshold_frac × the always-on FedAvg
+    // run's best accuracy (the first cell).
+    let mut target = 0.0f64;
+    let mut summary = String::from(
+        "method,avail,target_acc,time_to_target_s,rounds_to_target,best_acc,\
+         total_uplink_mb,faults,mean_drift_angle,adjacent_cosine\n",
+    );
+    println!(
+        "\n{:<10} {:<10} {:>15} {:>7} {:>9} {:>7} {:>11} {:>8}",
+        "method", "avail", "t→target (s)", "rounds", "best acc", "faults", "drift(rad)", "adj cos"
+    );
+    let fmt_opt = |v: Option<f64>| v.map(|x| format!("{x:.4}")).unwrap_or_else(|| "-".into());
+    let mut times: Vec<(String, String, Option<f64>)> = Vec::new();
+    let mut tests = TestSetCache::new();
+    for (mname, comp) in &methods {
+        for (aname, avail) in &avails {
+            let mut cfg = mk_base(comp.clone());
+            cfg.name = format!("churn1-{mname}-{aname}");
+            cfg.sched.kind = SchedKind::Async { k: k_async, staleness_p: 0.5 };
+            cfg.sched.avail = *avail;
+            // churn1 always arms the metrics JSON (fault counter) and the
+            // diag probe (drift under churn); --diag/--trace/--metrics
+            // directories override the default paths.
+            let mut sinks = ctx.sinks(&cfg.name);
+            sinks.metrics = Some(
+                sinks
+                    .metrics
+                    .unwrap_or_else(|| out.join(format!("{}.metrics.json", cfg.name))),
+            );
+            sinks.diag =
+                Some(sinks.diag.unwrap_or_else(|| out.join(format!("{}.diag.csv", cfg.name))));
+            let mut sim = tests.build(&cfg)?;
+            sinks.arm(&mut sim);
+            let diag =
+                sinks.arm_diag(&mut sim, &cfg).expect("churn1 always sets a diag sink");
+            let rep = sim.run_scheduled_with_progress(|_, _| {})?;
+            sim.recorder.write_csv(&out.join(format!("{}.csv", cfg.name)))?;
+            let state = diag.borrow();
+            sinks.export_with_diag(&sim, Some(&state), false)?;
+
+            let faults = sim
+                .telemetry()
+                .map(|tel| tel.metrics().run_counter("faults"))
+                .unwrap_or(0);
+            if !avail.armed() && faults != 0 {
+                anyhow::bail!(
+                    "always-on cell {} reported {faults} faults — unarmed availability \
+                     must never fault",
+                    cfg.name
+                );
+            }
+            if *mname == "fedavg" && *aname == "always-on" {
+                target = cfg.threshold_frac * rep.best_accuracy;
+            }
+            let drift = diag_agg_mean(&state, |r| r.drift_mean_angle);
+            let cos = diag_agg_mean(&state, |r| r.cosine);
+            let recs = sim.recorder.rounds();
+            let hit = recs
+                .iter()
+                .find(|r| !r.test_accuracy.is_nan() && r.test_accuracy >= target);
+            let t_target = hit.map(|r| r.sim_clock_s);
+            println!(
+                "{:<10} {:<10} {:>15} {:>7} {:>8.2}% {:>7} {:>11} {:>8}",
+                mname,
+                aname,
+                t_target.map(|t| format!("{t:.2}")).unwrap_or_else(|| "-".into()),
+                hit.map(|r| format!("{}", r.round)).unwrap_or_else(|| "-".into()),
+                rep.best_accuracy * 100.0,
+                faults,
+                fmt_opt(drift),
+                fmt_opt(cos),
+            );
+            summary.push_str(&format!(
+                "{},{},{:.4},{},{},{:.4},{},{},{},{}\n",
+                mname,
+                aname,
+                target,
+                t_target.map(|t| format!("{t:.4}")).unwrap_or_default(),
+                hit.map(|r| format!("{}", r.round)).unwrap_or_default(),
+                rep.best_accuracy,
+                fmt_mb(rep.total_uplink),
+                faults,
+                fmt_opt(drift),
+                fmt_opt(cos),
+            ));
+            times.push((mname.to_string(), aname.to_string(), t_target));
+        }
+    }
+    std::fs::write(out.join("summary.csv"), summary)?;
+    // The acceptance headline: the churn tax per method — virtual
+    // time-to-target under churn vs the always-on anchor.
+    for (mname, _) in &methods {
+        let get = |a: &str| {
+            times
+                .iter()
+                .find(|(m, av, _)| m == mname && av == a)
+                .and_then(|(_, _, t)| *t)
+        };
+        if let (Some(t0), Some(tc)) = (get("always-on"), get("churn")) {
+            println!(
+                "  -> {mname}: churn stretches time-to-target to {:.1}% of always-on \
+                 ({tc:.2}s vs {t0:.2}s)",
+                100.0 * tc / t0
+            );
+        }
+    }
+    println!(
+        "\nper-run CSVs + metrics/diag artifacts in {} (summary.csv has the fault \
+         and drift columns)",
         out.display()
     );
     Ok(())

@@ -13,8 +13,8 @@
 mod experiments;
 
 use gradestc::config::{
-    BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
-    LaneConfig, ModelKind, NetConfig, SchedConfig, SchedKind,
+    AvailConfig, BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig,
+    GradEstcParams, LaneConfig, ModelKind, NetConfig, SchedConfig, SchedKind,
 };
 use gradestc::util::args::ArgSpec;
 
@@ -48,7 +48,7 @@ fn usage() -> String {
      USAGE:\n  gradestc train [OPTIONS]      run one experiment\n  \
      gradestc exp <id> [OPTIONS]   regenerate a paper table/figure\n  \
      gradestc info [--artifacts d] inspect the artifact manifest\n\n\
-     exp ids: fig1 fig2 table3 table4 fig7 fig8 fig9 async1 scale1 scale2 diag1\n\
+     exp ids: fig1 fig2 table3 table4 fig7 fig8 fig9 async1 scale1 scale2 diag1 churn1\n\
      try: gradestc train --help"
         .to_string()
 }
@@ -169,7 +169,33 @@ fn cmd_train(argv: Vec<String>) -> i32 {
         .opt(
             "sched",
             "sync",
-            "round scheduler: sync | semisync | async[:k=8,staleness=0.5] (semisync rolls stragglers into the next round; async folds each arrival and applies every k)",
+            "round scheduler: sync | semisync | async[:k=8,staleness=0.5,adaptive=1,lr_tau=0.5,conc=2] (semisync rolls stragglers into the next round; async folds each arrival and applies every k)",
+        )
+        .opt(
+            "avail",
+            "1",
+            "diurnal availability duty cycle in (0,1]: fraction of each period a client is on, per-client phase-shifted; 1 = always on (requires --sched semisync|async when < 1)",
+        )
+        .opt("avail-period", "20", "diurnal availability period (and churn window), virtual seconds")
+        .opt(
+            "churn",
+            "0",
+            "Poisson departure rate per client per virtual second; a departed client's in-flight upload faults (zero bytes, lane discarded); 0 = no churn",
+        )
+        .opt("outage", "5", "max churn outage duration, virtual seconds (capped at the period)")
+        .opt(
+            "concurrency",
+            "1",
+            "per-client concurrent dispatches (async only): train while previous uploads are in flight, arrivals delivered in dispatch order per client",
+        )
+        .opt(
+            "lr-tau",
+            "0",
+            "FedAsync-style server LR exponent: each async apply scaled by 1/(1+mean staleness)^lr_tau; 0 = off",
+        )
+        .flag(
+            "adaptive-k",
+            "adapt the async apply threshold k to the observed arrival rate (shrink under churn, grow when arrivals outpace the initial cadence)",
         )
         .opt(
             "backend",
@@ -234,10 +260,30 @@ fn cmd_train(argv: Vec<String>) -> i32 {
         Ok(c) => c,
         Err(e) => return fail(&e),
     };
-    let sched_kind = match SchedKind::parse(args.str("sched")) {
+    // The --sched spec can carry the async plane-10 fields inline
+    // (adaptive=/lr_tau=/conc=); the dedicated flags below override when
+    // explicitly set, so both spellings work.
+    let mut sched = match SchedConfig::parse_spec(args.str("sched")) {
         Ok(s) => s,
         Err(e) => return fail(&e),
     };
+    sched.avail = AvailConfig {
+        duty: args.f64("avail"),
+        period_s: args.f64("avail-period"),
+        churn_per_s: args.f64("churn"),
+        outage_s: args.f64("outage"),
+    };
+    if args.has_flag("adaptive-k") {
+        sched.adaptive_k = true;
+    }
+    let conc = args.usize("concurrency");
+    if conc != 1 {
+        sched.concurrency = conc;
+    }
+    let lr_tau = args.f64("lr-tau");
+    if lr_tau != 0.0 {
+        sched.lr_tau = lr_tau;
+    }
     let backend = match BackendKind::parse(args.str("backend")) {
         Ok(b) => b,
         Err(e) => return fail(&e),
@@ -256,7 +302,7 @@ fn cmd_train(argv: Vec<String>) -> i32 {
     let use_xla = !args.has_flag("native");
     // Default-sync runs keep their historical result paths; the scheduler
     // tag appears only when a non-default control flow is selected.
-    let sched_tag = match sched_kind {
+    let sched_tag = match sched.kind {
         SchedKind::Sync => String::new(),
         other => format!("-{}", other.name()),
     };
@@ -295,9 +341,9 @@ fn cmd_train(argv: Vec<String>) -> i32 {
             deadline_s: args.f64("deadline"),
         },
         sched: SchedConfig {
-            kind: sched_kind,
             compute_base_s: args.f64("compute-s"),
             compute_spread: args.f64("compute-spread"),
+            ..sched
         },
         backend,
         lanes,

@@ -23,7 +23,39 @@
 //! happen in event order on the single-threaded event loop, so records
 //! stay bit-identical at any worker count.
 //!
-//! # Staleness discount
+//! # Availability, churn, and faults (plane 10)
+//!
+//! With [`AvailModel`](super::AvailModel) armed (`--avail < 1` or
+//! `--churn > 0`) the sampler is always on and its draws are
+//! **availability-weighted**: an offline client is never dispatched (it
+//! stays in the idle pool until a draw finds it on). When every idle
+//! client is offline the unfilled slots park and a `Wake` event is
+//! scheduled at the earliest `next_on` across the idle pool, so the loop
+//! never spins and never deadlocks. A dispatch whose client departs
+//! mid-flight becomes a typed [`Event::Fault`] at its arrival instant:
+//! the slot is released, **zero bytes are charged**, nothing is decoded,
+//! the fault is counted (`faults` counter, [`Phase::Fault`] virtual
+//! span), and the lane is *discarded* — its client-side compressor
+//! advanced at dispatch with no decode to match, so the only way a
+//! returning client stays in fingerprint lockstep is a fresh
+//! re-materialization from `(seed, cid)` through the lane factory and
+//! basis pool.
+//!
+//! # Per-client concurrency
+//!
+//! `--concurrency c > 1` keeps up to `c` dispatches of the same client in
+//! flight (train while the previous upload is still uploading). Arrivals
+//! are version-stamped twice: with the model version they trained on (for
+//! the staleness τ) and with the lane's *epoch* (bumped on every fault
+//! discard) so a frame encoded by a discarded compressor can never be
+//! decoded by its re-materialized successor — it faults instead. A
+//! client's uploads traverse its own uplink as a FIFO pipe: each arrival
+//! time is clamped to be no earlier than the client's previously
+//! scheduled arrival, so same-lane frames decode in dispatch order and
+//! the compress → decode alternation (the temporal-correlation contract)
+//! is preserved.
+//!
+//! # Staleness discount and the adaptive server
 //!
 //! An update dispatched at model version `v` and folded at version `V`
 //! is `τ = V − v` versions stale; its FedAvg weight (the client's shard
@@ -38,7 +70,16 @@
 //! uploads — is untouched either way, because each lane still alternates
 //! compress → decode in its own order). The apply normalizes by the sum of
 //! discounted weights, so an all-fresh buffer reproduces plain FedAvg
-//! weighting.
+//! weighting. Two further FedAsync-style knobs, both inert by default:
+//!
+//! * `lr_tau > 0` additionally scales each apply by `1/(1 + τ̄)^lr_tau`,
+//!   with `τ̄` the buffer's mean observed staleness — a stale buffer
+//!   steps the server model more cautiously.
+//! * `adaptive_k` re-targets the apply threshold after every apply from
+//!   an arrival-rate estimate (EWMA of arrivals per virtual second) so
+//!   the apply *cadence* stays near the first apply's: when churn thins
+//!   the arrival stream `k` shrinks (clamped to `[1, 4k₀]`), when
+//!   arrivals outpace it `k` grows.
 //!
 //! # Virtual time and records
 //!
@@ -64,26 +105,32 @@
 //! applies landed), and a final apply mid-group leaves the instant's
 //! remaining events to the shutdown drain without re-dispatching freed
 //! slots (the pre-batching loop burned one more training pass per slot
-//! whose arrival nothing would ever fold).
+//! whose arrival nothing would ever fold). A fault detected on an
+//! arrival is re-queued as a typed [`Event::Fault`] at the same instant,
+//! so it is handled inside the same group, in event order.
 //!
 //! # Determinism
 //!
-//! Arrival and retry events live on the `(time, seq)`-keyed
+//! Arrival, retry, fault, and wake events live on the `(time, seq)`-keyed
 //! [`EventQueue`]; event *handling* fans work across threads (the initial
 //! cohort dispatch and the batched group re-dispatches use the same
 //! parallel client phase as the sync engine) but event *order* never
-//! depends on the worker count, dropout and compute draws are pure per
-//! `(seed, attempt, cid)`, participation draws happen in event order on a
-//! dedicated stream, and folds happen in arrival order — so `workers = 1`
-//! and `workers = N` produce bit-identical records, apply sequences, and
-//! lane fingerprints (asserted in `rust/tests/sched.rs`, including a
-//! co-temporal-arrival case that exercises the batched dispatch).
+//! depends on the worker count, dropout/compute/availability draws are
+//! pure per `(seed, attempt|vtime, cid)`, participation draws happen in
+//! event order on a dedicated stream, and folds happen in arrival order —
+//! so `workers = 1` and `workers = N` produce bit-identical records,
+//! apply sequences, and lane fingerprints (asserted in
+//! `rust/tests/sched.rs` and `rust/tests/churn.rs`, including
+//! co-temporal-arrival and churn-armed cases). With availability,
+//! concurrency, and the adaptive knobs at their defaults the legacy
+//! per-event draw sequence runs verbatim, so pre-plane-10 runs reproduce
+//! bit-identically.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Context};
 
-use super::{ComputeModel, DispatchedUpload, EventQueue, SchedConfig, Scheduler};
+use super::{AvailModel, ComputeModel, DispatchedUpload, EventQueue, SchedConfig, Scheduler};
 use crate::compress::Decompressor as _;
 use crate::coordinator::{ServerAggregator, Simulation, Trainer as _};
 use crate::metrics::{RoundRecord, RunReport};
@@ -100,9 +147,19 @@ enum Event {
         up: DispatchedUpload,
         /// Model version the client trained on (for the staleness τ).
         version: u64,
+        /// The lane's epoch at dispatch (bumped on every fault discard);
+        /// a stale epoch means the encoding compressor no longer exists.
+        epoch: u64,
     },
     /// A dropped-out dispatch attempt wakes up and tries again.
     Retry { cid: usize },
+    /// An arrival whose client departed mid-flight (or whose lane was
+    /// discarded): release the slot, charge nothing, discard the lane.
+    Fault { cid: usize, epoch: u64 },
+    /// Re-try filling parked slots: the earliest offline idle client is
+    /// due back. Carries no state — the group-end refill re-checks
+    /// availability.
+    Wake,
 }
 
 /// FedBuff-style buffered asynchrony; see the module docs.
@@ -112,43 +169,96 @@ pub struct AsyncBufferedScheduler {
     conf: SchedConfig,
 }
 
+/// Mutable plane-10 loop state: the availability oracle plus the
+/// epoch/FIFO/slot bookkeeping the fault and concurrency paths share.
+struct ChurnState {
+    avail: AvailModel,
+    /// Per-client concurrent dispatch cap (`SchedConfig::concurrency`).
+    conc: usize,
+    /// Bumped whenever a fault discards the lane; arrivals stamped with
+    /// an older epoch fault instead of decoding.
+    lane_epoch: Vec<u64>,
+    /// Latest scheduled arrival per client (FIFO uplink clamp under
+    /// `conc > 1`).
+    last_arrival: Vec<f64>,
+    /// Freed slots waiting for an online client.
+    pending: usize,
+    /// A `Wake` event is already queued.
+    wake_pending: bool,
+    /// Consecutive faults since the last successful fold (livelock
+    /// guard: a config where no upload can ever land must error out, not
+    /// spin the event loop forever).
+    faults_since_fold: u64,
+}
+
 /// Idle-client pool for participation-sampled dispatch
-/// (`participation < 1.0`): uniform draws from the sorted idle set on a
-/// dedicated seed stream, consumed in event order on the single-threaded
-/// event loop — so the dispatch sequence is bit-identical at any worker
-/// count and never perturbs the data/model/link RNG streams.
+/// (`participation < 1.0`) and for the availability/concurrency modes:
+/// uniform draws from the idle set on a dedicated seed stream, consumed
+/// in event order on the single-threaded event loop — so the dispatch
+/// sequence is bit-identical at any worker count and never perturbs the
+/// data/model/link RNG streams.
 struct SlotSampler {
-    /// Clients not currently in flight. Order is arbitrary (swap_remove
-    /// churn) but deterministic: mutated only from the single-threaded
-    /// event loop, so draws replay bit-identically at any worker count.
+    /// Clients currently drawable (remaining capacity > 0). Order is
+    /// arbitrary (swap_remove churn) but deterministic: mutated only from
+    /// the single-threaded event loop, so draws replay bit-identically at
+    /// any worker count.
     idle: Vec<usize>,
     /// `pos[cid]` = cid's index in `idle`, or `IN_FLIGHT`. Keeps release
     /// and draw O(1) per slot at 10⁴–10⁶-client populations — the event
     /// loop processes one of each per arrival.
     pos: Vec<usize>,
+    /// Remaining dispatch capacity per client (`conc` minus in-flight).
+    cap: Vec<u32>,
+    /// Per-client capacity bound.
+    conc: u32,
+    /// Total in-flight dispatches (`Σ (conc − cap)`), tracked
+    /// incrementally for the occupancy gauge.
+    busy: usize,
     rng: Pcg64,
 }
 
 const IN_FLIGHT: usize = usize::MAX;
 
 impl SlotSampler {
-    fn new(n: usize, seed: u64) -> Self {
+    fn new(n: usize, seed: u64, conc: u32) -> Self {
         SlotSampler {
             idle: (0..n).collect(),
             pos: (0..n).collect(),
+            cap: vec![conc; n],
+            conc,
+            busy: 0,
             rng: Pcg64::new(seed, 0xA51C_0DE5),
         }
     }
 
-    /// Return a client's slot to the idle pool (its arrival or retry was
-    /// just processed).
+    /// Return one of a client's slots to the pool (its arrival, fault, or
+    /// retry was just processed).
     fn release(&mut self, cid: usize) {
-        debug_assert!(self.pos[cid] == IN_FLIGHT, "client {cid} released while already idle");
-        self.pos[cid] = self.idle.len();
-        self.idle.push(cid);
+        debug_assert!(self.cap[cid] < self.conc, "client {cid} released while already idle");
+        self.cap[cid] += 1;
+        self.busy -= 1;
+        if self.pos[cid] == IN_FLIGHT {
+            self.pos[cid] = self.idle.len();
+            self.idle.push(cid);
+        }
+    }
+
+    /// Drop `cid` from the idle list (its `pos` entry becomes
+    /// `IN_FLIGHT`), keeping the swap_remove bookkeeping O(1).
+    fn remove_idle(&mut self, cid: usize) {
+        let i = self.pos[cid];
+        debug_assert!(i != IN_FLIGHT, "client {cid} drawn while in flight");
+        self.pos[cid] = IN_FLIGHT;
+        self.idle.swap_remove(i);
+        if let Some(&moved) = self.idle.get(i) {
+            self.pos[moved] = i;
+        }
     }
 
     /// Draw up to `k` distinct idle clients, uniformly, returned sorted.
+    /// The legacy path (`conc == 1`, no availability): the RNG op
+    /// sequence is exactly the pre-plane-10 one, preserving bit-identity
+    /// of participation-sampled runs.
     fn draw(&mut self, k: usize) -> Vec<usize> {
         let k = k.min(self.idle.len());
         let mut picked: Vec<usize> = (0..k)
@@ -159,11 +269,50 @@ impl SlotSampler {
                 if let Some(&moved) = self.idle.get(i) {
                     self.pos[moved] = i;
                 }
+                self.cap[cid] -= 1;
+                self.busy += 1;
                 cid
             })
             .collect();
         picked.sort_unstable();
         picked
+    }
+
+    /// Availability/concurrency-aware draw: up to `k` distinct clients
+    /// drawn uniformly from the idle clients for which `online` holds.
+    /// A picked client with remaining capacity (`conc > 1`) becomes
+    /// drawable again for the *next* batch — same-batch picks stay
+    /// distinct so the fanned dispatch loans each lane exactly once.
+    fn draw_avail(&mut self, k: usize, online: impl Fn(usize) -> bool) -> Vec<usize> {
+        let mut cands: Vec<usize> = self.idle.iter().copied().filter(|&c| online(c)).collect();
+        let k = k.min(cands.len());
+        let mut picked: Vec<usize> = Vec::with_capacity(k);
+        for _ in 0..k {
+            let i = self.rng.index(cands.len());
+            let cid = cands.swap_remove(i);
+            self.remove_idle(cid);
+            self.cap[cid] -= 1;
+            self.busy += 1;
+            picked.push(cid);
+        }
+        for &cid in &picked {
+            if self.cap[cid] > 0 {
+                self.pos[cid] = self.idle.len();
+                self.idle.push(cid);
+            }
+        }
+        picked.sort_unstable();
+        picked
+    }
+
+    /// Clients currently drawable (for the wake-time scan).
+    fn idle_clients(&self) -> &[usize] {
+        &self.idle
+    }
+
+    /// Total in-flight dispatches.
+    fn busy(&self) -> usize {
+        self.busy
     }
 }
 
@@ -178,7 +327,9 @@ impl AsyncBufferedScheduler {
     /// check per attempt, broadcast (charged), fanned local training,
     /// upload, and one arrival event per surviving client. Dropped
     /// attempts wake as [`Event::Retry`] after the latency the attempt
-    /// would have cost.
+    /// would have cost. Arrivals are stamped with the lane's current
+    /// epoch; under `conc > 1` a client's arrival times are clamped to
+    /// dispatch order (FIFO uplink).
     #[allow(clippy::too_many_arguments)]
     fn dispatch(
         &self,
@@ -186,6 +337,7 @@ impl AsyncBufferedScheduler {
         compute: &ComputeModel,
         queue: &mut EventQueue<Event>,
         dispatches: &mut [u64],
+        st: &mut ChurnState,
         version: u64,
         cids: &[usize],
         now: f64,
@@ -231,10 +383,75 @@ impl AsyncBufferedScheduler {
         // fanned client phase, upload, arrival stamping. The initial
         // cohort dispatch is the parallel case; steady-state re-dispatches
         // are single lanes.
-        for up in super::dispatch_uploads(
+        for mut up in super::dispatch_uploads(
             sim, &frame, &alive, now, workers, compute, dispatches, version,
         )? {
-            queue.push(up.arrival_s, Event::Arrival { up, version });
+            let cid = up.cid;
+            if st.conc > 1 {
+                // FIFO per-client uplink: a client's frames land in
+                // dispatch order, preserving the lane's compress → decode
+                // alternation under concurrent dispatches. With conc == 1
+                // the clamp can never bind (the previous arrival was
+                // processed before this re-dispatch), so it is skipped
+                // and the legacy arrival times are byte-identical.
+                up.arrival_s = up.arrival_s.max(st.last_arrival[cid]);
+                st.last_arrival[cid] = up.arrival_s;
+            }
+            let epoch = st.lane_epoch[cid];
+            queue.push(up.arrival_s, Event::Arrival { up, version, epoch });
+        }
+        Ok(())
+    }
+
+    /// Fill as many parked slots as the idle pool's *online* clients
+    /// allow (plane-10 mode only), then — if slots remain and every idle
+    /// client is offline — schedule a single `Wake` at the pool's
+    /// earliest `next_on`, so a starved loop sleeps instead of spinning.
+    #[allow(clippy::too_many_arguments)]
+    fn refill(
+        &self,
+        sim: &mut Simulation,
+        compute: &ComputeModel,
+        queue: &mut EventQueue<Event>,
+        dispatches: &mut [u64],
+        sampler: &mut SlotSampler,
+        st: &mut ChurnState,
+        now: f64,
+        workers: usize,
+    ) -> Result<()> {
+        let armed = st.avail.armed();
+        let avail = st.avail;
+        while st.pending > 0 {
+            let want = st.pending;
+            let batch = if armed {
+                sampler.draw_avail(want, |cid| avail.is_on(cid, now))
+            } else {
+                sampler.draw_avail(want, |_| true)
+            };
+            if batch.is_empty() {
+                break;
+            }
+            st.pending -= batch.len();
+            let v = sim.model_version;
+            self.dispatch(sim, compute, queue, dispatches, st, v, &batch, now, workers)?;
+        }
+        if st.pending > 0 && armed && !st.wake_pending {
+            let mut wake: Option<f64> = None;
+            for &cid in sampler.idle_clients() {
+                if !avail.is_on(cid, now) {
+                    let w = avail.next_on(cid, now);
+                    wake = Some(wake.map_or(w, |b: f64| b.min(w)));
+                }
+            }
+            if let Some(w) = wake {
+                queue.push(w, Event::Wake);
+                st.wake_pending = true;
+            }
+        }
+        if armed {
+            if let Some(t) = sim.telemetry.as_deref() {
+                t.gauge("slots.pending", st.pending as f64);
+            }
         }
         Ok(())
     }
@@ -257,23 +474,55 @@ impl Scheduler for AsyncBufferedScheduler {
         let mut queue: EventQueue<Event> = EventQueue::new();
         let mut dispatches = vec![0u64; n];
 
+        let conc = self.conf.concurrency.max(1);
+        let avail = AvailModel::new(self.conf.avail, sim.cfg.seed);
+        let armed = avail.armed();
+        // Plane-10 mode: availability or per-client concurrency armed.
+        // Off (the default), the loop below is the pre-plane-10 control
+        // flow verbatim — same draws, same RNG streams, bit-identical.
+        let plane10 = armed || conc > 1;
+        let mut st = ChurnState {
+            avail,
+            conc,
+            lane_epoch: vec![0u64; n],
+            last_arrival: vec![0.0f64; n],
+            pending: 0,
+            wake_pending: false,
+            faults_since_fold: 0,
+        };
+        // A run where every upload faults forever would spin the event
+        // loop without ever applying; bail out with a config hint instead.
+        let fault_guard = 100_000u64 + 1_000 * self.k as u64;
+
         // Concurrency target: `participation` bounds how many clients are
         // in flight at once. At 1.0 (default) the sampler is disabled and
         // the original all-clients-always-running FedBuff regime runs
-        // bit-exactly (no sampling RNG is consumed).
+        // bit-exactly (no sampling RNG is consumed). Plane-10 mode always
+        // uses the sampler (availability filtering and per-client slot
+        // capacity need its bookkeeping).
         let target = ((n as f64 * sim.cfg.participation).round() as usize).clamp(1, n);
-        let mut sampler = (target < n).then(|| SlotSampler::new(n, sim.cfg.seed));
+        let slots_total = target * conc;
+        let mut sampler =
+            (target < n || plane10).then(|| SlotSampler::new(n, sim.cfg.seed, conc as u32));
 
         // Kick-off: the initial cohort starts on the initial model at
         // once — everyone without sampling, a uniform draw of `target`
-        // clients with it.
-        let initial: Vec<usize> = match sampler.as_mut() {
-            None => (0..n).collect(),
-            Some(s) => s.draw(target),
-        };
+        // clients with it, an availability-filtered fill in plane-10 mode.
         let t0 = sim.vclock;
         let v0 = sim.model_version;
-        self.dispatch(sim, &compute, &mut queue, &mut dispatches, v0, &initial, t0, workers)?;
+        if plane10 {
+            st.pending = slots_total;
+            let s = sampler.as_mut().expect("plane-10 mode always samples");
+            self.refill(sim, &compute, &mut queue, &mut dispatches, s, &mut st, t0, workers)?;
+        } else {
+            let initial: Vec<usize> = match sampler.as_mut() {
+                None => (0..n).collect(),
+                Some(s) => s.draw(target),
+            };
+            self.dispatch(
+                sim, &compute, &mut queue, &mut dispatches, &mut st, v0, &initial, t0, workers,
+            )?;
+        }
 
         let mut applies = 0usize;
         let mut agg = ServerAggregator::with_backend(&sim.meta, sim.backend);
@@ -282,7 +531,14 @@ impl Scheduler for AsyncBufferedScheduler {
         let mut folded_cids: Vec<usize> = Vec::new();
         let mut loss_sum = 0.0f64;
         let mut sum_d = 0u64;
+        let mut tau_sum = 0u64;
         let mut t_last_apply = t0;
+        // Adaptive-k state: the apply threshold actually in force, the
+        // EWMA arrival-rate estimate, and the cadence target (the first
+        // apply's duration).
+        let mut k_cur = self.k;
+        let mut rate_hat: Option<f64> = None;
+        let mut cadence: Option<f64> = None;
 
         while applies < sim.cfg.rounds {
             let Some((t, _seq, first)) = queue.pop() else {
@@ -298,7 +554,9 @@ impl Scheduler for AsyncBufferedScheduler {
             // one parallel dispatch instead of per-event single-lane
             // dispatches (see the module docs). Nothing dispatched here
             // can land at time `t` again (latencies are positive), so the
-            // deferral never reorders the group.
+            // deferral never reorders the group (a same-instant `Fault`
+            // requeue is the deliberate exception: it stays inside this
+            // group).
             let mut redispatch: Vec<usize> = Vec::new();
             let mut ev = Some(first);
             while let Some(e) = ev.take() {
@@ -313,145 +571,244 @@ impl Scheduler for AsyncBufferedScheduler {
                             None => redispatch.push(cid),
                             Some(s) => {
                                 s.release(cid);
-                                redispatch.extend(s.draw(1));
+                                if plane10 {
+                                    st.pending += 1;
+                                } else {
+                                    redispatch.extend(s.draw(1));
+                                }
                             }
                         }
                     }
-                    Event::Arrival { up, version: v } => {
-                        let cid = up.cid;
-                        // The fold-as-it-lands path: charge, decode with
-                        // the lane's paired decompressor (lockstep), fold
-                        // with the staleness-discounted weight.
-                        sim.ledger.charge_uplink(up.frame.len() as u64);
-                        let sp = Telemetry::timer(tel.as_deref());
-                        let payloads = wire::decode(&up.frame)
-                            .with_context(|| format!("decoding client {cid}'s upload"))?;
-                        if let Some(tl) = tel.as_deref() {
-                            tl.count_payloads(&payloads);
+                    Event::Wake => {
+                        // The earliest offline idle client is due back;
+                        // the group-end refill below re-draws.
+                        st.wake_pending = false;
+                    }
+                    Event::Fault { cid, epoch } => {
+                        // Mid-flight departure (or a frame from a lane
+                        // that a previous fault already discarded): zero
+                        // bytes charged, nothing decoded. Discard the
+                        // lane — its compressor advanced at dispatch with
+                        // no decode to match — so a returning client
+                        // re-materializes the `(seed, cid)` pair in
+                        // lockstep via the factory and basis pool.
+                        if epoch == st.lane_epoch[cid] {
+                            sim.lanes.discard(cid);
+                            st.lane_epoch[cid] += 1;
                         }
-                        // The dispatched lane was pinned in flight;
-                        // decoding its arrival releases it for eviction.
-                        let updates = sim.lanes.lane_mut(cid).decompressor.decode(payloads);
-                        sim.lanes.unpin(cid);
-                        if let Some(sp) = sp {
-                            sp.end(Phase::ServerDecode, v, Some(cid as u32));
-                        }
-                        let tau = sim.model_version - v;
-                        let w = up.weight / (1.0 + tau as f64).powf(self.p);
-                        if let Some(tl) = tel.as_deref() {
-                            tl.observe_staleness(tau);
-                            if tau > 0 {
-                                tl.count("stragglers", 1);
-                            }
-                            tl.count("folds", 1);
-                        }
-                        // The observer sees exactly the arrivals that fold
-                        // (the shutdown drain below stays silent), so an
-                        // arrival count equals the fold count.
-                        if let Some(obs) = sim.observer.as_mut() {
-                            obs.on_arrival(&ArrivalEvent {
-                                round: applies,
-                                cid,
-                                updates: &updates,
-                                meta: &sim.meta,
-                                weight: w,
-                                staleness: tau,
-                                vtime: t,
-                                on_time: tau == 0,
-                            });
-                        }
-                        let sp = Telemetry::timer(tel.as_deref());
-                        agg.fold(w as f32, updates);
-                        if let Some(sp) = sp {
-                            sp.end(Phase::Fold, applies as u64, Some(cid as u32));
-                        }
-                        wsum += w;
-                        buffered += 1;
-                        folded_cids.push(cid);
-                        loss_sum += up.mean_loss;
-                        sum_d += up.sum_d;
-
-                        if buffered == self.k {
-                            // Apply: normalize the buffered aggregate by
-                            // the discounted weight sum, bump the version.
-                            let full = std::mem::replace(
-                                &mut agg,
-                                ServerAggregator::with_backend(&sim.meta, sim.backend),
+                        st.faults_since_fold += 1;
+                        if st.faults_since_fold > fault_guard {
+                            bail!(
+                                "availability/churn starved the async scheduler: \
+                                 {} consecutive faults without a fold — raise --avail, \
+                                 widen --avail-period, or lower --churn",
+                                st.faults_since_fold
                             );
-                            let sp = Telemetry::timer(tel.as_deref());
-                            if wsum > 0.0 {
-                                sim.global
-                                    .axpy((1.0 / wsum) as f32, &full.finish(&sim.meta));
-                            }
-                            if let Some(sp) = sp {
-                                sp.end(Phase::Apply, applies as u64, None);
-                            }
-                            sim.model_version += 1;
-                            if let Some(tl) = tel.as_deref() {
-                                tl.count("applies", 1);
-                                tl.gauge(
-                                    "slots.in_flight",
-                                    sampler.as_ref().map_or(n, |s| n - s.idle.len()) as f64,
-                                );
-                            }
-                            if let Some(obs) = sim.observer.as_mut() {
-                                obs.on_apply(&ApplyEvent {
-                                    round: applies,
-                                    vtime: t,
-                                    folded: self.k,
-                                    wtotal: wsum,
-                                });
-                            }
-                            let sp = Telemetry::timer(tel.as_deref());
-                            let (test_loss, test_acc) = if applies % sim.cfg.eval_every == 0
-                                || applies + 1 == sim.cfg.rounds
-                            {
-                                sim.trainer.evaluate(&sim.global, &sim.test_data)?
-                            } else {
-                                (f64::NAN, f64::NAN)
-                            };
-                            if let Some(sp) = sp {
-                                sp.end(Phase::Eval, applies as u64, None);
-                            }
-                            let (up_b, down_b) = sim.ledger.end_round();
-                            folded_cids.sort_unstable();
-                            let mut record = RoundRecord {
-                                round: applies,
-                                train_loss: loss_sum / self.k as f64,
-                                test_accuracy: test_acc,
-                                test_loss,
-                                uplink_bytes: up_b,
-                                downlink_bytes: down_b,
-                                sim_time_s: t - t_last_apply,
-                                sim_clock_s: t,
-                                sum_d,
-                                survivors: std::mem::take(&mut folded_cids),
-                                ext: None,
-                            };
-                            sim.telemetry_round_end(&mut record);
-                            sim.recorder.push(record.clone());
-                            if let Some(obs) = sim.observer.as_mut() {
-                                obs.on_round(applies, &record);
-                            }
-                            progress(applies, &record);
-                            t_last_apply = t;
-                            applies += 1;
-                            wsum = 0.0;
-                            buffered = 0;
-                            loss_sum = 0.0;
-                            sum_d = 0;
                         }
-
-                        // Queue the freed slot for the group's batched
-                        // re-dispatch on the newest model. Without
-                        // sampling the same client goes back out; with it
-                        // the slot goes to a fresh uniform draw over the
-                        // idle pool.
+                        if let Some(tl) = tel.as_deref() {
+                            tl.count("faults", 1);
+                            tl.virt_span(
+                                Phase::Fault,
+                                sim.model_version,
+                                Some(cid as u32),
+                                t,
+                                t,
+                            );
+                            if let Some(s) = sampler.as_ref() {
+                                tl.gauge("slots.in_flight", s.busy() as f64);
+                            }
+                        }
                         match sampler.as_mut() {
                             None => redispatch.push(cid),
                             Some(s) => {
                                 s.release(cid);
-                                redispatch.extend(s.draw(1));
+                                if plane10 {
+                                    st.pending += 1;
+                                } else {
+                                    redispatch.extend(s.draw(1));
+                                }
+                            }
+                        }
+                    }
+                    Event::Arrival { up, version: v, epoch } => {
+                        let cid = up.cid;
+                        if armed && (epoch != st.lane_epoch[cid] || !st.avail.is_on(cid, t)) {
+                            // The client departed while this upload was in
+                            // flight (or its lane was already discarded):
+                            // requeue as a typed fault at this instant —
+                            // it is handled inside this same co-temporal
+                            // group, in event order.
+                            queue.push(t, Event::Fault { cid, epoch });
+                        } else {
+                            // The fold-as-it-lands path: charge, decode
+                            // with the lane's paired decompressor
+                            // (lockstep), fold with the staleness-
+                            // discounted weight.
+                            sim.ledger.charge_uplink(up.frame.len() as u64);
+                            let sp = Telemetry::timer(tel.as_deref());
+                            let payloads = wire::decode(&up.frame)
+                                .with_context(|| format!("decoding client {cid}'s upload"))?;
+                            if let Some(tl) = tel.as_deref() {
+                                tl.count_payloads(&payloads);
+                            }
+                            // The dispatched lane was pinned in flight;
+                            // decoding its arrival releases it for
+                            // eviction.
+                            let updates = sim.lanes.lane_mut(cid).decompressor.decode(payloads);
+                            sim.lanes.unpin(cid);
+                            if let Some(sp) = sp {
+                                sp.end(Phase::ServerDecode, v, Some(cid as u32));
+                            }
+                            let tau = sim.model_version - v;
+                            let w = up.weight / (1.0 + tau as f64).powf(self.p);
+                            if let Some(tl) = tel.as_deref() {
+                                tl.observe_staleness(tau);
+                                if tau > 0 {
+                                    tl.count("stragglers", 1);
+                                }
+                                tl.count("folds", 1);
+                            }
+                            // The observer sees exactly the arrivals that
+                            // fold (the shutdown drain below stays
+                            // silent), so an arrival count equals the fold
+                            // count.
+                            if let Some(obs) = sim.observer.as_mut() {
+                                obs.on_arrival(&ArrivalEvent {
+                                    round: applies,
+                                    cid,
+                                    updates: &updates,
+                                    meta: &sim.meta,
+                                    weight: w,
+                                    staleness: tau,
+                                    vtime: t,
+                                    on_time: tau == 0,
+                                });
+                            }
+                            let sp = Telemetry::timer(tel.as_deref());
+                            agg.fold(w as f32, updates);
+                            if let Some(sp) = sp {
+                                sp.end(Phase::Fold, applies as u64, Some(cid as u32));
+                            }
+                            wsum += w;
+                            buffered += 1;
+                            folded_cids.push(cid);
+                            loss_sum += up.mean_loss;
+                            sum_d += up.sum_d;
+                            tau_sum += tau;
+                            st.faults_since_fold = 0;
+
+                            if buffered >= k_cur {
+                                // Apply: normalize the buffered aggregate
+                                // by the discounted weight sum, bump the
+                                // version.
+                                let full = std::mem::replace(
+                                    &mut agg,
+                                    ServerAggregator::with_backend(&sim.meta, sim.backend),
+                                );
+                                let sp = Telemetry::timer(tel.as_deref());
+                                if wsum > 0.0 {
+                                    let scale = if self.conf.lr_tau > 0.0 {
+                                        // FedAsync-style server LR: a stale
+                                        // buffer steps the model more
+                                        // cautiously.
+                                        let tau_bar = tau_sum as f64 / buffered as f64;
+                                        (1.0 / wsum) * (1.0 + tau_bar).powf(-self.conf.lr_tau)
+                                    } else {
+                                        1.0 / wsum
+                                    };
+                                    sim.global.axpy(scale as f32, &full.finish(&sim.meta));
+                                }
+                                if let Some(sp) = sp {
+                                    sp.end(Phase::Apply, applies as u64, None);
+                                }
+                                sim.model_version += 1;
+                                if let Some(tl) = tel.as_deref() {
+                                    tl.count("applies", 1);
+                                    tl.gauge(
+                                        "slots.in_flight",
+                                        sampler.as_ref().map_or(n, |s| s.busy()) as f64,
+                                    );
+                                }
+                                if let Some(obs) = sim.observer.as_mut() {
+                                    obs.on_apply(&ApplyEvent {
+                                        round: applies,
+                                        vtime: t,
+                                        folded: buffered,
+                                        wtotal: wsum,
+                                    });
+                                }
+                                let sp = Telemetry::timer(tel.as_deref());
+                                let (test_loss, test_acc) = if applies % sim.cfg.eval_every == 0
+                                    || applies + 1 == sim.cfg.rounds
+                                {
+                                    sim.trainer.evaluate(&sim.global, &sim.test_data)?
+                                } else {
+                                    (f64::NAN, f64::NAN)
+                                };
+                                if let Some(sp) = sp {
+                                    sp.end(Phase::Eval, applies as u64, None);
+                                }
+                                let (up_b, down_b) = sim.ledger.end_round();
+                                folded_cids.sort_unstable();
+                                let mut record = RoundRecord {
+                                    round: applies,
+                                    train_loss: loss_sum / buffered as f64,
+                                    test_accuracy: test_acc,
+                                    test_loss,
+                                    uplink_bytes: up_b,
+                                    downlink_bytes: down_b,
+                                    sim_time_s: t - t_last_apply,
+                                    sim_clock_s: t,
+                                    sum_d,
+                                    survivors: std::mem::take(&mut folded_cids),
+                                    ext: None,
+                                };
+                                sim.telemetry_round_end(&mut record);
+                                sim.recorder.push(record.clone());
+                                if let Some(obs) = sim.observer.as_mut() {
+                                    obs.on_round(applies, &record);
+                                }
+                                progress(applies, &record);
+                                if self.conf.adaptive_k {
+                                    // Re-target the apply threshold so the
+                                    // apply cadence tracks the first
+                                    // apply's: k ← clamp(rate · cadence).
+                                    let dt = (t - t_last_apply).max(1e-9);
+                                    let rate = buffered as f64 / dt;
+                                    let r = match rate_hat {
+                                        None => rate,
+                                        Some(r) => 0.5 * r + 0.5 * rate,
+                                    };
+                                    rate_hat = Some(r);
+                                    let c = *cadence.get_or_insert(dt);
+                                    let k_target = (r * c).round().max(1.0) as usize;
+                                    k_cur = k_target.clamp(1, self.k.saturating_mul(4));
+                                }
+                                t_last_apply = t;
+                                applies += 1;
+                                wsum = 0.0;
+                                buffered = 0;
+                                loss_sum = 0.0;
+                                sum_d = 0;
+                                tau_sum = 0;
+                            }
+
+                            // Queue the freed slot for the group's batched
+                            // re-dispatch on the newest model. Without
+                            // sampling the same client goes back out; with
+                            // it the slot goes to a fresh uniform draw
+                            // over the idle pool (availability-filtered in
+                            // plane-10 mode, at the group end).
+                            match sampler.as_mut() {
+                                None => redispatch.push(cid),
+                                Some(s) => {
+                                    s.release(cid);
+                                    if plane10 {
+                                        st.pending += 1;
+                                    } else {
+                                        redispatch.extend(s.draw(1));
+                                    }
+                                }
                             }
                         }
                     }
@@ -462,25 +819,47 @@ impl Scheduler for AsyncBufferedScheduler {
                 // nothing would fold).
                 if applies >= sim.cfg.rounds {
                     redispatch.clear();
+                    st.pending = 0;
                     break;
                 }
                 if queue.peek_time().is_some_and(|pt| pt.total_cmp(&t).is_eq()) {
                     ev = queue.pop().map(|(_, _, e)| e);
                 }
             }
-            if !redispatch.is_empty() {
+            if plane10 {
+                if applies < sim.cfg.rounds && st.pending > 0 {
+                    let s = sampler.as_mut().expect("plane-10 mode always samples");
+                    self.refill(sim, &compute, &mut queue, &mut dispatches, s, &mut st, t, workers)?;
+                }
+            } else if !redispatch.is_empty() {
                 let v = sim.model_version;
                 self.dispatch(
-                    sim, &compute, &mut queue, &mut dispatches, v, &redispatch, t, workers,
+                    sim, &compute, &mut queue, &mut dispatches, &mut st, v, &redispatch, t,
+                    workers,
                 )?;
             }
         }
 
         // In-flight uploads at shutdown: charged + decoded so lane state
-        // stays in lockstep (shared shutdown-drain helper).
-        while let Some((_, _, ev)) = queue.pop() {
-            if let Event::Arrival { up, .. } = ev {
-                super::absorb_trailing_upload(sim, up.cid, &up.frame)?;
+        // stays in lockstep (shared shutdown-drain helper) — unless the
+        // client departed mid-flight or its lane was discarded, in which
+        // case the frame faults here too: zero bytes, no decode, lane
+        // dropped.
+        while let Some((te, _, ev)) = queue.pop() {
+            if let Event::Arrival { up, epoch, .. } = ev {
+                let cid = up.cid;
+                if armed && (epoch != st.lane_epoch[cid] || !st.avail.is_on(cid, te)) {
+                    if epoch == st.lane_epoch[cid] {
+                        sim.lanes.discard(cid);
+                        st.lane_epoch[cid] += 1;
+                    }
+                    if let Some(tl) = tel.as_deref() {
+                        tl.count("faults", 1);
+                        tl.virt_span(Phase::Fault, sim.model_version, Some(cid as u32), te, te);
+                    }
+                    continue;
+                }
+                super::absorb_trailing_upload(sim, cid, &up.frame)?;
             }
         }
         Ok(sim.finish_report())

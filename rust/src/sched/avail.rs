@@ -1,0 +1,292 @@
+//! Deterministic per-client availability processes: diurnal on/off square
+//! waves and Poisson departure churn.
+//!
+//! Production federated populations blink: devices follow day/night usage
+//! cycles and drop off mid-round (Edin et al.'s practical-limitations
+//! study; Ozfatura et al.'s time-correlated sparsification is exactly the
+//! family of schemes most exposed to interrupted participation). This
+//! module gives every scheduler one shared answer to "is client `cid`
+//! reachable at virtual time `t`?" without perturbing anything else:
+//!
+//! * **Diurnal wave** — client `cid` is on for the first `duty · period_s`
+//!   seconds of every `period_s`-second cycle, phase-shifted by a
+//!   per-client uniform offset so the population ramps smoothly instead of
+//!   toggling in lockstep.
+//! * **Poisson churn** — time is cut into `period_s`-wide windows; in each
+//!   window a client departs with probability `1 − exp(−churn · period)`,
+//!   at a uniform offset, for a uniform outage of up to
+//!   `min(outage_s, period_s)` seconds. Outages can spill into the next
+//!   window (membership checks the current and previous window), so the
+//!   query stays O(1).
+//!
+//! # Purity contract
+//!
+//! [`AvailModel::is_on`] is a **pure function of `(seed, cid, vtime)`** on
+//! two dedicated seed streams (xor salts [`AVAIL_SALT`], [`CHURN_SALT`]):
+//! no shared RNG advances, so the answer is identical at any worker count
+//! and independent of query order — the same contract as
+//! [`ComputeModel`](super::ComputeModel) and
+//! [`DropoutModel`](crate::net::DropoutModel). With the default knobs
+//! (`duty = 1.0`, `churn = 0.0`) the model is *unarmed*: every query
+//! short-circuits to `true` without constructing an RNG, so defaults
+//! perturb nothing — the bit-identity anchor `rust/tests/churn.rs` locks
+//! in.
+
+use crate::util::rng::Pcg64;
+
+/// Seed salt for the diurnal phase stream.
+pub const AVAIL_SALT: u64 = 0xAA11_AB1E_0000_0001;
+/// Seed salt for the churn (departure) stream.
+pub const CHURN_SALT: u64 = 0xC4E2_1D00_0000_0002;
+
+/// Availability/churn knobs (part of
+/// [`SchedConfig`](super::SchedConfig); CLI `--avail`, `--avail-period`,
+/// `--churn`, `--outage`). Defaults are inert.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AvailConfig {
+    /// Diurnal duty cycle in `(0, 1]`: the fraction of each period a
+    /// client is on. `1.0` (default) disables the wave.
+    pub duty: f64,
+    /// Diurnal period, virtual seconds. Also the churn window width.
+    pub period_s: f64,
+    /// Poisson departure rate per client per virtual second. `0` (default)
+    /// disables churn.
+    pub churn_per_s: f64,
+    /// Maximum outage duration for one churn departure, seconds
+    /// (effective cap: `min(outage_s, period_s)`).
+    pub outage_s: f64,
+}
+
+impl Default for AvailConfig {
+    fn default() -> Self {
+        AvailConfig { duty: 1.0, period_s: 20.0, churn_per_s: 0.0, outage_s: 5.0 }
+    }
+}
+
+impl AvailConfig {
+    /// True when the knobs actually perturb availability (non-default
+    /// duty or churn). Unarmed ⇒ every `is_on` is `true`, RNG-free.
+    pub fn armed(&self) -> bool {
+        self.duty < 1.0 || self.churn_per_s > 0.0
+    }
+
+    /// Range-check the knobs; returns a description of the first problem.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.duty.is_finite() && self.duty > 0.0 && self.duty <= 1.0) {
+            return Err(format!("avail duty = {} must be in (0, 1]", self.duty));
+        }
+        if !(self.period_s.is_finite() && self.period_s > 0.0) {
+            return Err(format!("avail period_s = {} must be finite and positive", self.period_s));
+        }
+        if !(self.churn_per_s.is_finite() && self.churn_per_s >= 0.0) {
+            return Err(format!(
+                "avail churn = {} must be finite and non-negative",
+                self.churn_per_s
+            ));
+        }
+        if !(self.outage_s.is_finite() && self.outage_s > 0.0) {
+            return Err(format!("avail outage_s = {} must be finite and positive", self.outage_s));
+        }
+        Ok(())
+    }
+}
+
+/// The availability oracle: pure `(seed, cid, vtime)` queries (see the
+/// module docs for the seed-stream contract).
+#[derive(Clone, Copy, Debug)]
+pub struct AvailModel {
+    cfg: AvailConfig,
+    seed: u64,
+}
+
+impl AvailModel {
+    /// Build from the knobs and the run seed (dedicated streams — never
+    /// perturbs data/model/sampler RNG).
+    pub fn new(cfg: AvailConfig, seed: u64) -> Self {
+        AvailModel { cfg, seed }
+    }
+
+    /// True when the knobs perturb anything (see [`AvailConfig::armed`]).
+    pub fn armed(&self) -> bool {
+        self.cfg.armed()
+    }
+
+    /// Per-client diurnal phase offset in `[0, period_s)`.
+    fn phase(&self, cid: usize) -> f64 {
+        let mut r = Pcg64::new(self.seed ^ AVAIL_SALT, 0x00D1_0000 ^ cid as u64);
+        r.f64() * self.cfg.period_s
+    }
+
+    /// Is the diurnal square wave high for `cid` at `t`?
+    fn diurnal_on(&self, cid: usize, t: f64) -> bool {
+        if self.cfg.duty >= 1.0 {
+            return true;
+        }
+        let p = self.cfg.period_s;
+        ((t + self.phase(cid)) % p) < self.cfg.duty * p
+    }
+
+    /// The churn outage drawn for `(cid, window)`, if any, as
+    /// `(start_s, end_s)`. One candidate departure per window; pure.
+    fn outage(&self, cid: usize, window: u64) -> Option<(f64, f64)> {
+        if self.cfg.churn_per_s <= 0.0 {
+            return None;
+        }
+        let w = self.cfg.period_s;
+        let mix = self.seed ^ CHURN_SALT ^ window.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut r = Pcg64::new(mix, 0x00C4_0000 ^ cid as u64);
+        let p_dep = 1.0 - (-self.cfg.churn_per_s * w).exp();
+        if r.f64() >= p_dep {
+            return None;
+        }
+        let start = window as f64 * w + r.f64() * w;
+        let dur = r.f64() * self.cfg.outage_s.min(w);
+        Some((start, start + dur))
+    }
+
+    /// End of the outage covering `t`, if `cid` is departed at `t`.
+    fn outage_end(&self, cid: usize, t: f64) -> Option<f64> {
+        let w = (t / self.cfg.period_s).max(0.0) as u64;
+        for window in [w.checked_sub(1), Some(w)].into_iter().flatten() {
+            if let Some((start, end)) = self.outage(cid, window) {
+                if t >= start && t < end {
+                    return Some(end);
+                }
+            }
+        }
+        None
+    }
+
+    /// Is client `cid` reachable at virtual time `t`? Pure; `true`
+    /// without touching an RNG when unarmed.
+    pub fn is_on(&self, cid: usize, t: f64) -> bool {
+        if !self.armed() {
+            return true;
+        }
+        self.diurnal_on(cid, t) && self.outage_end(cid, t).is_none()
+    }
+
+    /// A virtual time strictly after `t` at which `cid` is (very likely)
+    /// back on — the wake-up target for schedulers stalled on an all-
+    /// offline pool. Conservative: callers re-check [`Self::is_on`] at the
+    /// returned instant and may need another hop, but every hop strictly
+    /// advances the clock, so stalls always terminate.
+    pub fn next_on(&self, cid: usize, t: f64) -> f64 {
+        let p = self.cfg.period_s;
+        let mut cand = t;
+        for _ in 0..32 {
+            if !self.diurnal_on(cid, cand) {
+                // Jump to the start of the next on-window.
+                let ph = (cand + self.phase(cid)) % p;
+                cand += p - ph;
+                continue;
+            }
+            match self.outage_end(cid, cand) {
+                Some(end) => cand = end,
+                None => break,
+            }
+        }
+        if cand > t {
+            cand
+        } else {
+            t + p
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_unarmed_and_always_on() {
+        let m = AvailModel::new(AvailConfig::default(), 42);
+        assert!(!m.armed());
+        for cid in 0..16 {
+            for i in 0..50 {
+                assert!(m.is_on(cid, i as f64 * 1.7));
+            }
+        }
+    }
+
+    #[test]
+    fn queries_are_pure() {
+        let cfg = AvailConfig { duty: 0.5, churn_per_s: 0.05, ..Default::default() };
+        let a = AvailModel::new(cfg, 7);
+        let b = AvailModel::new(cfg, 7);
+        for cid in 0..8 {
+            for i in 0..200 {
+                let t = i as f64 * 0.37;
+                assert_eq!(a.is_on(cid, t), b.is_on(cid, t));
+            }
+        }
+    }
+
+    #[test]
+    fn duty_cycle_matches_on_fraction() {
+        let cfg = AvailConfig { duty: 0.5, period_s: 10.0, ..Default::default() };
+        let m = AvailModel::new(cfg, 3);
+        let mut on = 0usize;
+        let mut total = 0usize;
+        for cid in 0..32 {
+            for i in 0..1000 {
+                total += 1;
+                if m.is_on(cid, i as f64 * 0.01 * 10.0) {
+                    on += 1;
+                }
+            }
+        }
+        let frac = on as f64 / total as f64;
+        assert!((frac - 0.5).abs() < 0.05, "on fraction {frac} far from duty 0.5");
+    }
+
+    #[test]
+    fn phases_differ_across_clients() {
+        let cfg = AvailConfig { duty: 0.5, ..Default::default() };
+        let m = AvailModel::new(cfg, 9);
+        // At a fixed instant, a phase-shifted population is split — not
+        // all-on or all-off in lockstep.
+        let on = (0..64).filter(|&cid| m.is_on(cid, 3.0)).count();
+        assert!(on > 0 && on < 64, "no phase diversity: {on}/64 on");
+    }
+
+    #[test]
+    fn churn_produces_outages_and_next_on_recovers() {
+        let cfg = AvailConfig { churn_per_s: 0.2, period_s: 10.0, outage_s: 5.0, ..Default::default() };
+        let m = AvailModel::new(cfg, 5);
+        assert!(m.armed());
+        let mut saw_off = false;
+        for cid in 0..16 {
+            for i in 0..400 {
+                let t = i as f64 * 0.25;
+                if !m.is_on(cid, t) {
+                    saw_off = true;
+                    let back = m.next_on(cid, t);
+                    assert!(back > t, "next_on must strictly advance");
+                }
+            }
+        }
+        assert!(saw_off, "churn 0.2/s produced no outage in 100 s × 16 clients");
+    }
+
+    #[test]
+    fn next_on_strictly_advances_even_when_on() {
+        let cfg = AvailConfig { duty: 0.5, ..Default::default() };
+        let m = AvailModel::new(cfg, 11);
+        for cid in 0..8 {
+            let t = 1.0;
+            assert!(m.next_on(cid, t) > t);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        assert!(AvailConfig::default().validate().is_ok());
+        assert!(AvailConfig { duty: 0.0, ..Default::default() }.validate().is_err());
+        assert!(AvailConfig { duty: 1.5, ..Default::default() }.validate().is_err());
+        assert!(AvailConfig { duty: f64::NAN, ..Default::default() }.validate().is_err());
+        assert!(AvailConfig { period_s: 0.0, ..Default::default() }.validate().is_err());
+        assert!(AvailConfig { churn_per_s: -0.1, ..Default::default() }.validate().is_err());
+        assert!(AvailConfig { outage_s: 0.0, ..Default::default() }.validate().is_err());
+    }
+}

@@ -60,16 +60,45 @@
 //! [`SchedConfig`] rides in `ExperimentConfig::sched` (JSON object
 //! `"sched"`, absent ⇒ sync — byte- and bit-identical to the pre-sched
 //! engine) and on the CLI as
-//! `--sched sync|semisync|async[:k=8,staleness=0.5]` plus
-//! `--compute-s` / `--compute-spread` for the per-client compute-time
+//! `--sched sync|semisync|async[:k=8,staleness=0.5,adaptive=1,lr_tau=0.5,conc=2]`
+//! plus `--compute-s` / `--compute-spread` for the per-client compute-time
 //! draw. The defaults (`sync`, zero compute time) change nothing.
+//!
+//! # Availability & churn (plane 10)
+//!
+//! [`avail::AvailModel`] answers "is client `cid` reachable at virtual
+//! time `t`?" as a pure function of `(seed, cid, vtime)` on dedicated
+//! seed streams (diurnal square waves + Poisson departure churn; see its
+//! module docs). When armed (`--avail < 1` or `--churn > 0`):
+//!
+//! * the async sampler never dispatches an offline client, and a dispatch
+//!   whose client departs mid-flight becomes a typed `Fault` event —
+//!   slot released, zero bytes charged, counted and traced
+//!   ([`Phase::Fault`]);
+//! * a faulted lane is **discarded** (not just unpinned): its paired
+//!   compressor state advanced at dispatch with no decode to match, so
+//!   the only way a returning client stays in lockstep is a fresh
+//!   re-materialization from `(seed, cid)` via the lane factory/basis
+//!   pool;
+//! * the semi-sync round loop skips offline clients at dispatch, faults
+//!   departed arrivals, and fast-forwards an all-offline round to the
+//!   population's earliest `next_on` instead of spinning;
+//! * `--legacy-shards` is rejected (a fixed pool cannot re-materialize a
+//!   discarded lane) and `--sched sync` is rejected (the lockstep loop is
+//!   the frozen bit-identity reference).
+//!
+//! With the knobs at their defaults nothing above executes — the model is
+//! unarmed and RNG-free, the async/semisync loops take their pre-plane-10
+//! paths verbatim, and `rust/tests/churn.rs` locks the bit-identity in.
 
 pub mod asyncbuf;
+pub mod avail;
 pub mod event;
 pub mod semisync;
 pub mod sync;
 
 pub use asyncbuf::AsyncBufferedScheduler;
+pub use avail::{AvailConfig, AvailModel};
 pub use event::EventQueue;
 pub use semisync::SemiSyncScheduler;
 pub use sync::SyncScheduler;
@@ -170,11 +199,13 @@ pub const DEFAULT_ASYNC_K: usize = 8;
 pub const DEFAULT_STALENESS_P: f64 = 0.5;
 
 /// Experiment-facing scheduler knobs (`ExperimentConfig::sched`, the
-/// `"sched"` JSON object, and the `--sched`/`--compute-*` CLI flags).
+/// `"sched"` JSON object, and the `--sched`/`--compute-*`/availability
+/// CLI flags).
 ///
-/// The default — sync control flow, zero compute time — keeps the
-/// simulation byte- and bit-identical to the pre-scheduler engine.
-#[derive(Clone, Debug, Default, PartialEq)]
+/// The default — sync control flow, zero compute time, always-on clients,
+/// concurrency 1, adaptive features off — keeps the simulation byte- and
+/// bit-identical to the pre-scheduler engine.
+#[derive(Clone, Debug, PartialEq)]
 pub struct SchedConfig {
     /// Round control flow.
     pub kind: SchedKind,
@@ -185,6 +216,38 @@ pub struct SchedConfig {
     /// `exp(spread · N(0,1))` (log-normal). `0` = every dispatch costs
     /// exactly `compute_base_s`.
     pub compute_spread: f64,
+    /// Per-client availability/churn processes (plane 10). Unarmed by
+    /// default; requires an event-driven scheduler when armed.
+    pub avail: AvailConfig,
+    /// Per-client concurrent dispatches (async only). `1` (default) =
+    /// a lane is re-dispatched only after its previous upload is decoded;
+    /// `>1` = a client trains while earlier uploads are still in flight,
+    /// with arrivals delivered in dispatch order per client (FIFO link)
+    /// so the lane's compress → decode alternation is preserved.
+    pub concurrency: usize,
+    /// Async only: adapt the apply threshold `k` to the observed
+    /// arrival-rate estimate (shrink under churn, grow when arrivals
+    /// outpace the initial cadence).
+    pub adaptive_k: bool,
+    /// Async only: FedAsync-style server learning-rate scaling — each
+    /// apply is additionally scaled by `1/(1 + τ̄)^lr_tau`, with `τ̄` the
+    /// mean observed staleness of the buffer. `0` (default) disables the
+    /// scaling (no float op runs).
+    pub lr_tau: f64,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            kind: SchedKind::default(),
+            compute_base_s: 0.0,
+            compute_spread: 0.0,
+            avail: AvailConfig::default(),
+            concurrency: 1,
+            adaptive_k: false,
+            lr_tau: 0.0,
+        }
+    }
 }
 
 impl SchedConfig {
@@ -210,7 +273,75 @@ impl SchedConfig {
                 return Err(format!("sched.{name} = {v} must be finite and non-negative"));
             }
         }
+        self.avail.validate()?;
+        let is_async = matches!(self.kind, SchedKind::Async { .. });
+        if self.concurrency == 0 {
+            return Err("sched concurrency must be >= 1".into());
+        }
+        if self.concurrency > 1 && !is_async {
+            return Err(format!(
+                "sched concurrency = {} requires --sched async (sync/semisync lanes are \
+                 busy until their upload lands)",
+                self.concurrency
+            ));
+        }
+        if self.adaptive_k && !is_async {
+            return Err("adaptive-k requires --sched async (there is no apply threshold to \
+                        adapt under sync/semisync)"
+                .into());
+        }
+        if !(self.lr_tau.is_finite() && self.lr_tau >= 0.0) {
+            return Err(format!("sched lr_tau = {} must be finite and non-negative", self.lr_tau));
+        }
+        if self.lr_tau > 0.0 && !is_async {
+            return Err("lr_tau (staleness-adaptive server LR) requires --sched async".into());
+        }
+        if self.avail.armed() && matches!(self.kind, SchedKind::Sync) {
+            return Err("availability/churn requires --sched semisync or async: the sync \
+                        lockstep loop is the frozen bit-identity reference and has no \
+                        notion of an offline client"
+                .into());
+        }
         Ok(())
+    }
+
+    /// Parse a full CLI spec into scheduler knobs: everything
+    /// [`SchedKind::parse`] accepts plus the plane-10 async fields —
+    /// `async:k=8,staleness=0.5,adaptive=1,lr_tau=0.5,conc=2`. Compute
+    /// and availability knobs keep their defaults (they ride separate
+    /// flags).
+    pub fn parse_spec(spec: &str) -> std::result::Result<SchedConfig, String> {
+        let (name, kv) = spec.split_once(':').unwrap_or((spec, ""));
+        let mut cfg = SchedConfig::default();
+        if name != "async" {
+            cfg.kind = SchedKind::parse(spec)?;
+            return Ok(cfg);
+        }
+        let mut k = DEFAULT_ASYNC_K;
+        let mut staleness_p = DEFAULT_STALENESS_P;
+        for pair in kv.split(',').filter(|s| !s.is_empty()) {
+            let (key, v) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("bad scheduler option '{pair}' (expect key=value)"))?;
+            match key {
+                "k" => k = v.parse().map_err(|e| format!("async k: {e}"))?,
+                "staleness" => {
+                    staleness_p = v.parse().map_err(|e| format!("async staleness: {e}"))?
+                }
+                "adaptive" => {
+                    cfg.adaptive_k = match v {
+                        "1" | "true" => true,
+                        "0" | "false" => false,
+                        other => return Err(format!("async adaptive: '{other}' is not 0/1")),
+                    }
+                }
+                "lr_tau" => cfg.lr_tau = v.parse().map_err(|e| format!("async lr_tau: {e}"))?,
+                "conc" => cfg.concurrency = v.parse().map_err(|e| format!("async conc: {e}"))?,
+                other => return Err(format!("unknown async option '{other}'")),
+            }
+        }
+        cfg.kind = SchedKind::Async { k, staleness_p };
+        Ok(cfg)
     }
 }
 
@@ -472,6 +603,85 @@ mod tests {
         let bad_compute =
             SchedConfig { compute_base_s: -1.0, ..Default::default() };
         assert!(bad_compute.validate().is_err());
+    }
+
+    fn async_kind() -> SchedKind {
+        SchedKind::Async { k: 4, staleness_p: 0.5 }
+    }
+
+    #[test]
+    fn validate_rejects_incoherent_plane10_knobs() {
+        // --concurrency 0 is meaningless everywhere.
+        let zero = SchedConfig { concurrency: 0, ..Default::default() };
+        assert!(zero.validate().is_err());
+        // Concurrency > 1 only makes sense for the async scheduler.
+        let conc_sync = SchedConfig { concurrency: 2, ..Default::default() };
+        assert!(conc_sync.validate().is_err());
+        let conc_semi =
+            SchedConfig { kind: SchedKind::SemiSync, concurrency: 2, ..Default::default() };
+        assert!(conc_semi.validate().is_err());
+        let conc_async = SchedConfig { kind: async_kind(), concurrency: 2, ..Default::default() };
+        assert!(conc_async.validate().is_ok());
+        // Adaptive-k under sync/semisync has no apply threshold to adapt.
+        let ak_sync = SchedConfig { adaptive_k: true, ..Default::default() };
+        assert!(ak_sync.validate().is_err());
+        let ak_async = SchedConfig { kind: async_kind(), adaptive_k: true, ..Default::default() };
+        assert!(ak_async.validate().is_ok());
+        // Staleness-adaptive server LR is async-only too.
+        let lr_semi =
+            SchedConfig { kind: SchedKind::SemiSync, lr_tau: 0.5, ..Default::default() };
+        assert!(lr_semi.validate().is_err());
+        let lr_nan = SchedConfig { kind: async_kind(), lr_tau: f64::NAN, ..Default::default() };
+        assert!(lr_nan.validate().is_err());
+        // Availability/churn is rejected under the frozen sync loop…
+        let avail_sync = SchedConfig {
+            avail: AvailConfig { duty: 0.5, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(avail_sync.validate().is_err());
+        // …and accepted by the event-driven schedulers.
+        let avail_semi = SchedConfig {
+            kind: SchedKind::SemiSync,
+            avail: AvailConfig { duty: 0.5, churn_per_s: 0.01, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(avail_semi.validate().is_ok());
+        // Bad availability ranges surface through SchedConfig::validate.
+        let bad_duty = SchedConfig {
+            kind: async_kind(),
+            avail: AvailConfig { duty: 2.0, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(bad_duty.validate().is_err());
+    }
+
+    #[test]
+    fn parse_spec_covers_plane10_fields() {
+        // Plain kinds fall through to SchedKind::parse.
+        assert_eq!(SchedConfig::parse_spec("sync").unwrap(), SchedConfig::default());
+        assert_eq!(
+            SchedConfig::parse_spec("semisync").unwrap().kind,
+            SchedKind::SemiSync
+        );
+        let full = SchedConfig::parse_spec("async:k=4,staleness=1.0,adaptive=1,lr_tau=0.5,conc=2")
+            .unwrap();
+        assert_eq!(full.kind, SchedKind::Async { k: 4, staleness_p: 1.0 });
+        assert!(full.adaptive_k);
+        assert_eq!(full.lr_tau, 0.5);
+        assert_eq!(full.concurrency, 2);
+        // Defaults when the new keys are absent.
+        let plain = SchedConfig::parse_spec("async:k=3").unwrap();
+        assert!(!plain.adaptive_k);
+        assert_eq!(plain.lr_tau, 0.0);
+        assert_eq!(plain.concurrency, 1);
+        // adaptive accepts 0/1/true/false, nothing else.
+        assert!(SchedConfig::parse_spec("async:adaptive=0").is_ok());
+        assert!(SchedConfig::parse_spec("async:adaptive=false").is_ok());
+        assert!(SchedConfig::parse_spec("async:adaptive=yes").is_err());
+        // Unknown keys and non-async kinds with options still reject.
+        assert!(SchedConfig::parse_spec("async:q=2").is_err());
+        assert!(SchedConfig::parse_spec("sync:conc=2").is_err());
+        assert!(SchedConfig::parse_spec("semisync:adaptive=1").is_err());
     }
 
     #[test]

@@ -27,12 +27,29 @@
 //! (folds happen in arrival order rather than participant order, so float
 //! sums may differ in the last bits from the sync engine's
 //! participant-order folds).
+//!
+//! # Availability & churn (plane 10)
+//!
+//! With the [`AvailModel`] armed, a sampled client that is offline at the
+//! round's dispatch instant is skipped (it cannot hear the broadcast), and
+//! an arrival whose client departed while its upload was in flight
+//! **faults**: zero bytes charged, nothing decoded or folded, the lane
+//! discarded (`faults` counter, [`Phase::Fault`] span) so the returning
+//! client re-materializes in fingerprint lockstep. A round in which every
+//! sampled client is offline and nothing is in flight fast-forwards the
+//! clock to the population's earliest
+//! [`next_on`](AvailModel::next_on) instead of spinning zero-duration
+//! rounds — so mid-round departure can never deadlock the rollover loop,
+//! even when the earliest pending arrival belongs to a departed client
+//! (that arrival faults, and the clock still advanced to it). Unarmed
+//! (the default), none of these branches execute and the loop is the
+//! pre-plane-10 control flow verbatim.
 
 use std::sync::Arc;
 
 use anyhow::Context;
 
-use super::{ComputeModel, DispatchedUpload, EventQueue, SchedConfig, Scheduler};
+use super::{AvailModel, ComputeModel, DispatchedUpload, EventQueue, SchedConfig, Scheduler};
 use crate::compress::{Decompressor as _, LayerUpdate};
 use crate::coordinator::{ServerAggregator, Simulation, Trainer as _};
 use crate::metrics::{RoundRecord, RunReport};
@@ -66,6 +83,8 @@ impl Scheduler for SemiSyncScheduler {
         let workers = sim.cfg.resolved_workers();
         let deadline = sim.cfg.net.deadline();
         let compute = ComputeModel::new(&self.conf, sim.cfg.seed);
+        let avail = AvailModel::new(self.conf.avail, sim.cfg.seed);
+        let armed = avail.armed();
         let n = sim.lanes.len();
         let tel = sim.telemetry.clone();
         let mut queue: EventQueue<DispatchedUpload> = EventQueue::new();
@@ -84,8 +103,15 @@ impl Scheduler for SemiSyncScheduler {
             let sampled = sim.sampler.sample(round);
             let alive = sim.dropout.filter(round, &sampled);
             let dropped = (sampled.len() - alive.len()) as u64;
-            let participants: Vec<usize> =
-                alive.into_iter().filter(|&cid| busy_until[cid] <= t_start).collect();
+            // Free (not mid-upload) and — when availability is armed —
+            // actually reachable at the dispatch instant. The `!armed`
+            // short-circuit keeps the default path RNG-free and verbatim.
+            let participants: Vec<usize> = alive
+                .into_iter()
+                .filter(|&cid| {
+                    busy_until[cid] <= t_start && (!armed || avail.is_on(cid, t_start))
+                })
+                .collect();
             if let Some(t) = tel.as_deref() {
                 t.count("dropouts", dropped);
             }
@@ -129,7 +155,18 @@ impl Scheduler for SemiSyncScheduler {
             // earliest pending arrival so rollover cannot deadlock.
             let latest = arrivals_this_round.iter().fold(t_start, |a, &b| a.max(b));
             let t_end = if participants.is_empty() {
-                queue.peek_time().map_or(t_start, |t| t.max(t_start))
+                match queue.peek_time() {
+                    Some(t) => t.max(t_start),
+                    // Every sampled client is offline and nothing is in
+                    // flight: fast-forward to the population's earliest
+                    // return (strictly after t_start, so the loop always
+                    // advances) instead of burning zero-duration rounds.
+                    None if armed => (0..n)
+                        .map(|cid| avail.next_on(cid, t_start))
+                        .fold(f64::INFINITY, f64::min)
+                        .max(t_start),
+                    None => t_start,
+                }
             } else {
                 match deadline {
                     Some(d) => latest.min(t_start + d),
@@ -145,6 +182,25 @@ impl Scheduler for SemiSyncScheduler {
             let mut folded_cids: Vec<usize> = Vec::new();
             while queue.peek_time().is_some_and(|t| t <= t_end) {
                 let (arrival_t, _, up) = queue.pop().expect("peeked event");
+                if armed && !avail.is_on(up.cid, arrival_t) {
+                    // The client departed while this upload was in flight:
+                    // fault — zero bytes charged, nothing decoded, the
+                    // lane discarded so the paired compressor state (which
+                    // advanced at dispatch with no decode to match) is
+                    // rebuilt from (seed, cid) when the client returns.
+                    sim.lanes.discard(up.cid);
+                    if let Some(t) = tel.as_deref() {
+                        t.count("faults", 1);
+                        t.virt_span(
+                            Phase::Fault,
+                            round as u64,
+                            Some(up.cid as u32),
+                            arrival_t,
+                            arrival_t,
+                        );
+                    }
+                    continue;
+                }
                 sim.ledger.charge_uplink(up.frame.len() as u64);
                 let sp = Telemetry::timer(tel.as_deref());
                 let payloads = wire::decode(&up.frame)
@@ -256,8 +312,24 @@ impl Scheduler for SemiSyncScheduler {
         }
 
         // Uploads still in flight when the run ends: charged + decoded so
-        // lane state stays in lockstep (shared shutdown-drain helper).
-        while let Some((_, _, up)) = queue.pop() {
+        // lane state stays in lockstep (shared shutdown-drain helper) —
+        // unless the client departed mid-flight, in which case the frame
+        // faults here too (zero bytes, no decode, lane discarded).
+        while let Some((te, _, up)) = queue.pop() {
+            if armed && !avail.is_on(up.cid, te) {
+                sim.lanes.discard(up.cid);
+                if let Some(t) = tel.as_deref() {
+                    t.count("faults", 1);
+                    t.virt_span(
+                        Phase::Fault,
+                        sim.cfg.rounds as u64,
+                        Some(up.cid as u32),
+                        te,
+                        te,
+                    );
+                }
+                continue;
+            }
             super::absorb_trailing_upload(sim, up.cid, &up.frame)?;
         }
         Ok(sim.finish_report())

@@ -35,6 +35,11 @@ pub enum Phase {
     UplinkTransit,
     /// Server decodes one client's wire frame into `LayerUpdate`s (host).
     ServerDecode,
+    /// An arrival whose client departed mid-flight (availability/churn
+    /// plane): the upload is dropped undecoded, zero bytes charged, the
+    /// slot released, the lane discarded (virtual only, zero duration —
+    /// it marks the instant the server learned the client was gone).
+    Fault,
     /// Folding decoded updates into the `ServerAggregator` (host).
     Fold,
     /// Materializing the aggregate and stepping the global model (host).
@@ -48,12 +53,13 @@ pub enum Phase {
 
 impl Phase {
     /// All phases, in lifecycle order.
-    pub const ALL: [Phase; 9] = [
+    pub const ALL: [Phase; 10] = [
         Phase::LaneMaterialize,
         Phase::BroadcastEncode,
         Phase::ClientCompress,
         Phase::UplinkTransit,
         Phase::ServerDecode,
+        Phase::Fault,
         Phase::Fold,
         Phase::Apply,
         Phase::Eval,
@@ -68,6 +74,7 @@ impl Phase {
             Phase::ClientCompress => "client_compress",
             Phase::UplinkTransit => "uplink_transit",
             Phase::ServerDecode => "server_decode",
+            Phase::Fault => "fault",
             Phase::Fold => "fold",
             Phase::Apply => "apply",
             Phase::Eval => "eval",

@@ -1,0 +1,336 @@
+//! Chaos suite for the availability & churn plane (plane 10): default
+//! knobs stay bit-identical and fault-free, armed runs stay bit-identical
+//! across worker counts, mid-flight departures release their slot and
+//! charge zero bytes, departed-then-returning GradESTC clients
+//! re-materialize in fingerprint lockstep, the semi-sync fast-forward
+//! cannot deadlock an all-offline pool, and the one incoherent
+//! cross-plane combination (armed availability on the fixed legacy-shards
+//! pool) is rejected at build time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use gradestc::config::{
+    AvailConfig, BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig,
+    GradEstcParams, LaneConfig, NetConfig, SchedConfig, SchedKind,
+};
+use gradestc::coordinator::Simulation;
+use gradestc::metrics::RoundRecord;
+use gradestc::net::{Loopback, Transport};
+
+fn base_cfg(name: &str, comp: CompressorKind) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.into(),
+        dataset: DatasetKind::SynthMnist,
+        model: gradestc::config::ModelKind::LeNet5,
+        distribution: DataDistribution::Iid,
+        num_clients: 8,
+        participation: 1.0,
+        rounds: 5,
+        local_epochs: 1,
+        batch_size: 32,
+        lr: 0.05,
+        samples_per_client: 64,
+        test_samples: 64,
+        eval_every: 1,
+        threshold_frac: 0.9,
+        compressor: comp,
+        seed: 11,
+        use_xla: false,
+        artifacts_dir: "artifacts".into(),
+        workers: 1,
+        net: NetConfig::default(),
+        sched: SchedConfig::default(),
+        backend: BackendKind::Auto,
+        lanes: LaneConfig::default(),
+    }
+}
+
+fn gradestc8() -> CompressorKind {
+    CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() })
+}
+
+fn assert_rounds_bitwise_equal(a: &[RoundRecord], b: &[RoundRecord], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: round count");
+    for (x, y) in a.iter().zip(b) {
+        let r = x.round;
+        assert_eq!(x.round, y.round, "{label}");
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{label}: loss, round {r}");
+        assert_eq!(
+            x.test_accuracy.to_bits(),
+            y.test_accuracy.to_bits(),
+            "{label}: accuracy, round {r}"
+        );
+        assert_eq!(x.uplink_bytes, y.uplink_bytes, "{label}: uplink, round {r}");
+        assert_eq!(x.downlink_bytes, y.downlink_bytes, "{label}: downlink, round {r}");
+        assert_eq!(
+            x.sim_clock_s.to_bits(),
+            y.sim_clock_s.to_bits(),
+            "{label}: sim_clock, round {r}"
+        );
+        assert_eq!(x.survivors, y.survivors, "{label}: survivors, round {r}");
+    }
+}
+
+/// Run with telemetry armed; returns records, fingerprints, ledger total,
+/// and the run-level fault count.
+fn run_with_faults(
+    mut cfg: ExperimentConfig,
+    workers: usize,
+) -> (Vec<RoundRecord>, Vec<(u64, u64)>, u64, u64) {
+    cfg.workers = workers;
+    let mut sim = Simulation::build(cfg).unwrap();
+    let tel = sim.enable_telemetry();
+    sim.run_scheduled().unwrap();
+    let faults = tel.metrics().run_counter("faults");
+    (sim.recorder.rounds().to_vec(), sim.lane_fingerprints(), sim.total_uplink(), faults)
+}
+
+/// The bit-identity anchor the whole plane hangs off: with every plane-10
+/// knob at its default the async scheduler runs the pre-plane-10 control
+/// flow verbatim — zero faults, identical records/fingerprints/ledger at
+/// 1 and 8 workers, and (with participation sampling armed) the legacy
+/// draw sequence untouched.
+#[test]
+fn default_knobs_run_fault_free_and_bit_identical() {
+    let mut cfg = base_cfg("it-churn-defaults", gradestc8());
+    cfg.net.het_spread = 1.0;
+    cfg.net.dropout = 0.1;
+    cfg.sched.kind = SchedKind::Async { k: 3, staleness_p: 0.5 };
+    assert!(!cfg.sched.avail.armed(), "default AvailConfig must be unarmed");
+    assert_eq!(cfg.sched.concurrency, 1);
+    assert!(!cfg.sched.adaptive_k);
+    assert_eq!(cfg.sched.lr_tau, 0.0);
+    let (r1, fp1, up1, f1) = run_with_faults(cfg.clone(), 1);
+    let (r8, fp8, up8, f8) = run_with_faults(cfg.clone(), 8);
+    assert_rounds_bitwise_equal(&r1, &r8, "defaults w1 vs w8");
+    assert_eq!(fp1, fp8, "lane fingerprints diverged across worker counts");
+    assert_eq!(up1, up8, "ledger totals diverged across worker counts");
+    assert_eq!((f1, f8), (0, 0), "unarmed availability must never fault");
+
+    // Participation sampling path: same bar with the sampler armed.
+    let mut scfg = cfg;
+    scfg.name = "it-churn-defaults-sampled".into();
+    scfg.num_clients = 16;
+    scfg.participation = 0.5;
+    scfg.samples_per_client = 32;
+    let (s1, sfp1, sup1, sf1) = run_with_faults(scfg.clone(), 1);
+    let (s8, sfp8, sup8, sf8) = run_with_faults(scfg, 8);
+    assert_rounds_bitwise_equal(&s1, &s8, "sampled defaults w1 vs w8");
+    assert_eq!(sfp1, sfp8);
+    assert_eq!(sup1, sup8);
+    assert_eq!((sf1, sf8), (0, 0));
+}
+
+/// Armed availability + churn is a new determinism surface: fault
+/// requeues, wake events, availability-filtered refills, and lane
+/// discards all happen on the event loop — so records, fingerprints,
+/// ledger, and the fault count itself must replay bit-identically at any
+/// worker count.
+#[test]
+fn armed_churn_bit_identical_across_workers() {
+    let mut cfg = base_cfg("it-churn-armed-det", gradestc8());
+    cfg.rounds = 5;
+    cfg.net.het_spread = 1.0;
+    cfg.sched.kind = SchedKind::Async { k: 2, staleness_p: 0.5 };
+    cfg.sched.avail =
+        AvailConfig { duty: 0.5, period_s: 2.0, churn_per_s: 0.05, outage_s: 1.0 };
+    let (r1, fp1, up1, f1) = run_with_faults(cfg.clone(), 1);
+    let (r8, fp8, up8, f8) = run_with_faults(cfg, 8);
+    assert_rounds_bitwise_equal(&r1, &r8, "armed churn w1 vs w8");
+    assert_eq!(fp1, fp8, "lane fingerprints diverged under churn");
+    assert_eq!(up1, up8, "ledger totals diverged under churn");
+    assert_eq!(f1, f8, "fault count diverged across worker counts");
+}
+
+/// A transport wrapper counting every uploaded byte at the moment it
+/// enters the fabric — the independent ground truth for the ledger.
+struct CountingLoopback {
+    inner: Loopback,
+    uplink_bytes: Arc<AtomicU64>,
+}
+
+impl Transport for CountingLoopback {
+    fn broadcast(&mut self, to: usize, frame: &Arc<[u8]>) -> anyhow::Result<()> {
+        self.inner.broadcast(to, frame)
+    }
+    fn drain_broadcasts(&mut self) -> Vec<(usize, Arc<[u8]>)> {
+        self.inner.drain_broadcasts()
+    }
+    fn upload(&mut self, from: usize, frame: Vec<u8>) -> anyhow::Result<()> {
+        self.uplink_bytes.fetch_add(frame.len() as u64, Ordering::SeqCst);
+        self.inner.upload(from, frame)
+    }
+    fn drain_uploads(&mut self) -> Vec<(usize, Vec<u8>)> {
+        self.inner.drain_uploads()
+    }
+}
+
+/// The fault contract: a mid-flight departure charges **zero** bytes (the
+/// frame crossed the transport but never the ledger) and releases its
+/// concurrency slot (the run still completes every apply — leaked slots
+/// would starve the loop into the livelock bail). An aggressive duty
+/// cycle (on-window 0.4 s ≈ one dense round trip) makes faults certain
+/// while leaving enough successful arrivals to make progress.
+#[test]
+fn midflight_departure_charges_nothing_and_releases_slots() {
+    let mut cfg = base_cfg("it-churn-zero-charge", CompressorKind::None);
+    cfg.rounds = 5;
+    cfg.net.het_spread = 0.5;
+    cfg.sched.kind = SchedKind::Async { k: 2, staleness_p: 0.5 };
+    cfg.sched.avail = AvailConfig { duty: 0.4, period_s: 1.0, ..Default::default() };
+    let rounds = cfg.rounds;
+    let mut sim = Simulation::build(cfg).unwrap();
+    let tel = sim.enable_telemetry();
+    let counter = Arc::new(AtomicU64::new(0));
+    sim.set_transport(Box::new(CountingLoopback {
+        inner: Loopback::new(),
+        uplink_bytes: counter.clone(),
+    }));
+    sim.run_scheduled().unwrap();
+    let faults = tel.metrics().run_counter("faults");
+    assert!(faults > 0, "duty 0.4/period 1.0 must fault dense round trips");
+    assert_eq!(
+        sim.recorder.rounds().len(),
+        rounds,
+        "faults starved the run: slots were not released"
+    );
+    let crossed = counter.load(Ordering::SeqCst);
+    assert!(
+        sim.total_uplink() < crossed,
+        "ledger {} must exclude the {faults} faulted frames' bytes (transport saw {})",
+        sim.total_uplink(),
+        crossed
+    );
+    let recorded: u64 = sim.recorder.rounds().iter().map(|r| r.uplink_bytes).sum();
+    assert!(recorded <= sim.total_uplink(), "records exceed the ledger");
+}
+
+/// The re-materialization contract: a faulted GradESTC lane is discarded
+/// (its client compressor advanced at dispatch with no decode to match)
+/// and the returning client rebuilds from `(seed, cid)` through the lane
+/// factory and shared basis pool — so after a churny run every lane's
+/// paired client/server fingerprints are equal again.
+#[test]
+fn departed_client_rematerializes_in_fingerprint_lockstep() {
+    let mut cfg = base_cfg("it-churn-lockstep", gradestc8());
+    cfg.rounds = 6;
+    cfg.net.het_spread = 1.0;
+    cfg.sched.kind = SchedKind::Async { k: 2, staleness_p: 0.5 };
+    cfg.sched.avail =
+        AvailConfig { duty: 0.5, period_s: 2.0, churn_per_s: 0.15, outage_s: 1.5 };
+    let mut sim = Simulation::build(cfg).unwrap();
+    let tel = sim.enable_telemetry();
+    sim.run_scheduled().unwrap();
+    let faults = tel.metrics().run_counter("faults");
+    assert!(faults > 0, "churn 0.15/s on a 0.5 duty cycle produced no fault");
+    let fps = sim.lane_fingerprints();
+    for (cid, (client_fp, server_fp)) in fps.iter().enumerate() {
+        assert_eq!(
+            client_fp, server_fp,
+            "client {cid}: lane state diverged across a fault discard"
+        );
+    }
+    // Discarded-but-never-redispatched lanes legitimately report (0, 0);
+    // the run as a whole must still have live, folded lanes.
+    assert!(fps.iter().any(|&(c, _)| c != 0), "no lane survived with live state");
+}
+
+/// Semi-sync under the same chaos: mid-round departure faults (never
+/// folds, never charges), and a round whose sampled pool is entirely
+/// offline fast-forwards the clock to the population's earliest return
+/// instead of deadlocking or spinning zero-duration rounds — the run
+/// always completes its configured rounds with a monotone clock, and
+/// replays bit-identically across worker counts.
+#[test]
+fn semisync_all_offline_fast_forward_never_deadlocks() {
+    let mut cfg = base_cfg("it-churn-semisync-ff", gradestc8());
+    cfg.num_clients = 4;
+    cfg.rounds = 6;
+    cfg.net.deadline_s = 0.5;
+    cfg.sched.kind = SchedKind::SemiSync;
+    // Tiny duty: most dispatch instants find most of the pool offline, so
+    // the all-offline fast-forward arm is exercised hard.
+    cfg.sched.avail =
+        AvailConfig { duty: 0.2, period_s: 3.0, churn_per_s: 0.1, outage_s: 2.0 };
+    let (r1, fp1, up1, f1) = run_with_faults(cfg.clone(), 1);
+    let (r8, fp8, up8, f8) = run_with_faults(cfg, 8);
+    assert_eq!(r1.len(), 6, "semisync deadlocked or bailed under an offline pool");
+    assert!(
+        r1.windows(2).all(|w| w[0].sim_clock_s <= w[1].sim_clock_s),
+        "virtual clock ran backwards"
+    );
+    assert!(
+        r1.last().unwrap().sim_clock_s > 0.0,
+        "clock never advanced: the fast-forward arm did not fire"
+    );
+    assert_rounds_bitwise_equal(&r1, &r8, "semisync churn w1 vs w8");
+    assert_eq!(fp1, fp8);
+    assert_eq!(up1, up8);
+    assert_eq!(f1, f8, "fault count diverged across worker counts");
+}
+
+/// Per-client concurrency is its own determinism surface (FIFO arrival
+/// clamp, counted lane pins, capacity-aware draws): `--concurrency 2`
+/// must replay bit-identically across worker counts with every lane pair
+/// in lockstep, and still fold exactly k per apply.
+#[test]
+fn concurrency_two_bit_identical_and_lockstep() {
+    let mut cfg = base_cfg("it-churn-conc2", gradestc8());
+    cfg.rounds = 5;
+    cfg.net.het_spread = 1.0;
+    cfg.sched.kind = SchedKind::Async { k: 3, staleness_p: 0.5 };
+    cfg.sched.concurrency = 2;
+    let (r1, fp1, up1, _) = run_with_faults(cfg.clone(), 1);
+    let (r8, fp8, up8, _) = run_with_faults(cfg, 8);
+    assert_rounds_bitwise_equal(&r1, &r8, "conc=2 w1 vs w8");
+    assert_eq!(fp1, fp8, "lane fingerprints diverged under concurrency");
+    assert_eq!(up1, up8, "ledger totals diverged under concurrency");
+    for (cid, (client_fp, server_fp)) in fp1.iter().enumerate() {
+        assert_eq!(client_fp, server_fp, "client {cid}: FIFO decode order broke lockstep");
+    }
+    assert!(r1.iter().all(|r| r.survivors.len() == 3), "every apply folds exactly k");
+}
+
+/// Everything at once — churn, concurrency 2, adaptive k, staleness-
+/// adaptive server LR — the full plane-10 surface under one run, still
+/// bit-identical across worker counts and still completing every apply.
+#[test]
+fn full_plane10_chaos_is_deterministic() {
+    let mut cfg = base_cfg("it-churn-kitchen-sink", gradestc8());
+    cfg.rounds = 5;
+    cfg.net.het_spread = 1.0;
+    cfg.net.dropout = 0.05;
+    cfg.sched.kind = SchedKind::Async { k: 3, staleness_p: 0.5 };
+    cfg.sched.avail =
+        AvailConfig { duty: 0.6, period_s: 2.0, churn_per_s: 0.05, outage_s: 1.0 };
+    cfg.sched.concurrency = 2;
+    cfg.sched.adaptive_k = true;
+    cfg.sched.lr_tau = 0.3;
+    let (r1, fp1, up1, f1) = run_with_faults(cfg.clone(), 1);
+    let (r8, fp8, up8, f8) = run_with_faults(cfg, 8);
+    assert_eq!(r1.len(), 5, "the chaos run did not complete its applies");
+    assert_rounds_bitwise_equal(&r1, &r8, "plane-10 chaos w1 vs w8");
+    assert_eq!(fp1, fp8);
+    assert_eq!(up1, up8);
+    assert_eq!(f1, f8);
+    for (cid, (c, s)) in fp1.iter().enumerate() {
+        assert_eq!(c, s, "client {cid}: lockstep broke under the combined plane");
+    }
+}
+
+/// Cross-plane coherence is enforced at build time: armed availability on
+/// the fixed legacy-shards pool (which cannot re-materialize a discarded
+/// lane) is rejected with an actionable error.
+#[test]
+fn build_rejects_armed_avail_with_legacy_shards() {
+    let mut cfg = base_cfg("it-churn-legacy-reject", gradestc8());
+    cfg.lanes = LaneConfig { lazy: false, max_resident: 0, legacy_shards: true };
+    cfg.sched.avail = AvailConfig { duty: 0.5, ..Default::default() };
+    let err = Simulation::build(cfg).err().expect("armed avail + legacy shards must not build");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("legacy-shards") || msg.contains("legacy_shards"),
+        "error must name the incompatible knob: {msg}"
+    );
+}

@@ -1,0 +1,263 @@
+//! Property-style tests for the deterministic event core
+//! (`gradestc::sched::EventQueue`): seeded randomized interleavings of
+//! pushes and pops checked against a naive reference model, tie-group
+//! push-order stability, `total_cmp` corner cases, replay bit-identity,
+//! and the finite-time invariant — plus the end-to-end replay bar: the
+//! async event loop is bit-identical at 1, 2, and 8 workers.
+
+use gradestc::config::{
+    BackendKind, CompressorKind, DataDistribution, DatasetKind, ExperimentConfig, GradEstcParams,
+    LaneConfig, NetConfig, SchedConfig, SchedKind,
+};
+use gradestc::coordinator::Simulation;
+use gradestc::sched::EventQueue;
+use gradestc::util::rng::Pcg64;
+
+/// A naive priority queue with the same contract — linear-scan min by
+/// `(total_cmp(time), seq)` — used as the oracle for randomized runs.
+struct NaiveQueue {
+    items: Vec<(f64, u64, u64)>, // (time, seq, payload)
+    next_seq: u64,
+}
+
+impl NaiveQueue {
+    fn new() -> Self {
+        NaiveQueue { items: Vec::new(), next_seq: 0 }
+    }
+
+    fn push(&mut self, time: f64, payload: u64) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.items.push((time, seq, payload));
+        seq
+    }
+
+    fn pop(&mut self) -> Option<(f64, u64, u64)> {
+        if self.items.is_empty() {
+            return None;
+        }
+        let mut best = 0usize;
+        for i in 1..self.items.len() {
+            let (bt, bs, _) = self.items[best];
+            let (t, s, _) = self.items[i];
+            if t.total_cmp(&bt).then(s.cmp(&bs)).is_lt() {
+                best = i;
+            }
+        }
+        Some(self.items.remove(best))
+    }
+}
+
+/// Times drawn from a small grid so tie groups are frequent; occasionally
+/// -0.0 or a subnormal to exercise the `total_cmp` corners.
+fn draw_time(rng: &mut Pcg64) -> f64 {
+    match rng.index(20) {
+        0 => -0.0,
+        1 => 5e-324, // smallest positive subnormal
+        i => (i as f64) * 0.25,
+    }
+}
+
+/// Randomized interleavings against the oracle: every pop (mid-stream and
+/// in the final drain) returns exactly the `(time, seq, payload)` the
+/// naive model predicts — same minimum, same tie-break — and nothing is
+/// lost or duplicated.
+#[test]
+fn randomized_interleavings_match_reference_model() {
+    for seed in 0..32u64 {
+        let mut rng = Pcg64::new(seed, 0xE7E27);
+        let mut q = EventQueue::new();
+        let mut model = NaiveQueue::new();
+        let mut pushed = 0u64;
+        let mut popped = 0u64;
+        for op in 0..300 {
+            if rng.index(10) < 6 {
+                let t = draw_time(&mut rng);
+                let payload = pushed;
+                let sq = q.push(t, payload);
+                let sm = model.push(t, payload);
+                assert_eq!(sq, sm, "seed {seed} op {op}: sequence numbering diverged");
+                pushed += 1;
+            } else {
+                let got = q.pop();
+                let want = model.pop();
+                match (got, want) {
+                    (None, None) => {}
+                    (Some((t, s, e)), Some((wt, ws, we))) => {
+                        assert_eq!(
+                            (t.to_bits(), s, e),
+                            (wt.to_bits(), ws, we),
+                            "seed {seed} op {op}: pop diverged from the reference model"
+                        );
+                        popped += 1;
+                    }
+                    (g, w) => panic!("seed {seed} op {op}: emptiness diverged ({g:?} vs {w:?})"),
+                }
+            }
+        }
+        // Final drain: total order over everything left, no event lost.
+        let mut last: Option<(f64, u64)> = None;
+        while let Some((t, s, e)) = q.pop() {
+            let (wt, ws, we) = model.pop().expect("queue holds an event the model lost");
+            assert_eq!((t.to_bits(), s, e), (wt.to_bits(), ws, we), "seed {seed}: drain diverged");
+            if let Some((lt, ls)) = last {
+                assert!(
+                    lt.total_cmp(&t).then(ls.cmp(&s)).is_lt(),
+                    "seed {seed}: drain not strictly ascending in (time, seq)"
+                );
+            }
+            last = Some((t, s));
+            popped += 1;
+        }
+        assert!(model.pop().is_none(), "seed {seed}: model holds an event the queue lost");
+        assert_eq!(popped, pushed, "seed {seed}: {pushed} pushed but {popped} popped");
+    }
+}
+
+/// Co-temporal events pop in push order regardless of how the tie group
+/// is interleaved with other times.
+#[test]
+fn tie_groups_pop_in_push_order() {
+    for seed in 0..8u64 {
+        let mut rng = Pcg64::new(seed, 0x71E5);
+        let mut q = EventQueue::new();
+        for payload in 0..200u64 {
+            // Three distinct instants, heavily tied.
+            let t = [1.0, 2.0, 3.0][rng.index(3)];
+            q.push(t, (t, payload));
+        }
+        let mut last: Option<(u64, u64)> = None; // (time bits, seq)
+        while let Some((t, s, (pt, _))) = q.pop() {
+            assert_eq!(t.to_bits(), pt.to_bits(), "payload's time survives the heap");
+            if let Some((lt, ls)) = last {
+                if lt == t.to_bits() {
+                    assert!(ls < s, "seed {seed}: tie group broke push order");
+                } else {
+                    assert!(f64::from_bits(lt) < t, "seed {seed}: time order broke");
+                }
+            }
+            last = Some((t.to_bits(), s));
+        }
+    }
+}
+
+/// The same seeded op sequence replays to a bit-identical pop trace.
+#[test]
+fn randomized_replay_is_bit_identical() {
+    let run = |seed: u64| -> Vec<(u64, u64, u64)> {
+        let mut rng = Pcg64::new(seed, 0x2E91A7);
+        let mut q = EventQueue::new();
+        let mut trace = Vec::new();
+        for payload in 0..400u64 {
+            if rng.index(10) < 7 {
+                q.push(draw_time(&mut rng), payload);
+            } else if let Some((t, s, e)) = q.pop() {
+                trace.push((t.to_bits(), s, e));
+            }
+        }
+        while let Some((t, s, e)) = q.pop() {
+            trace.push((t.to_bits(), s, e));
+        }
+        trace
+    };
+    for seed in [0u64, 1, 42, 0xDEAD] {
+        assert_eq!(run(seed), run(seed), "seed {seed}: replay diverged");
+    }
+}
+
+/// `total_cmp` corners drain in one consistent order: -0.0 strictly
+/// before +0.0, subnormals between them and 0.25.
+#[test]
+fn negative_zero_and_subnormal_order_is_total() {
+    let mut q = EventQueue::new();
+    q.push(0.25, "quarter");
+    q.push(0.0, "poszero");
+    q.push(5e-324, "subnormal");
+    q.push(-0.0, "negzero");
+    let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, _, e)| e)).collect();
+    assert_eq!(order, vec!["negzero", "poszero", "subnormal", "quarter"]);
+}
+
+/// The finite-time invariant: a NaN virtual time is a bug upstream and is
+/// rejected at the push, not silently mis-ordered.
+#[test]
+#[should_panic(expected = "must be finite")]
+fn nan_time_is_rejected() {
+    EventQueue::new().push(f64::NAN, 0u8);
+}
+
+/// Infinities are equally rejected — virtual clocks never hold them.
+#[test]
+#[should_panic(expected = "must be finite")]
+fn infinite_time_is_rejected() {
+    EventQueue::new().push(f64::INFINITY, 0u8);
+}
+
+fn base_cfg(name: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.into(),
+        dataset: DatasetKind::SynthMnist,
+        model: gradestc::config::ModelKind::LeNet5,
+        distribution: DataDistribution::Iid,
+        num_clients: 8,
+        participation: 1.0,
+        rounds: 4,
+        local_epochs: 1,
+        batch_size: 32,
+        lr: 0.05,
+        samples_per_client: 64,
+        test_samples: 64,
+        eval_every: 1,
+        threshold_frac: 0.9,
+        compressor: CompressorKind::GradEstc(GradEstcParams { k: 8, ..Default::default() }),
+        seed: 23,
+        use_xla: false,
+        artifacts_dir: "artifacts".into(),
+        workers: 1,
+        net: NetConfig::default(),
+        sched: SchedConfig::default(),
+        backend: BackendKind::Auto,
+        lanes: LaneConfig::default(),
+    }
+}
+
+/// The end-to-end replay bar the queue exists for: the async event loop —
+/// dropout retries, heterogeneous arrivals, co-temporal groups — produces
+/// bit-identical records, lane fingerprints, and ledger totals at 1, 2,
+/// and 8 workers.
+#[test]
+fn async_event_loop_replays_bit_identically_at_1_2_8_workers() {
+    let mut cfg = base_cfg("it-eventprops-replay");
+    cfg.net.het_spread = 1.0;
+    cfg.net.dropout = 0.1;
+    cfg.sched.kind = SchedKind::Async { k: 3, staleness_p: 0.5 };
+    let run = |workers: usize| {
+        let mut c = cfg.clone();
+        c.workers = workers;
+        let mut sim = Simulation::build(c).unwrap();
+        sim.run_scheduled().unwrap();
+        (
+            sim.recorder
+                .rounds()
+                .iter()
+                .map(|r| {
+                    (
+                        r.round,
+                        r.train_loss.to_bits(),
+                        r.test_accuracy.to_bits(),
+                        r.uplink_bytes,
+                        r.sim_clock_s.to_bits(),
+                        r.survivors.clone(),
+                    )
+                })
+                .collect::<Vec<_>>(),
+            sim.lane_fingerprints(),
+            sim.total_uplink(),
+        )
+    };
+    let w1 = run(1);
+    let w2 = run(2);
+    let w8 = run(8);
+    assert_eq!(w1, w2, "async replay diverged between 1 and 2 workers");
+    assert_eq!(w1, w8, "async replay diverged between 1 and 8 workers");
+}

@@ -23,8 +23,17 @@ span with that name is present in each file — CI uses it to pin phases a
 change introduced (e.g. ``--expect lane_materialize`` for the virtual-lane
 plane's first-touch spans).
 
+``--metrics <metrics.json>`` cross-checks the trace against the run's
+metrics JSON (requires exactly one trace file): the ``faults`` run
+counter must equal the number of ``fault`` spans on the virtual-clock
+track, and every fault span must be zero-duration — a fault is an
+instant (the arrival that never folded), not an interval. The
+churn-smoke CI job uses this to pin the availability plane's
+counter/span consistency.
+
 Usage:
-    check_trace.py [--expect <phase>]... <trace.json> [<trace.json> ...]
+    check_trace.py [--expect <phase>]... [--metrics <metrics.json>]
+                   <trace.json> [<trace.json> ...]
 
 Exit codes: 0 = all files valid, 1 = validation failure, 2 = usage/IO.
 """
@@ -127,9 +136,45 @@ def check_file(path, expect=()):
     return True
 
 
+def check_fault_consistency(trace_path, metrics_path):
+    """``run.counters.faults`` == zero-duration ``fault`` spans on the
+    virtual-clock track."""
+    try:
+        with open(trace_path, encoding="utf-8") as fh:
+            trace = json.load(fh)
+        with open(metrics_path, encoding="utf-8") as fh:
+            metrics = json.load(fh)
+    except (OSError, ValueError) as exc:
+        print(f"check_trace: cannot read {trace_path}/{metrics_path}: {exc}", file=sys.stderr)
+        sys.exit(2)
+    events = trace.get("traceEvents", [])
+    fault_spans = [
+        e
+        for e in events
+        if isinstance(e, dict) and e.get("ph") == "X" and e.get("name") == "fault" and e.get("pid") == 2
+    ]
+    ok = True
+    for ev in fault_spans:
+        if ev.get("dur") != 0:
+            ok = fail(trace_path, f"fault span with non-zero dur {ev.get('dur')} (faults are instants)")
+    run = metrics.get("run")
+    if not isinstance(run, dict) or not isinstance(run.get("counters"), dict):
+        return fail(metrics_path, "metrics JSON missing run.counters")
+    counted = run["counters"].get("faults", 0)
+    if counted != len(fault_spans):
+        ok = fail(
+            metrics_path,
+            f"faults counter {counted} != {len(fault_spans)} fault spans in {trace_path}",
+        )
+    if ok:
+        print(f"check_trace: {metrics_path}: faults counter consistent ({counted} faults)")
+    return ok
+
+
 def main(argv):
     expect = []
     paths = []
+    metrics = None
     it = iter(argv)
     for arg in it:
         if arg == "--expect":
@@ -138,14 +183,24 @@ def main(argv):
                 print("check_trace: --expect needs a phase name", file=sys.stderr)
                 return 2
             expect.append(phase)
+        elif arg == "--metrics":
+            metrics = next(it, None)
+            if metrics is None:
+                print("check_trace: --metrics needs a metrics.json path", file=sys.stderr)
+                return 2
         else:
             paths.append(arg)
     if not paths:
         print(__doc__, file=sys.stderr)
         return 2
+    if metrics is not None and len(paths) != 1:
+        print("check_trace: --metrics requires exactly one trace file", file=sys.stderr)
+        return 2
     ok = True
     for path in paths:
         ok = check_file(path, expect) and ok
+    if metrics is not None:
+        ok = check_fault_consistency(paths[0], metrics) and ok
     return 0 if ok else 1
 
 
